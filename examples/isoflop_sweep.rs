@@ -1,0 +1,93 @@
+//! IsoFLOP sweep — regenerates the data behind paper Table 1, Fig 3
+//! (hybrid curves), Fig 5 (pure MoSA), Fig 6 (loss curves) and Fig 7
+//! (dense-head ablation) at the trainable micro/mini budgets.
+//!
+//!     make artifacts-all && cargo run --release --example isoflop_sweep
+//!     [-- --steps 200 --groups sweep,pure,ablate --budget micro]
+//!
+//! Every variant trains on the same corpus with the same schedule; head
+//! counts were fixed by the IsoFLOP solver at artifact-build time, so the
+//! comparison is FLOP-matched by construction. Loss curves land in
+//! results/<variant>.csv (Fig 6); the summary table + results/isoflop.json
+//! hold the ppl-vs-sparsity series (Table 1 / Fig 3 / Fig 5 / Fig 7).
+
+use anyhow::Result;
+use mosa::config::RunConfig;
+use mosa::experiments::report::{print_table, save_results};
+use mosa::experiments::{build_datasets, run_variant_cached, VariantResult};
+use mosa::runtime::{Engine, Manifest};
+use mosa::util::cli::Args;
+
+fn main() -> Result<()> {
+    mosa::util::init_logging();
+    let args = Args::parse(std::env::args().skip(1));
+    let rc = RunConfig::from_args(&args);
+    let groups: Vec<String> = args
+        .get_or("groups", "core,sweep,pure,ablate")
+        .split(',')
+        .map(|s| s.to_string())
+        .collect();
+    let budget = args.get_or("budget", ""); // "" = all; or "micro"/"mini"
+
+    let manifest = Manifest::load(&rc.artifacts_dir)?;
+    let mut engine = Engine::cpu()?;
+    let (train_ds, test_ds) = build_datasets(&rc, 512)?;
+
+    let mut names: Vec<String> = manifest
+        .variants
+        .values()
+        .filter(|v| groups.iter().any(|g| &v.group == g))
+        .filter(|v| budget.is_empty() || v.name.starts_with(&budget))
+        .map(|v| v.name.clone())
+        .collect();
+    names.sort();
+    println!("sweeping {} variants: {:?}", names.len(), names);
+
+    let mut rows: Vec<VariantResult> = Vec::new();
+    for name in &names {
+        let variant = manifest.variant(name)?;
+        let res = run_variant_cached(&mut engine, &manifest, variant, &train_ds, &test_ds, &rc)?;
+        println!(
+            "  [{}] rho={} heads={}+{} ppl={:.3}",
+            name, res.rho, res.n_dense, res.n_sparse, res.test_ppl
+        );
+        rows.push(res);
+    }
+
+    // Table 1 analogue: best sparse ppl per kind vs dense, with relative %.
+    print_table("IsoFLOP sweep (Fig 3/5/7 series)", &rows);
+    for budget_prefix in ["micro", "mini"] {
+        let dense = rows
+            .iter()
+            .find(|r| r.name == format!("{budget_prefix}_dense"))
+            .map(|r| r.test_ppl);
+        if let Some(dense_ppl) = dense {
+            println!("\nTable-1 analogue — budget {budget_prefix} (dense ppl {dense_ppl:.3}):");
+            for kind in ["mosa", "fixed", "routing"] {
+                let best = rows
+                    .iter()
+                    .filter(|r| {
+                        r.name.starts_with(budget_prefix)
+                            && r.sparse_kind == kind
+                            && r.group != "pure"
+                            && r.group != "ablate"
+                            && r.rho > 1
+                    })
+                    .min_by(|a, b| a.test_ppl.partial_cmp(&b.test_ppl).unwrap());
+                if let Some(b) = best {
+                    println!(
+                        "  {:<8} best ppl {:.3} at rho={} ({:+.1}% vs dense)",
+                        kind,
+                        b.test_ppl,
+                        b.rho,
+                        (b.test_ppl / dense_ppl - 1.0) * 100.0
+                    );
+                }
+            }
+        }
+    }
+
+    save_results(format!("{}/isoflop.json", rc.results_dir), "isoflop_sweep", &rows)?;
+    println!("\nwrote {}/isoflop.json", rc.results_dir);
+    Ok(())
+}

@@ -1,0 +1,80 @@
+//! Long-sequence scaling — regenerates paper Fig 4: local+sparse hybrids
+//! with constant k per head as T grows (sparsity rho = T/k rises), MoSA
+//! vs fixed vs routing.
+//!
+//!     make artifacts-longseq && cargo run --release --example long_sequence
+//!     [-- --steps 120 --lengths 256,512,1024]
+//!
+//! Head counts were frozen at the base length's IsoFLOP solution (like
+//! the paper's 60-head setup solved at T=1024), so MoSA/fixed FLOPs per
+//! token stay flat while routing's grow with T — Fig 4's cost asymmetry.
+
+use anyhow::Result;
+use mosa::config::RunConfig;
+use mosa::experiments::report::{print_table, save_results};
+use mosa::experiments::{build_datasets, run_variant_cached, VariantResult};
+use mosa::runtime::{Engine, Manifest};
+use mosa::util::cli::Args;
+
+fn main() -> Result<()> {
+    mosa::util::init_logging();
+    let args = Args::parse(std::env::args().skip(1));
+    let mut rc = RunConfig::from_args(&args);
+    if !args.has("steps") {
+        rc.steps = 120; // long-T steps are slow; Fig 4 needs the ranking, not convergence
+    }
+    if !args.has("corpus-bytes") {
+        rc.corpus_bytes = 800_000; // long windows need a longer stream
+    }
+    let lengths: Vec<usize> = args
+        .get_or("lengths", "256,512,1024,2048")
+        .split(',')
+        .filter_map(|s| s.parse().ok())
+        .collect();
+
+    let manifest = Manifest::load(&rc.artifacts_dir)?;
+    let mut engine = Engine::cpu()?;
+    let (train_ds, test_ds) = build_datasets(&rc, 512)?;
+
+    let mut rows: Vec<VariantResult> = Vec::new();
+    for t in &lengths {
+        for kind in ["mosa", "fixed", "routing"] {
+            let name = format!("ls{t}_{kind}");
+            let variant = match manifest.variant(&name) {
+                Ok(v) => v,
+                Err(e) => {
+                    eprintln!("skipping {name}: {e}");
+                    continue;
+                }
+            };
+            let res = run_variant_cached(&mut engine, &manifest, variant, &train_ds, &test_ds, &rc)?;
+            println!(
+                "  [{}] T={} rho={} ppl={:.3} flops/tok={:.1}M",
+                name,
+                t,
+                res.rho,
+                res.test_ppl,
+                res.flops_fwd as f64 / *t as f64 / 1e6
+            );
+            rows.push(res);
+        }
+    }
+
+    print_table("long-sequence scaling (Fig 4 series)", &rows);
+    // Fig 4 claim check: MoSA lowest ppl per length.
+    println!("\nper-length ranking:");
+    for t in &lengths {
+        let mut at: Vec<&VariantResult> = rows.iter().filter(|r| r.seq_len == *t).collect();
+        if at.is_empty() {
+            continue;
+        }
+        at.sort_by(|a, b| a.test_ppl.partial_cmp(&b.test_ppl).unwrap());
+        let order: Vec<String> = at
+            .iter()
+            .map(|r| format!("{} {:.2}", r.sparse_kind, r.test_ppl))
+            .collect();
+        println!("  T={:<5} {}", t, order.join("  >  "));
+    }
+    save_results(format!("{}/long_sequence.json", rc.results_dir), "long_sequence", &rows)?;
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Quickstart: the smallest end-to-end use of the public API.
+//!
+//! Loads the core `micro_mosa_r8` artifact, builds the synthetic dataset,
+//! trains for 40 steps through PJRT and reports train loss + test ppl.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+use mosa::config::RunConfig;
+use mosa::coordinator::{LrSchedule, TrainOptions, Trainer};
+use mosa::data::{SequentialWindows, TokenDataset};
+use mosa::runtime::{Engine, Manifest};
+
+fn main() -> Result<()> {
+    mosa::util::init_logging();
+    let rc = RunConfig::default();
+
+    // 1. artifact manifest (written by `make artifacts`)
+    let manifest = Manifest::load(&rc.artifacts_dir)?;
+    let variant = manifest.variant("micro_mosa_r8")?;
+    println!(
+        "variant {}: {} dense + {} {} heads (k={} of T={}), {} params",
+        variant.name,
+        variant.config.n_dense,
+        variant.config.n_sparse,
+        variant.config.sparse_kind,
+        variant.config.k_sel,
+        variant.config.seq_len,
+        variant.n_params
+    );
+
+    // 2. data: synthetic corpus -> BPE -> token stream
+    let ds = TokenDataset::build(1000, 200_000, variant.config.vocab, Some(&rc.cache_dir))?;
+    let (train_ds, test_ds) = ds.split(0.9);
+
+    // 3. train 40 steps on the PJRT CPU client
+    let mut engine = Engine::cpu()?;
+    let trainer = Trainer::new(&manifest, variant);
+    let opts = TrainOptions {
+        steps: 40,
+        schedule: LrSchedule::paper_like(1e-3, 4, 40),
+        seed: 0,
+        log_every: 10,
+        use_chunk: false,
+        checkpoint: None,
+        eval_every: 0,
+    };
+    let mut sampler = train_ds.sampler(7);
+    let (state, metrics) = trainer.train(&mut engine, &mut sampler, &opts)?;
+
+    // 4. held-out perplexity
+    let mut eval = SequentialWindows::new(&test_ds);
+    let ppl = trainer.evaluate(&mut engine, &mut eval, &state, 4)?;
+    println!(
+        "\nquickstart done: loss {:.3} -> {:.3}, test ppl {:.2}",
+        metrics.records.first().map(|r| r.loss).unwrap_or(f64::NAN),
+        metrics.tail_loss(5),
+        ppl
+    );
+    Ok(())
+}

@@ -1,0 +1,93 @@
+//! End-to-end driver (DESIGN.md §validation): the full three-layer stack
+//! on a real (synthetic-corpus) workload.
+//!
+//! Pipeline: corpus generation -> BPE training -> token stream -> Rust
+//! coordinator trains a hybrid-MoSA transformer AND the FLOP-matched
+//! dense baseline for several hundred steps through PJRT -> loss curves
+//! to results/*.csv -> held-out perplexity + downstream zero-shot probes.
+//!
+//!     make artifacts && cargo run --release --example train_lm -- --steps 300
+//!
+//! The run is recorded in EXPERIMENTS.md §End-to-end.
+
+use anyhow::Result;
+use mosa::config::RunConfig;
+use mosa::data::{Bpe, CorpusGen};
+use mosa::evalharness::{evaluate_tasks, make_tasks, TaskKind};
+use mosa::experiments::{build_datasets, run_variant};
+use mosa::runtime::{Engine, Manifest};
+use mosa::util::cli::Args;
+
+fn main() -> Result<()> {
+    mosa::util::init_logging();
+    let args = Args::parse(std::env::args().skip(1));
+    let mut rc = RunConfig::from_args(&args);
+    if !args.has("steps") {
+        rc.steps = 300;
+    }
+
+    let manifest = Manifest::load(&rc.artifacts_dir)?;
+    let mut engine = Engine::cpu()?;
+
+    let pair = ["micro_dense", "micro_mosa_r8"];
+    let (train_ds, test_ds) = build_datasets(&rc, 512)?;
+    println!(
+        "corpus: {} train / {} test tokens (BPE vocab 512)",
+        train_ds.ids.len(),
+        test_ds.ids.len()
+    );
+
+    let mut rows = Vec::new();
+    let mut states = Vec::new();
+    for name in pair {
+        let variant = manifest.variant(name)?;
+        let (res, metrics, state) = run_variant(&mut engine, &manifest, variant, &train_ds, &test_ds, &rc)?;
+        let csv = metrics.save_csv(&rc.results_dir)?;
+        println!(
+            "[{}] tail-loss {:.4}  test-ppl {:.3}  {:.0} ms/step  (curve {})",
+            name,
+            res.train_tail_loss,
+            res.test_ppl,
+            res.ms_per_step,
+            csv.display()
+        );
+        rows.push(res);
+        states.push((name, state));
+    }
+
+    // downstream probes on both models (Table 3 analogue, small n)
+    let text = CorpusGen::new(rc.seed + 1000).generate(rc.corpus_bytes);
+    let bpe = Bpe::train(text.as_bytes(), 512)?;
+    for (name, state) in &states {
+        let variant = manifest.variant(name)?;
+        if !variant.programs.contains_key("score_short") {
+            continue;
+        }
+        print!("[{}] downstream:", name);
+        for kind in TaskKind::all() {
+            let tasks = make_tasks(kind, 30, rc.seed + 7);
+            let acc = evaluate_tasks(&mut engine, &manifest, variant, state, &bpe, &tasks)?;
+            print!("  {} {:.2}", kind.name(), acc);
+        }
+        println!();
+    }
+
+    mosa::experiments::report::print_table("end-to-end: dense vs MoSA hybrid", &rows);
+    mosa::experiments::report::save_results(
+        format!("{}/train_lm.json", rc.results_dir),
+        "train_lm",
+        &rows,
+    )?;
+    let d = &rows[0];
+    let m = &rows[1];
+    println!(
+        "\nIsoFLOP result: MoSA ppl {:.2} vs dense ppl {:.2} ({:+.1}%)  |  KV pairs {} vs {} ({:+.1}%)",
+        m.test_ppl,
+        d.test_ppl,
+        (m.test_ppl / d.test_ppl - 1.0) * 100.0,
+        m.kv_pairs,
+        d.kv_pairs,
+        (m.kv_pairs as f64 / d.kv_pairs as f64 - 1.0) * 100.0,
+    );
+    Ok(())
+}

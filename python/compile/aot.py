@@ -1,0 +1,246 @@
+"""AOT driver: lower every variant's programs to HLO text + meta manifest.
+
+HLO *text* — not ``.serialize()`` — is the interchange format: the xla
+crate's xla_extension 0.5.1 rejects jax>=0.5 serialized HloModuleProto
+(64-bit instruction ids); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Outputs, per variant ``<name>``:
+  artifacts/<name>.<program>.hlo.txt     one per program
+  artifacts/manifest.json                global manifest the Rust side reads
+
+The manifest records, for each variant: the model config, per-section leaf
+layout (params / state / m / v / t with path names, shapes, dtypes), the
+program list with their extra inputs/outputs, FLOP and parameter counts.
+Array flattening is jax.tree_util's canonical order — identical between
+init outputs, train inputs/outputs, and checkpoints.
+
+Usage:  cd python && python -m compile.aot --set core --out ../artifacts
+"""
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import flops, variants
+from .model import ModelConfig
+from .train import make_init, make_score, make_train_chunk, make_train_step
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dt(x) -> str:
+    return {"float32": "f32", "int32": "i32", "uint32": "u32"}.get(
+        str(x.dtype), str(x.dtype)
+    )
+
+
+def _init_spec(section: str, name: str) -> str:
+    """Host-side init rule per leaf (the Rust coordinator initialises
+    parameters itself — lowering jax.random's threefry graph to HLO made
+    artifact compiles ~30x slower on the pinned XLA; distributionally the
+    host init is identical: N(0, 0.02), ones for LN scales, zeros for
+    biases/optimizer state, row-normalised normals for centroids)."""
+    if section in ("m", "v", "t"):
+        return "zeros"
+    if section == "state":
+        return "centroid" if "centroids" in name else "zeros"
+    if name.endswith(".g"):
+        return "ones"
+    if name.endswith(".b") or name.endswith(".b1") or name.endswith(".b2") or name.endswith("out_b"):
+        return "zeros"
+    return "normal:0.02"
+
+
+def _leaf_entries(tree, section):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = "".join(str(p) for p in path).replace("['", ".").replace("']", "")
+        name = name.lstrip(".")
+        out.append(
+            {
+                "path": name,
+                "shape": list(leaf.shape),
+                "dtype": _dt(leaf),
+                "init": _init_spec(section, name),
+            }
+        )
+    return out
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_variant(v: variants.Variant, outdir: str) -> dict:
+    cfg = v.cfg
+    b, t = v.batch, cfg.seq_len
+
+    init_fn = make_init(cfg)
+    shapes = jax.eval_shape(init_fn, _spec((), jnp.int32))
+    params_s, state_s, m_s, v_s, t_s = shapes
+
+    sections = {
+        "params": _leaf_entries(params_s, "params"),
+        "state": _leaf_entries(state_s, "state"),
+        "m": _leaf_entries(m_s, "m"),
+        "v": _leaf_entries(v_s, "v"),
+        "t": [{"path": "t", "shape": [], "dtype": "f32", "init": "zeros"}],
+    }
+    n_params_leaves = len(sections["params"])
+    n_state_leaves = len(sections["state"])
+
+    progs = {}
+
+    def emit(pname, fn, args):
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{v.name}.{pname}.hlo.txt"
+        with open(os.path.join(outdir, fname), "w") as f:
+            f.write(text)
+        return fname
+
+    # "init" is host-side (see _init_spec); an HLO init program can still
+    # be emitted for cross-checking with --with-init-hlo.
+    if "init_hlo" in v.programs:
+        fname = emit("init", init_fn, [_spec((), jnp.int32)])
+        progs["init"] = {"file": fname, "extra_inputs": [
+            {"name": "seed", "shape": [], "dtype": "i32"}]}
+
+    if "train" in v.programs:
+        step = make_train_step(cfg)
+        fname = emit(
+            "train", step,
+            [params_s, state_s, m_s, v_s, t_s,
+             _spec((b, t + 1), jnp.int32), _spec((), jnp.float32)],
+        )
+        progs["train"] = {
+            "file": fname,
+            "extra_inputs": [
+                {"name": "batch", "shape": [b, t + 1], "dtype": "i32"},
+                {"name": "lr", "shape": [], "dtype": "f32"},
+            ],
+            "extra_outputs": [{"name": "loss", "shape": [], "dtype": "f32"}],
+        }
+
+    if "train_chunk" in v.programs:
+        s = variants.CHUNK_STEPS
+        chunk = make_train_chunk(cfg, s)
+        fname = emit(
+            "train_chunk", chunk,
+            [params_s, state_s, m_s, v_s, t_s,
+             _spec((s, b, t + 1), jnp.int32), _spec((s,), jnp.float32)],
+        )
+        progs["train_chunk"] = {
+            "file": fname,
+            "chunk": s,
+            "extra_inputs": [
+                {"name": "batches", "shape": [s, b, t + 1], "dtype": "i32"},
+                {"name": "lrs", "shape": [s], "dtype": "f32"},
+            ],
+            "extra_outputs": [{"name": "losses", "shape": [s], "dtype": "f32"}],
+        }
+
+    if "score" in v.programs:
+        score = make_score(cfg)
+        fname = emit("score", lambda p, s, tok: score(p, s, tok),
+                     [params_s, state_s, _spec((b, t + 1), jnp.int32)])
+        progs["score"] = {
+            "file": fname,
+            "extra_inputs": [{"name": "tokens", "shape": [b, t + 1], "dtype": "i32"}],
+            "extra_outputs": [{"name": "logprobs", "shape": [b, t], "dtype": "f32"}],
+        }
+
+    if "score_short" in v.programs:
+        scfg = v.short_cfg()
+        st = variants.SHORT_T
+        if cfg.sparse_kind == "routing":
+            # centroid count must be preserved: the trained state is an input
+            assert scfg.attn_spec().rho == cfg.attn_spec().rho, v.name
+        score = make_score(dataclasses.replace(scfg))
+        fname = emit("score_short", lambda p, s, tok: score(p, s, tok),
+                     [params_s, state_s, _spec((1, st + 1), jnp.int32)])
+        progs["score_short"] = {
+            "file": fname,
+            "seq_len": st,
+            "k_sel": scfg.k_sel,
+            "extra_inputs": [{"name": "tokens", "shape": [1, st + 1], "dtype": "i32"}],
+            "extra_outputs": [{"name": "logprobs", "shape": [1, st], "dtype": "f32"}],
+        }
+
+    fwd_flops = flops.model_forward_flops(
+        cfg.n_layers, cfg.d_model, cfg.d_head, cfg.d_ff, cfg.seq_len,
+        cfg.n_dense, cfg.n_sparse, cfg.sparse_kind, cfg.k_sel, cfg.window,
+    )
+    n_params = sum(
+        int(jnp.prod(jnp.asarray(e["shape"]))) if e["shape"] else 1
+        for e in sections["params"]
+    )
+    return {
+        "name": v.name,
+        "group": v.group,
+        "batch": b,
+        "base_heads": v.base_heads,
+        "config": dataclasses.asdict(cfg),
+        "rho": cfg.attn_spec().rho if cfg.n_sparse > 0 else 1,
+        "flops_fwd": int(fwd_flops),
+        "n_params": int(n_params),
+        "n_params_leaves": n_params_leaves,
+        "n_state_leaves": n_state_leaves,
+        "n_train_leaves": n_params_leaves * 3 + n_state_leaves + 1,
+        "sections": sections,
+        "programs": progs,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--set", default="core", choices=["core", "sweep", "longseq", "perf", "all"])
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated variant names")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    vs = variants.get_set(args.set)
+    if args.only:
+        keep = set(args.only.split(","))
+        vs = [v for v in vs if v.name in keep]
+
+    manifest_path = os.path.join(args.out, "manifest.json")
+    manifest = {"variants": []}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+
+    existing = {e["name"]: i for i, e in enumerate(manifest["variants"])}
+    for v in vs:
+        print(f"[aot] lowering {v.name} (heads: {v.cfg.n_dense} dense + "
+              f"{v.cfg.n_sparse} {v.cfg.sparse_kind}, T={v.cfg.seq_len}, "
+              f"k={v.cfg.k_sel}) ...", flush=True)
+        entry = lower_variant(v, args.out)
+        if v.name in existing:
+            manifest["variants"][existing[v.name]] = entry
+        else:
+            existing[v.name] = len(manifest["variants"])
+            manifest["variants"].append(entry)
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {len(vs)} variants to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

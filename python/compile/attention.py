@@ -1,0 +1,314 @@
+"""L2 attention variants: dense / local / MoSA / fixed-sparse / routing.
+
+All variants are expressed through the single L1 kernel
+``kernels.attention(q, k, v, qpos, kpos, scale, window)`` — what differs is
+*which tokens* each head projects and attends over:
+
+- dense:   all T tokens, qpos = kpos = arange(T)
+- local:   all T tokens, sliding window mask
+- MoSA:    each head routes sigma(X Wr), expert-choice top-k selects k
+           tokens, projections run on the k tokens only (paper Sec 2.2)
+- fixed:   the static stride-rho subset [0, rho, 2rho, ...] (Child et al.)
+- routing: online-k-means clusters of the shared Q=K projection; per
+           cluster the top-k most similar tokens attend to each other
+           (Routing Transformer, training-time implementation)
+
+Shapes: x is [B, T, h]; every head group returns [B, T, h] (already summed
+over its heads through the per-head output projections W_o, paper Eq. 2/3).
+"""
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention, attention_nokernel
+from .kernels.ref import ref_rope
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    """Static configuration of one attention layer (hybrid head mix)."""
+
+    d_model: int
+    d_head: int
+    seq_len: int
+    n_dense: int = 0  # dense or local heads, depending on `window`
+    window: int = 0  # 0 => fully causal dense heads; >0 => local heads
+    n_sparse: int = 0
+    sparse_kind: str = "none"  # none | mosa | fixed | routing
+    k_sel: int = 0  # tokens kept per sparse head (k in the paper)
+    include_first: bool = True  # StreamingLLM-style: always keep token 0
+    use_kernel: bool = True
+    rope_theta: float = 10000.0
+
+    @property
+    def rho(self) -> int:
+        """Sparsity rate rho = T / k (paper Sec 3.2)."""
+        return max(1, self.seq_len // max(1, self.k_sel))
+
+    def att(self):
+        return attention if self.use_kernel else attention_nokernel
+
+
+# ---------------------------------------------------------------------------
+# parameter initialisation
+# ---------------------------------------------------------------------------
+
+
+def top_k_desc(x, k):
+    """(values, indices) of the k largest entries along the last axis.
+
+    `jax.lax.top_k` lowers to a TopK custom-call whose HLO-text attribute
+    (`largest=...`) the pinned xla_extension 0.5.1 parser rejects; an
+    argsort-based top-k lowers to a plain `sort` instruction instead and
+    round-trips through HLO text. Cost is O(T log T) vs O(T log k) — in
+    the FLOP accounting both are part of the 2hT routing-overhead term.
+
+    Indices are discrete, so no gradient flows through the selection in
+    any case (the router learns through the diag(r) output scaling, paper
+    Sec 2.2); stop_gradient on the sort keys makes that explicit and
+    avoids the sort-gradient path entirely.
+    """
+    idx = jnp.argsort(jax.lax.stop_gradient(-x), axis=-1)[..., :k]
+    vals = jnp.take_along_axis(x, idx, axis=-1)
+    return vals, idx
+
+
+def _winit(key, shape, scale=0.02):
+    return (scale * jax.random.normal(key, shape)).astype(jnp.float32)
+
+
+def init_attention(key, spec: AttnSpec) -> dict:
+    """Initialise one hybrid attention layer's parameters."""
+    h, d = spec.d_model, spec.d_head
+    p = {}
+    keys = jax.random.split(key, 8)
+    if spec.n_dense > 0:
+        n = spec.n_dense
+        p["dense"] = {
+            "wq": _winit(keys[0], (n, h, d)),
+            "wk": _winit(keys[1], (n, h, d)),
+            "wv": _winit(keys[2], (n, h, d)),
+            "wo": _winit(keys[3], (n, d, h)),
+        }
+    if spec.n_sparse > 0 and spec.sparse_kind != "none":
+        n = spec.n_sparse
+        g = {
+            "wq": _winit(keys[4], (n, h, d)),
+            "wk": _winit(keys[5], (n, h, d)),
+            "wv": _winit(keys[6], (n, h, d)),
+            "wo": _winit(keys[7], (n, d, h)),
+        }
+        if spec.sparse_kind == "mosa":
+            g["wr"] = _winit(jax.random.fold_in(key, 101), (n, h))
+        if spec.sparse_kind == "routing":
+            # shared Q=K projection: drop wk, keep wq as the shared map
+            del g["wk"]
+        p["sparse"] = g
+    return p
+
+
+def init_attention_state(key, spec: AttnSpec) -> dict:
+    """Non-gradient state: routing-attention centroids (EMA k-means)."""
+    if spec.sparse_kind == "routing" and spec.n_sparse > 0:
+        mu = jax.random.normal(key, (spec.n_sparse, spec.rho, spec.d_head))
+        return {"centroids": (mu / (jnp.linalg.norm(mu, axis=-1, keepdims=True) + 1e-6)).astype(jnp.float32)}
+    return {}
+
+
+# ---------------------------------------------------------------------------
+# head groups
+# ---------------------------------------------------------------------------
+
+
+def _proj(x, w):
+    # x [B,T,h] or [B,n,K,h]; w [n,h,d] -> [B,n,T,d]
+    if x.ndim == 3:
+        return jnp.einsum("bth,nhd->bntd", x, w)
+    return jnp.einsum("bnkh,nhd->bnkd", x, w)
+
+
+def _dense_heads(p, x, spec: AttnSpec):
+    """Dense (or, with window > 0, local sliding-window) attention heads."""
+    b, t, h = x.shape
+    n = spec.n_dense
+    q = _proj(x, p["wq"])  # [B,n,T,d]
+    k = _proj(x, p["wk"])
+    v = _proj(x, p["wv"])
+    pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, n, t))
+    q = ref_rope(q, pos, spec.rope_theta)
+    k = ref_rope(k, pos, spec.rope_theta)
+    d = spec.d_head
+    att = spec.att()(
+        q.reshape(b * n, t, d),
+        k.reshape(b * n, t, d),
+        v.reshape(b * n, t, d),
+        pos.reshape(b * n, t),
+        pos.reshape(b * n, t),
+        None,
+        spec.window,
+    ).reshape(b, n, t, d)
+    return jnp.einsum("bntd,ndh->bth", att, p["wo"])
+
+
+def _gather_tokens(x, idx):
+    """x [B,T,h], idx [B,n,K] -> [B,n,K,h] (the X^s of the paper)."""
+    b, t, h = x.shape
+    _, n, kk = idx.shape
+    flat = jnp.take_along_axis(
+        x[:, None, :, :], idx[..., None].astype(jnp.int32), axis=2
+    )
+    return flat  # [B,n,K,h]
+
+
+def _scatter_heads(y_heads, idx, t):
+    """Scatter-add per-head outputs back to original positions (paper: Y).
+
+    y_heads [B,n,K,h], idx [B,n,K] -> [B,T,h]; overlapping selections from
+    different heads sum, matching Eq. 3's sum over heads.
+    """
+    b, n, kk, h = y_heads.shape
+    out = jnp.zeros((b, t, h), y_heads.dtype)
+    bidx = jnp.arange(b, dtype=jnp.int32)[:, None, None]
+    return out.at[jnp.broadcast_to(bidx, idx.shape), idx].add(y_heads)
+
+
+def _mosa_heads(p, x, spec: AttnSpec):
+    """MoSA: expert-choice routed sparse heads (paper Sec 2.2)."""
+    b, t, h = x.shape
+    n, d, ksel = spec.n_sparse, spec.d_head, spec.k_sel
+    r = jax.nn.sigmoid(jnp.einsum("bth,nh->bnt", x, p["wr"]))  # [B,n,T]
+    sel = r
+    if spec.include_first:
+        # force token 0 into every head's selection (attention-sink trick,
+        # Sec 3.2); sigma < 1 < 2 so a score of 2 always wins top-k.
+        sel = sel.at[:, :, 0].set(2.0)
+    _, idx = top_k_desc(sel, ksel)  # [B,n,K] indices into T
+    idx = jnp.sort(idx, axis=-1).astype(jnp.int32)
+    rsel = jnp.take_along_axis(r, idx, axis=-1)  # true router scores
+    xs = _gather_tokens(x, idx)  # [B,n,K,h]
+    q = _proj(xs, p["wq"])
+    k = _proj(xs, p["wk"])
+    v = _proj(xs, p["wv"])
+    # RoPE rotates by the *original* positions I (paper "Positional
+    # encodings"), and the causal mask inside the kernel compares I too.
+    q = ref_rope(q, idx, spec.rope_theta)
+    k = ref_rope(k, idx, spec.rope_theta)
+    att = spec.att()(
+        q.reshape(b * n, ksel, d),
+        k.reshape(b * n, ksel, d),
+        v.reshape(b * n, ksel, d),
+        idx.reshape(b * n, ksel),
+        idx.reshape(b * n, ksel),
+        None,
+        0,
+    ).reshape(b, n, ksel, d)
+    att = att * rsel[..., None]  # router gradient path (diag(r) A)
+    y = jnp.einsum("bnkd,ndh->bnkh", att, p["wo"])
+    return _scatter_heads(y, idx, t)
+
+
+def _fixed_heads(p, x, spec: AttnSpec):
+    """Fixed sparse attention: the static stride-rho token subset.
+
+    Special case of MoSA with I = [0, rho, 2rho, ...] and r = 1 (paper
+    Sec 3.1)."""
+    b, t, h = x.shape
+    n, d, ksel = spec.n_sparse, spec.d_head, spec.k_sel
+    rho = spec.rho
+    idx1 = jnp.arange(0, ksel, dtype=jnp.int32) * rho  # [K]
+    idx = jnp.broadcast_to(idx1, (b, n, ksel))
+    xs = _gather_tokens(x, idx)
+    q = _proj(xs, p["wq"])
+    k = _proj(xs, p["wk"])
+    v = _proj(xs, p["wv"])
+    q = ref_rope(q, idx, spec.rope_theta)
+    k = ref_rope(k, idx, spec.rope_theta)
+    att = spec.att()(
+        q.reshape(b * n, ksel, d),
+        k.reshape(b * n, ksel, d),
+        v.reshape(b * n, ksel, d),
+        idx.reshape(b * n, ksel),
+        idx.reshape(b * n, ksel),
+        None,
+        0,
+    ).reshape(b, n, ksel, d)
+    y = jnp.einsum("bnkd,ndh->bnkh", att, p["wo"])
+    return _scatter_heads(y, idx, t)
+
+
+def _routing_heads(p, x, state, spec: AttnSpec, ema_decay=0.999):
+    """Routing-Transformer attention head group (paper Sec 3.1).
+
+    Shared Q=K projection (wq); keys and centroids L2-normalised; each of
+    the rho centroids takes its top-k most similar tokens (training-time
+    implementation of online k-means clustering); attention runs inside
+    each cluster with the index-aware causal mask; centroids are updated
+    with an EMA of their selected (normalised) keys — returned as new
+    state, not a gradient.
+    """
+    b, t, h = x.shape
+    n, d, ksel = spec.n_sparse, spec.d_head, spec.k_sel
+    rho = spec.rho
+    mu = state["centroids"]  # [n, rho, d]
+    kq = _proj(x, p["wq"])  # [B,n,T,d]  shared query=key
+    v = _proj(x, p["wv"])
+    kqn = kq / (jnp.linalg.norm(kq, axis=-1, keepdims=True) + 1e-6)
+    mun = mu / (jnp.linalg.norm(mu, axis=-1, keepdims=True) + 1e-6)
+    sim = jnp.einsum("bntd,nrd->bnrt", kqn, mun)  # [B,n,rho,T]
+    _, idx = top_k_desc(sim, ksel)  # [B,n,rho,K]
+    idx = jnp.sort(idx, axis=-1).astype(jnp.int32)
+
+    def take(z):  # z [B,n,T,d] -> [B,n,rho,K,d]
+        zi = jnp.broadcast_to(z[:, :, None, :, :], (b, n, rho, t, d))
+        return jnp.take_along_axis(zi, idx[..., None], axis=3)
+
+    qs = take(kq)
+    vs = take(v)
+    qs = ref_rope(qs, idx, spec.rope_theta)
+    att = spec.att()(
+        qs.reshape(b * n * rho, ksel, d),
+        qs.reshape(b * n * rho, ksel, d),
+        vs.reshape(b * n * rho, ksel, d),
+        idx.reshape(b * n * rho, ksel),
+        idx.reshape(b * n * rho, ksel),
+        None,
+        0,
+    ).reshape(b, n, rho, ksel, d)
+    y = jnp.einsum("bnrkd,ndh->bnrkh", att, p["wo"])
+    out = _scatter_heads(
+        y.reshape(b, n * rho, ksel, h), idx.reshape(b, n * rho, ksel), t
+    )
+    # EMA centroid update from the mean of selected normalised keys.
+    sel_keys = take(kqn)  # [B,n,rho,K,d]
+    mean_keys = jnp.mean(sel_keys, axis=(0, 3))  # [n,rho,d]
+    new_mu = ema_decay * mun + (1.0 - ema_decay) * jax.lax.stop_gradient(mean_keys)
+    return out, {"centroids": new_mu}
+
+
+# ---------------------------------------------------------------------------
+# hybrid layer
+# ---------------------------------------------------------------------------
+
+
+def attention_layer(p, state, x, spec: AttnSpec):
+    """Full hybrid attention layer: dense/local heads + one sparse group.
+
+    Returns (y [B,T,h], new_state)."""
+    y = jnp.zeros_like(x)
+    new_state = state
+    if spec.n_dense > 0:
+        y = y + _dense_heads(p["dense"], x, spec)
+    if spec.n_sparse > 0 and spec.sparse_kind != "none":
+        if spec.sparse_kind == "mosa":
+            y = y + _mosa_heads(p["sparse"], x, spec)
+        elif spec.sparse_kind == "fixed":
+            y = y + _fixed_heads(p["sparse"], x, spec)
+        elif spec.sparse_kind == "routing":
+            ys, new_state = _routing_heads(p["sparse"], x, state, spec)
+            y = y + ys
+        else:
+            raise ValueError(f"unknown sparse kind {spec.sparse_kind}")
+    return y, new_state

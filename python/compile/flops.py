@@ -1,0 +1,116 @@
+"""FLOP accounting — paper Appendix A, implemented exactly.
+
+Mirrored in Rust (`rust/src/flops/`); both sides are unit-tested against
+the paper's printed numbers (Table 4 FLOPs/pass, Table 5 head counts and
+parameter counts), which this reproduction must match EXACTLY — they are
+pure arithmetic, independent of hardware.
+
+Per-head forward FLOPs (h = d_model, hp = d_head, T = seq len, k = tokens
+kept per sparse head, rho = T / k):
+
+    dense   = 8*h*hp*T + 4*hp*T^2
+    mosa    = 8*h*hp*k + 4*hp*k^2 + 2*h*T + hp*k
+    fixed   = 8*h*hp*k + 4*hp*k^2
+    routing = 6*h*hp*T + 4*hp*k^2*rho + 2*hp*T
+    local   = 8*h*hp*T + 4*hp*T*w        (window w; used in Sec 3.4 runs)
+
+Model forward = l*H_dense*dense + l*H_sparse*sparse + 16*l*h^2*T
+(feed-forward assumes d_ff = 4h as in the paper; we generalise to
+4*h*d_ff*T)."""
+
+import dataclasses
+
+
+def dense_head_flops(h, hp, t):
+    return 8 * h * hp * t + 4 * hp * t * t
+
+
+def mosa_head_flops(h, hp, t, k):
+    return 8 * h * hp * k + 4 * hp * k * k + 2 * h * t + hp * k
+
+
+def fixed_head_flops(h, hp, k):
+    return 8 * h * hp * k + 4 * hp * k * k
+
+
+def routing_head_flops(h, hp, t, k):
+    rho = t // k
+    return 6 * h * hp * t + 4 * hp * k * k * rho + 2 * hp * t
+
+
+def local_head_flops(h, hp, t, w):
+    return 8 * h * hp * t + 4 * hp * t * w
+
+
+def sparse_head_flops(kind, h, hp, t, k, w=0):
+    if kind == "mosa":
+        return mosa_head_flops(h, hp, t, k)
+    if kind == "fixed":
+        return fixed_head_flops(h, hp, k)
+    if kind == "routing":
+        return routing_head_flops(h, hp, t, k)
+    if kind == "local":
+        return local_head_flops(h, hp, t, w)
+    raise ValueError(kind)
+
+
+def ffn_flops(h, d_ff, t):
+    return 4 * h * d_ff * t
+
+
+def model_forward_flops(
+    layers, h, hp, d_ff, t, n_dense, n_sparse=0, sparse_kind="none", k=0, window=0
+):
+    per_layer = n_dense * (
+        local_head_flops(h, hp, t, window) if window > 0 else dense_head_flops(h, hp, t)
+    )
+    if n_sparse > 0 and sparse_kind != "none":
+        per_layer += n_sparse * sparse_head_flops(sparse_kind, h, hp, t, k, window)
+    per_layer += ffn_flops(h, d_ff, t)
+    return layers * per_layer
+
+
+def solve_sparse_heads(h, hp, t, k, n_base_dense, n_keep_dense, sparse_kind, window=0):
+    """IsoFLOP head solver (paper Sec 3.2): the maximum number of sparse
+    heads such that (kept dense heads + sparse heads) never exceed the
+    attention FLOP budget of `n_base_dense` dense heads."""
+    budget = n_base_dense * dense_head_flops(h, hp, t)
+    budget -= n_keep_dense * (
+        local_head_flops(h, hp, t, window) if window > 0 else dense_head_flops(h, hp, t)
+    )
+    if budget <= 0:
+        return 0
+    per = sparse_head_flops(sparse_kind, h, hp, t, k, window)
+    return budget // per
+
+
+def head_params(kind, h, hp):
+    """Trainable parameters of one attention head."""
+    if kind in ("dense", "fixed", "local"):
+        return 4 * h * hp
+    if kind == "mosa":
+        return 4 * h * hp + h  # + router Wr
+    if kind == "routing":
+        return 3 * h * hp  # shared Q=K projection
+    raise ValueError(kind)
+
+
+def model_params(layers, h, hp, d_ff, vocab, n_dense, n_sparse=0, sparse_kind="none"):
+    """Total parameter count (matches paper Table 5 at paper scale)."""
+    per_layer = n_dense * head_params("dense", h, hp)
+    if n_sparse > 0 and sparse_kind != "none":
+        per_layer += n_sparse * head_params(sparse_kind, h, hp)
+    per_layer += 2 * h * d_ff + d_ff + h  # ffn
+    per_layer += 4 * h  # ln1 + ln2
+    return layers * per_layer + vocab * h + h * vocab + vocab + 2 * h
+
+
+# Paper dense baselines (Table 4).
+PAPER_SIZES = {
+    "tiny": dict(layers=6, h=512, d_ff=2048, hp=64, heads=9),
+    "small": dict(layers=9, h=1024, d_ff=4096, hp=64, heads=9),
+    "medium": dict(layers=18, h=1024, d_ff=4096, hp=64, heads=9),
+    "large": dict(layers=27, h=1280, d_ff=5120, hp=64, heads=16),
+}
+PAPER_T = 1024
+PAPER_VOCAB = 8000

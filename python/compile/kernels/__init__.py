@@ -1,0 +1,4 @@
+"""L1 Pallas kernels + jnp oracles for every attention variant."""
+
+from . import ref  # noqa: F401
+from .attention import attention, attention_nokernel  # noqa: F401

@@ -1,0 +1,231 @@
+"""L1: position-masked attention as Pallas kernels (forward + backward).
+
+One kernel family serves every attention variant in the paper:
+
+- dense causal heads:   qpos = kpos = arange(T)
+- MoSA heads (Sec 2.2): qpos = kpos = I (expert-choice selected indices);
+  the causal mask on *original* positions ``I_i >= I_j`` is computed inside
+  the kernel from the position vectors.
+- fixed sparse heads:   qpos = kpos = [0, rho, 2*rho, ...]
+- local heads:          window > 0 adds the sliding-window constraint.
+- routing heads:        qpos = kpos = per-cluster selected indices.
+
+The kernels are written for TPU-style execution (see DESIGN.md
+§Hardware-Adaptation): the grid iterates over (batch*head, query-block);
+for each program instance the full K/V block of the head is resident in
+VMEM. At paper scale (T = 1024, d = 64, f32) K+V occupy 512 KiB — well
+inside the ~16 MiB VMEM of a TPU core, and for MoSA heads k <= 512 means
+the *entire head* (Q, K, V, O) fits in < 1 MiB, which is exactly the
+property that makes the expert-choice gather pay for itself: one HBM->VMEM
+gather, then all attention arithmetic runs from VMEM on the MXU.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernels are lowered to plain HLO. Correctness is
+asserted against the pure-jnp oracle in ``ref.py`` (python/tests/).
+
+Autodiff: ``pallas_call`` has no automatic transpose, so ``attention`` is a
+``jax.custom_vjp`` whose forward saves (q, k, v, o, lse) and whose backward
+is a second Pallas kernel implementing the standard FlashAttention-style
+recomputation backward pass.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+# Query block size. Tq in this project is always a power of two >= 8; the
+# block must divide Tq. 128 balances VMEM footprint against grid overhead.
+_DEF_BQ = 128
+
+
+def _pick_bq(tq):
+    bq = min(_DEF_BQ, tq)
+    while tq % bq != 0:
+        bq //= 2
+    return max(bq, 1)
+
+
+# ---------------------------------------------------------------------------
+# forward kernel
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, qpos_ref, kpos_ref, o_ref, lse_ref, *, scale, window):
+    """One (head, query-block) program instance.
+
+    q_ref: [bq, d] VMEM; k_ref/v_ref: [Tk, d] VMEM; qpos_ref: [bq] i32;
+    kpos_ref: [Tk] i32. Writes o_ref [bq, d] and lse_ref [bq].
+    """
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    qpos = qpos_ref[...]
+    kpos = kpos_ref[...]
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # MXU matmul
+    mask = qpos[:, None] >= kpos[None, :]
+    if window > 0:
+        mask = jnp.logical_and(mask, qpos[:, None] - kpos[None, :] < window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m = jnp.max(s, axis=1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=1, keepdims=True)
+    o = jnp.dot(p, v, preferred_element_type=jnp.float32) / l
+    o_ref[...] = o.astype(o_ref.dtype)
+    lse_ref[...] = (m + jnp.log(l))[:, 0]
+
+
+def _attention_fwd_impl(q, k, v, qpos, kpos, scale, window):
+    n, tq, d = q.shape
+    tk = k.shape[1]
+    bq = _pick_bq(tq)
+    grid = (n, tq // bq)
+    o, lse = pl.pallas_call(
+        functools.partial(_fwd_kernel, scale=scale, window=window),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, bq, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, tk, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, tk, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, bq), lambda i, j: (i, j)),
+            pl.BlockSpec((None, tk), lambda i, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, bq, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, bq), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, tq, d), q.dtype),
+            jax.ShapeDtypeStruct((n, tq), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v, qpos, kpos)
+    return o, lse
+
+
+# ---------------------------------------------------------------------------
+# backward kernel
+# ---------------------------------------------------------------------------
+
+
+def _bwd_kernel(
+    q_ref, k_ref, v_ref, qpos_ref, kpos_ref, o_ref, lse_ref, do_ref,
+    dq_ref, dk_ref, dv_ref, *, scale, window,
+):
+    """FlashAttention-style backward for one head: recompute the probability
+    matrix from (q, k, lse) and form dq/dk/dv. Whole head per program
+    instance — for MoSA heads Tq = Tk = k <= 512 so everything is VMEM
+    resident; for dense heads at our trainable scales (T <= 2048, d <= 32)
+    the score matrix is <= 16 MiB, the documented streaming threshold."""
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    qpos = qpos_ref[...]
+    kpos = kpos_ref[...]
+    o = o_ref[...]
+    lse = lse_ref[...]
+    do = do_ref[...]
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    mask = qpos[:, None] >= kpos[None, :]
+    if window > 0:
+        mask = jnp.logical_and(mask, qpos[:, None] - kpos[None, :] < window)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jnp.exp(s - lse[:, None])  # [Tq, Tk] recomputed probabilities
+
+    dv = jnp.dot(p.T, do, preferred_element_type=jnp.float32)
+    dp = jnp.dot(do, v.T, preferred_element_type=jnp.float32)
+    delta = jnp.sum(do * o, axis=1, keepdims=True)  # rowsum(do*o) = p.dp rows
+    ds = p * (dp - delta) * scale
+    dq = jnp.dot(ds, k, preferred_element_type=jnp.float32)
+    dk = jnp.dot(ds.T, q, preferred_element_type=jnp.float32)
+
+    dq_ref[...] = dq.astype(dq_ref.dtype)
+    dk_ref[...] = dk.astype(dk_ref.dtype)
+    dv_ref[...] = dv.astype(dv_ref.dtype)
+
+
+def _attention_bwd_impl(q, k, v, qpos, kpos, o, lse, do, scale, window):
+    n, tq, d = q.shape
+    tk = k.shape[1]
+    grid = (n,)
+    dq, dk, dv = pl.pallas_call(
+        functools.partial(_bwd_kernel, scale=scale, window=window),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, tq, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, tk, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, tk, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, tq), lambda i: (i, 0)),
+            pl.BlockSpec((None, tk), lambda i: (i, 0)),
+            pl.BlockSpec((None, tq, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, tq), lambda i: (i, 0)),
+            pl.BlockSpec((None, tq, d), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, tq, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, tk, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, tk, d), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, tq, d), q.dtype),
+            jax.ShapeDtypeStruct((n, tk, d), k.dtype),
+            jax.ShapeDtypeStruct((n, tk, d), v.dtype),
+        ],
+        interpret=True,
+    )(q, k, v, qpos, kpos, o, lse, do)
+    return dq, dk, dv
+
+
+# ---------------------------------------------------------------------------
+# public API: differentiable position-masked attention
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def attention(q, k, v, qpos, kpos, scale=None, window=0):
+    """Differentiable position-masked attention (Pallas kernels).
+
+    q: [N, Tq, d], k/v: [N, Tk, d], qpos: [N, Tq] i32, kpos: [N, Tk] i32.
+    N is the flattened batch*heads dimension. ``scale`` defaults to
+    1/sqrt(d); ``window`` > 0 adds the sliding-window constraint.
+    Semantics are defined by ``ref.ref_attention``.
+    """
+    if scale is None:
+        scale = 1.0 / float(np.sqrt(q.shape[-1]))
+    o, _ = _attention_fwd_impl(q, k, v, qpos, kpos, scale, window)
+    return o
+
+
+def _attention_vjp_fwd(q, k, v, qpos, kpos, scale, window):
+    if scale is None:
+        scale = 1.0 / float(np.sqrt(q.shape[-1]))
+    o, lse = _attention_fwd_impl(q, k, v, qpos, kpos, scale, window)
+    return o, (q, k, v, qpos, kpos, o, lse)
+
+
+def _attention_vjp_bwd(scale, window, res, do):
+    q, k, v, qpos, kpos, o, lse = res
+    if scale is None:
+        scale = 1.0 / float(np.sqrt(q.shape[-1]))
+    dq, dk, dv = _attention_bwd_impl(q, k, v, qpos, kpos, o, lse, do, scale, window)
+    zq = np.zeros(qpos.shape, dtype=jax.dtypes.float0)
+    zk = np.zeros(kpos.shape, dtype=jax.dtypes.float0)
+    return dq, dk, dv, zq, zk
+
+
+attention.defvjp(_attention_vjp_fwd, _attention_vjp_bwd)
+
+
+def attention_nokernel(q, k, v, qpos, kpos, scale=None, window=0):
+    """Oracle-backed drop-in for `attention` (used when config.use_kernel is
+    False and in A/B perf comparisons)."""
+    from . import ref
+
+    return ref.ref_attention(q, k, v, qpos, kpos, scale, window)

@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for the attention kernels.
+
+These are the CORE correctness signal: every Pallas kernel in this package
+must match these references to numerical tolerance (see python/tests/).
+They are deliberately written in the most direct way possible — full score
+matrix, explicit masks — so they are easy to audit against the paper's
+equations (Eq. 1 and Sec. 2.2).
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def position_mask(qpos, kpos, window=0):
+    """Boolean mask[i, j] = True iff query at original position qpos[i] may
+    attend to key at original position kpos[j].
+
+    Causality on *original* sequence positions (paper Sec 2.2:
+    ``M_ij = 0  <=>  I_i >= I_j``), optionally restricted to a sliding
+    window of size ``window`` (local attention): ``qpos - kpos < window``.
+    """
+    m = qpos[..., :, None] >= kpos[..., None, :]
+    if window > 0:
+        m = jnp.logical_and(m, qpos[..., :, None] - kpos[..., None, :] < window)
+    return m
+
+
+def ref_attention(q, k, v, qpos, kpos, scale=None, window=0):
+    """Masked attention with positions: softmax(q k^T * scale + M) v.
+
+    q: [..., Tq, d], k, v: [..., Tk, d], qpos: [..., Tq] int32,
+    kpos: [..., Tk] int32. Returns [..., Tq, d].
+
+    Dense causal attention is the special case qpos = kpos = arange(T);
+    MoSA's index-aware mask is the general case with qpos = kpos = I (the
+    selected indices); local attention sets window > 0.
+    """
+    d = q.shape[-1]
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(d, q.dtype))
+    s = jnp.einsum("...qd,...kd->...qk", q, k) * scale
+    s = jnp.where(position_mask(qpos, kpos, window), s, NEG_INF)
+    # numerically stable softmax; every query can attend to itself when the
+    # qpos == kpos sets coincide, so rows are never fully masked here.
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("...qk,...kd->...qd", p, v)
+
+
+def ref_attention_lse(q, k, v, qpos, kpos, scale=None, window=0):
+    """Same as ref_attention but also returns the log-sum-exp per query
+    (the residual the backward kernel needs)."""
+    d = q.shape[-1]
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(d, q.dtype))
+    s = jnp.einsum("...qd,...kd->...qk", q, k) * scale
+    s = jnp.where(position_mask(qpos, kpos, window), s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("...qk,...kd->...qd", p / l, v)
+    lse = (m + jnp.log(l))[..., 0]
+    return o, lse
+
+
+def ref_rope(x, pos, theta=10000.0):
+    """Rotary positional embedding, aware of original token positions.
+
+    x: [..., T, d] with d even; pos: [..., T] int32 (original sequence
+    positions — for MoSA these are the *selected indices* I, per Sec 2.2
+    "Positional encodings"). Rotates pairs (x[2i], x[2i+1]).
+    """
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = pos[..., :, None].astype(jnp.float32) * freqs  # [..., T, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1 = x[..., 0::2]
+    x2 = x[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x1 * sin + x2 * cos
+    out = jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)

@@ -1,0 +1,164 @@
+"""L2: the transformer language model (pre-LN, RoPE, hybrid attention).
+
+The model follows the paper's setup (Sec 3, App C): pre-layer-norm
+transformer, RoPE positional encodings, untied input/output embeddings,
+4h feed-forward, head dim h', and a hybrid attention layer per block —
+``n_dense`` dense (or local) heads plus ``n_sparse`` sparse heads of one of
+the kinds {mosa, fixed, routing}.
+
+Everything here is build-time Python: ``aot.py`` lowers the jitted
+functions to HLO text once; the Rust coordinator executes them via PJRT.
+"""
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .attention import AttnSpec, attention_layer, init_attention, init_attention_state
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 512
+    d_model: int = 128
+    d_head: int = 16
+    d_ff: int = 512
+    n_layers: int = 2
+    seq_len: int = 128
+    n_dense: int = 2
+    window: int = 0  # >0 turns the dense heads into local heads
+    n_sparse: int = 0
+    sparse_kind: str = "none"  # none | mosa | fixed | routing
+    k_sel: int = 0
+    include_first: bool = True
+    use_kernel: bool = True
+    rope_theta: float = 10000.0
+
+    def attn_spec(self, seq_len: Optional[int] = None) -> AttnSpec:
+        return AttnSpec(
+            d_model=self.d_model,
+            d_head=self.d_head,
+            seq_len=seq_len or self.seq_len,
+            n_dense=self.n_dense,
+            window=self.window,
+            n_sparse=self.n_sparse,
+            sparse_kind=self.sparse_kind,
+            k_sel=self.k_sel,
+            include_first=self.include_first,
+            use_kernel=self.use_kernel,
+            rope_theta=self.rope_theta,
+        )
+
+    def n_params(self) -> int:
+        """Exact trainable-parameter count (cross-checked against the Rust
+        flops module and, at paper scale, against paper Table 5)."""
+        h, d = self.d_model, self.d_head
+        attn = self.n_dense * 4 * h * d
+        if self.sparse_kind == "mosa":
+            attn += self.n_sparse * (4 * h * d + h)
+        elif self.sparse_kind == "fixed":
+            attn += self.n_sparse * 4 * h * d
+        elif self.sparse_kind == "routing":
+            attn += self.n_sparse * 3 * h * d
+        ffn = 2 * h * self.d_ff + self.d_ff + h
+        ln = 3 * 2 * h  # ln1, ln2 per layer contribute 2h each... see below
+        per_layer = attn + ffn + 4 * h  # ln1 + ln2 (scale+bias each)
+        emb = self.vocab * h
+        head = h * self.vocab + self.vocab
+        final_ln = 2 * h
+        return self.n_layers * per_layer + emb + head + final_ln
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg: ModelConfig):
+    """Initialise (params, state) pytrees. `state` holds non-gradient
+    buffers (routing centroids); it is empty for other variants."""
+    h = cfg.d_model
+    spec = cfg.attn_spec()
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    layers = []
+    states = []
+    for i in range(cfg.n_layers):
+        lk = jax.random.split(keys[i], 4)
+        layers.append(
+            {
+                "attn": init_attention(lk[0], spec),
+                "ln1": {"g": jnp.ones((h,), jnp.float32), "b": jnp.zeros((h,), jnp.float32)},
+                "ln2": {"g": jnp.ones((h,), jnp.float32), "b": jnp.zeros((h,), jnp.float32)},
+                "ffn": {
+                    "w1": (0.02 * jax.random.normal(lk[1], (h, cfg.d_ff))).astype(jnp.float32),
+                    "b1": jnp.zeros((cfg.d_ff,), jnp.float32),
+                    "w2": (0.02 * jax.random.normal(lk[2], (cfg.d_ff, h))).astype(jnp.float32),
+                    "b2": jnp.zeros((h,), jnp.float32),
+                },
+            }
+        )
+        st = init_attention_state(lk[3], spec)
+        states.append(st)
+    params = {
+        "emb": (0.02 * jax.random.normal(keys[-3], (cfg.vocab, h))).astype(jnp.float32),
+        "layers": layers,
+        "lnf": {"g": jnp.ones((h,), jnp.float32), "b": jnp.zeros((h,), jnp.float32)},
+        "out": (0.02 * jax.random.normal(keys[-2], (h, cfg.vocab))).astype(jnp.float32),
+        "out_b": jnp.zeros((cfg.vocab,), jnp.float32),
+    }
+    state = {"layers": states}
+    return params, state
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _layernorm(p, x, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * p["g"] + p["b"]
+
+
+def forward(params, state, tokens, cfg: ModelConfig, seq_len: Optional[int] = None):
+    """tokens [B, T] int32 -> logits [B, T, vocab], new_state.
+
+    `seq_len` overrides the attention spec length (downstream-task
+    programs run at shorter T with adaptive k, Sec 3.5)."""
+    spec = cfg.attn_spec(seq_len)
+    x = params["emb"][tokens]  # [B,T,h]
+    new_states = []
+    for lp, lst in zip(params["layers"], state["layers"]):
+        a, nst = attention_layer(lp["attn"], lst, _layernorm(lp["ln1"], x), spec)
+        x = x + a
+        hdn = _layernorm(lp["ln2"], x)
+        hdn = jax.nn.gelu(hdn @ lp["ffn"]["w1"] + lp["ffn"]["b1"])
+        x = x + hdn @ lp["ffn"]["w2"] + lp["ffn"]["b2"]
+        new_states.append(nst)
+    x = _layernorm(params["lnf"], x)
+    logits = x @ params["out"] + params["out_b"]
+    return logits, {"layers": new_states}
+
+
+def token_logprobs(params, state, tokens, cfg: ModelConfig, seq_len=None):
+    """Per-position log p(tokens[:, t+1] | tokens[:, :t+1]) — the single
+    scoring primitive used for both perplexity eval and downstream
+    multiple-choice scoring. tokens [B, T] -> lp [B, T-1]."""
+    logits, _ = forward(params, state, tokens[:, :-1], cfg, seq_len)
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    tgt = tokens[:, 1:]
+    return jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+
+
+def loss_fn(params, state, tokens, cfg: ModelConfig):
+    """Next-token cross-entropy over a [B, T+1] batch window.
+
+    Returns (mean_loss, new_state)."""
+    logits, new_state = forward(params, state, tokens[:, :-1], cfg)
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll), new_state

@@ -1,0 +1,124 @@
+"""L2: training/eval step functions lowered by aot.py.
+
+The AOT surface is four programs per model variant, all operating on a
+FLAT, positional list of arrays (the Rust side never sees a pytree):
+
+- init(seed)                      -> train_state
+- train(train_state, batch, lr)   -> train_state', loss
+- train_chunk(train_state, batches, lrs) -> train_state', losses   (perf)
+- score(model_state, tokens)      -> per-token logprobs [B, T-1]
+
+train_state = params ++ state ++ m ++ v ++ [t]; model_state = params ++
+state. The flattening order is jax.tree_util's canonical order, recorded
+in meta.json so the coordinator can name/checkpoint every slot.
+
+Optimisation follows the paper (Sec 3 "Implementation details"): Adam,
+gradient-norm clipping at 0.25, lr fed per step by the coordinator (which
+owns the 4k-step linear warmup schedule).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .model import ModelConfig, init_params, loss_fn, token_logprobs
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+CLIP_NORM = 0.25
+
+
+def global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in leaves))
+
+
+def clip_by_global_norm(tree, max_norm):
+    n = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (n + 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale, tree), n
+
+
+def init_opt(params):
+    m = jax.tree_util.tree_map(jnp.zeros_like, params)
+    v = jax.tree_util.tree_map(jnp.zeros_like, params)
+    t = jnp.zeros((), jnp.float32)
+    return m, v, t
+
+
+def adam_update(params, grads, m, v, t, lr):
+    t = t + 1.0
+    m = jax.tree_util.tree_map(lambda a, g: ADAM_B1 * a + (1 - ADAM_B1) * g, m, grads)
+    v = jax.tree_util.tree_map(lambda a, g: ADAM_B2 * a + (1 - ADAM_B2) * g * g, v, grads)
+    bc1 = 1.0 - ADAM_B1**t
+    bc2 = 1.0 - ADAM_B2**t
+    params = jax.tree_util.tree_map(
+        lambda p, mm, vv: p - lr * (mm / bc1) / (jnp.sqrt(vv / bc2) + ADAM_EPS),
+        params,
+        m,
+        v,
+    )
+    return params, m, v, t
+
+
+def make_train_step(cfg: ModelConfig):
+    """(params, state, m, v, t, batch[B,T+1] i32, lr f32) ->
+    (params', state', m', v', t', loss)."""
+
+    def step(params, state, m, v, t, batch, lr):
+        (loss, new_state), grads = jax.value_and_grad(
+            lambda p, s: loss_fn(p, s, batch, cfg), has_aux=True
+        )(params, state)
+        grads, _ = clip_by_global_norm(grads, CLIP_NORM)
+        params, m, v, t = adam_update(params, grads, m, v, t, lr)
+        return params, new_state, m, v, t, loss
+
+    return step
+
+
+def make_train_chunk(cfg: ModelConfig, chunk: int):
+    """Scan `chunk` optimisation steps inside one XLA program.
+
+    (params, state, m, v, t, batches[S,B,T+1], lrs[S]) ->
+    (..., losses[S]). One PJRT dispatch and one host round-trip per S
+    steps — the L3 hot-path optimisation measured in EXPERIMENTS.md §Perf.
+    """
+    step = make_train_step(cfg)
+
+    def chunk_fn(params, state, m, v, t, batches, lrs):
+        def body(carry, inp):
+            params, state, m, v, t = carry
+            batch, lr = inp
+            params, state, m, v, t, loss = step(params, state, m, v, t, batch, lr)
+            return (params, state, m, v, t), loss
+
+        (params, state, m, v, t), losses = jax.lax.scan(
+            body, (params, state, m, v, t), (batches, lrs)
+        )
+        return params, state, m, v, t, losses
+
+    return chunk_fn
+
+
+def make_score(cfg: ModelConfig, seq_len=None):
+    """(params, state, tokens[B,T] i32) -> logprobs [B, T-1].
+
+    Serves perplexity eval (coordinator averages) and downstream
+    multiple-choice scoring (coordinator masks the option span)."""
+
+    def score(params, state, tokens):
+        return token_logprobs(params, state, tokens, cfg, seq_len)
+
+    return score
+
+
+def make_init(cfg: ModelConfig):
+    """(seed i32) -> full train_state pytree."""
+
+    def init(seed):
+        key = jax.random.PRNGKey(seed)
+        params, state = init_params(key, cfg)
+        m, v, t = init_opt(params)
+        return params, state, m, v, t
+
+    return init

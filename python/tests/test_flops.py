@@ -1,0 +1,96 @@
+"""FLOP accounting vs the paper's printed numbers (Python side; the Rust
+side asserts the same fixtures — the two implementations are mirrors)."""
+
+import pytest
+
+from compile import flops
+
+
+def test_table4_exact():
+    expect = {
+        "tiny": 54_760_833_024,
+        "small": 219_848_638_464,
+        # paper prints 430.70G for Medium, but Medium is dimensionally
+        # exactly 2x Small (18 vs 9 layers, same h/ff/heads) => 439.70G.
+        # We assert the arithmetic truth; see EXPERIMENTS.md §Analytic.
+        "medium": 439_697_276_928,
+        "large": 1_130_650_140_672,
+    }
+    for name, want in expect.items():
+        s = flops.PAPER_SIZES[name]
+        got = flops.model_forward_flops(
+            s["layers"], s["h"], s["hp"], s["d_ff"], flops.PAPER_T, s["heads"]
+        )
+        assert got == want, name
+
+
+@pytest.mark.parametrize(
+    "rho,heads",
+    [(2, 13), (4, 31), (8, 69), (16, 142), (32, 276), (64, 505), (128, 848), (256, 1277)],
+)
+def test_table5_tiny_hybrid_heads(rho, heads):
+    s = flops.PAPER_SIZES["tiny"]
+    got = flops.solve_sparse_heads(
+        s["h"], s["hp"], flops.PAPER_T, flops.PAPER_T // rho, s["heads"], 4, "mosa"
+    )
+    assert got == heads
+
+
+@pytest.mark.parametrize("rho,heads", [(2, 23), (4, 56), (8, 124), (16, 255)])
+def test_table5_tiny_pure_heads(rho, heads):
+    s = flops.PAPER_SIZES["tiny"]
+    got = flops.solve_sparse_heads(
+        s["h"], s["hp"], flops.PAPER_T, flops.PAPER_T // rho, s["heads"], 0, "mosa"
+    )
+    assert got == heads
+
+
+@pytest.mark.parametrize(
+    "rho,params_m", [(2, 34), (4, 48), (8, 78), (16, 136), (32, 242), (64, 423)]
+)
+def test_table5_tiny_param_counts(rho, params_m):
+    s = flops.PAPER_SIZES["tiny"]
+    n = flops.solve_sparse_heads(
+        s["h"], s["hp"], flops.PAPER_T, flops.PAPER_T // rho, s["heads"], 4, "mosa"
+    )
+    p = flops.model_params(
+        s["layers"], s["h"], s["hp"], s["d_ff"], flops.PAPER_VOCAB, 4, n, "mosa"
+    )
+    assert round(p / 1e6) == params_m
+
+
+def test_solver_budget_invariant():
+    """Sparse attention FLOPs never exceed the dense baseline budget."""
+    import itertools
+
+    for h, t, rho, kind in itertools.product(
+        [128, 512], [128, 1024], [2, 8, 32], ["mosa", "fixed", "routing"]
+    ):
+        hp, base, keep = 64, 9, 4
+        k = max(t // rho, 2)
+        n = flops.solve_sparse_heads(h, hp, t, k, base, keep, kind)
+        budget = base * flops.dense_head_flops(h, hp, t)
+        spent = keep * flops.dense_head_flops(h, hp, t) + n * flops.sparse_head_flops(
+            kind, h, hp, t, k
+        )
+        assert spent <= budget
+        over = keep * flops.dense_head_flops(h, hp, t) + (n + 1) * flops.sparse_head_flops(
+            kind, h, hp, t, k
+        )
+        assert over > budget
+
+
+def test_mosa_head_flops_formula_terms():
+    # direct transcription check of App. A
+    h, hp, t, k = 512, 64, 1024, 128
+    want = 8 * h * hp * k + 4 * hp * k * k + 2 * h * t + hp * k
+    assert flops.mosa_head_flops(h, hp, t, k) == want
+
+
+def test_routing_equals_rho_decomposition():
+    # App A: FLOP_routing = rho*(6hh'k + 4h'k^2) + 2h'T
+    h, hp, t = 512, 64, 1024
+    for rho in [2, 4, 8]:
+        k = t // rho
+        want = rho * (6 * h * hp * k + 4 * hp * k * k) + 2 * hp * t
+        assert flops.routing_head_flops(h, hp, t, k) == want

@@ -1,0 +1,181 @@
+"""L2 model-level invariants: shapes, causality, training dynamics,
+parameter accounting, adaptive short-sequence scoring."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import ModelConfig, forward, init_params, loss_fn, token_logprobs
+from compile.train import clip_by_global_norm, global_norm, make_init, make_score, make_train_step
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFGS = {
+    "dense": ModelConfig(vocab=64, d_model=32, d_head=8, d_ff=64, n_layers=2, seq_len=32, n_dense=2),
+    "mosa": ModelConfig(vocab=64, d_model=32, d_head=8, d_ff=64, n_layers=2, seq_len=32,
+                        n_dense=1, n_sparse=3, sparse_kind="mosa", k_sel=8),
+    "fixed": ModelConfig(vocab=64, d_model=32, d_head=8, d_ff=64, n_layers=2, seq_len=32,
+                         n_dense=1, n_sparse=3, sparse_kind="fixed", k_sel=8),
+    "routing": ModelConfig(vocab=64, d_model=32, d_head=8, d_ff=64, n_layers=2, seq_len=32,
+                           n_dense=1, n_sparse=2, sparse_kind="routing", k_sel=8),
+    "local": ModelConfig(vocab=64, d_model=32, d_head=8, d_ff=64, n_layers=2, seq_len=32,
+                         n_dense=2, window=8, n_sparse=2, sparse_kind="mosa", k_sel=8),
+}
+
+
+def batch(cfg, b=2, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, cfg.vocab, size=(b, cfg.seq_len + 1)), jnp.int32)
+
+
+@pytest.mark.parametrize("name", list(CFGS))
+def test_forward_shapes(name):
+    cfg = CFGS[name]
+    params, state = init_params(jax.random.PRNGKey(0), cfg)
+    tok = batch(cfg)[:, :-1]
+    logits, new_state = forward(params, state, tok, cfg)
+    assert logits.shape == (2, cfg.seq_len, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_model_causality_dense():
+    """Changing token t must not affect logits at positions < t for the
+    dense model (strict autoregressive masking)."""
+    cfg = CFGS["dense"]
+    params, state = init_params(jax.random.PRNGKey(1), cfg)
+    tok = batch(cfg, b=1, seed=2)[:, :-1]
+    t_perturb = 20
+    tok2 = tok.at[0, t_perturb].set((tok[0, t_perturb] + 1) % cfg.vocab)
+    l1, _ = forward(params, state, tok, cfg)
+    l2, _ = forward(params, state, tok2, cfg)
+    np.testing.assert_allclose(
+        l1[0, :t_perturb], l2[0, :t_perturb], atol=2e-5,
+        err_msg="future token leaked into the past"
+    )
+    assert float(jnp.max(jnp.abs(l1[0, t_perturb:] - l2[0, t_perturb:]))) > 1e-4
+
+
+def test_mosa_selection_is_non_autoregressive():
+    """Paper Sec 5 (Limitations): expert-choice top-k is computed over the
+    WHOLE sequence, so a future token can change which tokens a head
+    selects — and thereby past logits — even though the attention mask
+    itself never lets a query read a future key. This test documents that
+    known property: the *mask* invariant holds (kernel tests), but strict
+    end-to-end causality does not."""
+    cfg = CFGS["mosa"]
+    params, state = init_params(jax.random.PRNGKey(1), cfg)
+    tok = batch(cfg, b=1, seed=2)[:, :-1]
+    t_perturb = 20
+    tok2 = tok.at[0, t_perturb].set((tok[0, t_perturb] + 1) % cfg.vocab)
+    l1, _ = forward(params, state, tok, cfg)
+    l2, _ = forward(params, state, tok2, cfg)
+    past_delta = float(jnp.max(jnp.abs(l1[0, :t_perturb] - l2[0, :t_perturb])))
+    assert past_delta > 0, (
+        "expected the documented non-autoregressive selection effect; "
+        "if this starts passing, the MoD-style autoregressive adaptation "
+        "(paper future work) has been implemented — update the test"
+    )
+
+
+@pytest.mark.parametrize("name", list(CFGS))
+def test_train_step_decreases_loss(name):
+    cfg = CFGS[name]
+    step = jax.jit(make_train_step(cfg))
+    p, s, m, v, t = jax.jit(make_init(cfg))(jnp.int32(0))
+    tok = batch(cfg, b=4, seed=3)
+    losses = []
+    for _ in range(25):
+        p, s, m, v, t, loss = step(p, s, m, v, t, tok, jnp.float32(3e-3))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.8, f"{name}: {losses[0]} -> {losses[-1]}"
+    assert float(t) == 25.0
+
+
+def test_initial_loss_near_uniform():
+    cfg = CFGS["mosa"]
+    params, state = init_params(jax.random.PRNGKey(4), cfg)
+    loss, _ = loss_fn(params, state, batch(cfg, seed=5), cfg)
+    assert abs(float(loss) - np.log(cfg.vocab)) < 0.3
+
+
+def test_param_count_matches_flops_module():
+    from compile import flops
+
+    for name, cfg in CFGS.items():
+        if cfg.window > 0:
+            continue  # local preset shares dense head params
+        params, _ = init_params(jax.random.PRNGKey(0), cfg)
+        actual = sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(params))
+        predicted = flops.model_params(
+            cfg.n_layers, cfg.d_model, cfg.d_head, cfg.d_ff, cfg.vocab,
+            cfg.n_dense, cfg.n_sparse, cfg.sparse_kind,
+        )
+        assert actual == predicted, f"{name}: {actual} != {predicted}"
+
+
+def test_token_logprobs_are_log_probabilities():
+    cfg = CFGS["mosa"]
+    params, state = init_params(jax.random.PRNGKey(6), cfg)
+    tok = batch(cfg, seed=7)
+    lp = token_logprobs(params, state, tok, cfg)
+    assert lp.shape == (2, cfg.seq_len)
+    assert bool(jnp.all(lp <= 0))
+
+
+def test_score_short_adaptive_k():
+    """Sec 3.5: at short T the model scores with k = max(T/rho, 2)."""
+    cfg = dataclasses.replace(CFGS["mosa"], seq_len=8, k_sel=2)
+    params, state = init_params(jax.random.PRNGKey(8), CFGS["mosa"])
+    score = make_score(cfg)
+    rng = np.random.default_rng(9)
+    tok = jnp.asarray(rng.integers(0, cfg.vocab, size=(1, 9)), jnp.int32)
+    lp = score(params, state, tok)
+    assert lp.shape == (1, 8)
+    assert bool(jnp.all(jnp.isfinite(lp)))
+
+
+def test_global_norm_clip():
+    tree = {"a": jnp.asarray([3.0, 4.0]), "b": jnp.zeros(2)}
+    assert abs(float(global_norm(tree)) - 5.0) < 1e-6
+    clipped, n = clip_by_global_norm(tree, 1.0)
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-5
+    # under the cap: untouched
+    same, _ = clip_by_global_norm(tree, 10.0)
+    np.testing.assert_allclose(same["a"], tree["a"])
+
+
+def test_deterministic_init():
+    cfg = CFGS["dense"]
+    p1, _ = init_params(jax.random.PRNGKey(42), cfg)
+    p2, _ = init_params(jax.random.PRNGKey(42), cfg)
+    for a, b in zip(jax.tree_util.tree_leaves(p1), jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_mosa_beats_dense_on_recall_task():
+    """A miniature of the paper's thesis: on a synthetic recall task
+    (predict a token declared earlier at a content-dependent position),
+    FLOP-matched MoSA should learn at least as well as a smaller dense
+    model. Smoke-scale: just assert MoSA trains to a reasonable loss."""
+    cfg = CFGS["mosa"]
+    step = jax.jit(make_train_step(cfg))
+    p, s, m, v, t = jax.jit(make_init(cfg))(jnp.int32(1))
+    rng = np.random.default_rng(10)
+    # recall batch: [k, v, noise..., k] -> predict v
+    def recall_batch():
+        b = np.full((4, cfg.seq_len + 1), 0, dtype=np.int32)
+        for i in range(4):
+            key, val = rng.integers(1, 32), rng.integers(32, 63)
+            b[i] = rng.integers(1, 32, size=cfg.seq_len + 1)
+            b[i, 0], b[i, 1] = key, val
+            b[i, -2], b[i, -1] = key, val
+        return jnp.asarray(b)
+
+    losses = []
+    for _ in range(60):
+        p, s, m, v, t, loss = step(p, s, m, v, t, recall_batch(), jnp.float32(3e-3))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], "MoSA failed to learn the recall task"

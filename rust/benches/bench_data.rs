@@ -1,0 +1,37 @@
+//! Bench: data pipeline — corpus generation and batch sampling rates.
+//! Batch sampling runs on the training hot path (between PJRT dispatches)
+//! so its cost must stay far below a train step (~100+ ms).
+
+use mosa::coordinator::trainer::BatchSource;
+use mosa::data::{CorpusGen, TokenDataset};
+use mosa::util::stats::{bench, report, time_once};
+
+fn main() {
+    println!("== bench_data ==");
+    let (text, dur) = time_once(|| CorpusGen::new(2).generate(400_000));
+    println!(
+        "corpus_gen: 400 KB in {:.3}s ({:.1} MB/s)",
+        dur.as_secs_f64(),
+        0.4 / dur.as_secs_f64()
+    );
+    let _ = text;
+
+    let ds = TokenDataset::from_ids((0..500_000).map(|i| (i % 500) as i32).collect(), 512);
+    let mut sampler = ds.sampler(1);
+    let s = bench(10, 500, || {
+        std::hint::black_box(sampler.next_batch(8, 129));
+    });
+    report("window_sampler 8x129", &s);
+
+    let mut sampler = ds.sampler(2);
+    let s = bench(10, 200, || {
+        std::hint::black_box(sampler.next_batch(2, 2049));
+    });
+    report("window_sampler 2x2049 (longseq)", &s);
+
+    let mut seq = mosa::data::SequentialWindows::new(&ds);
+    let s = bench(10, 500, || {
+        std::hint::black_box(seq.next_batch(8, 129));
+    });
+    report("sequential_windows 8x129", &s);
+}

@@ -1,0 +1,36 @@
+//! Bench: FLOP accounting + IsoFLOP solver (pure arithmetic — establishes
+//! that experiment planning is never a bottleneck) and prints the
+//! paper-scale Table 4 numbers as a cross-check.
+
+use mosa::flops::{dense_head, model_forward, mosa_head, solve_sparse_heads, SparseKind};
+use mosa::util::stats::{bench, report};
+
+fn main() {
+    println!("== bench_flops ==");
+    let s = bench(100, 2000, || {
+        let mut acc = 0u64;
+        for rho in [2u64, 4, 8, 16, 32, 64, 128, 256] {
+            acc = acc.wrapping_add(solve_sparse_heads(
+                512, 64, 1024, 1024 / rho, 9, 4, SparseKind::Mosa, 0,
+            ));
+        }
+        std::hint::black_box(acc);
+    });
+    report("isoflop_solver (8 sparsities, tiny)", &s);
+
+    let s = bench(100, 2000, || {
+        let f = model_forward(27, 1280, 64, 5120, 1024, 16, 0, 0, SparseKind::None, 0);
+        std::hint::black_box(f);
+    });
+    report("model_forward_flops (large)", &s);
+
+    let s = bench(100, 2000, || {
+        let mut acc = 0u64;
+        for k in [8u64, 16, 32, 64, 128, 256, 512] {
+            acc = acc.wrapping_add(mosa_head(512, 64, 1024, k));
+            acc = acc.wrapping_add(dense_head(512, 64, 1024));
+        }
+        std::hint::black_box(acc);
+    });
+    report("per-head formulas (14 evals)", &s);
+}

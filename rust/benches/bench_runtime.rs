@@ -1,0 +1,57 @@
+//! Bench: PJRT runtime layer — artifact compile time, literal round
+//! trips, host init, state clone; the fixed costs around every train
+//! step. Feeds EXPERIMENTS.md §Perf (L3).
+
+use mosa::runtime::engine::{lit_i32, Engine};
+use mosa::runtime::{Manifest, TrainState};
+use mosa::util::stats::{bench, report, time_once};
+
+fn main() {
+    println!("== bench_runtime ==");
+    let manifest = match Manifest::load("artifacts") {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skipping runtime bench (no artifacts): {e}");
+            return;
+        }
+    };
+    let v = manifest.variant("micro_mosa_r8").expect("core set");
+    let mut engine = Engine::cpu().unwrap();
+
+    let (_, dur) = time_once(|| engine.load_program(&manifest, v, "score").unwrap());
+    println!("xla_compile score: {:.2}s", dur.as_secs_f64());
+    let (_, dur) = time_once(|| engine.load_program(&manifest, v, "train").unwrap());
+    println!("xla_compile train: {:.2}s", dur.as_secs_f64());
+    let (_, dur) = time_once(|| engine.load_program(&manifest, v, "train").unwrap());
+    println!("xla_compile train (cached): {:.6}s", dur.as_secs_f64());
+
+    let s = bench(2, 20, || {
+        std::hint::black_box(TrainState::init_host(v, 0).unwrap());
+    });
+    report("host_init (118 leaves, 2.3 MB params)", &s);
+
+    let state = TrainState::init_host(v, 0).unwrap();
+    let s = bench(2, 50, || {
+        let c: Vec<xla::Literal> = state.leaves.iter().cloned().collect();
+        std::hint::black_box(c);
+    });
+    report("state_clone (per-step input copy)", &s);
+
+    let b = v.batch;
+    let t1 = v.config.seq_len + 1;
+    let tokens: Vec<i32> = (0..b * t1).map(|i| (i % 500) as i32).collect();
+    let s = bench(10, 200, || {
+        std::hint::black_box(lit_i32(&tokens, &[b, t1]).unwrap());
+    });
+    report("batch literal build 8x129", &s);
+
+    // score round-trip: inputs upload + execute + tuple download
+    let exe_ptr = manifest.hlo_path(v, "score").unwrap();
+    let exe = engine.load(&exe_ptr).unwrap();
+    let mut inputs: Vec<xla::Literal> = state.model_leaves(v).to_vec();
+    inputs.push(lit_i32(&tokens, &[b, t1]).unwrap());
+    let s = bench(2, 15, || {
+        std::hint::black_box(Engine::run(exe, &inputs).unwrap());
+    });
+    report("score round-trip (fwd only)", &s);
+}

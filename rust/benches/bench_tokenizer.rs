@@ -1,0 +1,36 @@
+//! Bench: BPE substrate — training throughput and encode/decode speed.
+//! The tokenizer sits on the data path of every experiment; this bench
+//! documents that it is never the bottleneck vs the PJRT step (ms-scale).
+
+use mosa::data::{Bpe, CorpusGen};
+use mosa::util::stats::{bench, report, time_once};
+
+fn main() {
+    println!("== bench_tokenizer ==");
+    let text = CorpusGen::new(1).generate(200_000);
+    let bytes = text.as_bytes();
+
+    let (bpe, dur) = time_once(|| Bpe::train(bytes, 512).unwrap());
+    println!(
+        "bpe_train: 200 KB -> vocab {} in {:.2}s ({:.0} KB/s)",
+        bpe.vocab_size(),
+        dur.as_secs_f64(),
+        200.0 / dur.as_secs_f64()
+    );
+
+    let sample = &bytes[..10_000];
+    let s = bench(3, 20, || {
+        std::hint::black_box(bpe.encode(sample));
+    });
+    report("bpe_encode (10 KB)", &s);
+    println!(
+        "  encode throughput: {:.2} MB/s",
+        10_000.0 / (s.mean_ns / 1e9) / 1e6
+    );
+
+    let ids = bpe.encode(sample);
+    let s = bench(3, 50, || {
+        std::hint::black_box(bpe.decode(&ids));
+    });
+    report("bpe_decode (10 KB)", &s);
+}

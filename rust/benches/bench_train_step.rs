@@ -1,0 +1,120 @@
+//! Bench: end-to-end train-step wall time per core variant — the
+//! MEASURED column of the Table 2 analogue, plus the per-step vs chunked
+//! dispatch comparison driving EXPERIMENTS.md §Perf (L3).
+
+use mosa::coordinator::{LrSchedule, TrainOptions, Trainer};
+use mosa::runtime::{Engine, Manifest};
+use mosa::util::rng::Pcg;
+
+fn main() {
+    println!("== bench_train_step ==");
+    let manifest = match Manifest::load("artifacts") {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skipping (no artifacts): {e}");
+            return;
+        }
+    };
+    let mut engine = Engine::cpu().unwrap();
+    let steps = 24u64;
+
+    println!(
+        "{:<22} {:>8} {:>12} {:>14} {:>12}",
+        "variant", "heads", "flops/step", "ms/step", "MFLOP/s"
+    );
+    for name in ["micro_dense", "micro_mosa_r8", "micro_fixed_r8", "micro_routing_r8"] {
+        let v = match manifest.variant(name) {
+            Ok(v) => v,
+            Err(_) => continue,
+        };
+        let trainer = Trainer::new(&manifest, v);
+        let mut rng = Pcg::seeded(1);
+        let mut src =
+            move |b: usize, t: usize| (0..b * t).map(|_| rng.below(500) as i32).collect::<Vec<i32>>();
+        let opts = TrainOptions {
+            steps,
+            schedule: LrSchedule::paper_like(1e-3, 2, steps),
+            seed: 0,
+            log_every: 0,
+            use_chunk: false,
+            checkpoint: None,
+            eval_every: 0,
+        };
+        let (_, metrics) = trainer.train(&mut engine, &mut src, &opts).unwrap();
+        let ms = metrics.mean_ms(4);
+        // fwd+bwd ~ 3x fwd FLOPs, per batch
+        let flops_step = 3.0 * v.flops_fwd as f64 * v.batch as f64;
+        println!(
+            "{:<22} {:>8} {:>12.2}G {:>14.1} {:>12.0}",
+            name,
+            v.config.n_dense + v.config.n_sparse,
+            flops_step / 1e9,
+            ms,
+            flops_step / (ms / 1e3) / 1e6
+        );
+    }
+
+    // L1 ablation: Pallas-kernel lowering vs pure-jnp (XLA-native) lowering
+    // of the same MoSA hybrid (same weights layout, same math).
+    println!("\nPallas kernel vs jnp-oracle lowering (micro_mosa_r8):");
+    for name in ["micro_mosa_r8", "micro_mosa_r8_nokernel"] {
+        let v = match manifest.variant(name) {
+            Ok(v) => v,
+            Err(_) => {
+                println!("  {name}: not lowered (make artifacts / --set perf)");
+                continue;
+            }
+        };
+        let trainer = Trainer::new(&manifest, v);
+        let mut rng = Pcg::seeded(7);
+        let mut src =
+            move |b: usize, t: usize| (0..b * t).map(|_| rng.below(500) as i32).collect::<Vec<i32>>();
+        let opts = TrainOptions {
+            steps,
+            schedule: LrSchedule::paper_like(1e-3, 2, steps),
+            seed: 0,
+            log_every: 0,
+            use_chunk: false,
+            checkpoint: None,
+            eval_every: 0,
+        };
+        let (_, metrics) = trainer.train(&mut engine, &mut src, &opts).unwrap();
+        let hlo = std::fs::metadata(manifest.hlo_path(v, "train").unwrap())
+            .map(|m| m.len())
+            .unwrap_or(0);
+        println!(
+            "  {:<26} {:>8.1} ms/step   (train HLO {:>6} KB)",
+            name,
+            metrics.mean_ms(4),
+            hlo / 1024
+        );
+    }
+
+    // dispatch-granularity comparison (the §Perf L3 optimisation)
+    println!("\nper-step vs chunked dispatch (micro_mosa_r8):");
+    let v = manifest.variant("micro_mosa_r8").unwrap();
+    if v.programs.contains_key("train_chunk") {
+        let trainer = Trainer::new(&manifest, v);
+        for use_chunk in [false, true] {
+            let mut rng = Pcg::seeded(2);
+            let mut src = move |b: usize, t: usize| {
+                (0..b * t).map(|_| rng.below(500) as i32).collect::<Vec<i32>>()
+            };
+            let opts = TrainOptions {
+                steps: 32,
+                schedule: LrSchedule::paper_like(1e-3, 2, 32),
+                seed: 0,
+                log_every: 0,
+                use_chunk,
+                checkpoint: None,
+                eval_every: 0,
+            };
+            let (_, metrics) = trainer.train(&mut engine, &mut src, &opts).unwrap();
+            println!(
+                "  {:<10} {:>8.1} ms/step",
+                if use_chunk { "chunked" } else { "per-step" },
+                metrics.mean_ms(8)
+            );
+        }
+    }
+}

@@ -1,0 +1,68 @@
+//! Run-level configuration: artifact/result/cache locations and the
+//! defaults every driver shares. Model-level configuration lives in the
+//! artifact manifest (written by the Python compile path) — the Rust side
+//! never invents shapes.
+
+use crate::util::cli::Args;
+
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub artifacts_dir: String,
+    pub results_dir: String,
+    pub cache_dir: String,
+    pub seed: u64,
+    pub steps: u64,
+    pub base_lr: f64,
+    pub corpus_bytes: usize,
+    pub eval_batches: usize,
+    pub use_chunk: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            artifacts_dir: "artifacts".into(),
+            results_dir: "results".into(),
+            cache_dir: "results/cache".into(),
+            seed: 0,
+            steps: 200,
+            base_lr: 1e-3,
+            corpus_bytes: 400_000,
+            eval_batches: 8,
+            use_chunk: false,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Merge CLI flags over the defaults (shared by every subcommand).
+    pub fn from_args(args: &Args) -> RunConfig {
+        let d = RunConfig::default();
+        RunConfig {
+            artifacts_dir: args.get_or("artifacts", &d.artifacts_dir),
+            results_dir: args.get_or("results", &d.results_dir),
+            cache_dir: args.get_or("cache", &d.cache_dir),
+            seed: args.get_u64("seed", d.seed),
+            steps: args.get_u64("steps", d.steps),
+            base_lr: args.get_f64("lr", d.base_lr),
+            corpus_bytes: args.get_usize("corpus-bytes", d.corpus_bytes),
+            eval_batches: args.get_usize("eval-batches", d.eval_batches),
+            use_chunk: args.has("chunk"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::cli::Args;
+
+    #[test]
+    fn args_override_defaults() {
+        let a = Args::parse(["--steps".to_string(), "42".to_string(), "--chunk".to_string()]);
+        let c = RunConfig::from_args(&a);
+        assert_eq!(c.steps, 42);
+        assert!(c.use_chunk);
+        assert_eq!(c.results_dir, "results");
+    }
+}

@@ -1,0 +1,123 @@
+//! Run metrics: per-step loss log, wall-clock accounting, CSV export.
+//!
+//! Every experiment driver writes its series through this module so the
+//! figures' data (Fig 3/4/5/6/7 analogues) all share one format:
+//! `results/<run>.csv` with a `# key: value` JSON-ish header followed by
+//! `step,loss,lr,ms_per_step` rows.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+#[derive(Debug, Clone)]
+pub struct StepRecord {
+    pub step: u64,
+    pub loss: f64,
+    pub lr: f64,
+    pub ms: f64,
+}
+
+#[derive(Debug)]
+pub struct RunMetrics {
+    pub run_name: String,
+    pub records: Vec<StepRecord>,
+    pub started: Instant,
+    pub notes: Vec<(String, String)>,
+}
+
+impl RunMetrics {
+    pub fn new(run_name: impl Into<String>) -> RunMetrics {
+        RunMetrics {
+            run_name: run_name.into(),
+            records: Vec::new(),
+            started: Instant::now(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn note(&mut self, key: &str, value: impl ToString) {
+        self.notes.push((key.to_string(), value.to_string()));
+    }
+
+    pub fn record(&mut self, step: u64, loss: f64, lr: f64, ms: f64) {
+        self.records.push(StepRecord { step, loss, lr, ms });
+    }
+
+    /// Mean loss over the last `n` records (training-curve tail).
+    pub fn tail_loss(&self, n: usize) -> f64 {
+        if self.records.is_empty() {
+            return f64::NAN;
+        }
+        let take = n.min(self.records.len());
+        let s: f64 = self.records[self.records.len() - take..].iter().map(|r| r.loss).sum();
+        s / take as f64
+    }
+
+    pub fn tail_ppl(&self, n: usize) -> f64 {
+        self.tail_loss(n).exp()
+    }
+
+    /// Mean wall-ms per step, excluding the first `skip` records (compile
+    /// + cache warmup).
+    pub fn mean_ms(&self, skip: usize) -> f64 {
+        if self.records.len() <= skip {
+            return f64::NAN;
+        }
+        let xs = &self.records[skip..];
+        xs.iter().map(|r| r.ms).sum::<f64>() / xs.len() as f64
+    }
+
+    pub fn save_csv(&self, dir: impl AsRef<Path>) -> Result<PathBuf> {
+        std::fs::create_dir_all(dir.as_ref())?;
+        let path = dir.as_ref().join(format!("{}.csv", self.run_name));
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(&path).with_context(|| format!("creating {}", path.display()))?,
+        );
+        for (k, v) in &self.notes {
+            writeln!(f, "# {}: {}", k, v)?;
+        }
+        writeln!(f, "step,loss,lr,ms_per_step")?;
+        for r in &self.records {
+            writeln!(f, "{},{:.6},{:.8},{:.3}", r.step, r.loss, r.lr, r.ms)?;
+        }
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tail_and_mean() {
+        let mut m = RunMetrics::new("t");
+        for i in 0..10 {
+            m.record(i, i as f64, 1e-3, 2.0 * i as f64);
+        }
+        assert!((m.tail_loss(2) - 8.5).abs() < 1e-12);
+        assert!((m.mean_ms(2) - 11.0).abs() < 1e-12); // mean of 4..18
+        assert!((m.tail_ppl(1) - (9f64).exp()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut m = RunMetrics::new("csv_test");
+        m.note("variant", "micro_dense");
+        m.record(0, 3.0, 1e-4, 12.0);
+        let dir = std::env::temp_dir().join("mosa_metrics_test");
+        let p = m.save_csv(&dir).unwrap();
+        let body = std::fs::read_to_string(p).unwrap();
+        assert!(body.contains("# variant: micro_dense"));
+        assert!(body.contains("step,loss,lr,ms_per_step"));
+        assert!(body.lines().count() == 3);
+    }
+
+    #[test]
+    fn empty_tail_is_nan() {
+        let m = RunMetrics::new("e");
+        assert!(m.tail_loss(5).is_nan());
+        assert!(m.mean_ms(0).is_nan());
+    }
+}

@@ -1,0 +1,9 @@
+//! L3 coordination: trainer loop, LR schedule, metrics, checkpoints.
+
+pub mod metrics;
+pub mod schedule;
+pub mod trainer;
+
+pub use metrics::RunMetrics;
+pub use schedule::LrSchedule;
+pub use trainer::{BatchSource, TrainOptions, Trainer};

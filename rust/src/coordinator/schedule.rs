@@ -1,0 +1,81 @@
+//! Learning-rate schedule — owned by the coordinator (the AOT train step
+//! takes lr as an input each step).
+//!
+//! The paper (Sec 3 "Implementation details") uses Adam at 2.5e-4 with a
+//! linear warmup over 4k steps and no decay; we scale the warmup length
+//! with the (much shorter) run length and support optional cosine decay
+//! for ablations.
+
+#[derive(Debug, Clone)]
+pub struct LrSchedule {
+    pub base_lr: f64,
+    pub warmup_steps: u64,
+    pub total_steps: u64,
+    pub cosine_decay: bool,
+    pub min_lr_frac: f64,
+}
+
+impl LrSchedule {
+    pub fn paper_like(base_lr: f64, warmup_steps: u64, total_steps: u64) -> LrSchedule {
+        LrSchedule { base_lr, warmup_steps, total_steps, cosine_decay: false, min_lr_frac: 0.1 }
+    }
+
+    pub fn with_cosine(mut self) -> LrSchedule {
+        self.cosine_decay = true;
+        self
+    }
+
+    /// lr for (0-based) step `t`.
+    pub fn lr(&self, t: u64) -> f64 {
+        let warm = self.warmup_steps.max(1);
+        if t < self.warmup_steps {
+            return self.base_lr * (t + 1) as f64 / warm as f64;
+        }
+        if !self.cosine_decay {
+            return self.base_lr;
+        }
+        let span = (self.total_steps.saturating_sub(self.warmup_steps)).max(1) as f64;
+        let p = ((t - self.warmup_steps) as f64 / span).min(1.0);
+        let cos = 0.5 * (1.0 + (std::f64::consts::PI * p).cos());
+        self.base_lr * (self.min_lr_frac + (1.0 - self.min_lr_frac) * cos)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_is_linear_then_constant() {
+        let s = LrSchedule::paper_like(1e-3, 10, 100);
+        assert!((s.lr(0) - 1e-4).abs() < 1e-12);
+        assert!((s.lr(4) - 5e-4).abs() < 1e-12);
+        assert!((s.lr(9) - 1e-3).abs() < 1e-12);
+        assert_eq!(s.lr(10), 1e-3);
+        assert_eq!(s.lr(99), 1e-3);
+    }
+
+    #[test]
+    fn cosine_decays_to_min_frac() {
+        let s = LrSchedule::paper_like(1e-3, 0, 100).with_cosine();
+        assert!(s.lr(0) > s.lr(50));
+        assert!(s.lr(50) > s.lr(99));
+        assert!((s.lr(100) - 1e-4).abs() < 1e-8);
+    }
+
+    #[test]
+    fn prop_monotone_during_warmup_nonincreasing_after() {
+        let mut rng = crate::util::rng::Pcg::seeded(5);
+        for _ in 0..100 {
+            let warm = 1 + rng.below(50) as u64;
+            let total = warm + 1 + rng.below(200) as u64;
+            let s = LrSchedule::paper_like(1e-3, warm, total).with_cosine();
+            for t in 1..warm {
+                assert!(s.lr(t) >= s.lr(t - 1));
+            }
+            for t in (warm + 1)..total {
+                assert!(s.lr(t) <= s.lr(t - 1) + 1e-15);
+            }
+        }
+    }
+}

@@ -1,0 +1,227 @@
+//! The training coordinator: owns the loop, the schedule, checkpoints and
+//! metrics; all compute happens inside the AOT-compiled PJRT programs.
+//!
+//! Two execution modes:
+//! - per-step: one PJRT dispatch per optimisation step (baseline)
+//! - chunked:  `train_chunk` artifact runs CHUNK steps inside one XLA
+//!   program via lax.scan — one dispatch and one host round-trip per
+//!   chunk (the §Perf optimisation; see EXPERIMENTS.md)
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::engine::{lit_f32, lit_i32, lit_scalar_f32, scalar_f32, to_vec_f32, Engine};
+use crate::runtime::manifest::{Manifest, Variant};
+use crate::runtime::state::TrainState;
+
+use super::metrics::RunMetrics;
+use super::schedule::LrSchedule;
+
+/// Anything that can produce token batches (the data pipeline implements
+/// this; tests use closures/synthetic sources).
+pub trait BatchSource {
+    /// Fill a [b, t] i32 token matrix (row-major).
+    fn next_batch(&mut self, b: usize, t: usize) -> Vec<i32>;
+}
+
+impl<F: FnMut(usize, usize) -> Vec<i32>> BatchSource for F {
+    fn next_batch(&mut self, b: usize, t: usize) -> Vec<i32> {
+        self(b, t)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainOptions {
+    pub steps: u64,
+    pub schedule: LrSchedule,
+    pub seed: i32,
+    pub log_every: u64,
+    pub use_chunk: bool,
+    pub checkpoint: Option<String>,
+    /// evaluate test ppl every N steps (0 = only at end); requires eval data
+    pub eval_every: u64,
+}
+
+impl TrainOptions {
+    pub fn quick(steps: u64) -> TrainOptions {
+        TrainOptions {
+            steps,
+            schedule: LrSchedule::paper_like(1e-3, steps / 10 + 1, steps),
+            seed: 0,
+            log_every: 20,
+            use_chunk: false,
+            checkpoint: None,
+            eval_every: 0,
+        }
+    }
+}
+
+pub struct Trainer<'m> {
+    pub manifest: &'m Manifest,
+    pub variant: &'m Variant,
+}
+
+impl<'m> Trainer<'m> {
+    pub fn new(manifest: &'m Manifest, variant: &'m Variant) -> Trainer<'m> {
+        Trainer { manifest, variant }
+    }
+
+    /// Run `opts.steps` optimisation steps; returns (final state, metrics).
+    pub fn train(
+        &self,
+        engine: &mut Engine,
+        data: &mut dyn BatchSource,
+        opts: &TrainOptions,
+    ) -> Result<(TrainState, RunMetrics)> {
+        let v = self.variant;
+        let mut metrics = RunMetrics::new(v.name.clone());
+        metrics.note("variant", &v.name);
+        metrics.note("params", v.n_params);
+        metrics.note("flops_fwd", v.flops_fwd);
+        metrics.note("mode", if opts.use_chunk { "chunk" } else { "step" });
+
+        let mut state = TrainState::init(engine, self.manifest, v, opts.seed)?;
+        log::info!(
+            "[{}] initialised {} leaves / {:.2} MB params+opt",
+            v.name,
+            state.leaves.len(),
+            state.total_bytes() as f64 / 1e6
+        );
+
+        if opts.use_chunk {
+            self.train_chunked(engine, data, opts, &mut state, &mut metrics)?;
+        } else {
+            self.train_per_step(engine, data, opts, &mut state, &mut metrics)?;
+        }
+
+        if let Some(ckpt) = &opts.checkpoint {
+            state.save(v, ckpt)?;
+            log::info!("[{}] checkpoint -> {}", v.name, ckpt);
+        }
+        Ok((state, metrics))
+    }
+
+    fn train_per_step(
+        &self,
+        engine: &mut Engine,
+        data: &mut dyn BatchSource,
+        opts: &TrainOptions,
+        state: &mut TrainState,
+        metrics: &mut RunMetrics,
+    ) -> Result<()> {
+        let v = self.variant;
+        let (b, t1) = (v.batch, v.config.seq_len + 1);
+        // compile up-front so step timings are pure execution
+        engine.load_program(self.manifest, v, "train")?;
+        for step in 0..opts.steps {
+            let lr = opts.schedule.lr(step) as f32;
+            let tokens = data.next_batch(b, t1);
+            let t0 = Instant::now();
+            // inputs by reference: execute() is generic over Borrow<Literal>,
+            // so the state literals are NOT host-copied per step (§Perf L3-1;
+            // the clone-per-step baseline cost is recorded in bench_runtime).
+            let batch_lit = lit_i32(&tokens, &[b, t1])?;
+            let lr_lit = lit_scalar_f32(lr);
+            let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(state.leaves.len() + 2);
+            inputs.extend(state.leaves.iter());
+            inputs.push(&batch_lit);
+            inputs.push(&lr_lit);
+            let exe = engine.load_program(self.manifest, v, "train")?;
+            let outs = Engine::run(exe, &inputs)?;
+            let extra = state.absorb(v, outs, 1)?;
+            let loss = scalar_f32(&extra[0])? as f64;
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            metrics.record(step, loss, lr as f64, ms);
+            if opts.log_every > 0 && (step % opts.log_every == 0 || step + 1 == opts.steps) {
+                log::info!("[{}] step {:>5} loss {:.4} ({:.0} ms)", v.name, step, loss, ms);
+            }
+            if !loss.is_finite() {
+                bail!("[{}] loss diverged at step {}", v.name, step);
+            }
+        }
+        Ok(())
+    }
+
+    fn train_chunked(
+        &self,
+        engine: &mut Engine,
+        data: &mut dyn BatchSource,
+        opts: &TrainOptions,
+        state: &mut TrainState,
+        metrics: &mut RunMetrics,
+    ) -> Result<()> {
+        let v = self.variant;
+        let (b, t1) = (v.batch, v.config.seq_len + 1);
+        let spec = v.program("train_chunk")?;
+        let s = spec.chunk.unwrap_or(8);
+        engine.load_program(self.manifest, v, "train_chunk")?;
+        let mut step = 0u64;
+        while step < opts.steps {
+            let n = s.min((opts.steps - step) as usize);
+            // the artifact is fixed at S steps; short tails re-run data
+            // through a full chunk but we only keep the first n losses'
+            // worth of progress when n == s (tails just run extra steps —
+            // acceptable for training; documented in the module docs).
+            let mut batches = Vec::with_capacity(s * b * t1);
+            let mut lrs = Vec::with_capacity(s);
+            for i in 0..s {
+                batches.extend_from_slice(&data.next_batch(b, t1));
+                lrs.push(opts.schedule.lr(step + i as u64) as f32);
+            }
+            let t0 = Instant::now();
+            let batch_lit = lit_i32(&batches, &[s, b, t1])?;
+            let lr_lit = lit_f32(&lrs, &[s])?;
+            let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(state.leaves.len() + 2);
+            inputs.extend(state.leaves.iter());
+            inputs.push(&batch_lit);
+            inputs.push(&lr_lit);
+            let exe = engine.load_program(self.manifest, v, "train_chunk")?;
+            let outs = Engine::run(exe, &inputs)?;
+            let extra = state.absorb(v, outs, s as u64)?;
+            let losses = to_vec_f32(&extra[0])?;
+            let ms = t0.elapsed().as_secs_f64() * 1e3 / s as f64;
+            for (i, loss) in losses.iter().enumerate() {
+                metrics.record(step + i as u64, *loss as f64, lrs[i] as f64, ms);
+            }
+            let last = *losses.last().unwrap() as f64;
+            if opts.log_every > 0 {
+                log::info!("[{}] step {:>5} loss {:.4} ({:.0} ms/step, chunked)", v.name, step + s as u64 - 1, last, ms);
+            }
+            if !last.is_finite() {
+                bail!("[{}] loss diverged at step {}", v.name, step);
+            }
+            step += s as u64;
+            let _ = n;
+        }
+        Ok(())
+    }
+
+    /// Perplexity over `n_batches` of held-out data via the score program.
+    pub fn evaluate(
+        &self,
+        engine: &mut Engine,
+        data: &mut dyn BatchSource,
+        state: &TrainState,
+        n_batches: usize,
+    ) -> Result<f64> {
+        let v = self.variant;
+        let (b, t1) = (v.batch, v.config.seq_len + 1);
+        engine.load_program(self.manifest, v, "score")?;
+        let mut total = 0.0f64;
+        let mut count = 0usize;
+        for _ in 0..n_batches {
+            let tokens = data.next_batch(b, t1);
+            let batch_lit = lit_i32(&tokens, &[b, t1])?;
+            let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(v.n_model_leaves() + 1);
+            inputs.extend(state.model_leaves(v).iter());
+            inputs.push(&batch_lit);
+            let exe = engine.load_program(self.manifest, v, "score")?;
+            let outs = Engine::run(exe, &inputs)?;
+            let lp = to_vec_f32(&outs[0])?;
+            total += lp.iter().map(|&x| -x as f64).sum::<f64>();
+            count += lp.len();
+        }
+        Ok((total / count as f64).exp())
+    }
+}

@@ -1,0 +1,224 @@
+//! Byte-pair-encoding tokenizer: trainer + codec.
+//!
+//! Stands in for the paper's SentencePiece-8k (Sec 3 "Implementation
+//! details"): the corpus substrate is synthetic (see `corpus.rs`), so an
+//! in-house byte-level BPE trained on it plays the same role — sub-word
+//! units over bytes, fixed vocab, reversible. Vocab layout:
+//! ids [0, 256) are raw bytes; merged tokens follow in merge order.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone)]
+pub struct Bpe {
+    /// merge list: (left_id, right_id) -> new_id = 256 + index
+    pub merges: Vec<(u32, u32)>,
+    /// rank lookup for encoding
+    ranks: HashMap<(u32, u32), u32>,
+    /// decoded bytes per token id
+    pieces: Vec<Vec<u8>>,
+}
+
+impl Bpe {
+    pub fn vocab_size(&self) -> usize {
+        256 + self.merges.len()
+    }
+
+    /// Train on `text` until `vocab_size` tokens (>= 256) exist or no pair
+    /// repeats. Standard greedy BPE: repeatedly merge the most frequent
+    /// adjacent pair.
+    pub fn train(text: &[u8], vocab_size: usize) -> Result<Bpe> {
+        if vocab_size < 256 {
+            bail!("vocab_size must be >= 256 (byte fallback)");
+        }
+        let mut ids: Vec<u32> = text.iter().map(|&b| b as u32).collect();
+        let mut merges = Vec::new();
+        let mut pieces: Vec<Vec<u8>> = (0..256u32).map(|b| vec![b as u8]).collect();
+        while 256 + merges.len() < vocab_size {
+            // count pairs
+            let mut counts: HashMap<(u32, u32), u64> = HashMap::new();
+            for w in ids.windows(2) {
+                *counts.entry((w[0], w[1])).or_insert(0) += 1;
+            }
+            // deterministic argmax: highest count, then smallest pair
+            let best = counts
+                .iter()
+                .filter(|(_, &c)| c >= 2)
+                .max_by_key(|(&pair, &c)| (c, std::cmp::Reverse(pair)));
+            let (&pair, _) = match best {
+                Some(b) => b,
+                None => break,
+            };
+            let new_id = (256 + merges.len()) as u32;
+            merges.push(pair);
+            let mut piece = pieces[pair.0 as usize].clone();
+            piece.extend_from_slice(&pieces[pair.1 as usize]);
+            pieces.push(piece);
+            // apply merge in-place
+            let mut out = Vec::with_capacity(ids.len());
+            let mut i = 0;
+            while i < ids.len() {
+                if i + 1 < ids.len() && (ids[i], ids[i + 1]) == pair {
+                    out.push(new_id);
+                    i += 2;
+                } else {
+                    out.push(ids[i]);
+                    i += 1;
+                }
+            }
+            ids = out;
+        }
+        let ranks = merges
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| (p, i as u32))
+            .collect();
+        Ok(Bpe { merges, ranks, pieces })
+    }
+
+    /// Encode bytes to token ids (greedy lowest-rank merging, the standard
+    /// BPE inference algorithm).
+    pub fn encode(&self, text: &[u8]) -> Vec<u32> {
+        let mut ids: Vec<u32> = text.iter().map(|&b| b as u32).collect();
+        loop {
+            // find the lowest-rank applicable merge
+            let mut best: Option<(u32, usize)> = None; // (rank, pos)
+            for i in 0..ids.len().saturating_sub(1) {
+                if let Some(&r) = self.ranks.get(&(ids[i], ids[i + 1])) {
+                    if best.map(|(br, _)| r < br).unwrap_or(true) {
+                        best = Some((r, i));
+                    }
+                }
+            }
+            let (rank, _) = match best {
+                Some(b) => b,
+                None => break,
+            };
+            let pair = self.merges[rank as usize];
+            let new_id = 256 + rank;
+            let mut out = Vec::with_capacity(ids.len());
+            let mut i = 0;
+            while i < ids.len() {
+                if i + 1 < ids.len() && (ids[i], ids[i + 1]) == pair {
+                    out.push(new_id);
+                    i += 2;
+                } else {
+                    out.push(ids[i]);
+                    i += 1;
+                }
+            }
+            ids = out;
+        }
+        ids
+    }
+
+    pub fn decode(&self, ids: &[u32]) -> Vec<u8> {
+        let mut out = Vec::new();
+        for &id in ids {
+            if let Some(p) = self.pieces.get(id as usize) {
+                out.extend_from_slice(p);
+            }
+        }
+        out
+    }
+
+    // -- persistence ---------------------------------------------------
+
+    /// Serialise as lines of "left right" pairs.
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let mut s = String::with_capacity(self.merges.len() * 10);
+        s.push_str("# mosa-bpe v1\n");
+        for (a, b) in &self.merges {
+            s.push_str(&format!("{} {}\n", a, b));
+        }
+        std::fs::write(path.as_ref(), s).context("writing bpe model")
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Bpe> {
+        let text = std::fs::read_to_string(path.as_ref()).context("reading bpe model")?;
+        let mut merges = Vec::new();
+        let mut pieces: Vec<Vec<u8>> = (0..256u32).map(|b| vec![b as u8]).collect();
+        for line in text.lines() {
+            if line.starts_with('#') || line.is_empty() {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let a: u32 = it.next().context("bad merge line")?.parse()?;
+            let b: u32 = it.next().context("bad merge line")?.parse()?;
+            if a as usize >= pieces.len() || b as usize >= pieces.len() {
+                bail!("merge refers to unknown token: {line}");
+            }
+            let mut piece = pieces[a as usize].clone();
+            piece.extend_from_slice(&pieces[b as usize]);
+            pieces.push(piece);
+            merges.push((a, b));
+        }
+        let ranks = merges.iter().enumerate().map(|(i, &p)| (p, i as u32)).collect();
+        Ok(Bpe { merges, ranks, pieces })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn train_learns_repeats() {
+        let text = b"abcabcabcabcabcabc".repeat(10);
+        let bpe = Bpe::train(&text, 260).unwrap();
+        assert!(bpe.vocab_size() > 256);
+        let ids = bpe.encode(&text);
+        assert!(ids.len() < text.len() / 2, "{} vs {}", ids.len(), text.len());
+    }
+
+    #[test]
+    fn roundtrip_simple() {
+        let text = b"the quick brown fox jumps over the lazy dog. the dog sleeps.".repeat(5);
+        let bpe = Bpe::train(&text, 300).unwrap();
+        let ids = bpe.encode(&text);
+        assert_eq!(bpe.decode(&ids), text);
+    }
+
+    #[test]
+    fn prop_roundtrip_random_bytes() {
+        // encode . decode == id for arbitrary byte strings, including ones
+        // never seen in training (byte fallback must cover them).
+        let train = b"hello world hello world spam ham".repeat(8);
+        let bpe = Bpe::train(&train, 280).unwrap();
+        let mut rng = Pcg::seeded(77);
+        for _ in 0..200 {
+            let n = rng.usize_below(200);
+            let bytes: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+            let ids = bpe.encode(&bytes);
+            assert_eq!(bpe.decode(&ids), bytes);
+            assert!(ids.iter().all(|&i| (i as usize) < bpe.vocab_size()));
+        }
+    }
+
+    #[test]
+    fn deterministic_training() {
+        let text = b"deterministic deterministic determinism".repeat(20);
+        let a = Bpe::train(&text, 300).unwrap();
+        let b = Bpe::train(&text, 300).unwrap();
+        assert_eq!(a.merges, b.merges);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let text = b"roundtrip save load test test test".repeat(10);
+        let bpe = Bpe::train(&text, 290).unwrap();
+        let p = std::env::temp_dir().join("mosa_bpe_test.txt");
+        bpe.save(&p).unwrap();
+        let re = Bpe::load(&p).unwrap();
+        assert_eq!(re.merges, bpe.merges);
+        let ids = re.encode(&text);
+        assert_eq!(re.decode(&ids), text);
+    }
+
+    #[test]
+    fn rejects_small_vocab() {
+        assert!(Bpe::train(b"x", 100).is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! Data pipeline substrate: BPE tokenizer, synthetic corpus, batching.
+
+pub mod bpe;
+pub mod corpus;
+pub mod dataset;
+
+pub use bpe::Bpe;
+pub use corpus::CorpusGen;
+pub use dataset::{SequentialWindows, TokenDataset, WindowSampler};

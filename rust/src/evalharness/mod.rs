@@ -1,0 +1,76 @@
+//! Downstream zero-shot evaluation harness (paper Sec 3.5 / Table 3).
+//!
+//! The paper's suite (LAMBADA, WinoGrande, ...) is unavailable offline;
+//! this harness generates the synthetic analogues that exercise the same
+//! code paths and failure modes:
+//!
+//! - `recall` (LAMBADA-like cloze): a paragraph declares facts, the task
+//!   is to predict the value token after `qry <key> val` — per-option
+//!   scoring over candidate values.
+//! - `choice` (HellaSwag/PIQA-like): pick the continuation with higher
+//!   model logprob among 4 options, 1 consistent with the paragraph topic.
+//! - `agreement` (BLiMP-like minimal pairs): two short sequences differing
+//!   in one token; the grammatical one (matching the corpus's `reg ... .`
+//!   template) must score higher. Short inputs stress MoSA's adaptive
+//!   k = max(T/rho, 2) selection exactly as BLiMP stresses it in the
+//!   paper (where MoSA notably underperforms).
+//!
+//! Scoring runs the `score_short` artifact (T = 64) and sums logprobs over
+//! the option span only.
+
+pub mod tasks;
+
+pub use tasks::{make_tasks, Task, TaskKind};
+
+use anyhow::Result;
+
+use crate::data::Bpe;
+use crate::runtime::engine::{lit_i32, Engine};
+use crate::runtime::manifest::{Manifest, Variant};
+use crate::runtime::state::TrainState;
+
+/// Accuracy of the variant on a task list via per-option logprob scoring.
+pub fn evaluate_tasks(
+    engine: &mut Engine,
+    manifest: &Manifest,
+    variant: &Variant,
+    state: &TrainState,
+    bpe: &Bpe,
+    tasks: &[Task],
+) -> Result<f64> {
+    let spec = variant.program("score_short")?;
+    let t1 = spec.extra_inputs[0].shape[1]; // [1, T+1]
+    engine.load_program(manifest, variant, "score_short")?;
+    let mut correct = 0usize;
+    for task in tasks {
+        let mut best = (f64::NEG_INFINITY, 0usize);
+        for (i, option) in task.options.iter().enumerate() {
+            let full = format!("{}{}", task.prompt, option);
+            let mut ids: Vec<i32> = bpe.encode(full.as_bytes()).iter().map(|&x| x as i32).collect();
+            let prompt_len = bpe.encode(task.prompt.as_bytes()).len();
+            let opt_tokens = ids.len().saturating_sub(prompt_len);
+            ids.truncate(t1);
+            let used = ids.len();
+            ids.resize(t1, 0); // right-pad (documented OOD effect, Sec 3.5)
+            let batch_lit = lit_i32(&ids, &[1, t1])?;
+            let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(variant.n_model_leaves() + 1);
+            inputs.extend(state.model_leaves(variant).iter());
+            inputs.push(&batch_lit);
+            let exe = engine.load_program(manifest, variant, "score_short")?;
+            let outs = Engine::run(exe, &inputs)?;
+            let lp = outs[0].to_vec::<f32>()?;
+            // lp[j] = log p(token j+1 | <= j); option span is the tail
+            let start = prompt_len.saturating_sub(1).min(used.saturating_sub(1));
+            let end = (prompt_len + opt_tokens).saturating_sub(1).min(used.saturating_sub(1)).min(lp.len());
+            let score: f64 = lp[start..end].iter().map(|&x| x as f64).sum::<f64>()
+                / (end - start).max(1) as f64;
+            if score > best.0 {
+                best = (score, i);
+            }
+        }
+        if best.1 == task.answer {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / tasks.len().max(1) as f64)
+}

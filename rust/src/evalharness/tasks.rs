@@ -1,0 +1,163 @@
+//! Synthetic downstream tasks over the same generative grammar as the
+//! training corpus (data::corpus), so zero-shot transfer is meaningful.
+
+use crate::util::rng::Pcg;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskKind {
+    Recall,    // cloze over declared facts (LAMBADA-like)
+    Choice,    // 4-way continuation choice (HellaSwag-like)
+    Agreement, // short minimal pairs (BLiMP-like)
+}
+
+impl TaskKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TaskKind::Recall => "recall",
+            TaskKind::Choice => "choice",
+            TaskKind::Agreement => "agreement",
+        }
+    }
+
+    pub fn all() -> [TaskKind; 3] {
+        [TaskKind::Recall, TaskKind::Choice, TaskKind::Agreement]
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Task {
+    pub kind: TaskKind,
+    pub prompt: String,
+    pub options: Vec<String>,
+    pub answer: usize,
+}
+
+/// Build `n` tasks of a kind, deterministic per seed. Distractor options
+/// are sampled from the same value vocabulary (uniform negatives).
+pub fn make_tasks(kind: TaskKind, n: usize, seed: u64) -> Vec<Task> {
+    let mut rng = Pcg::seeded(seed ^ 0x5eed);
+    let keys: Vec<String> = (0..40).map(|i| format!("key{:02}", i)).collect();
+    let vals: Vec<String> = (0..40).map(|i| format!("val{:02}", i)).collect();
+    let fillers = ["bakedo", "lumira", "tesoni", "ravelu", "domika", "senora", "kilavo", "motena"];
+    let mut tasks = Vec::with_capacity(n);
+    for _ in 0..n {
+        match kind {
+            TaskKind::Recall => {
+                // declare 2 facts, pad with filler prose, query one fact.
+                let k1 = rng.usize_below(keys.len());
+                let mut k2 = rng.usize_below(keys.len());
+                while k2 == k1 {
+                    k2 = rng.usize_below(keys.len());
+                }
+                let v1 = rng.usize_below(vals.len());
+                let v2 = rng.usize_below(vals.len());
+                let mut prose = String::new();
+                for _ in 0..(6 + rng.usize_below(10)) {
+                    prose.push_str(fillers[rng.usize_below(fillers.len())]);
+                    prose.push(' ');
+                }
+                let prompt = format!(
+                    "reg {} val {} . reg {} val {} . {}. qry {} val ",
+                    keys[k1], vals[v1], keys[k2], vals[v2], prose.trim_end(), keys[k1]
+                );
+                let mut options = vec![vals[v1].clone()];
+                while options.len() < 4 {
+                    let d = rng.usize_below(vals.len());
+                    if d != v1 && !options.contains(&vals[d]) {
+                        options.push(vals[d].clone());
+                    }
+                }
+                let answer = rng.usize_below(4);
+                options.swap(0, answer);
+                tasks.push(Task { kind, prompt, options, answer });
+            }
+            TaskKind::Choice => {
+                // prompt repeats a fact pattern twice; correct option
+                // completes the third repetition consistently.
+                let k = rng.usize_below(keys.len());
+                let v = rng.usize_below(vals.len());
+                let prompt = format!(
+                    "reg {} val {} . qry {} val {} . qry {} val ",
+                    keys[k], vals[v], keys[k], vals[v], keys[k]
+                );
+                let mut options = vec![format!("{} .", vals[v])];
+                while options.len() < 4 {
+                    let d = rng.usize_below(vals.len());
+                    let o = format!("{} .", vals[d]);
+                    if d != v && !options.contains(&o) {
+                        options.push(o);
+                    }
+                }
+                let answer = rng.usize_below(4);
+                options.swap(0, answer);
+                tasks.push(Task { kind, prompt, options, answer });
+            }
+            TaskKind::Agreement => {
+                // minimal pair: template-conforming "reg K val V ." vs the
+                // scrambled "val K reg V ." — 2 options, very short input.
+                let k = rng.usize_below(keys.len());
+                let v = rng.usize_below(vals.len());
+                let good = format!("reg {} val {} .", keys[k], vals[v]);
+                let bad = format!("val {} reg {} .", keys[k], vals[v]);
+                let answer = rng.usize_below(2);
+                let options = if answer == 0 { vec![good, bad] } else { vec![bad.clone(), good] };
+                // note: for answer==1 the good option is index 1
+                tasks.push(Task { kind, prompt: String::new(), options, answer: answer });
+            }
+        }
+    }
+    tasks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_counted() {
+        let a = make_tasks(TaskKind::Recall, 20, 1);
+        let b = make_tasks(TaskKind::Recall, 20, 1);
+        assert_eq!(a.len(), 20);
+        assert_eq!(a[0].prompt, b[0].prompt);
+        assert_eq!(a[3].options, b[3].options);
+    }
+
+    #[test]
+    fn recall_answer_is_declared_value() {
+        for t in make_tasks(TaskKind::Recall, 50, 2) {
+            // the queried key's declared value must equal options[answer]
+            let toks: Vec<&str> = t.prompt.split_whitespace().collect();
+            let qkey = toks[toks.len() - 2];
+            let mut declared = None;
+            for i in 0..toks.len() - 3 {
+                if toks[i] == "reg" && toks[i + 1] == qkey {
+                    declared = Some(toks[i + 3]);
+                    break;
+                }
+            }
+            assert_eq!(declared.unwrap(), t.options[t.answer]);
+        }
+    }
+
+    #[test]
+    fn options_unique_and_answer_in_range() {
+        for kind in TaskKind::all() {
+            for t in make_tasks(kind, 30, 3) {
+                assert!(t.answer < t.options.len());
+                let mut opts = t.options.clone();
+                opts.sort();
+                opts.dedup();
+                assert_eq!(opts.len(), t.options.len(), "{kind:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn agreement_pairs_differ() {
+        for t in make_tasks(TaskKind::Agreement, 20, 4) {
+            assert_eq!(t.options.len(), 2);
+            assert_ne!(t.options[0], t.options[1]);
+            assert!(t.options[t.answer].starts_with("reg "));
+        }
+    }
+}

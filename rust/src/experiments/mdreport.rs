@@ -1,0 +1,266 @@
+//! `mosa report` — assemble the §Empirical block of EXPERIMENTS.md from
+//! the result files the experiment drivers wrote (results/rows/*.json and
+//! results/{isoflop,long_sequence,downstream,train_lm}.json).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+use super::VariantResult;
+
+fn load_rows(results_dir: &str) -> Result<Vec<VariantResult>> {
+    let dir = Path::new(results_dir).join("rows");
+    let mut rows = Vec::new();
+    if dir.exists() {
+        let mut names: Vec<_> = std::fs::read_dir(&dir)?
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .collect();
+        names.sort();
+        for p in names {
+            if p.extension().map(|e| e == "json").unwrap_or(false) {
+                let name = p.file_stem().unwrap().to_string_lossy().to_string();
+                let rc = crate::config::RunConfig {
+                    results_dir: results_dir.to_string(),
+                    ..Default::default()
+                };
+                if let Some(r) = super::load_row(&rc, &name) {
+                    rows.push(r);
+                }
+            }
+        }
+    }
+    Ok(rows)
+}
+
+fn fmt_pct(ours: f64, base: f64) -> String {
+    format!("{:+.1}%", (ours / base - 1.0) * 100.0)
+}
+
+/// Render the markdown block.
+pub fn render(results_dir: &str) -> Result<String> {
+    let rows = load_rows(results_dir)?;
+    let by_name: BTreeMap<&str, &VariantResult> =
+        rows.iter().map(|r| (r.name.as_str(), r)).collect();
+    let mut md = String::new();
+
+    // --- Table 1 analogue ------------------------------------------------
+    md.push_str("### Table 1 analogue — best ppl per method, IsoFLOP (micro & mini budgets)\n\n");
+    md.push_str("| budget | dense ppl | MoSA best | Fixed best | Routing best |\n|---|---|---|---|---|\n");
+    for budget in ["micro", "mini"] {
+        let dense = match by_name.get(format!("{budget}_dense").as_str()) {
+            Some(d) => d,
+            None => continue,
+        };
+        let best = |kind: &str| -> String {
+            rows.iter()
+                .filter(|r| {
+                    r.name.starts_with(budget)
+                        && r.sparse_kind == kind
+                        && (r.group == "sweep" || r.group == "core")
+                        && r.rho > 1
+                })
+                .min_by(|a, b| a.test_ppl.partial_cmp(&b.test_ppl).unwrap())
+                .map(|r| format!("{:.2} @ρ{} ({})", r.test_ppl, r.rho, fmt_pct(r.test_ppl, dense.test_ppl)))
+                .unwrap_or_else(|| "—".into())
+        };
+        md.push_str(&format!(
+            "| {budget} | {:.2} | {} | {} | {} |\n",
+            dense.test_ppl,
+            best("mosa"),
+            best("fixed"),
+            best("routing")
+        ));
+    }
+    md.push_str("\npaper: MoSA −13…−27% vs dense; fixed/routing +0.3…+3.9% (always worse).\n\n");
+
+    // --- Fig 3 / Fig 5 series ---------------------------------------------
+    md.push_str("### Fig 3 / Fig 5 analogue — ppl vs sparsity (micro budget)\n\n");
+    md.push_str("| ρ | hybrid MoSA | pure MoSA | fixed | routing |\n|---|---|---|---|---|\n");
+    if let Some(dense) = by_name.get("micro_dense") {
+        md.push_str(&format!(
+            "| 1 (dense) | {:.2} | {:.2} | {:.2} | {:.2} |\n",
+            dense.test_ppl, dense.test_ppl, dense.test_ppl, dense.test_ppl
+        ));
+    }
+    for rho in [2usize, 4, 8, 16] {
+        let cell = |name: String| {
+            by_name
+                .get(name.as_str())
+                .map(|r| format!("{:.2}", r.test_ppl))
+                .unwrap_or_else(|| "—".into())
+        };
+        md.push_str(&format!(
+            "| {rho} | {} | {} | {} | {} |\n",
+            cell(format!("micro_mosa_r{rho}")),
+            cell(format!("micro_mosa_r{rho}_pure")),
+            cell(format!("micro_fixed_r{rho}")),
+            cell(format!("micro_routing_r{rho}")),
+        ));
+    }
+    md.push_str("\npaper shape: hybrid MoSA improves monotonically to a ρ≈32–64 optimum; pure MoSA degrades; fixed/routing flat-worse. Loss curves per variant (Fig 6): results/<variant>.csv.\n\n");
+
+    // --- Fig 7 ablation ----------------------------------------------------
+    md.push_str("### Fig 7 analogue — dense-head count ablation (ρ=4, micro)\n\n");
+    md.push_str("| dense heads kept | 0 (pure) | 1 | 2 | 3 | 4 (all-dense budget) |\n|---|---|---|---|---|---|\n| test ppl |");
+    for name in [
+        "micro_mosa_r4_pure",
+        "micro_mosa_r4_nd1",
+        "micro_mosa_r4",
+        "micro_mosa_r4_nd3",
+        "micro_mosa_r4_nd4",
+    ] {
+        match by_name.get(name) {
+            Some(r) => md.push_str(&format!(" {:.2} |", r.test_ppl)),
+            None => md.push_str(" — |"),
+        }
+    }
+    md.push_str("\n\npaper shape: ≥1 dense head is critical; optimum at a small count (4 of 9 at paper scale); all-dense underperforms the hybrid.\n\n");
+
+    // --- Fig 4 longseq ------------------------------------------------------
+    md.push_str("### Fig 4 analogue — long sequences, k const (local+sparse hybrids)\n\n");
+    md.push_str("| T | ρ | MoSA ppl | Fixed ppl | Routing ppl | MoSA flops/tok vs routing |\n|---|---|---|---|---|---|\n");
+    for t in [256usize, 512, 1024, 2048] {
+        let get = |kind: &str| by_name.get(format!("ls{t}_{kind}").as_str()).copied();
+        if let (Some(m), Some(f), Some(r)) = (get("mosa"), get("fixed"), get("routing")) {
+            md.push_str(&format!(
+                "| {t} | {} | {:.2} | {:.2} | {:.2} | {:.0}% |\n",
+                m.rho,
+                m.test_ppl,
+                f.test_ppl,
+                r.test_ppl,
+                100.0 * (m.flops_fwd as f64) / (r.flops_fwd as f64)
+            ));
+        }
+    }
+    md.push_str("\npaper shape: MoSA lowest ppl at every length while its FLOP share of routing shrinks with T (22.99% at T=8192 paper-scale).\n\n");
+
+    // --- Table 2 ------------------------------------------------------------
+    md.push_str("### Table 2 analogue — resource usage\n\n");
+    md.push_str("(`micro_mosa_r8_match` = perplexity-matched config with 8 MoSA heads,\nthe paper's Table 2 setting; `*_r8` = FLOP-matched sweep configs.)\n\n");
+    md.push_str("| model | test ppl | ms/step | act-mem (model) | KV pairs |\n|---|---|---|---|---|\n");
+    for name in [
+        "micro_dense",
+        "micro_mosa_r8_match",
+        "micro_mosa_r8",
+        "micro_fixed_r8",
+        "micro_routing_r8",
+    ] {
+        if let Some(r) = by_name.get(name) {
+            md.push_str(&format!(
+                "| {} | {:.2} | {:.1} | {} | {} |\n",
+                r.name,
+                r.test_ppl,
+                r.ms_per_step,
+                super::report::format_si(r.act_bytes as f64),
+                r.kv_pairs
+            ));
+        }
+    }
+    let matched = by_name
+        .get("micro_mosa_r8_match")
+        .or_else(|| by_name.get("micro_mosa_r8"));
+    if let (Some(d), Some(m)) = (by_name.get("micro_dense"), matched) {
+        md.push_str(&format!(
+            "\nppl-matched MoSA vs dense: ppl {}, wall {}, act-mem {}, KV {} (paper: ppl ≈0%, −2…−13% wall, −1.6…−10% mem, −51…−69% KV).\n\n",
+            fmt_pct(m.test_ppl, d.test_ppl),
+            fmt_pct(m.ms_per_step, d.ms_per_step),
+            fmt_pct(m.act_bytes as f64, d.act_bytes as f64),
+            fmt_pct(m.kv_pairs as f64, d.kv_pairs as f64)
+        ));
+    }
+
+    // --- Table 3 ------------------------------------------------------------
+    let ds_path = Path::new(results_dir).join("downstream.json");
+    if ds_path.exists() {
+        let j = Json::parse(&std::fs::read_to_string(&ds_path)?)
+            .map_err(|e| anyhow::anyhow!("downstream.json: {e}"))?;
+        md.push_str("### Table 3 analogue — downstream zero-shot accuracy\n\n");
+        md.push_str("| model | recall (LAMBADA-like) | choice (HellaSwag-like) | agreement (BLiMP-like) | ppl |\n|---|---|---|---|---|\n");
+        if let Some(arr) = j.as_arr() {
+            for e in arr {
+                let accs = e.get("accs");
+                let g = |k: &str| {
+                    accs.and_then(|a| a.get(k))
+                        .and_then(Json::as_f64)
+                        .map(|x| format!("{:.2}", x))
+                        .unwrap_or_else(|| "—".into())
+                };
+                md.push_str(&format!(
+                    "| {} | {} | {} | {} | {:.2} |\n",
+                    e.get("model").and_then(Json::as_str).unwrap_or("?"),
+                    g("recall"),
+                    g("choice"),
+                    g("agreement"),
+                    e.get("ppl").and_then(Json::as_f64).unwrap_or(f64::NAN)
+                ));
+            }
+        }
+        md.push_str("\npaper shape: MoSA competitive or better on recall-style tasks, weaker on very short sequences (BLiMP effect, Sec 3.5).\n\n");
+    }
+
+    Ok(md)
+}
+
+/// Splice the rendered block into EXPERIMENTS.md between the RESULTS markers.
+pub fn update_experiments_md(md_path: &str, results_dir: &str) -> Result<()> {
+    let body = std::fs::read_to_string(md_path).context("reading EXPERIMENTS.md")?;
+    let begin = "<!-- RESULTS:BEGIN (filled by the experiment runs below) -->";
+    let end = "<!-- RESULTS:END -->";
+    let (pre, rest) = body.split_once(begin).context("RESULTS:BEGIN marker missing")?;
+    let (_, post) = rest.split_once(end).context("RESULTS:END marker missing")?;
+    let block = render(results_dir)?;
+    let out = format!("{pre}{begin}\n\n{block}{end}{post}");
+    std::fs::write(md_path, out)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RunConfig;
+    use crate::experiments::{save_row, VariantResult};
+
+    fn row(name: &str, group: &str, kind: &str, rho: usize, ppl: f64) -> VariantResult {
+        VariantResult {
+            name: name.into(),
+            group: group.into(),
+            rho,
+            n_dense: 2,
+            n_sparse: 4,
+            sparse_kind: kind.into(),
+            n_params: 1000,
+            flops_fwd: 1_000_000,
+            train_tail_loss: ppl.ln(),
+            test_ppl: ppl,
+            ms_per_step: 100.0,
+            kv_pairs: 512,
+            act_bytes: 1 << 20,
+            seq_len: 128,
+        }
+    }
+
+    #[test]
+    fn renders_tables_from_rows() {
+        let dir = std::env::temp_dir().join("mosa_mdreport_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let rc = RunConfig { results_dir: dir.to_string_lossy().to_string(), ..Default::default() };
+        save_row(&rc, &row("micro_dense", "core", "none", 1, 20.0)).unwrap();
+        save_row(&rc, &row("micro_mosa_r8", "core", "mosa", 8, 17.0)).unwrap();
+        save_row(&rc, &row("micro_fixed_r8", "core", "fixed", 8, 21.0)).unwrap();
+        let md = render(&rc.results_dir).unwrap();
+        assert!(md.contains("| micro | 20.00 | 17.00 @ρ8 (-15.0%)"));
+        assert!(md.contains("Fig 3 / Fig 5"));
+        assert!(md.contains("| 8 | 17.00 | — | 21.00 | — |"));
+    }
+
+    #[test]
+    fn splice_requires_markers() {
+        let p = std::env::temp_dir().join("mosa_md_no_markers.md");
+        std::fs::write(&p, "no markers here").unwrap();
+        assert!(update_experiments_md(p.to_str().unwrap(), "/nonexistent").is_err());
+    }
+}

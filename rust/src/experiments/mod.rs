@@ -1,0 +1,142 @@
+//! Experiment drivers shared by the CLI subcommands and `examples/`.
+//!
+//! Each paper table/figure has a driver here (see DESIGN.md §4 for the
+//! index); all of them reduce to `run_variant` — train one AOT-compiled
+//! variant on the shared synthetic corpus and report ppl + timing.
+
+pub mod mdreport;
+pub mod report;
+
+use anyhow::Result;
+
+use crate::config::RunConfig;
+use crate::coordinator::{LrSchedule, RunMetrics, TrainOptions, Trainer};
+use crate::data::{SequentialWindows, TokenDataset};
+use crate::runtime::{Engine, Manifest, TrainState, Variant};
+
+/// Outcome of training one variant.
+#[derive(Debug, Clone)]
+pub struct VariantResult {
+    pub name: String,
+    pub group: String,
+    pub rho: usize,
+    pub n_dense: usize,
+    pub n_sparse: usize,
+    pub sparse_kind: String,
+    pub n_params: u64,
+    pub flops_fwd: u64,
+    pub train_tail_loss: f64,
+    pub test_ppl: f64,
+    pub ms_per_step: f64,
+    pub kv_pairs: u64,
+    pub act_bytes: u64,
+    pub seq_len: usize,
+}
+
+/// Train a variant on (train, test) datasets; returns the result row and
+/// the step-level metrics (loss curves for the figure CSVs).
+pub fn run_variant(
+    engine: &mut Engine,
+    manifest: &Manifest,
+    variant: &Variant,
+    train_ds: &TokenDataset,
+    test_ds: &TokenDataset,
+    rc: &RunConfig,
+) -> Result<(VariantResult, RunMetrics, TrainState)> {
+    let trainer = Trainer::new(manifest, variant);
+    let steps = rc.steps;
+    let opts = TrainOptions {
+        steps,
+        schedule: LrSchedule::paper_like(rc.base_lr, (steps / 10).max(1), steps),
+        seed: rc.seed as i32,
+        log_every: (steps / 5).max(1),
+        use_chunk: rc.use_chunk && variant.programs.contains_key("train_chunk"),
+        checkpoint: None,
+        eval_every: 0,
+    };
+    let mut sampler = train_ds.sampler(rc.seed ^ 0x7ea1);
+    let (state, mut metrics) = trainer.train(engine, &mut sampler, &opts)?;
+    let mut eval = SequentialWindows::new(test_ds);
+    let test_ppl = trainer.evaluate(engine, &mut eval, &state, rc.eval_batches)?;
+    metrics.note("test_ppl", format!("{test_ppl:.4}"));
+    let cfg = &variant.config;
+    let res = VariantResult {
+        name: variant.name.clone(),
+        group: variant.group.clone(),
+        rho: variant.rho,
+        n_dense: cfg.n_dense,
+        n_sparse: cfg.n_sparse,
+        sparse_kind: cfg.sparse_kind.clone(),
+        n_params: variant.n_params,
+        flops_fwd: variant.flops_fwd,
+        train_tail_loss: metrics.tail_loss(20),
+        test_ppl,
+        ms_per_step: metrics.mean_ms(3),
+        kv_pairs: crate::kvcache::kv_pairs_total(cfg, cfg.seq_len),
+        act_bytes: crate::kvcache::train_activation_bytes(cfg, variant.batch),
+        seq_len: cfg.seq_len,
+    };
+    Ok((res, metrics, state))
+}
+
+/// Build the shared (train, test) datasets for a vocab size.
+pub fn build_datasets(rc: &RunConfig, vocab: usize) -> Result<(TokenDataset, TokenDataset)> {
+    let ds = TokenDataset::build(rc.seed + 1000, rc.corpus_bytes, vocab, Some(&rc.cache_dir))?;
+    Ok(ds.split(0.92))
+}
+
+/// Per-variant result row cache (results/rows/<name>.json): sweeps write
+/// each row as soon as it finishes, so interrupted runs resume without
+/// re-training completed variants.
+pub fn row_path(rc: &RunConfig, name: &str) -> String {
+    format!("{}/rows/{}.json", rc.results_dir, name)
+}
+
+pub fn load_row(rc: &RunConfig, name: &str) -> Option<VariantResult> {
+    let text = std::fs::read_to_string(row_path(rc, name)).ok()?;
+    let j = crate::util::json::Json::parse(&text).ok()?;
+    Some(VariantResult {
+        name: j.get("name")?.as_str()?.to_string(),
+        group: j.get("group")?.as_str()?.to_string(),
+        rho: j.get("rho")?.as_usize()?,
+        n_dense: j.get("n_dense")?.as_usize()?,
+        n_sparse: j.get("n_sparse")?.as_usize()?,
+        sparse_kind: j.get("sparse_kind")?.as_str()?.to_string(),
+        n_params: j.get("n_params")?.as_i64()? as u64,
+        flops_fwd: j.get("flops_fwd")?.as_i64()? as u64,
+        train_tail_loss: j.get("train_tail_loss")?.as_f64()?,
+        test_ppl: j.get("test_ppl")?.as_f64()?,
+        ms_per_step: j.get("ms_per_step")?.as_f64()?,
+        kv_pairs: j.get("kv_pairs")?.as_i64()? as u64,
+        act_bytes: j.get("act_bytes")?.as_i64()? as u64,
+        seq_len: j.get("seq_len")?.as_usize()?,
+    })
+}
+
+pub fn save_row(rc: &RunConfig, row: &VariantResult) -> Result<()> {
+    let p = row_path(rc, &row.name);
+    if let Some(dir) = std::path::Path::new(&p).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(&p, report::result_to_json(row).to_string_pretty())?;
+    Ok(())
+}
+
+/// Train a variant unless a cached row exists (resume support).
+pub fn run_variant_cached(
+    engine: &mut Engine,
+    manifest: &Manifest,
+    variant: &Variant,
+    train_ds: &TokenDataset,
+    test_ds: &TokenDataset,
+    rc: &RunConfig,
+) -> Result<VariantResult> {
+    if let Some(row) = load_row(rc, &variant.name) {
+        log::info!("[{}] cached row (ppl {:.3})", variant.name, row.test_ppl);
+        return Ok(row);
+    }
+    let (res, metrics, _) = run_variant(engine, manifest, variant, train_ds, test_ds, rc)?;
+    metrics.save_csv(&rc.results_dir)?;
+    save_row(rc, &res)?;
+    Ok(res)
+}

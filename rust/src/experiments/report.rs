@@ -1,0 +1,123 @@
+//! Result-table rendering + results/*.json persistence for the
+//! experiment drivers (one JSON per table/figure so EXPERIMENTS.md can be
+//! assembled from files).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+use super::VariantResult;
+
+pub fn result_to_json(r: &VariantResult) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(r.name.clone())),
+        ("group", Json::str(r.group.clone())),
+        ("rho", Json::num(r.rho as f64)),
+        ("n_dense", Json::num(r.n_dense as f64)),
+        ("n_sparse", Json::num(r.n_sparse as f64)),
+        ("sparse_kind", Json::str(r.sparse_kind.clone())),
+        ("n_params", Json::num(r.n_params as f64)),
+        ("flops_fwd", Json::num(r.flops_fwd as f64)),
+        ("train_tail_loss", Json::num(r.train_tail_loss)),
+        ("test_ppl", Json::num(r.test_ppl)),
+        ("ms_per_step", Json::num(r.ms_per_step)),
+        ("kv_pairs", Json::num(r.kv_pairs as f64)),
+        ("act_bytes", Json::num(r.act_bytes as f64)),
+        ("seq_len", Json::num(r.seq_len as f64)),
+    ])
+}
+
+pub fn save_results(path: impl AsRef<Path>, experiment: &str, rows: &[VariantResult]) -> Result<()> {
+    if let Some(dir) = path.as_ref().parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let j = Json::obj(vec![
+        ("experiment", Json::str(experiment)),
+        ("rows", Json::Arr(rows.iter().map(result_to_json).collect())),
+    ]);
+    std::fs::write(path.as_ref(), j.to_string_pretty())?;
+    Ok(())
+}
+
+/// Print an aligned ppl table (Table 1 / sweep style).
+pub fn print_table(title: &str, rows: &[VariantResult]) {
+    println!("\n== {title} ==");
+    println!(
+        "{:<24} {:>4} {:>6} {:>8} {:>10} {:>10} {:>10} {:>10}",
+        "variant", "rho", "heads", "params", "flops/tok", "test ppl", "ms/step", "KV pairs"
+    );
+    for r in rows {
+        println!(
+            "{:<24} {:>4} {:>6} {:>8} {:>10} {:>10.3} {:>10.1} {:>10}",
+            r.name,
+            r.rho,
+            r.n_dense + r.n_sparse,
+            format_si(r.n_params as f64),
+            format_si(r.flops_fwd as f64 / r.seq_len as f64),
+            r.test_ppl,
+            r.ms_per_step,
+            r.kv_pairs,
+        );
+    }
+}
+
+pub fn format_si(x: f64) -> String {
+    if x >= 1e9 {
+        format!("{:.2}G", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.1}K", x / 1e3)
+    } else {
+        format!("{:.0}", x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row() -> VariantResult {
+        VariantResult {
+            name: "x".into(),
+            group: "g".into(),
+            rho: 8,
+            n_dense: 2,
+            n_sparse: 20,
+            sparse_kind: "mosa".into(),
+            n_params: 1_000_000,
+            flops_fwd: 2_000_000_000,
+            train_tail_loss: 2.0,
+            test_ppl: 7.5,
+            ms_per_step: 120.0,
+            kv_pairs: 4096,
+            act_bytes: 1 << 20,
+            seq_len: 128,
+        }
+    }
+
+    #[test]
+    fn json_row_has_fields() {
+        let j = result_to_json(&row());
+        assert_eq!(j.get("test_ppl").unwrap().as_f64(), Some(7.5));
+        assert_eq!(j.get("sparse_kind").unwrap().as_str(), Some("mosa"));
+    }
+
+    #[test]
+    fn save_results_roundtrip() {
+        let p = std::env::temp_dir().join("mosa_results_test/t1.json");
+        save_results(&p, "test_exp", &[row()]).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&p).unwrap()).unwrap();
+        assert_eq!(j.get("experiment").unwrap().as_str(), Some("test_exp"));
+        assert_eq!(j.get("rows").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn si_format() {
+        assert_eq!(format_si(1.5e9), "1.50G");
+        assert_eq!(format_si(2.5e6), "2.50M");
+        assert_eq!(format_si(999.0), "999");
+    }
+}

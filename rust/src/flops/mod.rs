@@ -1,0 +1,338 @@
+//! FLOP accounting — paper Appendix A, implemented exactly.
+//!
+//! This is the analytic core of the reproduction: at paper scale the
+//! numbers here regenerate Table 4 (FLOPs per forward pass) and the head
+//! and parameter counts of Table 5 EXACTLY (pure arithmetic, hardware
+//! independent). The same solver plans the IsoFLOP experiments at our
+//! trainable scales, guaranteeing that no sparse model ever exceeds its
+//! dense baseline's FLOP budget — the paper's Sec 3.2 protocol.
+//!
+//! Mirrors `python/compile/flops.py`; the two are cross-checked by tests
+//! on both sides using the same paper fixtures.
+
+pub mod paper;
+
+/// One dense attention head: 8*h*h'*T (Q,K,V,O maps) + 4*h'*T^2 (attention).
+pub fn dense_head(h: u64, hp: u64, t: u64) -> u64 {
+    8 * h * hp * t + 4 * hp * t * t
+}
+
+/// One MoSA head: projections and attention on k tokens only, plus the
+/// routing overhead 2hT (scoring) + h'k (output scaling).
+pub fn mosa_head(h: u64, hp: u64, t: u64, k: u64) -> u64 {
+    8 * h * hp * k + 4 * hp * k * k + 2 * h * t + hp * k
+}
+
+/// One fixed-sparse head: MoSA without the routing overhead.
+pub fn fixed_head(h: u64, hp: u64, k: u64) -> u64 {
+    8 * h * hp * k + 4 * hp * k * k
+}
+
+/// One Routing-Transformer head: Q=K shared (3 projections over all T),
+/// rho clusters of size k, cluster-selection overhead 2h'T.
+pub fn routing_head(h: u64, hp: u64, t: u64, k: u64) -> u64 {
+    let rho = t / k;
+    6 * h * hp * t + 4 * hp * k * k * rho + 2 * hp * t
+}
+
+/// One local (sliding-window) head: dense projections, banded attention.
+pub fn local_head(h: u64, hp: u64, t: u64, w: u64) -> u64 {
+    8 * h * hp * t + 4 * hp * t * w
+}
+
+/// Feed-forward block: 2 matmuls h<->d_ff (paper: 16h^2T when d_ff = 4h).
+pub fn ffn(h: u64, d_ff: u64, t: u64) -> u64 {
+    4 * h * d_ff * t
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SparseKind {
+    None,
+    Mosa,
+    Fixed,
+    Routing,
+}
+
+impl SparseKind {
+    pub fn parse(s: &str) -> Option<SparseKind> {
+        Some(match s {
+            "none" => SparseKind::None,
+            "mosa" => SparseKind::Mosa,
+            "fixed" => SparseKind::Fixed,
+            "routing" => SparseKind::Routing,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SparseKind::None => "none",
+            SparseKind::Mosa => "mosa",
+            SparseKind::Fixed => "fixed",
+            SparseKind::Routing => "routing",
+        }
+    }
+}
+
+pub fn sparse_head(kind: SparseKind, h: u64, hp: u64, t: u64, k: u64) -> u64 {
+    match kind {
+        SparseKind::None => 0,
+        SparseKind::Mosa => mosa_head(h, hp, t, k),
+        SparseKind::Fixed => fixed_head(h, hp, k),
+        SparseKind::Routing => routing_head(h, hp, t, k),
+    }
+}
+
+/// Full-model forward FLOPs (attention heads + FFN, paper App. A; LN /
+/// residual / embedding omitted on both sides of every comparison).
+#[allow(clippy::too_many_arguments)]
+pub fn model_forward(
+    layers: u64,
+    h: u64,
+    hp: u64,
+    d_ff: u64,
+    t: u64,
+    n_dense: u64,
+    window: u64,
+    n_sparse: u64,
+    kind: SparseKind,
+    k: u64,
+) -> u64 {
+    let dense_cost = if window > 0 { local_head(h, hp, t, window) } else { dense_head(h, hp, t) };
+    let mut per_layer = n_dense * dense_cost + ffn(h, d_ff, t);
+    if n_sparse > 0 {
+        per_layer += n_sparse * sparse_head(kind, h, hp, t, k);
+    }
+    layers * per_layer
+}
+
+/// IsoFLOP head solver (Sec 3.2): max sparse heads such that the hybrid
+/// attention never exceeds `n_base_dense` dense heads' budget.
+#[allow(clippy::too_many_arguments)]
+pub fn solve_sparse_heads(
+    h: u64,
+    hp: u64,
+    t: u64,
+    k: u64,
+    n_base_dense: u64,
+    n_keep_dense: u64,
+    kind: SparseKind,
+    window: u64,
+) -> u64 {
+    let budget = n_base_dense * dense_head(h, hp, t);
+    let keep_cost = if window > 0 { local_head(h, hp, t, window) } else { dense_head(h, hp, t) };
+    let spent = n_keep_dense * keep_cost;
+    if spent >= budget || kind == SparseKind::None {
+        return 0;
+    }
+    (budget - spent) / sparse_head(kind, h, hp, t, k)
+}
+
+/// Trainable parameters of one head.
+pub fn head_params(kind: &str, h: u64, hp: u64) -> u64 {
+    match kind {
+        "dense" | "fixed" | "local" => 4 * h * hp,
+        "mosa" => 4 * h * hp + h, // + router Wr
+        "routing" => 3 * h * hp,  // shared Q=K projection
+        _ => panic!("unknown head kind {kind}"),
+    }
+}
+
+/// Total model parameters (matches paper Table 5 at paper scale and the
+/// actual JAX leaf count at trainable scale — asserted in integration
+/// tests against manifest.json's n_params).
+#[allow(clippy::too_many_arguments)]
+pub fn model_params(
+    layers: u64,
+    h: u64,
+    hp: u64,
+    d_ff: u64,
+    vocab: u64,
+    n_dense: u64,
+    n_sparse: u64,
+    kind: SparseKind,
+) -> u64 {
+    let mut per_layer = n_dense * head_params("dense", h, hp);
+    if n_sparse > 0 && kind != SparseKind::None {
+        per_layer += n_sparse * head_params(kind.name(), h, hp);
+    }
+    per_layer += 2 * h * d_ff + d_ff + h; // ffn weights + biases
+    per_layer += 4 * h; // ln1 + ln2 (scale + bias)
+    layers * per_layer + vocab * h /* emb */ + h * vocab + vocab /* out */ + 2 * h /* lnf */
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flops::paper::*;
+
+    #[test]
+    fn table4_flops_exact() {
+        // Paper Table 4: FLOPs per forward pass (T = 1024). We match the
+        // printed numbers for Tiny/Small/Large exactly. Medium prints
+        // 430.70G but is arithmetically exactly 2x Small (same dims, 18
+        // vs 9 layers) = 439.70G — a typo in the paper; we assert the
+        // arithmetic truth. See EXPERIMENTS.md.
+        let cases: [(&PaperSize, u64); 4] = [
+            (&TINY, 54_760_833_024),
+            (&SMALL, 219_848_638_464),
+            (&MEDIUM, 439_697_276_928),
+            (&LARGE, 1_130_650_140_672),
+        ];
+        for (s, expect) in cases {
+            let f = model_forward(
+                s.layers, s.h, s.hp, s.d_ff, PAPER_T, s.heads, 0, 0, SparseKind::None, 0,
+            );
+            assert_eq!(f, expect, "{}", s.name);
+        }
+    }
+
+    #[test]
+    fn table5_head_counts_tiny_exact() {
+        // Paper Table 5, hybrid MoSA rows (4 dense heads kept): number of
+        // MoSA heads per sparsity for the Tiny budget.
+        let expect = [(2, 13), (4, 31), (8, 69), (16, 142), (32, 276), (64, 505), (128, 848), (256, 1277)];
+        for (rho, heads) in expect {
+            let k = PAPER_T / rho;
+            let n = solve_sparse_heads(TINY.h, TINY.hp, PAPER_T, k, TINY.heads, 4, SparseKind::Mosa, 0);
+            assert_eq!(n, heads, "tiny rho={rho}");
+        }
+    }
+
+    #[test]
+    fn table5_head_counts_other_sizes() {
+        // Small hybrid rows from Table 5 (printed: 11, 26, 54, 109, 210,
+        // 381). Medium shares Small's h/hp/heads, so its counts are the
+        // same by construction (the paper's garbled Medium row is
+        // recovered by this identity).
+        for (size, rho, heads) in [
+            (&SMALL, 2u64, 11u64),
+            (&SMALL, 4, 26),
+            (&SMALL, 8, 54),
+            (&SMALL, 16, 109),
+            (&SMALL, 32, 210),
+            (&SMALL, 64, 381),
+            (&MEDIUM, 2, 11),
+            (&MEDIUM, 4, 26),
+            (&MEDIUM, 8, 54),
+            (&MEDIUM, 16, 109),
+            (&MEDIUM, 32, 210),
+        ] {
+            let k = PAPER_T / rho;
+            let n = solve_sparse_heads(size.h, size.hp, PAPER_T, k, size.heads, 4, SparseKind::Mosa, 0);
+            assert_eq!(n, heads, "{} rho={rho}", size.name);
+        }
+    }
+
+    #[test]
+    fn table5_pure_mosa_head_counts() {
+        // Pure-MoSA rows (0 dense heads kept).
+        for (size, rho, heads) in [
+            (&TINY, 2u64, 23u64),
+            (&TINY, 4, 56),
+            (&TINY, 8, 124),
+            (&TINY, 16, 255),
+        ] {
+            let k = PAPER_T / rho;
+            let n = solve_sparse_heads(size.h, size.hp, PAPER_T, k, size.heads, 0, SparseKind::Mosa, 0);
+            assert_eq!(n, heads, "{} pure rho={rho}", size.name);
+        }
+    }
+
+    #[test]
+    fn table5_param_counts_match_paper_rounding() {
+        // Table 5 reports params to the nearest million (or 0.1B). Check a
+        // few cells: Tiny dense 28M; Tiny rho=2 hybrid 34M; Tiny rho=4 48M;
+        // Medium rho=8 442M (the parameter-matched example from Sec 3.2).
+        let p_dense = model_params(TINY.layers, TINY.h, TINY.hp, TINY.d_ff, PAPER_VOCAB, TINY.heads, 0, SparseKind::None);
+        assert_eq!((p_dense as f64 / 1e6).round() as u64, 28);
+        for (rho, expect_m) in [(2u64, 34u64), (4, 48), (8, 78), (16, 136), (32, 242), (64, 423)] {
+            let k = PAPER_T / rho;
+            let n = solve_sparse_heads(TINY.h, TINY.hp, PAPER_T, k, TINY.heads, 4, SparseKind::Mosa, 0);
+            let p = model_params(TINY.layers, TINY.h, TINY.hp, TINY.d_ff, PAPER_VOCAB, 4, n, SparseKind::Mosa);
+            assert_eq!((p as f64 / 1e6).round() as u64, expect_m, "tiny rho={rho}");
+        }
+        let n = solve_sparse_heads(MEDIUM.h, MEDIUM.hp, PAPER_T, PAPER_T / 8, MEDIUM.heads, 4, SparseKind::Mosa, 0);
+        let p = model_params(MEDIUM.layers, MEDIUM.h, MEDIUM.hp, MEDIUM.d_ff, PAPER_VOCAB, 4, n, SparseKind::Mosa);
+        assert_eq!((p as f64 / 1e6).round() as u64, 442);
+    }
+
+    #[test]
+    fn mosa_cheaper_than_dense_for_small_k() {
+        // Sec 3.2: "typically k << T, hence the MoSA head is significantly
+        // cheaper" — verify the crossover behaviour.
+        let (h, hp, t) = (512, 64, 1024);
+        assert!(mosa_head(h, hp, t, t / 8) < dense_head(h, hp, t) / 4);
+        // at k = T, MoSA costs slightly MORE than dense (routing overhead)
+        assert!(mosa_head(h, hp, t, t) > dense_head(h, hp, t));
+    }
+
+    #[test]
+    fn routing_head_is_rho_mosa_heads_approx() {
+        // Paper: "FLOP-wise, one Routing Attention head more or less
+        // corresponds to rho fixed/MoSA heads."
+        let (h, hp, t) = (512u64, 64, 1024);
+        for rho in [2u64, 4, 8, 16] {
+            let k = t / rho;
+            let r = routing_head(h, hp, t, k) as f64;
+            let m = (rho * mosa_head(h, hp, t, k)) as f64;
+            assert!((r / m - 1.0).abs() < 0.35, "rho={rho}: {}", r / m);
+        }
+    }
+
+    // ---- property tests (PCG-driven; proptest unavailable offline) ----
+
+    #[test]
+    fn prop_solver_never_exceeds_budget() {
+        let mut rng = crate::util::rng::Pcg::seeded(1234);
+        for _ in 0..500 {
+            let h = 64 << rng.below(4); // 64..512
+            let hp = 8 << rng.below(4);
+            let t = 128 << rng.below(4);
+            let rho = 1u64 << (1 + rng.below(4));
+            let k = (t / rho).max(2);
+            let base = 2 + rng.below(14) as u64;
+            let keep = rng.below(base as u32 + 1) as u64;
+            for kind in [SparseKind::Mosa, SparseKind::Fixed, SparseKind::Routing] {
+                let n = solve_sparse_heads(h, hp, t, k, base, keep, kind, 0);
+                let budget = base * dense_head(h, hp, t);
+                let spent = keep * dense_head(h, hp, t) + n * sparse_head(kind, h, hp, t, k);
+                assert!(spent <= budget, "{kind:?} h={h} t={t} k={k} base={base} keep={keep}");
+                // maximality: one more head must overflow (when any fit)
+                let spent1 = keep * dense_head(h, hp, t) + (n + 1) * sparse_head(kind, h, hp, t, k);
+                assert!(spent1 > budget);
+            }
+        }
+    }
+
+    #[test]
+    fn prop_solver_monotone_in_sparsity() {
+        // More sparsity (smaller k) must never buy FEWER MoSA heads.
+        let mut rng = crate::util::rng::Pcg::seeded(99);
+        for _ in 0..200 {
+            let h = 64 << rng.below(4);
+            let hp = 8 << rng.below(4);
+            let t = 256 << rng.below(3);
+            let base = 4 + rng.below(12) as u64;
+            let mut prev = 0;
+            for rho in [2u64, 4, 8, 16, 32] {
+                let n = solve_sparse_heads(h, hp, t, t / rho, base, 2, SparseKind::Mosa, 0);
+                assert!(n >= prev, "rho={rho}");
+                prev = n;
+            }
+        }
+    }
+
+    #[test]
+    fn prop_params_increase_with_heads() {
+        let mut rng = crate::util::rng::Pcg::seeded(7);
+        for _ in 0..200 {
+            let h = 64 << rng.below(3);
+            let hp = 16;
+            let n = rng.below(64) as u64;
+            let a = model_params(4, h, hp, 4 * h, 512, 2, n, SparseKind::Mosa);
+            let b = model_params(4, h, hp, 4 * h, 512, 2, n + 1, SparseKind::Mosa);
+            assert_eq!(b - a, 4 * (4 * h * hp + h));
+        }
+    }
+}

@@ -1,0 +1,84 @@
+//! Paper-scale constants (Table 4 / App. C) and table printers.
+//!
+//! `mosa flops --table4` / `--table5` regenerate the analytic tables at
+//! the paper's own scale; these are exact, hardware-independent
+//! reproductions (see EXPERIMENTS.md §Analytic).
+
+use super::{model_forward, model_params, solve_sparse_heads, SparseKind};
+use crate::util::fmt_int;
+
+#[derive(Debug, Clone)]
+pub struct PaperSize {
+    pub name: &'static str,
+    pub layers: u64,
+    pub h: u64,
+    pub d_ff: u64,
+    pub hp: u64,
+    pub heads: u64,
+}
+
+pub const PAPER_T: u64 = 1024;
+pub const PAPER_VOCAB: u64 = 8000;
+pub const PAPER_KEEP_DENSE: u64 = 4;
+
+pub static TINY: PaperSize = PaperSize { name: "Tiny", layers: 6, h: 512, d_ff: 2048, hp: 64, heads: 9 };
+pub static SMALL: PaperSize = PaperSize { name: "Small", layers: 9, h: 1024, d_ff: 4096, hp: 64, heads: 9 };
+pub static MEDIUM: PaperSize = PaperSize { name: "Medium", layers: 18, h: 1024, d_ff: 4096, hp: 64, heads: 9 };
+pub static LARGE: PaperSize = PaperSize { name: "Large", layers: 27, h: 1280, d_ff: 5120, hp: 64, heads: 16 };
+
+pub fn all_sizes() -> [&'static PaperSize; 4] {
+    [&TINY, &SMALL, &MEDIUM, &LARGE]
+}
+
+/// Regenerate paper Table 4 (hyperparameters + FLOPs per forward pass).
+pub fn print_table4() {
+    println!("Table 4 — dense baselines, FLOPs of one forward pass (T = {PAPER_T})\n");
+    println!(
+        "{:<10} {:>7} {:>8} {:>8} {:>6} {:>6} {:>18} {:>10}",
+        "Size", "Layers", "Hidden", "FF", "h'", "Heads", "FLOPs/pass", "(G)"
+    );
+    for s in all_sizes() {
+        let f = model_forward(s.layers, s.h, s.hp, s.d_ff, PAPER_T, s.heads, 0, 0, SparseKind::None, 0);
+        println!(
+            "{:<10} {:>7} {:>8} {:>8} {:>6} {:>6} {:>18} {:>10.2}",
+            s.name,
+            s.layers,
+            s.h,
+            s.d_ff,
+            s.hp,
+            s.heads,
+            fmt_int(f),
+            f as f64 / 1e9
+        );
+    }
+    println!("\npaper prints: Tiny 54.76G, Small 219.85G, Medium 430.70G*, Large 1,130.65G");
+    println!("* Medium is dimensionally 2x Small => exactly 439.70G; the paper's 430.70G is a typo.");
+}
+
+/// Regenerate paper Table 5's head-count and parameter-count blocks for
+/// hybrid (4 dense heads kept) and pure MoSA models.
+pub fn print_table5() {
+    let rhos = [2u64, 4, 8, 16, 32, 64, 128, 256];
+    println!("Table 5 — MoSA heads and parameters per sparsity (exact arithmetic)\n");
+    for s in all_sizes() {
+        for pure in [false, true] {
+            let keep = if pure { 0 } else { PAPER_KEEP_DENSE };
+            let label = if pure { "Pure MoSA" } else { "MoSA" };
+            print!("{:<7} {:<10}", s.name, label);
+            for rho in rhos {
+                let k = PAPER_T / rho;
+                let n = solve_sparse_heads(s.h, s.hp, PAPER_T, k, s.heads, keep, SparseKind::Mosa, 0);
+                print!(" {:>6}", n);
+            }
+            println!("   (heads)");
+            print!("{:<7} {:<10}", "", "");
+            for rho in rhos {
+                let k = PAPER_T / rho;
+                let n = solve_sparse_heads(s.h, s.hp, PAPER_T, k, s.heads, keep, SparseKind::Mosa, 0);
+                let p = model_params(s.layers, s.h, s.hp, s.d_ff, PAPER_VOCAB, keep, n, SparseKind::Mosa);
+                print!(" {:>6}", format!("{}M", (p as f64 / 1e6).round() as u64));
+            }
+            println!("   (params)");
+        }
+    }
+}

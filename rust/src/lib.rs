@@ -1,0 +1,22 @@
+//! MoSA: Mixture of Sparse Attention — systems reproduction.
+//!
+//! Three-layer architecture:
+//! - L1: Pallas attention kernels (build-time Python, `python/compile/kernels/`)
+//! - L2: JAX transformer LM + train step (build-time Python, `python/compile/`)
+//! - L3: this crate — the Rust coordinator that owns the training run:
+//!   config, data pipeline, tokenizer, PJRT runtime, trainer, FLOP
+//!   accounting, KV-cache model, experiment harness.
+//!
+//! Python never runs on the training hot path: `make artifacts` lowers the
+//! JAX programs to HLO text once; the Rust binary loads and executes them
+//! via PJRT (xla crate).
+
+pub mod util;
+pub mod config;
+pub mod flops;
+pub mod data;
+pub mod runtime;
+pub mod coordinator;
+pub mod kvcache;
+pub mod evalharness;
+pub mod experiments;

@@ -1,0 +1,217 @@
+//! `mosa` — the L3 coordinator CLI.
+//!
+//! Subcommands:
+//!   train        train one variant end-to-end and report test ppl
+//!   eval         evaluate a checkpoint's perplexity
+//!   flops        regenerate the paper's analytic tables (Table 4 / 5)
+//!   kv           KV-cache accounting for a variant (Table 2 column)
+//!   data         inspect the data pipeline (corpus/BPE/batches)
+//!   downstream   run the synthetic zero-shot suite on a checkpoint
+//!   list         list manifest variants
+//!
+//! The experiment sweeps behind the paper's tables/figures live in
+//! `examples/` (see README).
+
+use anyhow::{bail, Result};
+
+use mosa::config::RunConfig;
+use mosa::coordinator::Trainer;
+use mosa::data::{Bpe, CorpusGen, SequentialWindows, TokenDataset};
+use mosa::evalharness::{self, make_tasks, TaskKind};
+use mosa::experiments::{build_datasets, run_variant};
+use mosa::flops::paper;
+use mosa::runtime::{Engine, Manifest, TrainState};
+use mosa::util::cli::Args;
+
+fn main() {
+    mosa::util::init_logging();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().cloned().unwrap_or_else(|| "help".to_string());
+    let args = Args::parse(argv.into_iter().skip(1));
+    let code = match dispatch(&cmd, &args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(cmd: &str, args: &Args) -> Result<()> {
+    match cmd {
+        "train" => cmd_train(args),
+        "eval" => cmd_eval(args),
+        "flops" => cmd_flops(args),
+        "kv" => cmd_kv(args),
+        "data" => cmd_data(args),
+        "downstream" => cmd_downstream(args),
+        "list" => cmd_list(args),
+        "report" => cmd_report(args),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}' (try `mosa help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "mosa — Mixture of Sparse Attention coordinator\n\n\
+         usage: mosa <cmd> [--flags]\n\n\
+         cmds:\n\
+         \x20 train      --variant <name> [--steps N] [--lr X] [--chunk] [--ckpt path]\n\
+         \x20 eval       --variant <name> --ckpt <path> [--eval-batches N]\n\
+         \x20 flops      [--table4] [--table5]\n\
+         \x20 kv         --variant <name> [--ctx T]\n\
+         \x20 data       [--corpus-bytes N] [--vocab V]\n\
+         \x20 downstream --variant <name> --ckpt <path> [--n 50]\n\
+         \x20 list       [--artifacts dir]\n"
+    );
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let rc = RunConfig::from_args(args);
+    let name = args.get("variant").unwrap_or("micro_mosa_r8");
+    let manifest = Manifest::load(&rc.artifacts_dir)?;
+    let variant = manifest.variant(name)?;
+    let mut engine = Engine::cpu()?;
+    let (train_ds, test_ds) = build_datasets(&rc, variant.config.vocab)?;
+    log::info!(
+        "dataset: {} train / {} test tokens (vocab {})",
+        train_ds.ids.len(),
+        test_ds.ids.len(),
+        train_ds.vocab
+    );
+    let (res, metrics, state) = run_variant(&mut engine, &manifest, variant, &train_ds, &test_ds, &rc)?;
+    if let Some(ckpt) = args.get("ckpt") {
+        state.save(variant, ckpt)?;
+        log::info!("checkpoint -> {ckpt}");
+    }
+    let csv = metrics.save_csv(&rc.results_dir)?;
+    println!(
+        "\n[{}] steps={} tail-loss={:.4} test-ppl={:.3} ms/step={:.1} (curve: {})",
+        res.name,
+        rc.steps,
+        res.train_tail_loss,
+        res.test_ppl,
+        res.ms_per_step,
+        csv.display()
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let rc = RunConfig::from_args(args);
+    let name = args.get("variant").unwrap_or("micro_mosa_r8");
+    let ckpt = args.get("ckpt").ok_or_else(|| anyhow::anyhow!("--ckpt required"))?;
+    let manifest = Manifest::load(&rc.artifacts_dir)?;
+    let variant = manifest.variant(name)?;
+    let mut engine = Engine::cpu()?;
+    let state = TrainState::load(variant, ckpt)?;
+    let (_, test_ds) = build_datasets(&rc, variant.config.vocab)?;
+    let trainer = Trainer::new(&manifest, variant);
+    let mut eval = SequentialWindows::new(&test_ds);
+    let ppl = trainer.evaluate(&mut engine, &mut eval, &state, rc.eval_batches)?;
+    println!("[{}] step {} test-ppl {:.3}", name, state.step, ppl);
+    Ok(())
+}
+
+fn cmd_flops(args: &Args) -> Result<()> {
+    let both = !args.has("table4") && !args.has("table5");
+    if args.has("table4") || both {
+        paper::print_table4();
+        println!();
+    }
+    if args.has("table5") || both {
+        paper::print_table5();
+    }
+    Ok(())
+}
+
+fn cmd_kv(args: &Args) -> Result<()> {
+    let rc = RunConfig::from_args(args);
+    let name = args.get("variant").unwrap_or("micro_mosa_r8");
+    let manifest = Manifest::load(&rc.artifacts_dir)?;
+    let variant = manifest.variant(name)?;
+    let cfg = &variant.config;
+    let ctx = args.get_usize("ctx", cfg.seq_len);
+    println!(
+        "[{}] context {}: KV pairs/layer {}  total {}  bytes {}  (train act bytes ~{})",
+        name,
+        ctx,
+        mosa::kvcache::kv_pairs_per_layer(cfg, ctx),
+        mosa::kvcache::kv_pairs_total(cfg, ctx),
+        mosa::kvcache::kv_bytes_total(cfg, ctx),
+        mosa::kvcache::train_activation_bytes(cfg, variant.batch),
+    );
+    Ok(())
+}
+
+fn cmd_data(args: &Args) -> Result<()> {
+    let rc = RunConfig::from_args(args);
+    let vocab = args.get_usize("vocab", 512);
+    let text = CorpusGen::new(rc.seed + 1000).generate(rc.corpus_bytes.min(4000));
+    println!("--- corpus sample ---\n{}\n---------------------", &text[..text.len().min(600)]);
+    let ds = TokenDataset::build(rc.seed + 1000, rc.corpus_bytes, vocab, Some(&rc.cache_dir))?;
+    println!(
+        "corpus {} bytes -> {} tokens (vocab {}), compression {:.2} bytes/token",
+        rc.corpus_bytes,
+        ds.ids.len(),
+        vocab,
+        rc.corpus_bytes as f64 / ds.ids.len() as f64
+    );
+    Ok(())
+}
+
+fn cmd_downstream(args: &Args) -> Result<()> {
+    let rc = RunConfig::from_args(args);
+    let name = args.get("variant").unwrap_or("micro_mosa_r8");
+    let ckpt = args.get("ckpt").ok_or_else(|| anyhow::anyhow!("--ckpt required"))?;
+    let n = args.get_usize("n", 50);
+    let manifest = Manifest::load(&rc.artifacts_dir)?;
+    let variant = manifest.variant(name)?;
+    let mut engine = Engine::cpu()?;
+    let state = TrainState::load(variant, ckpt)?;
+    // the BPE must match training: rebuild deterministically from the corpus
+    let text = CorpusGen::new(rc.seed + 1000).generate(rc.corpus_bytes);
+    let bpe = Bpe::train(text.as_bytes(), variant.config.vocab)?;
+    for kind in TaskKind::all() {
+        let tasks = make_tasks(kind, n, rc.seed + 7);
+        let acc = evalharness::evaluate_tasks(&mut engine, &manifest, variant, &state, &bpe, &tasks)?;
+        println!("[{}] {:<10} acc {:.3} (n={})", name, kind.name(), acc, n);
+    }
+    Ok(())
+}
+
+fn cmd_list(args: &Args) -> Result<()> {
+    let rc = RunConfig::from_args(args);
+    let manifest = Manifest::load(&rc.artifacts_dir)?;
+    println!(
+        "{:<24} {:>6} {:>6} {:>8} {:>5} {:>4} {:>8} programs",
+        "variant", "dense", "sparse", "kind", "T", "k", "params"
+    );
+    for v in manifest.variants.values() {
+        println!(
+            "{:<24} {:>6} {:>6} {:>8} {:>5} {:>4} {:>8} {}",
+            v.name,
+            v.config.n_dense,
+            v.config.n_sparse,
+            v.config.sparse_kind,
+            v.config.seq_len,
+            v.config.k_sel,
+            mosa::experiments::report::format_si(v.n_params as f64),
+            v.programs.keys().cloned().collect::<Vec<_>>().join(",")
+        );
+    }
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let rc = RunConfig::from_args(args);
+    let md = args.get_or("md", "EXPERIMENTS.md");
+    mosa::experiments::mdreport::update_experiments_md(&md, &rc.results_dir)?;
+    println!("updated {md} from {}", rc.results_dir);
+    Ok(())
+}

@@ -1,0 +1,131 @@
+//! PJRT execution engine: load HLO-text artifacts, compile once, execute
+//! many times.
+//!
+//! The engine wraps `xla::PjRtClient` (CPU) with an executable cache keyed
+//! by artifact file, so sweeps that revisit a variant don't recompile.
+//! Programs follow the AOT convention: flat positional inputs, one tuple
+//! output (lowered with `return_tuple=True`), decomposed back into a flat
+//! `Vec<Literal>` after each call.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::manifest::{Manifest, Variant};
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: HashMap<PathBuf, xla::PjRtLoadedExecutable>,
+    /// cumulative compile time, exposed for the perf logs
+    pub compile_seconds: f64,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, cache: HashMap::new(), compile_seconds: 0.0 })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached).
+    pub fn load(&mut self, path: impl AsRef<Path>) -> Result<&xla::PjRtLoadedExecutable> {
+        let path = path.as_ref().to_path_buf();
+        if !self.cache.contains_key(&path) {
+            let t0 = Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("XLA-compiling {}", path.display()))?;
+            self.compile_seconds += t0.elapsed().as_secs_f64();
+            log::info!(
+                "compiled {} in {:.2}s",
+                path.file_name().unwrap_or_default().to_string_lossy(),
+                t0.elapsed().as_secs_f64()
+            );
+            self.cache.insert(path.clone(), exe);
+        }
+        Ok(&self.cache[&path])
+    }
+
+    /// Compile a variant's program by name.
+    pub fn load_program(
+        &mut self,
+        manifest: &Manifest,
+        variant: &Variant,
+        program: &str,
+    ) -> Result<&xla::PjRtLoadedExecutable> {
+        let path = manifest.hlo_path(variant, program)?;
+        self.load(path)
+    }
+
+    /// Execute a compiled program on flat literal inputs; returns the flat
+    /// list of output literals (the 1-tuple output decomposed). Generic
+    /// over `Borrow<Literal>` so callers pass `&Literal` references and
+    /// avoid host-copying the train state every step (§Perf L3-1).
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let bufs = exe.execute::<L>(inputs).context("PJRT execute")?;
+        let lit = bufs[0][0].to_literal_sync().context("fetching result")?;
+        let outs = lit.to_tuple().context("decomposing output tuple")?;
+        Ok(outs)
+    }
+
+    /// Execute and keep results on device (hot-path variant used by the
+    /// chunked trainer: the returned tuple buffer is immediately converted
+    /// once, so per-step conversions are amortised over the chunk).
+    pub fn run_buffers<L: std::borrow::Borrow<xla::Literal>>(
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[L],
+    ) -> Result<Vec<Vec<xla::PjRtBuffer>>> {
+        exe.execute::<L>(inputs).context("PJRT execute")
+    }
+
+    pub fn cached_programs(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// literal helpers
+// ---------------------------------------------------------------------------
+
+/// Build an i32 literal of the given shape from a slice.
+pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Build an f32 literal of the given shape from a slice.
+pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+pub fn lit_scalar_f32(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+pub fn lit_scalar_i32(x: i32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// Read an f32 scalar (or first element) out of a literal.
+pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}

@@ -1,0 +1,280 @@
+//! `artifacts/manifest.json` — the contract between the Python compile
+//! path and the Rust coordinator.
+//!
+//! For each AOT-compiled model variant the manifest records the model
+//! config, the flattened train-state layout (section by section, leaf by
+//! leaf, in jax.tree_util canonical order), and every lowered program
+//! with its extra inputs/outputs. The coordinator never guesses shapes:
+//! everything comes from here.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LeafSpec {
+    pub path: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32"
+    /// host-init rule: "zeros" | "ones" | "normal:<scale>" | "centroid"
+    pub init: String,
+}
+
+impl LeafSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ProgramSpec {
+    pub name: String,
+    pub file: String,
+    pub extra_inputs: Vec<LeafSpec>,
+    pub extra_outputs: Vec<LeafSpec>,
+    pub chunk: Option<usize>,    // train_chunk only
+    pub seq_len: Option<usize>,  // score_short only
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelCfg {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub n_layers: usize,
+    pub seq_len: usize,
+    pub n_dense: usize,
+    pub window: usize,
+    pub n_sparse: usize,
+    pub sparse_kind: String,
+    pub k_sel: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Variant {
+    pub name: String,
+    pub group: String,
+    pub batch: usize,
+    pub base_heads: usize,
+    pub rho: usize,
+    pub flops_fwd: u64,
+    pub n_params: u64,
+    pub n_params_leaves: usize,
+    pub n_state_leaves: usize,
+    pub n_train_leaves: usize,
+    pub config: ModelCfg,
+    /// Full train-state leaf layout: params ++ state ++ m ++ v ++ t.
+    pub leaves: Vec<LeafSpec>,
+    pub programs: BTreeMap<String, ProgramSpec>,
+}
+
+impl Variant {
+    /// Leaf count of the model state (params + routing state) — the score
+    /// programs take exactly this prefix of the train state.
+    pub fn n_model_leaves(&self) -> usize {
+        self.n_params_leaves + self.n_state_leaves
+    }
+
+    pub fn program(&self, name: &str) -> Result<&ProgramSpec> {
+        self.programs
+            .get(name)
+            .ok_or_else(|| anyhow!("variant {} has no program '{}'", self.name, name))
+    }
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub variants: BTreeMap<String, Variant>,
+}
+
+fn leaf_from_json(j: &Json) -> Result<LeafSpec> {
+    let path = j
+        .get("path")
+        .or_else(|| j.get("name"))
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("leaf missing path/name"))?
+        .to_string();
+    let shape = j
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("leaf {path} missing shape"))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim in {path}")))
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = j
+        .get("dtype")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("leaf {path} missing dtype"))?
+        .to_string();
+    let init = j.get("init").and_then(Json::as_str).unwrap_or("zeros").to_string();
+    Ok(LeafSpec { path, shape, dtype, init })
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("parsing manifest: {e}"))?;
+        let mut variants = BTreeMap::new();
+        for v in j
+            .get("variants")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing 'variants'"))?
+        {
+            let var = Self::variant_from_json(v)?;
+            variants.insert(var.name.clone(), var);
+        }
+        Ok(Manifest { dir, variants })
+    }
+
+    fn variant_from_json(v: &Json) -> Result<Variant> {
+        let name = v.get("name").and_then(Json::as_str).ok_or_else(|| anyhow!("variant missing name"))?.to_string();
+        let cfg = v.get("config").ok_or_else(|| anyhow!("{name}: missing config"))?;
+        let gu = |j: &Json, k: &str| -> Result<usize> {
+            j.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow!("{name}: missing {k}"))
+        };
+        let config = ModelCfg {
+            vocab: gu(cfg, "vocab")?,
+            d_model: gu(cfg, "d_model")?,
+            d_head: gu(cfg, "d_head")?,
+            d_ff: gu(cfg, "d_ff")?,
+            n_layers: gu(cfg, "n_layers")?,
+            seq_len: gu(cfg, "seq_len")?,
+            n_dense: gu(cfg, "n_dense")?,
+            window: gu(cfg, "window")?,
+            n_sparse: gu(cfg, "n_sparse")?,
+            sparse_kind: cfg.get("sparse_kind").and_then(Json::as_str).unwrap_or("none").to_string(),
+            k_sel: gu(cfg, "k_sel")?,
+        };
+        let sections = v.get("sections").ok_or_else(|| anyhow!("{name}: missing sections"))?;
+        let mut leaves = Vec::new();
+        for sec in ["params", "state", "m", "v", "t"] {
+            if let Some(arr) = sections.get(sec).and_then(Json::as_arr) {
+                for l in arr {
+                    leaves.push(leaf_from_json(l)?);
+                }
+            }
+        }
+        let mut programs = BTreeMap::new();
+        if let Some(progs) = v.get("programs").and_then(Json::as_obj) {
+            for (pname, pj) in progs {
+                let file = pj.get("file").and_then(Json::as_str).ok_or_else(|| anyhow!("{name}.{pname}: missing file"))?.to_string();
+                let parse_leaves = |key: &str| -> Result<Vec<LeafSpec>> {
+                    match pj.get(key).and_then(Json::as_arr) {
+                        Some(arr) => arr.iter().map(leaf_from_json).collect(),
+                        None => Ok(vec![]),
+                    }
+                };
+                programs.insert(
+                    pname.clone(),
+                    ProgramSpec {
+                        name: pname.clone(),
+                        file,
+                        extra_inputs: parse_leaves("extra_inputs")?,
+                        extra_outputs: parse_leaves("extra_outputs")?,
+                        chunk: pj.get("chunk").and_then(Json::as_usize),
+                        seq_len: pj.get("seq_len").and_then(Json::as_usize),
+                    },
+                );
+            }
+        }
+        let n_params_leaves = v.get("n_params_leaves").and_then(Json::as_usize).ok_or_else(|| anyhow!("{name}: n_params_leaves"))?;
+        let n_state_leaves = v.get("n_state_leaves").and_then(Json::as_usize).unwrap_or(0);
+        let n_train_leaves = v.get("n_train_leaves").and_then(Json::as_usize).ok_or_else(|| anyhow!("{name}: n_train_leaves"))?;
+        if n_train_leaves != leaves.len() {
+            bail!("{name}: n_train_leaves {} != layout leaves {}", n_train_leaves, leaves.len());
+        }
+        Ok(Variant {
+            name,
+            group: v.get("group").and_then(Json::as_str).unwrap_or("").to_string(),
+            batch: v.get("batch").and_then(Json::as_usize).unwrap_or(1),
+            base_heads: v.get("base_heads").and_then(Json::as_usize).unwrap_or(0),
+            rho: v.get("rho").and_then(Json::as_usize).unwrap_or(1),
+            flops_fwd: v.get("flops_fwd").and_then(Json::as_i64).unwrap_or(0) as u64,
+            n_params: v.get("n_params").and_then(Json::as_i64).unwrap_or(0) as u64,
+            n_params_leaves,
+            n_state_leaves,
+            n_train_leaves,
+            config,
+            leaves,
+            programs,
+        })
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&Variant> {
+        self.variants.get(name).ok_or_else(|| {
+            anyhow!(
+                "variant '{}' not in manifest (have: {}). Run `make artifacts` \
+                 (or `make artifacts-sweep` / `make artifacts-longseq`).",
+                name,
+                self.variants.keys().cloned().collect::<Vec<_>>().join(", ")
+            )
+        })
+    }
+
+    pub fn hlo_path(&self, v: &Variant, program: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&v.program(program)?.file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_json() -> &'static str {
+        r#"{"variants": [{
+            "name": "t", "group": "g", "batch": 2, "base_heads": 4, "rho": 8,
+            "flops_fwd": 1000, "n_params": 10,
+            "n_params_leaves": 2, "n_state_leaves": 0, "n_train_leaves": 7,
+            "config": {"vocab": 16, "d_model": 8, "d_head": 4, "d_ff": 16,
+                       "n_layers": 1, "seq_len": 8, "n_dense": 1, "window": 0,
+                       "n_sparse": 1, "sparse_kind": "mosa", "k_sel": 2},
+            "sections": {
+              "params": [{"path": "emb", "shape": [16, 8], "dtype": "f32"},
+                          {"path": "out", "shape": [8, 16], "dtype": "f32"}],
+              "state": [],
+              "m": [{"path": "emb", "shape": [16, 8], "dtype": "f32"},
+                     {"path": "out", "shape": [8, 16], "dtype": "f32"}],
+              "v": [{"path": "emb", "shape": [16, 8], "dtype": "f32"},
+                     {"path": "out", "shape": [8, 16], "dtype": "f32"}],
+              "t": [{"path": "t", "shape": [], "dtype": "f32"}]
+            },
+            "programs": {"train": {"file": "t.train.hlo.txt",
+              "extra_inputs": [{"name": "batch", "shape": [2, 9], "dtype": "i32"},
+                                {"name": "lr", "shape": [], "dtype": "f32"}],
+              "extra_outputs": [{"name": "loss", "shape": [], "dtype": "f32"}]}}
+        }]}"#
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let dir = std::env::temp_dir().join("mosa_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), manifest_json()).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let v = m.variant("t").unwrap();
+        assert_eq!(v.leaves.len(), 7);
+        assert_eq!(v.n_model_leaves(), 2);
+        assert_eq!(v.config.sparse_kind, "mosa");
+        let p = v.program("train").unwrap();
+        assert_eq!(p.extra_inputs[0].shape, vec![2, 9]);
+        assert_eq!(p.extra_outputs[0].dtype, "f32");
+        assert!(v.program("score").is_err());
+        assert!(m.variant("nope").is_err());
+    }
+
+    #[test]
+    fn leaf_elems() {
+        let l = LeafSpec { path: "x".into(), shape: vec![3, 4], dtype: "f32".into(), init: "zeros".into() };
+        assert_eq!(l.elems(), 12);
+        let s = LeafSpec { path: "s".into(), shape: vec![], dtype: "f32".into(), init: "zeros".into() };
+        assert_eq!(s.elems(), 1);
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime: manifest contract, execution engine, train state.
+//!
+//! The pattern follows /opt/xla-example/load_hlo: HLO text ->
+//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
+//! `PjRtClient::compile` -> `execute`.
+
+pub mod engine;
+pub mod manifest;
+pub mod state;
+
+pub use engine::Engine;
+pub use manifest::{LeafSpec, Manifest, ModelCfg, ProgramSpec, Variant};
+pub use state::TrainState;

@@ -1,0 +1,204 @@
+//! Train state = the flat list of literals that flows through the AOT
+//! programs, plus checkpointing to the coordinator's own binary format.
+//!
+//! Layout (from manifest): params ++ state ++ m ++ v ++ t. The score
+//! programs take the `n_model_leaves` prefix (params ++ state).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::engine::{lit_scalar_i32, Engine};
+use super::manifest::{Manifest, Variant};
+
+pub struct TrainState {
+    pub leaves: Vec<xla::Literal>,
+    pub step: u64,
+}
+
+impl TrainState {
+    /// Initialise the train state on the host from the manifest's per-leaf
+    /// init rules (N(0, scale) weights, ones LN scales, zero biases and
+    /// optimizer moments, row-normalised centroids). Distributionally
+    /// identical to the JAX `init_params`, without paying a 30s XLA
+    /// compile for a threefry graph (see EXPERIMENTS.md §Perf).
+    pub fn init_host(variant: &Variant, seed: u64) -> Result<TrainState> {
+        let mut rng = crate::util::rng::Pcg::seeded(seed ^ 0x0136_a5a0);
+        let mut leaves = Vec::with_capacity(variant.n_train_leaves);
+        for spec in &variant.leaves {
+            let n = spec.elems();
+            let mut data = vec![0f32; n];
+            match spec.init.as_str() {
+                "zeros" => {}
+                "ones" => data.iter_mut().for_each(|x| *x = 1.0),
+                "centroid" => {
+                    // normal rows, L2-normalised over the last dim
+                    let d = *spec.shape.last().unwrap_or(&1);
+                    for x in data.iter_mut() {
+                        *x = rng.normal() as f32;
+                    }
+                    for row in data.chunks_mut(d.max(1)) {
+                        let norm = row.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-6);
+                        row.iter_mut().for_each(|x| *x /= norm);
+                    }
+                }
+                s if s.starts_with("normal:") => {
+                    let scale: f32 = s["normal:".len()..].parse().unwrap_or(0.02);
+                    for x in data.iter_mut() {
+                        *x = scale * rng.normal() as f32;
+                    }
+                }
+                other => bail!("unknown init rule '{}' for leaf {}", other, spec.path),
+            }
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            leaves.push(xla::Literal::vec1(&data).reshape(&dims)?);
+        }
+        Ok(TrainState { leaves, step: 0 })
+    }
+
+    /// Run the variant's `init` HLO program if it was AOT-compiled
+    /// (cross-check path; host init is the default).
+    pub fn init(engine: &mut Engine, manifest: &Manifest, variant: &Variant, seed: i32) -> Result<TrainState> {
+        if !variant.programs.contains_key("init") {
+            return Self::init_host(variant, seed as u64);
+        }
+        let exe = engine.load_program(manifest, variant, "init")?;
+        let outs = Engine::run(exe, &[lit_scalar_i32(seed)])?;
+        if outs.len() != variant.n_train_leaves {
+            bail!(
+                "init produced {} leaves, manifest says {}",
+                outs.len(),
+                variant.n_train_leaves
+            );
+        }
+        Ok(TrainState { leaves: outs, step: 0 })
+    }
+
+    /// Literals for a score program: the params+state prefix.
+    pub fn model_leaves(&self, variant: &Variant) -> &[xla::Literal] {
+        &self.leaves[..variant.n_model_leaves()]
+    }
+
+    /// Replace the state with a train step's outputs; returns the extra
+    /// outputs (loss, or losses for train_chunk).
+    pub fn absorb(
+        &mut self,
+        variant: &Variant,
+        mut outs: Vec<xla::Literal>,
+        steps: u64,
+    ) -> Result<Vec<xla::Literal>> {
+        if outs.len() < variant.n_train_leaves {
+            bail!("train outputs {} < expected {}", outs.len(), variant.n_train_leaves);
+        }
+        let extra = outs.split_off(variant.n_train_leaves);
+        self.leaves = outs;
+        self.step += steps;
+        Ok(extra)
+    }
+
+    /// Total parameter bytes (for the memory model / logs).
+    pub fn total_bytes(&self) -> usize {
+        self.leaves.iter().map(|l| l.size_bytes()).sum()
+    }
+
+    // -- checkpointing -----------------------------------------------------
+
+    /// Save to the coordinator checkpoint format:
+    /// magic, version, step, leaf count, then per leaf: path, dtype, dims,
+    /// raw little-endian data.
+    pub fn save(&self, variant: &Variant, path: impl AsRef<Path>) -> Result<()> {
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path.as_ref())
+                .with_context(|| format!("creating {}", path.as_ref().display()))?,
+        );
+        f.write_all(b"MOSACKP1")?;
+        f.write_all(&self.step.to_le_bytes())?;
+        f.write_all(&(self.leaves.len() as u32).to_le_bytes())?;
+        for (lit, spec) in self.leaves.iter().zip(&variant.leaves) {
+            let name = spec.path.as_bytes();
+            f.write_all(&(name.len() as u32).to_le_bytes())?;
+            f.write_all(name)?;
+            let dt: u8 = match spec.dtype.as_str() {
+                "f32" => 0,
+                "i32" => 1,
+                d => bail!("unsupported checkpoint dtype {d}"),
+            };
+            f.write_all(&[dt])?;
+            f.write_all(&(spec.shape.len() as u32).to_le_bytes())?;
+            for d in &spec.shape {
+                f.write_all(&(*d as u64).to_le_bytes())?;
+            }
+            let n = lit.element_count();
+            let mut buf = vec![0f32; n];
+            lit.copy_raw_to(&mut buf).map_err(|e| anyhow!("leaf {}: {e}", spec.path))?;
+            let bytes: &[u8] = unsafe { std::slice::from_raw_parts(buf.as_ptr() as *const u8, n * 4) };
+            f.write_all(&(bytes.len() as u64).to_le_bytes())?;
+            f.write_all(bytes)?;
+        }
+        Ok(())
+    }
+
+    /// Load a checkpoint, validating the layout against the manifest.
+    pub fn load(variant: &Variant, path: impl AsRef<Path>) -> Result<TrainState> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path.as_ref())
+                .with_context(|| format!("opening {}", path.as_ref().display()))?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != b"MOSACKP1" {
+            bail!("bad checkpoint magic");
+        }
+        let step = read_u64(&mut f)?;
+        let n = read_u32(&mut f)? as usize;
+        if n != variant.n_train_leaves {
+            bail!("checkpoint has {} leaves, variant {} needs {}", n, variant.name, variant.n_train_leaves);
+        }
+        let mut leaves = Vec::with_capacity(n);
+        for spec in &variant.leaves {
+            let name_len = read_u32(&mut f)? as usize;
+            let mut name = vec![0u8; name_len];
+            f.read_exact(&mut name)?;
+            let name = String::from_utf8_lossy(&name).to_string();
+            if name != spec.path {
+                bail!("checkpoint leaf '{}' != manifest leaf '{}' (layout drift — rebuild artifacts)", name, spec.path);
+            }
+            let mut dt = [0u8; 1];
+            f.read_exact(&mut dt)?;
+            let ndim = read_u32(&mut f)? as usize;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(read_u64(&mut f)? as usize);
+            }
+            if dims != spec.shape {
+                bail!("checkpoint leaf '{}' shape {:?} != manifest {:?}", name, dims, spec.shape);
+            }
+            let nbytes = read_u64(&mut f)? as usize;
+            if nbytes != spec.elems() * 4 {
+                bail!("leaf '{}' byte count mismatch", name);
+            }
+            let mut bytes = vec![0u8; nbytes];
+            f.read_exact(&mut bytes)?;
+            let vals: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            let dims_i64: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            leaves.push(xla::Literal::vec1(&vals).reshape(&dims_i64)?);
+        }
+        Ok(TrainState { leaves, step })
+    }
+}
+
+fn read_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(f: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    f.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}

@@ -1,0 +1,91 @@
+//! Tiny argv parser (clap is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and trailing
+//! positionals. Subcommand dispatch lives in `main.rs`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse everything after the subcommand. Flags without a following
+    /// value (next token starts with `--` or argv ends) become `"true"`.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(rest.to_string(), v);
+                } else {
+                    out.flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_kv_and_flags() {
+        let a = Args::parse(argv(&["--steps", "100", "--fast", "--lr=0.01", "pos1"]));
+        assert_eq!(a.get_usize("steps", 0), 100);
+        assert!(a.has("fast"));
+        assert_eq!(a.get_f64("lr", 0.0), 0.01);
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn trailing_flag_is_bool() {
+        let a = Args::parse(argv(&["--verbose"]));
+        assert_eq!(a.get("verbose"), Some("true"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(argv(&[]));
+        assert_eq!(a.get_or("x", "d"), "d");
+        assert_eq!(a.get_usize("n", 7), 7);
+    }
+}

@@ -1,0 +1,63 @@
+//! Substrate utilities the offline build must provide itself: JSON,
+//! PRNG, CLI parsing, bench statistics, and a tiny logger.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Wall-clock seconds since the unix epoch (for log stamps / run ids).
+pub fn unix_time() -> f64 {
+    SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_secs_f64()).unwrap_or(0.0)
+}
+
+/// Minimal stderr logger used by the coordinator (`log` crate facade is
+/// available but no env_logger backend; this is the backend).
+pub struct StderrLogger;
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &log::Metadata) -> bool {
+        metadata.level() <= log::Level::Info
+    }
+
+    fn log(&self, record: &log::Record) {
+        if self.enabled(record.metadata()) {
+            eprintln!("[{:<5}] {}", record.level(), record.args());
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: StderrLogger = StderrLogger;
+
+pub fn init_logging() {
+    let _ = log::set_logger(&LOGGER).map(|_| log::set_max_level(log::LevelFilter::Info));
+}
+
+/// Format a big integer with thousands separators (tables).
+pub fn fmt_int(n: u64) -> String {
+    let s = n.to_string();
+    let mut out = String::new();
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_int_groups() {
+        assert_eq!(fmt_int(0), "0");
+        assert_eq!(fmt_int(999), "999");
+        assert_eq!(fmt_int(54760833024), "54,760,833,024");
+    }
+}

@@ -1,0 +1,118 @@
+//! Timing + summary statistics for the hand-rolled bench harness.
+//!
+//! criterion is unavailable offline; `rust/benches/*.rs` use
+//! `harness = false` and this module for warmup / repeated measurement /
+//! robust summaries, printing one table row per benchmark case.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub n: usize,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub min_ns: f64,
+    pub p50_ns: f64,
+    pub p90_ns: f64,
+    pub max_ns: f64,
+}
+
+impl Summary {
+    pub fn from_ns(mut samples: Vec<f64>) -> Summary {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let pct = |p: f64| samples[((p * (n - 1) as f64).round() as usize).min(n - 1)];
+        Summary {
+            n,
+            mean_ns: mean,
+            std_ns: var.sqrt(),
+            min_ns: samples[0],
+            p50_ns: pct(0.5),
+            p90_ns: pct(0.9),
+            max_ns: samples[n - 1],
+        }
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+}
+
+/// Benchmark `f`, returning per-iteration timings. Runs `warmup`
+/// iterations unmeasured, then `iters` measured ones.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    Summary::from_ns(samples)
+}
+
+/// Time a single run of `f`.
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{:.0} ns", ns)
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Print one aligned bench-table row.
+pub fn report(name: &str, s: &Summary) {
+    println!(
+        "{:<44} mean {:>12}  p50 {:>12}  p90 {:>12}  (n={})",
+        name,
+        fmt_ns(s.mean_ns),
+        fmt_ns(s.p50_ns),
+        fmt_ns(s.p90_ns),
+        s.n
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_percentiles() {
+        let s = Summary::from_ns((1..=100).map(|x| x as f64).collect());
+        assert_eq!(s.min_ns, 1.0);
+        assert_eq!(s.max_ns, 100.0);
+        assert!((s.p50_ns - 50.0).abs() <= 1.0);
+        assert!((s.mean_ns - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bench_runs_and_counts() {
+        let mut count = 0;
+        let s = bench(2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(s.n, 5);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert_eq!(fmt_ns(12.0), "12 ns");
+        assert_eq!(fmt_ns(1.2e4), "12.00 µs");
+        assert_eq!(fmt_ns(1.2e7), "12.00 ms");
+        assert_eq!(fmt_ns(1.2e10), "12.000 s");
+    }
+}

@@ -1,0 +1,208 @@
+//! Integration tests over the real PJRT runtime + core artifacts.
+//!
+//! Requires `make artifacts` (the core set). Tests share one Engine via
+//! a mutex-free serial pattern: cargo test runs them in threads, so each
+//! test builds its own engine; XLA compiles are cached per-engine only,
+//! hence the tiny step counts.
+
+use mosa::config::RunConfig;
+use mosa::coordinator::{LrSchedule, TrainOptions, Trainer};
+use mosa::data::TokenDataset;
+use mosa::runtime::{Engine, Manifest, TrainState};
+use mosa::util::rng::Pcg;
+
+fn manifest() -> Manifest {
+    Manifest::load("artifacts").expect("run `make artifacts` before cargo test")
+}
+
+fn rand_source(vocab: usize, seed: u64) -> impl FnMut(usize, usize) -> Vec<i32> {
+    let mut rng = Pcg::seeded(seed);
+    move |b, t| (0..b * t).map(|_| rng.below(vocab as u32) as i32).collect()
+}
+
+fn opts(steps: u64) -> TrainOptions {
+    TrainOptions {
+        steps,
+        schedule: LrSchedule::paper_like(3e-3, 2, steps),
+        seed: 0,
+        log_every: 0,
+        use_chunk: false,
+        checkpoint: None,
+        eval_every: 0,
+    }
+}
+
+#[test]
+fn host_init_matches_manifest_layout() {
+    let m = manifest();
+    let v = m.variant("micro_mosa_r8").unwrap();
+    let st = TrainState::init_host(v, 0).unwrap();
+    assert_eq!(st.leaves.len(), v.n_train_leaves);
+    for (lit, spec) in st.leaves.iter().zip(&v.leaves) {
+        assert_eq!(lit.element_count(), spec.elems(), "{}", spec.path);
+    }
+    // ln scales are ones, optimizer moments zeros
+    let ln_idx = v.leaves.iter().position(|l| l.path.ends_with("ln1.g")).unwrap();
+    let vals = st.leaves[ln_idx].to_vec::<f32>().unwrap();
+    assert!(vals.iter().all(|&x| x == 1.0));
+    let m_start = v.n_model_leaves();
+    let mvals = st.leaves[m_start].to_vec::<f32>().unwrap();
+    assert!(mvals.iter().all(|&x| x == 0.0));
+}
+
+#[test]
+fn train_step_decreases_loss_dense_and_mosa() {
+    let m = manifest();
+    let mut engine = Engine::cpu().unwrap();
+    for name in ["micro_dense", "micro_mosa_r8"] {
+        let v = m.variant(name).unwrap();
+        let trainer = Trainer::new(&m, v);
+        // fixed repeating batch => loss must drop fast
+        let mut fixed = {
+            let mut rng = Pcg::seeded(3);
+            let batch: Vec<i32> =
+                (0..v.batch * (v.config.seq_len + 1)).map(|_| rng.below(64) as i32).collect();
+            move |b: usize, t: usize| {
+                assert_eq!(b * t, batch.len());
+                batch.clone()
+            }
+        };
+        let (_, metrics) = trainer.train(&mut engine, &mut fixed, &opts(12)).unwrap();
+        let first = metrics.records.first().unwrap().loss;
+        let last = metrics.records.last().unwrap().loss;
+        assert!(last < first, "{name}: {first} -> {last}");
+    }
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_eval() {
+    let m = manifest();
+    let mut engine = Engine::cpu().unwrap();
+    let v = m.variant("micro_dense").unwrap();
+    let trainer = Trainer::new(&m, v);
+    let mut src = rand_source(128, 5);
+    let (state, _) = trainer.train(&mut engine, &mut src, &opts(4)).unwrap();
+
+    let path = std::env::temp_dir().join("mosa_it_ckpt.bin");
+    state.save(v, &path).unwrap();
+    let restored = TrainState::load(v, &path).unwrap();
+    assert_eq!(restored.step, state.step);
+
+    // bitwise-identical leaves
+    for (a, b) in state.leaves.iter().zip(&restored.leaves) {
+        assert_eq!(a.to_vec::<f32>().unwrap(), b.to_vec::<f32>().unwrap());
+    }
+
+    // identical eval ppl on identical data
+    let ds = TokenDataset::from_ids((0..4000).map(|i| (i % 100) as i32).collect(), 512);
+    let mut e1 = mosa::data::SequentialWindows::new(&ds);
+    let mut e2 = mosa::data::SequentialWindows::new(&ds);
+    let p1 = trainer.evaluate(&mut engine, &mut e1, &state, 2).unwrap();
+    let p2 = trainer.evaluate(&mut engine, &mut e2, &restored, 2).unwrap();
+    assert_eq!(p1, p2);
+}
+
+#[test]
+fn chunked_and_per_step_training_agree() {
+    let m = manifest();
+    let v = m.variant("micro_mosa_r8").unwrap();
+    if !v.programs.contains_key("train_chunk") {
+        return;
+    }
+    let mut engine = Engine::cpu().unwrap();
+    let trainer = Trainer::new(&m, v);
+    let steps = v.program("train_chunk").unwrap().chunk.unwrap() as u64;
+
+    let mut o1 = opts(steps);
+    let mut o2 = opts(steps);
+    o2.use_chunk = true;
+
+    let mut s1 = rand_source(256, 9);
+    let mut s2 = rand_source(256, 9); // same stream
+    let (_, m1) = trainer.train(&mut engine, &mut s1, &o1).unwrap();
+    let (_, m2) = trainer.train(&mut engine, &mut s2, &o2).unwrap();
+    for (a, b) in m1.records.iter().zip(&m2.records) {
+        assert!(
+            (a.loss - b.loss).abs() < 1e-4,
+            "step {}: per-step {} vs chunked {}",
+            a.step,
+            a.loss,
+            b.loss
+        );
+    }
+    let _ = &mut o1;
+}
+
+#[test]
+fn score_program_gives_finite_logprobs() {
+    let m = manifest();
+    let mut engine = Engine::cpu().unwrap();
+    let v = m.variant("micro_fixed_r8").unwrap();
+    let trainer = Trainer::new(&m, v);
+    let state = TrainState::init_host(v, 1).unwrap();
+    let ds = TokenDataset::from_ids((0..5000).map(|i| (i % 200) as i32).collect(), 512);
+    let mut eval = mosa::data::SequentialWindows::new(&ds);
+    let ppl = trainer.evaluate(&mut engine, &mut eval, &state, 2).unwrap();
+    // untrained model on vocab 512: ppl near vocab size
+    assert!(ppl.is_finite() && ppl > 100.0 && ppl < 2000.0, "ppl={ppl}");
+}
+
+#[test]
+fn routing_state_updates_during_training() {
+    let m = manifest();
+    let mut engine = Engine::cpu().unwrap();
+    let v = m.variant("micro_routing_r8").unwrap();
+    assert!(v.n_state_leaves > 0, "routing variant must carry centroid state");
+    let trainer = Trainer::new(&m, v);
+    let st0 = TrainState::init_host(v, 0).unwrap();
+    let centroid_idx = v.n_params_leaves; // first state leaf
+    let before = st0.leaves[centroid_idx].to_vec::<f32>().unwrap();
+    let mut src = rand_source(300, 11);
+    let (st1, _) = trainer.train(&mut engine, &mut src, &opts(3)).unwrap();
+    let after = st1.leaves[centroid_idx].to_vec::<f32>().unwrap();
+    assert_ne!(before, after, "EMA centroids did not move");
+}
+
+#[test]
+fn failure_injection_bad_inputs() {
+    let m = manifest();
+    // unknown variant
+    assert!(m.variant("nope_model").is_err());
+    let v = m.variant("micro_dense").unwrap();
+    // unknown program
+    assert!(v.program("generate").is_err());
+    // corrupt checkpoint
+    let path = std::env::temp_dir().join("mosa_it_corrupt.bin");
+    std::fs::write(&path, b"garbage").unwrap();
+    assert!(TrainState::load(v, &path).is_err());
+    // truncated checkpoint
+    let st = TrainState::init_host(v, 0).unwrap();
+    let good = std::env::temp_dir().join("mosa_it_trunc.bin");
+    st.save(v, &good).unwrap();
+    let bytes = std::fs::read(&good).unwrap();
+    std::fs::write(&good, &bytes[..bytes.len() / 2]).unwrap();
+    assert!(TrainState::load(v, &good).is_err());
+}
+
+#[test]
+fn manifest_flops_match_rust_flops_module() {
+    use mosa::flops::{model_forward, SparseKind};
+    let m = manifest();
+    for v in m.variants.values() {
+        let c = &v.config;
+        let kind = SparseKind::parse(&c.sparse_kind).unwrap();
+        let f = model_forward(
+            c.n_layers as u64,
+            c.d_model as u64,
+            c.d_head as u64,
+            c.d_ff as u64,
+            c.seq_len as u64,
+            c.n_dense as u64,
+            c.window as u64,
+            c.n_sparse as u64,
+            kind,
+            c.k_sel as u64,
+        );
+        assert_eq!(f, v.flops_fwd, "{} (python/rust FLOP mirror drift)", v.name);
+    }
+}
