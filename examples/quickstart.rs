@@ -44,6 +44,7 @@ fn main() -> Result<()> {
         use_chunk: false,
         checkpoint: None,
         eval_every: 0,
+        prefetch: true, // batches + literals staged on a background thread
     };
     let mut sampler = train_ds.sampler(7);
     let (state, metrics) = trainer.train(&mut engine, &mut sampler, &opts)?;

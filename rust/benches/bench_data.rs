@@ -1,6 +1,7 @@
 //! Bench: data pipeline — corpus generation and batch sampling rates.
 //! Batch sampling runs on the training hot path (between PJRT dispatches)
-//! so its cost must stay far below a train step (~100+ ms).
+//! so its cost must stay far below a train step (~100+ ms); with the
+//! prefetcher it overlaps the dispatch entirely (see bench_pipeline).
 
 use mosa::coordinator::trainer::BatchSource;
 use mosa::data::{CorpusGen, TokenDataset};
@@ -21,7 +22,17 @@ fn main() {
     let s = bench(10, 500, || {
         std::hint::black_box(sampler.next_batch(8, 129));
     });
-    report("window_sampler 8x129", &s);
+    report("window_sampler 8x129 (alloc)", &s);
+
+    // in-place fill into a reused scratch buffer — the prefetcher's path
+    let mut sampler = ds.sampler(1);
+    let mut buf: Vec<i32> = Vec::with_capacity(8 * 129);
+    let s = bench(10, 500, || {
+        buf.clear();
+        sampler.fill_batch(8, 129, &mut buf);
+        std::hint::black_box(buf.len());
+    });
+    report("window_sampler 8x129 (fill, reused buf)", &s);
 
     let mut sampler = ds.sampler(2);
     let s = bench(10, 200, || {

@@ -1,0 +1,19 @@
+//! Bench: the host-side pipeline harness — tokenizer scaling, batch
+//! prep, prefetch overlap, and (with artifacts) real steps/sec. Thin
+//! wrapper over `mosa::perf`; emits BENCH_pipeline.json so the perf
+//! trajectory is tracked across PRs (see PERF.md).
+//!
+//!     cargo bench --bench bench_pipeline            # full sizes
+//!     cargo bench --bench bench_pipeline -- --smoke # CI smoke sizes
+
+use mosa::perf::{run, PerfConfig};
+
+fn main() {
+    mosa::util::init_logging();
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let cfg = if smoke { PerfConfig::smoke() } else { PerfConfig::default() };
+    if let Err(e) = run(&cfg) {
+        eprintln!("bench_pipeline failed: {e:#}");
+        std::process::exit(1);
+    }
+}

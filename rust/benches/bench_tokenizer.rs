@@ -1,6 +1,9 @@
-//! Bench: BPE substrate — training throughput and encode/decode speed.
+//! Bench: BPE substrate — training throughput, encode/decode speed, and
+//! the scaling behaviour of the incremental trainer + rank-heap encoder.
 //! The tokenizer sits on the data path of every experiment; this bench
-//! documents that it is never the bottleneck vs the PJRT step (ms-scale).
+//! documents that it is never the bottleneck vs the PJRT step (ms-scale)
+//! and that train/encode stay sub-quadratic (wall-clock on a 4x corpus
+//! grows ~4x, not the seed implementation's ~16x).
 
 use mosa::data::{Bpe, CorpusGen};
 use mosa::util::stats::{bench, report, time_once};
@@ -18,6 +21,15 @@ fn main() {
         200.0 / dur.as_secs_f64()
     );
 
+    // scaling probe: a linear-ish trainer grows ~4x on a 4x corpus
+    let text4 = CorpusGen::new(1).generate(800_000);
+    let (_, dur4) = time_once(|| Bpe::train(text4.as_bytes(), 512).unwrap());
+    println!(
+        "bpe_train: 800 KB in {:.2}s — growth {:.1}x on a 4x corpus",
+        dur4.as_secs_f64(),
+        dur4.as_secs_f64() / dur.as_secs_f64()
+    );
+
     let sample = &bytes[..10_000];
     let s = bench(3, 20, || {
         std::hint::black_box(bpe.encode(sample));
@@ -26,6 +38,20 @@ fn main() {
     println!(
         "  encode throughput: {:.2} MB/s",
         10_000.0 / (s.mean_ns / 1e9) / 1e6
+    );
+
+    // corpus-scale encode: serial vs chunked-parallel fan-out
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let (ser, dser) = time_once(|| bpe.encode(text4.as_bytes()));
+    let (par, dpar) = time_once(|| bpe.encode_parallel(text4.as_bytes(), 100_000, threads));
+    println!(
+        "bpe_encode 800 KB: serial {:.0} ms, parallel x{} {:.0} ms (speedup {:.2}x, {} vs {} tokens)",
+        dser.as_secs_f64() * 1e3,
+        threads,
+        dpar.as_secs_f64() * 1e3,
+        dser.as_secs_f64() / dpar.as_secs_f64(),
+        ser.len(),
+        par.len()
     );
 
     let ids = bpe.encode(sample);

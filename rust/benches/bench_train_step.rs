@@ -39,6 +39,7 @@ fn main() {
             use_chunk: false,
             checkpoint: None,
             eval_every: 0,
+            prefetch: true,
         };
         let (_, metrics) = trainer.train(&mut engine, &mut src, &opts).unwrap();
         let ms = metrics.mean_ms(4);
@@ -77,6 +78,7 @@ fn main() {
             use_chunk: false,
             checkpoint: None,
             eval_every: 0,
+            prefetch: true,
         };
         let (_, metrics) = trainer.train(&mut engine, &mut src, &opts).unwrap();
         let hlo = std::fs::metadata(manifest.hlo_path(v, "train").unwrap())
@@ -108,6 +110,7 @@ fn main() {
                 use_chunk,
                 checkpoint: None,
                 eval_every: 0,
+                prefetch: true,
             };
             let (_, metrics) = trainer.train(&mut engine, &mut src, &opts).unwrap();
             println!(
@@ -117,4 +120,10 @@ fn main() {
             );
         }
     }
+
+    // host-side batch prefetch on/off — shared probe from the perf
+    // harness (single source of truth for the stall accounting; the
+    // simulated-dispatch A/B lives in bench_pipeline)
+    println!("\nbatch prefetch on/off (shared perf probe):");
+    mosa::perf::bench_train_real(&mosa::perf::PerfConfig::default());
 }

@@ -16,6 +16,8 @@ pub struct RunConfig {
     pub corpus_bytes: usize,
     pub eval_batches: usize,
     pub use_chunk: bool,
+    /// background batch prefetch (on by default; `--no-prefetch` for A/B)
+    pub prefetch: bool,
 }
 
 impl Default for RunConfig {
@@ -30,6 +32,7 @@ impl Default for RunConfig {
             corpus_bytes: 400_000,
             eval_batches: 8,
             use_chunk: false,
+            prefetch: true,
         }
     }
 }
@@ -48,6 +51,7 @@ impl RunConfig {
             corpus_bytes: args.get_usize("corpus-bytes", d.corpus_bytes),
             eval_batches: args.get_usize("eval-batches", d.eval_batches),
             use_chunk: args.has("chunk"),
+            prefetch: !args.has("no-prefetch"),
         }
     }
 }
@@ -63,6 +67,13 @@ mod tests {
         let c = RunConfig::from_args(&a);
         assert_eq!(c.steps, 42);
         assert!(c.use_chunk);
+        assert!(c.prefetch, "prefetch defaults on");
         assert_eq!(c.results_dir, "results");
+    }
+
+    #[test]
+    fn no_prefetch_flag_disables_pipeline() {
+        let a = Args::parse(["--no-prefetch".to_string()]);
+        assert!(!RunConfig::from_args(&a).prefetch);
     }
 }

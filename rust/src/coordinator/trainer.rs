@@ -6,12 +6,20 @@
 //! - chunked:  `train_chunk` artifact runs CHUNK steps inside one XLA
 //!   program via lax.scan — one dispatch and one host round-trip per
 //!   chunk (the §Perf optimisation; see EXPERIMENTS.md)
+//!
+//! Both modes pull batches through the data pipeline's `run_pipeline`
+//! (`data::prefetch`): with `TrainOptions::prefetch` on (the default),
+//! token sampling and literal staging happen on a background producer
+//! thread, double-buffered, so the dispatch loop only ever stalls for a
+//! batch when the producer is slower than the device — a condition the
+//! perf harness (`mosa perf`) measures directly.
 
 use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-use crate::runtime::engine::{lit_f32, lit_i32, lit_scalar_f32, scalar_f32, to_vec_f32, Engine};
+use crate::data::prefetch::{run_pipeline, BatchShape, BatchStream, PrefetchMode, PrefetchStats};
+use crate::runtime::engine::{lit_f32, lit_scalar_f32, scalar_f32, to_vec_f32, Engine};
 use crate::runtime::manifest::{Manifest, Variant};
 use crate::runtime::state::TrainState;
 
@@ -21,13 +29,24 @@ use super::schedule::LrSchedule;
 /// Anything that can produce token batches (the data pipeline implements
 /// this; tests use closures/synthetic sources).
 pub trait BatchSource {
-    /// Fill a [b, t] i32 token matrix (row-major).
-    fn next_batch(&mut self, b: usize, t: usize) -> Vec<i32>;
+    /// Append one [b, t] i32 token matrix (row-major) to `out`.
+    ///
+    /// Append — rather than overwrite — so the chunked trainer and the
+    /// prefetcher can stage several batches into one reusable scratch
+    /// buffer; callers clear the buffer between dispatches.
+    fn fill_batch(&mut self, b: usize, t: usize, out: &mut Vec<i32>);
+
+    /// Allocating convenience wrapper around `fill_batch`.
+    fn next_batch(&mut self, b: usize, t: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(b * t);
+        self.fill_batch(b, t, &mut out);
+        out
+    }
 }
 
 impl<F: FnMut(usize, usize) -> Vec<i32>> BatchSource for F {
-    fn next_batch(&mut self, b: usize, t: usize) -> Vec<i32> {
-        self(b, t)
+    fn fill_batch(&mut self, b: usize, t: usize, out: &mut Vec<i32>) {
+        out.extend_from_slice(&self(b, t));
     }
 }
 
@@ -41,6 +60,9 @@ pub struct TrainOptions {
     pub checkpoint: Option<String>,
     /// evaluate test ppl every N steps (0 = only at end); requires eval data
     pub eval_every: u64,
+    /// build batches + literals on a background thread, overlapped with
+    /// the PJRT dispatch (double-buffered); off = the seed's inline path
+    pub prefetch: bool,
 }
 
 impl TrainOptions {
@@ -53,6 +75,15 @@ impl TrainOptions {
             use_chunk: false,
             checkpoint: None,
             eval_every: 0,
+            prefetch: true,
+        }
+    }
+
+    fn prefetch_mode(&self) -> PrefetchMode {
+        if self.prefetch {
+            PrefetchMode::Background { depth: 1 }
+        } else {
+            PrefetchMode::Inline
         }
     }
 }
@@ -71,7 +102,7 @@ impl<'m> Trainer<'m> {
     pub fn train(
         &self,
         engine: &mut Engine,
-        data: &mut dyn BatchSource,
+        data: &mut (dyn BatchSource + Send),
         opts: &TrainOptions,
     ) -> Result<(TrainState, RunMetrics)> {
         let v = self.variant;
@@ -80,6 +111,7 @@ impl<'m> Trainer<'m> {
         metrics.note("params", v.n_params);
         metrics.note("flops_fwd", v.flops_fwd);
         metrics.note("mode", if opts.use_chunk { "chunk" } else { "step" });
+        metrics.note("prefetch", if opts.prefetch { "on" } else { "off" });
 
         let mut state = TrainState::init(engine, self.manifest, v, opts.seed)?;
         log::info!(
@@ -89,11 +121,13 @@ impl<'m> Trainer<'m> {
             state.total_bytes() as f64 / 1e6
         );
 
-        if opts.use_chunk {
-            self.train_chunked(engine, data, opts, &mut state, &mut metrics)?;
+        let stats = if opts.use_chunk {
+            self.train_chunked(engine, data, opts, &mut state, &mut metrics)?
         } else {
-            self.train_per_step(engine, data, opts, &mut state, &mut metrics)?;
-        }
+            self.train_per_step(engine, data, opts, &mut state, &mut metrics)?
+        };
+        metrics.note("batch_prep_ms_total", format!("{:.3}", stats.prep_ns as f64 / 1e6));
+        metrics.note("batch_wait_ms_total", format!("{:.3}", stats.wait_ns as f64 / 1e6));
 
         if let Some(ckpt) = &opts.checkpoint {
             state.save(v, ckpt)?;
@@ -105,96 +139,119 @@ impl<'m> Trainer<'m> {
     fn train_per_step(
         &self,
         engine: &mut Engine,
-        data: &mut dyn BatchSource,
+        data: &mut (dyn BatchSource + Send),
         opts: &TrainOptions,
         state: &mut TrainState,
         metrics: &mut RunMetrics,
-    ) -> Result<()> {
+    ) -> Result<PrefetchStats> {
         let v = self.variant;
         let (b, t1) = (v.batch, v.config.seq_len + 1);
         // compile up-front so step timings are pure execution
         engine.load_program(self.manifest, v, "train")?;
-        for step in 0..opts.steps {
-            let lr = opts.schedule.lr(step) as f32;
-            let tokens = data.next_batch(b, t1);
-            let t0 = Instant::now();
-            // inputs by reference: execute() is generic over Borrow<Literal>,
-            // so the state literals are NOT host-copied per step (§Perf L3-1;
-            // the clone-per-step baseline cost is recorded in bench_runtime).
-            let batch_lit = lit_i32(&tokens, &[b, t1])?;
-            let lr_lit = lit_scalar_f32(lr);
-            let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(state.leaves.len() + 2);
-            inputs.extend(state.leaves.iter());
-            inputs.push(&batch_lit);
-            inputs.push(&lr_lit);
-            let exe = engine.load_program(self.manifest, v, "train")?;
-            let outs = Engine::run(exe, &inputs)?;
-            let extra = state.absorb(v, outs, 1)?;
-            let loss = scalar_f32(&extra[0])? as f64;
-            let ms = t0.elapsed().as_secs_f64() * 1e3;
-            metrics.record(step, loss, lr as f64, ms);
-            if opts.log_every > 0 && (step % opts.log_every == 0 || step + 1 == opts.steps) {
-                log::info!("[{}] step {:>5} loss {:.4} ({:.0} ms)", v.name, step, loss, ms);
+        let shape = BatchShape::per_step(b, t1);
+        let mut exec_ns_total = 0u64;
+        let body = |stream: &mut BatchStream<'_>| -> Result<()> {
+            for step in 0..opts.steps {
+                let batch = stream.next()?;
+                let lr = opts.schedule.lr(step) as f32;
+                let t0 = Instant::now();
+                // inputs by reference: execute() is generic over
+                // Borrow<Literal>, so the state literals are NOT
+                // host-copied per step (§Perf L3-1).
+                let lr_lit = lit_scalar_f32(lr);
+                let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(state.leaves.len() + 2);
+                inputs.extend(state.leaves.iter());
+                inputs.push(&batch.lit);
+                inputs.push(&lr_lit);
+                let exe = engine.load_program(self.manifest, v, "train")?;
+                let (outs, exec_ns) = Engine::run_timed(exe, &inputs)?;
+                exec_ns_total += exec_ns;
+                let extra = state.absorb(v, outs, 1)?;
+                let loss = scalar_f32(&extra[0])? as f64;
+                let ms = t0.elapsed().as_secs_f64() * 1e3;
+                metrics.record(step, loss, lr as f64, ms);
+                if opts.log_every > 0 && (step % opts.log_every == 0 || step + 1 == opts.steps) {
+                    log::info!("[{}] step {:>5} loss {:.4} ({:.0} ms)", v.name, step, loss, ms);
+                }
+                if !loss.is_finite() {
+                    bail!("[{}] loss diverged at step {}", v.name, step);
+                }
             }
-            if !loss.is_finite() {
-                bail!("[{}] loss diverged at step {}", v.name, step);
-            }
-        }
-        Ok(())
+            Ok(())
+        };
+        let ((), stats) = run_pipeline(data, shape, opts.steps, opts.prefetch_mode(), body)?;
+        metrics.note("execute_ms_total", format!("{:.3}", exec_ns_total as f64 / 1e6));
+        Ok(stats)
     }
 
     fn train_chunked(
         &self,
         engine: &mut Engine,
-        data: &mut dyn BatchSource,
+        data: &mut (dyn BatchSource + Send),
         opts: &TrainOptions,
         state: &mut TrainState,
         metrics: &mut RunMetrics,
-    ) -> Result<()> {
+    ) -> Result<PrefetchStats> {
         let v = self.variant;
         let (b, t1) = (v.batch, v.config.seq_len + 1);
         let spec = v.program("train_chunk")?;
         let s = spec.chunk.unwrap_or(8);
         engine.load_program(self.manifest, v, "train_chunk")?;
-        let mut step = 0u64;
-        while step < opts.steps {
-            let n = s.min((opts.steps - step) as usize);
-            // the artifact is fixed at S steps; short tails re-run data
-            // through a full chunk but we only keep the first n losses'
-            // worth of progress when n == s (tails just run extra steps —
-            // acceptable for training; documented in the module docs).
-            let mut batches = Vec::with_capacity(s * b * t1);
-            let mut lrs = Vec::with_capacity(s);
-            for i in 0..s {
-                batches.extend_from_slice(&data.next_batch(b, t1));
-                lrs.push(opts.schedule.lr(step + i as u64) as f32);
+        let shape = BatchShape::chunked(s, b, t1);
+        let dispatches = opts.steps.div_ceil(s as u64);
+        let mut exec_ns_total = 0u64;
+        let body = |stream: &mut BatchStream<'_>| -> Result<()> {
+            let mut step = 0u64;
+            let mut lrs: Vec<f32> = Vec::with_capacity(s);
+            while step < opts.steps {
+                // the artifact is fixed at S steps; a short tail re-runs
+                // data through a full chunk (extra optimisation steps are
+                // acceptable for training) but only the first n losses
+                // fall inside opts.steps and get recorded.
+                let n = s.min((opts.steps - step) as usize);
+                let batch = stream.next()?;
+                lrs.clear();
+                for i in 0..s {
+                    lrs.push(opts.schedule.lr(step + i as u64) as f32);
+                }
+                let t0 = Instant::now();
+                let lr_lit = lit_f32(&lrs, &[s])?;
+                let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(state.leaves.len() + 2);
+                inputs.extend(state.leaves.iter());
+                inputs.push(&batch.lit);
+                inputs.push(&lr_lit);
+                let exe = engine.load_program(self.manifest, v, "train_chunk")?;
+                let (outs, exec_ns) = Engine::run_timed(exe, &inputs)?;
+                exec_ns_total += exec_ns;
+                let extra = state.absorb(v, outs, s as u64)?;
+                let losses = to_vec_f32(&extra[0])?;
+                let ms = t0.elapsed().as_secs_f64() * 1e3 / s as f64;
+                for (i, loss) in losses.iter().enumerate().take(n) {
+                    metrics.record(step + i as u64, *loss as f64, lrs[i] as f64, ms);
+                }
+                if opts.log_every > 0 {
+                    log::info!(
+                        "[{}] step {:>5} loss {:.4} ({:.0} ms/step, chunked)",
+                        v.name,
+                        step + n as u64 - 1,
+                        losses[n - 1],
+                        ms
+                    );
+                }
+                // divergence check on the last *executed* loss: the tail
+                // chunk applies all s optimiser steps to the state even
+                // though only n are recorded
+                let last = *losses.last().unwrap() as f64;
+                if !last.is_finite() {
+                    bail!("[{}] loss diverged at step {}", v.name, step);
+                }
+                step += s as u64;
             }
-            let t0 = Instant::now();
-            let batch_lit = lit_i32(&batches, &[s, b, t1])?;
-            let lr_lit = lit_f32(&lrs, &[s])?;
-            let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(state.leaves.len() + 2);
-            inputs.extend(state.leaves.iter());
-            inputs.push(&batch_lit);
-            inputs.push(&lr_lit);
-            let exe = engine.load_program(self.manifest, v, "train_chunk")?;
-            let outs = Engine::run(exe, &inputs)?;
-            let extra = state.absorb(v, outs, s as u64)?;
-            let losses = to_vec_f32(&extra[0])?;
-            let ms = t0.elapsed().as_secs_f64() * 1e3 / s as f64;
-            for (i, loss) in losses.iter().enumerate() {
-                metrics.record(step + i as u64, *loss as f64, lrs[i] as f64, ms);
-            }
-            let last = *losses.last().unwrap() as f64;
-            if opts.log_every > 0 {
-                log::info!("[{}] step {:>5} loss {:.4} ({:.0} ms/step, chunked)", v.name, step + s as u64 - 1, last, ms);
-            }
-            if !last.is_finite() {
-                bail!("[{}] loss diverged at step {}", v.name, step);
-            }
-            step += s as u64;
-            let _ = n;
-        }
-        Ok(())
+            Ok(())
+        };
+        let ((), stats) = run_pipeline(data, shape, dispatches, opts.prefetch_mode(), body)?;
+        metrics.note("execute_ms_total", format!("{:.3}", exec_ns_total as f64 / 1e6));
+        Ok(stats)
     }
 
     /// Perplexity over `n_batches` of held-out data via the score program.
@@ -210,9 +267,11 @@ impl<'m> Trainer<'m> {
         engine.load_program(self.manifest, v, "score")?;
         let mut total = 0.0f64;
         let mut count = 0usize;
+        let mut tokens: Vec<i32> = Vec::with_capacity(b * t1);
         for _ in 0..n_batches {
-            let tokens = data.next_batch(b, t1);
-            let batch_lit = lit_i32(&tokens, &[b, t1])?;
+            tokens.clear();
+            data.fill_batch(b, t1, &mut tokens);
+            let batch_lit = crate::runtime::engine::lit_i32(&tokens, &[b, t1])?;
             let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(v.n_model_leaves() + 1);
             inputs.extend(state.model_leaves(v).iter());
             inputs.push(&batch_lit);

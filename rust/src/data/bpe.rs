@@ -1,14 +1,52 @@
-//! Byte-pair-encoding tokenizer: trainer + codec.
+//! Byte-pair-encoding tokenizer: incremental trainer + rank-heap codec.
 //!
 //! Stands in for the paper's SentencePiece-8k (Sec 3 "Implementation
 //! details"): the corpus substrate is synthetic (see `corpus.rs`), so an
 //! in-house byte-level BPE trained on it plays the same role — sub-word
 //! units over bytes, fixed vocab, reversible. Vocab layout:
 //! ids [0, 256) are raw bytes; merged tokens follow in merge order.
+//!
+//! # Complexity (§Perf, host-side hot path)
+//!
+//! The seed implementation re-counted every pair and rebuilt the whole id
+//! vector once per learned merge — O(vocab × corpus) training — and
+//! `encode` rescanned the full sequence once per applied merge — O(n²).
+//! Both are now incremental:
+//!
+//! - **train**: a doubly-linked token list (u32 index arrays) plus a
+//!   pair-count map and a lazily-invalidated max-heap. Applying a merge
+//!   touches only the occurrences of that pair and the counts adjacent to
+//!   them, so training is O(corpus + merges·occ·log) instead of
+//!   re-deriving global state per merge. Tie-breaking (highest count,
+//!   then smallest pair) and left-to-right non-overlapping application
+//!   are byte-identical to the greedy reference — property-tested against
+//!   the seed implementation kept as an oracle under `#[cfg(test)]`.
+//! - **encode**: the standard rank-heap encoder — a min-heap of
+//!   (merge rank, position) candidates over the same linked-list
+//!   representation, O(n log n). Identical output to the greedy
+//!   lowest-rank-first reference: a merge of rank r can only create
+//!   candidate pairs of rank > r (the new token did not exist when
+//!   earlier merges were learned), so popping by (rank, position)
+//!   replays the reference's per-rank left-to-right passes exactly.
+//! - **encode_parallel**: chunked fan-out of `encode` across worker
+//!   threads for corpus-scale encoding. Chunk boundaries are hard token
+//!   breaks (no merge crosses a seam), so the output is deterministic
+//!   given the chunk size — independent of thread count — and equal to
+//!   concatenating `encode` over the chunks. Decoding still round-trips
+//!   bytes exactly; at the default 1 MiB chunk the seam effect is a
+//!   vanishing fraction of corpus tokens.
 
-use std::collections::HashMap;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
 
 use anyhow::{bail, Context, Result};
+
+/// Sentinel for "no neighbour" in the u32-indexed linked token list.
+const NIL: u32 = u32::MAX;
+
+/// Default chunk size for `encode_parallel`: fixed (not derived from the
+/// machine) so tokenisation is reproducible across hosts.
+pub const DEFAULT_ENCODE_CHUNK: usize = 1 << 20;
 
 #[derive(Debug, Clone)]
 pub struct Bpe {
@@ -20,54 +58,137 @@ pub struct Bpe {
     pieces: Vec<Vec<u8>>,
 }
 
+/// Decrement a pair count, dropping the entry at zero.
+fn dec(counts: &mut HashMap<(u32, u32), u64>, p: (u32, u32)) {
+    if let Some(c) = counts.get_mut(&p) {
+        *c -= 1;
+        if *c == 0 {
+            counts.remove(&p);
+        }
+    }
+}
+
 impl Bpe {
     pub fn vocab_size(&self) -> usize {
         256 + self.merges.len()
     }
 
     /// Train on `text` until `vocab_size` tokens (>= 256) exist or no pair
-    /// repeats. Standard greedy BPE: repeatedly merge the most frequent
-    /// adjacent pair.
+    /// repeats. Greedy BPE (repeatedly merge the most frequent adjacent
+    /// pair, ties to the smallest pair), computed incrementally: only the
+    /// counts adjacent to each applied merge are updated.
     pub fn train(text: &[u8], vocab_size: usize) -> Result<Bpe> {
         if vocab_size < 256 {
             bail!("vocab_size must be >= 256 (byte fallback)");
         }
-        let mut ids: Vec<u32> = text.iter().map(|&b| b as u32).collect();
+        if text.len() >= NIL as usize {
+            bail!("corpus too large for the u32-indexed trainer ({} bytes)", text.len());
+        }
+        let n = text.len();
+        let mut token: Vec<u32> = text.iter().map(|&b| b as u32).collect();
+        let mut next: Vec<u32> =
+            (0..n).map(|i| if i + 1 < n { (i + 1) as u32 } else { NIL }).collect();
+        let mut prev: Vec<u32> =
+            (0..n).map(|i| if i == 0 { NIL } else { (i - 1) as u32 }).collect();
+        let mut alive = vec![true; n];
+
+        // pair -> live count, and pair -> candidate occurrence positions
+        // (left index). Occurrence lists may hold stale positions; they are
+        // re-validated against the linked list before a merge is applied.
+        let mut counts: HashMap<(u32, u32), u64> = HashMap::new();
+        let mut occs: HashMap<(u32, u32), Vec<u32>> = HashMap::new();
+        for i in 0..n.saturating_sub(1) {
+            let p = (token[i], token[i + 1]);
+            *counts.entry(p).or_insert(0) += 1;
+            occs.entry(p).or_default().push(i as u32);
+        }
+
+        // Max-heap of (count, Reverse(pair)): pops the highest count, ties
+        // to the smallest pair — the reference tie-break. Entries go stale
+        // when counts move; a popped entry is checked against the live
+        // count and re-pushed at its true count if still mergeable.
+        let mut heap: BinaryHeap<(u64, Reverse<(u32, u32)>)> = counts
+            .iter()
+            .filter(|(_, &c)| c >= 2)
+            .map(|(&p, &c)| (c, Reverse(p)))
+            .collect();
+
         let mut merges = Vec::new();
         let mut pieces: Vec<Vec<u8>> = (0..256u32).map(|b| vec![b as u8]).collect();
+
         while 256 + merges.len() < vocab_size {
-            // count pairs
-            let mut counts: HashMap<(u32, u32), u64> = HashMap::new();
-            for w in ids.windows(2) {
-                *counts.entry((w[0], w[1])).or_insert(0) += 1;
-            }
-            // deterministic argmax: highest count, then smallest pair
-            let best = counts
-                .iter()
-                .filter(|(_, &c)| c >= 2)
-                .max_by_key(|(&pair, &c)| (c, std::cmp::Reverse(pair)));
-            let (&pair, _) = match best {
-                Some(b) => b,
-                None => break,
+            let best = loop {
+                match heap.pop() {
+                    None => break None,
+                    Some((c, Reverse(p))) => {
+                        let cur = counts.get(&p).copied().unwrap_or(0);
+                        if cur != c {
+                            if cur >= 2 {
+                                heap.push((cur, Reverse(p)));
+                            }
+                            continue; // stale entry
+                        }
+                        break Some(p);
+                    }
+                }
             };
+            let Some(pair) = best else { break };
+            let (a, b) = pair;
             let new_id = (256 + merges.len()) as u32;
             merges.push(pair);
-            let mut piece = pieces[pair.0 as usize].clone();
-            piece.extend_from_slice(&pieces[pair.1 as usize]);
+            let mut piece = pieces[a as usize].clone();
+            piece.extend_from_slice(&pieces[b as usize]);
             pieces.push(piece);
-            // apply merge in-place
-            let mut out = Vec::with_capacity(ids.len());
-            let mut i = 0;
-            while i < ids.len() {
-                if i + 1 < ids.len() && (ids[i], ids[i + 1]) == pair {
-                    out.push(new_id);
-                    i += 2;
-                } else {
-                    out.push(ids[i]);
-                    i += 1;
+
+            // Apply left-to-right, non-overlapping (positions consumed by
+            // an earlier merge of this pair fail re-validation).
+            let mut positions = occs.remove(&pair).unwrap_or_default();
+            positions.sort_unstable();
+            let mut touched: Vec<(u32, u32)> = Vec::with_capacity(positions.len() * 2);
+            for &iu in &positions {
+                let i = iu as usize;
+                if !alive[i] || token[i] != a {
+                    continue;
+                }
+                let j = next[i];
+                if j == NIL || token[j as usize] != b {
+                    continue;
+                }
+                let p = prev[i];
+                let n2 = next[j as usize];
+                dec(&mut counts, pair); // this occurrence disappears
+                if p != NIL {
+                    let left = token[p as usize];
+                    dec(&mut counts, (left, a));
+                    touched.push((left, a));
+                    let born = (left, new_id);
+                    *counts.entry(born).or_insert(0) += 1;
+                    occs.entry(born).or_default().push(p);
+                    touched.push(born);
+                }
+                if n2 != NIL {
+                    let right = token[n2 as usize];
+                    dec(&mut counts, (b, right));
+                    touched.push((b, right));
+                    let born = (new_id, right);
+                    *counts.entry(born).or_insert(0) += 1;
+                    occs.entry(born).or_default().push(iu);
+                    touched.push(born);
+                }
+                token[i] = new_id;
+                alive[j as usize] = false;
+                next[i] = n2;
+                if n2 != NIL {
+                    prev[n2 as usize] = iu;
                 }
             }
-            ids = out;
+            for p in touched {
+                if let Some(&c) = counts.get(&p) {
+                    if c >= 2 {
+                        heap.push((c, Reverse(p)));
+                    }
+                }
+            }
         }
         let ranks = merges
             .iter()
@@ -77,40 +198,109 @@ impl Bpe {
         Ok(Bpe { merges, ranks, pieces })
     }
 
-    /// Encode bytes to token ids (greedy lowest-rank merging, the standard
-    /// BPE inference algorithm).
+    /// Encode bytes to token ids: rank-heap BPE inference, O(n log n).
+    /// Applies the lowest-rank merge first (ties to the leftmost
+    /// occurrence), which reproduces the greedy reference exactly.
     pub fn encode(&self, text: &[u8]) -> Vec<u32> {
-        let mut ids: Vec<u32> = text.iter().map(|&b| b as u32).collect();
-        loop {
-            // find the lowest-rank applicable merge
-            let mut best: Option<(u32, usize)> = None; // (rank, pos)
-            for i in 0..ids.len().saturating_sub(1) {
-                if let Some(&r) = self.ranks.get(&(ids[i], ids[i + 1])) {
-                    if best.map(|(br, _)| r < br).unwrap_or(true) {
-                        best = Some((r, i));
-                    }
-                }
-            }
-            let (rank, _) = match best {
-                Some(b) => b,
-                None => break,
-            };
-            let pair = self.merges[rank as usize];
-            let new_id = 256 + rank;
-            let mut out = Vec::with_capacity(ids.len());
-            let mut i = 0;
-            while i < ids.len() {
-                if i + 1 < ids.len() && (ids[i], ids[i + 1]) == pair {
-                    out.push(new_id);
-                    i += 2;
-                } else {
-                    out.push(ids[i]);
-                    i += 1;
-                }
-            }
-            ids = out;
+        let n = text.len();
+        if n == 0 {
+            return Vec::new();
         }
-        ids
+        // hard limit (not debug-only): past u32 the index casts would wrap
+        // and silently corrupt the linked list in release builds
+        assert!(n < NIL as usize, "encode input too large for the u32-indexed codec ({n} bytes)");
+        let mut token: Vec<u32> = text.iter().map(|&b| b as u32).collect();
+        let mut next: Vec<u32> =
+            (0..n).map(|i| if i + 1 < n { (i + 1) as u32 } else { NIL }).collect();
+        let mut prev: Vec<u32> =
+            (0..n).map(|i| if i == 0 { NIL } else { (i - 1) as u32 }).collect();
+        let mut alive = vec![true; n];
+
+        // min-heap of (rank, position) candidates, lazily re-validated
+        let mut heap: BinaryHeap<Reverse<(u32, u32)>> = BinaryHeap::new();
+        for i in 0..n - 1 {
+            if let Some(&r) = self.ranks.get(&(token[i], token[i + 1])) {
+                heap.push(Reverse((r, i as u32)));
+            }
+        }
+        while let Some(Reverse((r, iu))) = heap.pop() {
+            let i = iu as usize;
+            let (a, b) = self.merges[r as usize];
+            if !alive[i] || token[i] != a {
+                continue;
+            }
+            let j = next[i];
+            if j == NIL || token[j as usize] != b {
+                continue;
+            }
+            let new_id = 256 + r;
+            let n2 = next[j as usize];
+            token[i] = new_id;
+            alive[j as usize] = false;
+            next[i] = n2;
+            if n2 != NIL {
+                prev[n2 as usize] = iu;
+            }
+            let p = prev[i];
+            if p != NIL {
+                if let Some(&r2) = self.ranks.get(&(token[p as usize], new_id)) {
+                    heap.push(Reverse((r2, p)));
+                }
+            }
+            if n2 != NIL {
+                if let Some(&r2) = self.ranks.get(&(new_id, token[n2 as usize])) {
+                    heap.push(Reverse((r2, iu)));
+                }
+            }
+        }
+        (0..n).filter(|&i| alive[i]).map(|i| token[i]).collect()
+    }
+
+    /// Encode `text` in independent `chunk_bytes` chunks across up to
+    /// `threads` worker threads. Chunk boundaries are hard token breaks,
+    /// so the result equals concatenating `encode` over the chunks and is
+    /// deterministic for a given chunk size regardless of thread count —
+    /// a single-threaded host encodes the same chunks serially rather
+    /// than falling back to a seamless whole-text encode.
+    pub fn encode_parallel(&self, text: &[u8], chunk_bytes: usize, threads: usize) -> Vec<u32> {
+        let chunk_bytes = chunk_bytes.max(1);
+        if text.len() <= chunk_bytes {
+            return self.encode(text);
+        }
+        if threads <= 1 {
+            let mut out = Vec::with_capacity(text.len() / 2);
+            for ch in text.chunks(chunk_bytes) {
+                out.extend(self.encode(ch));
+            }
+            return out;
+        }
+        let chunks: Vec<&[u8]> = text.chunks(chunk_bytes).collect();
+        let next_chunk = std::sync::atomic::AtomicUsize::new(0);
+        let mut results: Vec<Vec<u32>> = vec![Vec::new(); chunks.len()];
+        std::thread::scope(|scope| {
+            let (tx, rx) = std::sync::mpsc::channel::<(usize, Vec<u32>)>();
+            for _ in 0..threads.min(chunks.len()) {
+                let tx = tx.clone();
+                let next_chunk = &next_chunk;
+                let chunks = &chunks;
+                scope.spawn(move || loop {
+                    let i = next_chunk.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if i >= chunks.len() || tx.send((i, self.encode(chunks[i]))).is_err() {
+                        break;
+                    }
+                });
+            }
+            drop(tx);
+            for (i, ids) in rx {
+                results[i] = ids;
+            }
+        });
+        let total = results.iter().map(|r| r.len()).sum();
+        let mut out = Vec::with_capacity(total);
+        for r in &results {
+            out.extend_from_slice(r);
+        }
+        out
     }
 
     pub fn decode(&self, ids: &[u32]) -> Vec<u8> {
@@ -163,6 +353,153 @@ impl Bpe {
 mod tests {
     use super::*;
     use crate::util::rng::Pcg;
+
+    /// The seed's greedy implementations, kept verbatim as the equivalence
+    /// oracle: O(vocab × corpus) trainer, O(n²) encoder. The incremental
+    /// trainer and the rank-heap encoder must be byte-identical to these.
+    mod reference {
+        use std::collections::HashMap;
+
+        pub fn train_merges(text: &[u8], vocab_size: usize) -> Vec<(u32, u32)> {
+            let mut ids: Vec<u32> = text.iter().map(|&b| b as u32).collect();
+            let mut merges: Vec<(u32, u32)> = Vec::new();
+            while 256 + merges.len() < vocab_size {
+                let mut counts: HashMap<(u32, u32), u64> = HashMap::new();
+                for w in ids.windows(2) {
+                    *counts.entry((w[0], w[1])).or_insert(0) += 1;
+                }
+                let best = counts
+                    .iter()
+                    .filter(|(_, &c)| c >= 2)
+                    .max_by_key(|(&pair, &c)| (c, std::cmp::Reverse(pair)));
+                let (&pair, _) = match best {
+                    Some(b) => b,
+                    None => break,
+                };
+                let new_id = (256 + merges.len()) as u32;
+                merges.push(pair);
+                ids = apply(&ids, pair, new_id);
+            }
+            merges
+        }
+
+        pub fn encode(merges: &[(u32, u32)], text: &[u8]) -> Vec<u32> {
+            let ranks: HashMap<(u32, u32), u32> =
+                merges.iter().enumerate().map(|(i, &p)| (p, i as u32)).collect();
+            let mut ids: Vec<u32> = text.iter().map(|&b| b as u32).collect();
+            loop {
+                let mut best: Option<(u32, usize)> = None;
+                for i in 0..ids.len().saturating_sub(1) {
+                    if let Some(&r) = ranks.get(&(ids[i], ids[i + 1])) {
+                        if best.map(|(br, _)| r < br).unwrap_or(true) {
+                            best = Some((r, i));
+                        }
+                    }
+                }
+                let (rank, _) = match best {
+                    Some(b) => b,
+                    None => break,
+                };
+                ids = apply(&ids, merges[rank as usize], 256 + rank);
+            }
+            ids
+        }
+
+        fn apply(ids: &[u32], pair: (u32, u32), new_id: u32) -> Vec<u32> {
+            let mut out = Vec::with_capacity(ids.len());
+            let mut i = 0;
+            while i < ids.len() {
+                if i + 1 < ids.len() && (ids[i], ids[i + 1]) == pair {
+                    out.push(new_id);
+                    i += 2;
+                } else {
+                    out.push(ids[i]);
+                    i += 1;
+                }
+            }
+            out
+        }
+    }
+
+    /// Adversarial corpus shapes: overlap runs (aaaa…), word soup, raw
+    /// random bytes, single-byte runs — rotating per trial.
+    fn random_corpus(rng: &mut Pcg, kind: usize) -> Vec<u8> {
+        match kind % 4 {
+            0 => {
+                let alpha = [b'a', b'a', b'a', b'b'];
+                (0..rng.usize_below(220)).map(|_| alpha[rng.usize_below(4)]).collect()
+            }
+            1 => {
+                let words: [&[u8]; 5] = [b"hello", b"world", b"spam", b"ham", b" "];
+                let mut out = Vec::new();
+                for _ in 0..rng.usize_below(60) {
+                    out.extend_from_slice(words[rng.usize_below(5)]);
+                }
+                out
+            }
+            2 => (0..rng.usize_below(300)).map(|_| rng.below(256) as u8).collect(),
+            _ => vec![b'a' + rng.below(3) as u8; rng.usize_below(64)],
+        }
+    }
+
+    #[test]
+    fn prop_incremental_trainer_matches_reference() {
+        let mut rng = Pcg::seeded(0xB9E);
+        for trial in 0..48 {
+            let text = random_corpus(&mut rng, trial);
+            let vocab = 256 + rng.usize_below(28);
+            let bpe = Bpe::train(&text, vocab).unwrap();
+            let want = reference::train_merges(&text, vocab);
+            assert_eq!(bpe.merges, want, "trial {trial} ({} bytes)", text.len());
+        }
+    }
+
+    #[test]
+    fn prop_heap_encoder_matches_reference() {
+        let mut rng = Pcg::seeded(0xE2C);
+        for trial in 0..32 {
+            let text = random_corpus(&mut rng, trial);
+            let bpe = Bpe::train(&text, 256 + 24).unwrap();
+            let probe: Vec<u8> =
+                (0..rng.usize_below(300)).map(|_| rng.below(256) as u8).collect();
+            for t in [&text[..], &probe[..]] {
+                assert_eq!(
+                    bpe.encode(t),
+                    reference::encode(&bpe.merges, t),
+                    "trial {trial}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn structured_corpus_matches_reference_end_to_end() {
+        // Larger, corpus-like text with many merges: the shape the real
+        // data path exercises.
+        let text = crate::data::CorpusGen::new(5).generate(20_000);
+        let bpe = Bpe::train(text.as_bytes(), 256 + 80).unwrap();
+        let want = reference::train_merges(text.as_bytes(), 256 + 80);
+        assert_eq!(bpe.merges, want);
+        let sample = &text.as_bytes()[..2_000];
+        assert_eq!(bpe.encode(sample), reference::encode(&bpe.merges, sample));
+    }
+
+    #[test]
+    fn parallel_encode_is_chunkwise_serial_and_roundtrips() {
+        let text = b"the quick brown fox jumps over the lazy dog. ".repeat(200);
+        let bpe = Bpe::train(&text, 320).unwrap();
+        let par = bpe.encode_parallel(&text, 1000, 4);
+        let mut want = Vec::new();
+        for ch in text.chunks(1000) {
+            want.extend(bpe.encode(ch));
+        }
+        assert_eq!(par, want);
+        assert_eq!(bpe.decode(&par), text);
+        // chunk >= input degrades to plain serial encode
+        assert_eq!(bpe.encode_parallel(&text, text.len(), 4), bpe.encode(&text));
+        // 1 thread still encodes chunkwise: output is thread-count independent
+        assert_eq!(bpe.encode_parallel(&text, 1000, 1), want);
+    }
 
     #[test]
     fn train_learns_repeats() {
@@ -220,5 +557,14 @@ mod tests {
     #[test]
     fn rejects_small_vocab() {
         assert!(Bpe::train(b"x", 100).is_err());
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        let bpe = Bpe::train(b"", 300).unwrap();
+        assert_eq!(bpe.vocab_size(), 256);
+        assert_eq!(bpe.encode(b""), Vec::<u32>::new());
+        let one = Bpe::train(b"z", 300).unwrap();
+        assert_eq!(one.encode(b"z"), vec![b'z' as u32]);
     }
 }

@@ -2,14 +2,16 @@
 //!
 //! Train/test split by contiguous ranges (no leakage through shuffling);
 //! batches are sampled windows, reshuffled every epoch, deterministic per
-//! seed. Implements the coordinator's `BatchSource`.
+//! seed. Implements the coordinator's `BatchSource` via the in-place
+//! `fill_batch` primitive so the prefetcher can stage rows into a reused
+//! scratch buffer with no per-batch allocation.
 
 use anyhow::{bail, Result};
 
 use crate::coordinator::trainer::BatchSource;
 use crate::util::rng::Pcg;
 
-use super::bpe::Bpe;
+use super::bpe::{Bpe, DEFAULT_ENCODE_CHUNK};
 use super::corpus::CorpusGen;
 
 #[derive(Debug)]
@@ -24,7 +26,9 @@ impl TokenDataset {
     }
 
     /// End-to-end construction: synthesise a corpus, train (or load) BPE,
-    /// encode. `vocab` must match the model's vocab.
+    /// encode. `vocab` must match the model's vocab. Encoding fans out
+    /// across worker threads in fixed-size chunks (thread-count
+    /// independent, see `Bpe::encode_parallel`).
     pub fn build(seed: u64, corpus_bytes: usize, vocab: usize, cache_dir: Option<&str>) -> Result<TokenDataset> {
         let text = CorpusGen::new(seed).generate(corpus_bytes);
         let bpe = match cache_dir {
@@ -44,7 +48,12 @@ impl TokenDataset {
         if bpe.vocab_size() > vocab {
             bail!("bpe produced {} tokens > model vocab {}", bpe.vocab_size(), vocab);
         }
-        let ids: Vec<i32> = bpe.encode(text.as_bytes()).iter().map(|&x| x as i32).collect();
+        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let ids: Vec<i32> = bpe
+            .encode_parallel(text.as_bytes(), DEFAULT_ENCODE_CHUNK, threads)
+            .iter()
+            .map(|&x| x as i32)
+            .collect();
         Ok(TokenDataset { ids, vocab })
     }
 
@@ -72,14 +81,28 @@ pub struct WindowSampler<'a> {
 }
 
 impl<'a> BatchSource for WindowSampler<'a> {
-    fn next_batch(&mut self, b: usize, t: usize) -> Vec<i32> {
-        let mut out = Vec::with_capacity(b * t);
-        let max_start = self.ids.len().saturating_sub(t + 1).max(1);
+    fn fill_batch(&mut self, b: usize, t: usize, out: &mut Vec<i32>) {
+        assert!(!self.ids.is_empty(), "WindowSampler over an empty token stream");
+        out.reserve(b * t);
+        if self.ids.len() < t {
+            // Short stream: wrap windows cyclically instead of slicing out
+            // of bounds (the seed panicked here). Deterministic per seed.
+            for _ in 0..b {
+                let s = self.rng.usize_below(self.ids.len());
+                for k in 0..t {
+                    out.push(self.ids[(s + k) % self.ids.len()]);
+                }
+            }
+            return;
+        }
+        // valid starts for a t-window are 0..=len-t (the seed's len-t-1
+        // bound left the final two starts — and so the stream's last
+        // tokens — unreachable)
+        let max_start = self.ids.len() - t + 1;
         for _ in 0..b {
             let s = self.rng.usize_below(max_start);
             out.extend_from_slice(&self.ids[s..s + t]);
         }
-        out
     }
 }
 
@@ -96,16 +119,18 @@ impl<'a> SequentialWindows<'a> {
 }
 
 impl<'a> BatchSource for SequentialWindows<'a> {
-    fn next_batch(&mut self, b: usize, t: usize) -> Vec<i32> {
-        let mut out = Vec::with_capacity(b * t);
+    fn fill_batch(&mut self, b: usize, t: usize, out: &mut Vec<i32>) {
+        assert!(self.ids.len() >= t, "SequentialWindows: stream shorter than one window");
+        out.reserve(b * t);
         for _ in 0..b {
-            if self.pos + t >= self.ids.len() {
+            // `pos + t == len` is a valid exact-fit final window; only wrap
+            // strictly past the end (the seed's `>=` dropped that window).
+            if self.pos + t > self.ids.len() {
                 self.pos = 0; // wrap
             }
             out.extend_from_slice(&self.ids[self.pos..self.pos + t]);
             self.pos += t;
         }
-        out
     }
 }
 
@@ -149,6 +174,57 @@ mod tests {
     }
 
     #[test]
+    fn fill_batch_appends_and_reuses_capacity() {
+        let ds = TokenDataset::from_ids((0..1000).collect(), 1024);
+        let mut s = ds.sampler(5);
+        let mut buf: Vec<i32> = Vec::new();
+        s.fill_batch(2, 10, &mut buf);
+        assert_eq!(buf.len(), 20);
+        s.fill_batch(2, 10, &mut buf); // append semantics
+        assert_eq!(buf.len(), 40);
+        let cap = buf.capacity();
+        buf.clear();
+        s.fill_batch(2, 10, &mut buf);
+        assert_eq!(buf.len(), 20);
+        assert_eq!(buf.capacity(), cap, "cleared buffer must not reallocate");
+    }
+
+    #[test]
+    fn sampler_short_stream_wraps_instead_of_panicking() {
+        // regression: ids.len() < t used to slice out of bounds
+        let ds = TokenDataset::from_ids((0..10).collect(), 512);
+        let mut s = ds.sampler(3);
+        let batch = s.next_batch(4, 25);
+        assert_eq!(batch.len(), 4 * 25);
+        assert!(batch.iter().all(|&x| (0..10).contains(&x)));
+        // windows stay cyclically contiguous
+        for row in batch.chunks(25) {
+            for w in row.windows(2) {
+                assert_eq!((w[0] + 1) % 10, w[1] % 10);
+            }
+        }
+        // determinism per seed still holds on the wrap path
+        let mut s2 = ds.sampler(3);
+        assert_eq!(s2.next_batch(4, 25), batch);
+    }
+
+    #[test]
+    fn sampler_reaches_final_tokens() {
+        // regression: the seed's max_start excluded the last two window
+        // starts, so the stream's final tokens were never sampled
+        let ds = TokenDataset::from_ids((0..52).collect(), 512);
+        let mut s = ds.sampler(1);
+        let t = 50;
+        let mut saw_last = false;
+        for _ in 0..64 {
+            let batch = s.next_batch(1, t);
+            assert_eq!(batch.len(), t);
+            saw_last |= batch[t - 1] == 51;
+        }
+        assert!(saw_last, "window covering the final token never sampled");
+    }
+
+    #[test]
     fn sequential_windows_cover_stream() {
         let ds = TokenDataset::from_ids((0..1000).collect(), 1024);
         let mut w = SequentialWindows::new(&ds);
@@ -157,6 +233,18 @@ mod tests {
         assert_eq!(&a[100..103], &[100, 101, 102]);
         let b = w.next_batch(2, 100);
         assert_eq!(b[0], 200);
+    }
+
+    #[test]
+    fn sequential_windows_include_exact_fit_final_window() {
+        // regression: with len == 2t the second window [t, 2t) was skipped
+        // by the `>=` wrap condition
+        let ds = TokenDataset::from_ids((0..200).collect(), 1024);
+        let mut w = SequentialWindows::new(&ds);
+        let batch = w.next_batch(3, 100);
+        assert_eq!(&batch[..2], &[0, 1]);
+        assert_eq!(&batch[100..102], &[100, 101], "final exact-fit window dropped");
+        assert_eq!(&batch[200..202], &[0, 1], "third window wraps to the start");
     }
 
     #[test]

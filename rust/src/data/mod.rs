@@ -1,9 +1,12 @@
-//! Data pipeline substrate: BPE tokenizer, synthetic corpus, batching.
+//! Data pipeline substrate: BPE tokenizer, synthetic corpus, batching,
+//! and the prefetching double-buffered batch pipeline.
 
 pub mod bpe;
 pub mod corpus;
 pub mod dataset;
+pub mod prefetch;
 
 pub use bpe::Bpe;
 pub use corpus::CorpusGen;
 pub use dataset::{SequentialWindows, TokenDataset, WindowSampler};
+pub use prefetch::{run_pipeline, BatchShape, BatchStream, PrefetchMode, PrefetchStats};

@@ -1,0 +1,355 @@
+//! Prefetching, double-buffered batch pipeline (§Perf, host-side).
+//!
+//! Between PJRT dispatches the seed trainer built each batch — token
+//! sampling plus the `xla::Literal` staging copy — synchronously, dead
+//! time on the exact loop `bench_train_step` measures. `run_pipeline`
+//! overlaps that work with device execution:
+//!
+//! - a background **producer** thread pulls batches from the wrapped
+//!   `BatchSource` into one reusable scratch `Vec<i32>` (no per-batch
+//!   allocation) and stages each into its `xla::Literal`;
+//! - a bounded queue (`depth` ≥ 1, default 1) plus the batch in flight
+//!   gives classic double buffering: while the consumer runs dispatch k,
+//!   batch k+1 is being built;
+//! - the **consumer** (the train loop) pulls `PreparedBatch`es through a
+//!   `BatchStream`, which records how long it actually stalled — the
+//!   number the perf harness compares against the inline mode.
+//!
+//! `PrefetchMode::Inline` is the measurement twin: same accounting, no
+//! thread — so "prefetch on vs off" is a one-enum A/B in the trainer and
+//! the harness. Batch order is identical in both modes (the producer is
+//! the only caller of the source), so training curves do not depend on
+//! the mode.
+//!
+//! Background mode moves `xla::Literal`s across the producer thread, so
+//! it requires `xla::Literal: Send` (host literals are plain buffers; if
+//! the binding ever drops Send, move the `lit_i32` call from the
+//! producer loop into `BatchStream::next` and ship only the token `Vec`
+//! through the channel).
+
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::trainer::BatchSource;
+use crate::runtime::engine::lit_i32;
+
+/// Shape of one staged dispatch: `reps` stacked [b, t] batches. The
+/// per-step trainer stages rank-2 [b, t] literals; the chunked trainer
+/// stages a whole scan chunk as rank-3 [reps, b, t] — including when the
+/// chunk size is 1, so the literal rank always matches the artifact.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchShape {
+    pub reps: usize,
+    pub b: usize,
+    pub t: usize,
+    /// rank-3 chunked layout (set by `chunked`, even for reps == 1)
+    pub stacked: bool,
+}
+
+impl BatchShape {
+    pub fn per_step(b: usize, t: usize) -> BatchShape {
+        BatchShape { reps: 1, b, t, stacked: false }
+    }
+
+    pub fn chunked(reps: usize, b: usize, t: usize) -> BatchShape {
+        BatchShape { reps, b, t, stacked: true }
+    }
+
+    pub fn volume(&self) -> usize {
+        self.reps * self.b * self.t
+    }
+
+    pub fn dims(&self) -> Vec<usize> {
+        if self.stacked {
+            vec![self.reps, self.b, self.t]
+        } else {
+            vec![self.b, self.t]
+        }
+    }
+}
+
+/// A batch staged and ready to feed PJRT.
+pub struct PreparedBatch {
+    pub lit: xla::Literal,
+    /// host time spent sampling tokens + building the literal
+    pub prep_ns: u64,
+}
+
+/// Pipeline accounting, aggregated over one run.
+#[derive(Debug, Default, Clone)]
+pub struct PrefetchStats {
+    /// batches fully staged by the producer (or built inline)
+    pub batches: u64,
+    /// total producer-side prep time (overlapped with compute when
+    /// prefetching; on the critical path when inline)
+    pub prep_ns: u64,
+    /// total time the consumer stalled waiting for a batch
+    pub wait_ns: u64,
+}
+
+impl PrefetchStats {
+    pub fn prep_ms_per_batch(&self) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        self.prep_ns as f64 / 1e6 / self.batches as f64
+    }
+
+    pub fn wait_ms_per_batch(&self) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        self.wait_ns as f64 / 1e6 / self.batches as f64
+    }
+}
+
+/// How batches reach the train loop.
+#[derive(Clone, Copy, Debug)]
+pub enum PrefetchMode {
+    /// Background producer thread + bounded queue of `depth` batches
+    /// (depth 1 == double buffering).
+    Background { depth: usize },
+    /// Build each batch synchronously on the consumer thread (the seed
+    /// behaviour, kept for A/B measurement).
+    Inline,
+}
+
+enum StreamInner<'a> {
+    Prefetched(Receiver<Result<PreparedBatch>>),
+    Inline { source: &'a mut (dyn BatchSource + Send), shape: BatchShape, buf: Vec<i32>, remaining: u64 },
+}
+
+/// The consumer's view of the pipeline: `next()` yields staged batches
+/// and accounts the stall time either mode imposes on the train loop.
+pub struct BatchStream<'a> {
+    inner: StreamInner<'a>,
+    pub wait_ns: u64,
+    pub received: u64,
+}
+
+impl<'a> BatchStream<'a> {
+    pub fn next(&mut self) -> Result<PreparedBatch> {
+        let t0 = Instant::now();
+        let item = match &mut self.inner {
+            StreamInner::Prefetched(rx) => {
+                let item = rx
+                    .recv()
+                    .map_err(|_| anyhow!("prefetch producer exited before the consumer finished"))?;
+                self.wait_ns += t0.elapsed().as_nanos() as u64;
+                item?
+            }
+            StreamInner::Inline { source, shape, buf, remaining } => {
+                if *remaining == 0 {
+                    bail!("batch budget exhausted (inline pipeline of {} batches)", self.received);
+                }
+                *remaining -= 1;
+                buf.clear(); // capacity retained: the reused scratch
+                for _ in 0..shape.reps {
+                    source.fill_batch(shape.b, shape.t, buf);
+                }
+                let lit = lit_i32(buf, &shape.dims())?;
+                let ns = t0.elapsed().as_nanos() as u64;
+                self.wait_ns += ns;
+                PreparedBatch { lit, prep_ns: ns }
+            }
+        };
+        self.received += 1;
+        Ok(item)
+    }
+}
+
+/// Drive `body` with a stream of `n` staged batches from `source`.
+///
+/// In `Background` mode a scoped producer thread owns the source for the
+/// duration of the call, so the same `&mut` source can be reused (and its
+/// RNG stream continues) across calls — batch order is identical to
+/// `Inline` mode. Caveat: if `body` exits early (error/bail), the
+/// producer has pre-pulled up to `depth + 1` batches past the last one
+/// consumed, so the source's stream position after a *failed* run is
+/// mode-dependent; only completed runs leave the source in the same
+/// state in both modes. Returns `body`'s result plus the accounting.
+pub fn run_pipeline<'src, R>(
+    source: &'src mut (dyn BatchSource + Send),
+    shape: BatchShape,
+    n: u64,
+    mode: PrefetchMode,
+    body: impl FnOnce(&mut BatchStream<'src>) -> Result<R>,
+) -> Result<(R, PrefetchStats)> {
+    match mode {
+        PrefetchMode::Inline => {
+            let mut stream = BatchStream {
+                inner: StreamInner::Inline {
+                    source,
+                    shape,
+                    buf: Vec::with_capacity(shape.volume()),
+                    remaining: n,
+                },
+                wait_ns: 0,
+                received: 0,
+            };
+            let out = body(&mut stream)?;
+            let stats = PrefetchStats {
+                batches: stream.received,
+                // inline prep *is* the consumer stall
+                prep_ns: stream.wait_ns,
+                wait_ns: stream.wait_ns,
+            };
+            Ok((out, stats))
+        }
+        PrefetchMode::Background { depth } => {
+            let (tx, rx) = sync_channel::<Result<PreparedBatch>>(depth.max(1));
+            std::thread::scope(|scope| {
+                let producer = scope.spawn(move || -> (u64, u64) {
+                    let mut buf: Vec<i32> = Vec::with_capacity(shape.volume());
+                    let (mut prep_ns, mut produced) = (0u64, 0u64);
+                    for _ in 0..n {
+                        let t0 = Instant::now();
+                        buf.clear(); // capacity retained: the reused scratch
+                        for _ in 0..shape.reps {
+                            source.fill_batch(shape.b, shape.t, &mut buf);
+                        }
+                        let item = lit_i32(&buf, &shape.dims()).map(|lit| PreparedBatch {
+                            lit,
+                            prep_ns: t0.elapsed().as_nanos() as u64,
+                        });
+                        prep_ns += t0.elapsed().as_nanos() as u64;
+                        let failed = item.is_err();
+                        if tx.send(item).is_err() || failed {
+                            break; // consumer hung up, or literal build failed
+                        }
+                        produced += 1;
+                    }
+                    (prep_ns, produced)
+                });
+                let mut stream =
+                    BatchStream { inner: StreamInner::Prefetched(rx), wait_ns: 0, received: 0 };
+                let out = body(&mut stream);
+                let wait_ns = stream.wait_ns;
+                drop(stream); // closes the queue so a blocked producer unblocks
+                let (prep_ns, produced) = producer
+                    .join()
+                    .map_err(|_| anyhow!("prefetch producer thread panicked"))?;
+                Ok((out?, PrefetchStats { batches: produced, prep_ns, wait_ns }))
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn counting_source(seed: u64) -> impl FnMut(usize, usize) -> Vec<i32> + Send {
+        let mut rng = Pcg::seeded(seed);
+        move |b, t| (0..b * t).map(|_| rng.below(97) as i32).collect()
+    }
+
+    fn drain(mode: PrefetchMode, shape: BatchShape, n: u64) -> (Vec<Vec<i32>>, PrefetchStats) {
+        let mut src = counting_source(42);
+        let (rows, stats) = run_pipeline(&mut src, shape, n, mode, |stream| {
+            let mut rows = Vec::new();
+            for _ in 0..n {
+                let pb = stream.next()?;
+                assert_eq!(pb.lit.element_count(), shape.volume());
+                rows.push(pb.lit.to_vec::<i32>()?);
+            }
+            Ok(rows)
+        })
+        .unwrap();
+        (rows, stats)
+    }
+
+    #[test]
+    fn prefetched_and_inline_yield_identical_batches() {
+        let shape = BatchShape::per_step(3, 17);
+        let (a, sa) = drain(PrefetchMode::Inline, shape, 6);
+        let (b, sb) = drain(PrefetchMode::Background { depth: 1 }, shape, 6);
+        assert_eq!(a, b);
+        assert_eq!(sa.batches, 6);
+        assert_eq!(sb.batches, 6);
+    }
+
+    #[test]
+    fn chunked_shape_stacks_reps() {
+        let shape = BatchShape::chunked(4, 2, 9);
+        assert_eq!(shape.dims(), vec![4, 2, 9]);
+        // a chunk of 1 still stages rank-3 — the train_chunk artifact's shape
+        assert_eq!(BatchShape::chunked(1, 2, 9).dims(), vec![1, 2, 9]);
+        assert_eq!(BatchShape::per_step(2, 9).dims(), vec![2, 9]);
+        let (rows, _) = drain(PrefetchMode::Background { depth: 2 }, shape, 3);
+        assert_eq!(rows.len(), 3);
+        assert!(rows.iter().all(|r| r.len() == 4 * 2 * 9));
+    }
+
+    #[test]
+    fn early_consumer_exit_does_not_deadlock() {
+        let mut src = counting_source(7);
+        // consume 2 of 100: dropping the stream must unblock the producer
+        let (got, stats) =
+            run_pipeline(&mut src, BatchShape::per_step(2, 8), 100, PrefetchMode::Background { depth: 1 }, |stream| {
+                stream.next()?;
+                stream.next()?;
+                Ok(2u64)
+            })
+            .unwrap();
+        assert_eq!(got, 2);
+        assert!(stats.batches >= 2);
+    }
+
+    #[test]
+    fn body_error_propagates() {
+        let mut src = counting_source(9);
+        let r = run_pipeline(
+            &mut src,
+            BatchShape::per_step(1, 4),
+            10,
+            PrefetchMode::Background { depth: 1 },
+            |stream| {
+                stream.next()?;
+                anyhow::bail!("consumer failure")
+            },
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn inline_budget_is_enforced() {
+        let mut src = counting_source(11);
+        let r = run_pipeline(&mut src, BatchShape::per_step(1, 4), 1, PrefetchMode::Inline, |stream| {
+            stream.next()?;
+            stream.next() // over budget
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn source_rng_stream_continues_across_runs() {
+        // two pipeline runs over one source must consume the stream
+        // exactly like direct next_batch calls (mode must not fork RNGs)
+        let mut direct = counting_source(5);
+        let want: Vec<Vec<i32>> = (0..4).map(|_| direct(2, 6)).collect();
+        let mut src = counting_source(5);
+        let mut got = Vec::new();
+        for chunk in want.chunks(2) {
+            let (rows, _) = run_pipeline(
+                &mut src,
+                BatchShape::per_step(2, 6),
+                chunk.len() as u64,
+                PrefetchMode::Background { depth: 1 },
+                |stream| {
+                    let mut rows = Vec::new();
+                    for _ in 0..chunk.len() {
+                        rows.push(stream.next()?.lit.to_vec::<i32>()?);
+                    }
+                    Ok(rows)
+                },
+            )
+            .unwrap();
+            got.extend(rows);
+        }
+        assert_eq!(got, want);
+    }
+}

@@ -53,6 +53,7 @@ pub fn run_variant(
         use_chunk: rc.use_chunk && variant.programs.contains_key("train_chunk"),
         checkpoint: None,
         eval_every: 0,
+        prefetch: rc.prefetch,
     };
     let mut sampler = train_ds.sampler(rc.seed ^ 0x7ea1);
     let (state, mut metrics) = trainer.train(engine, &mut sampler, &opts)?;

@@ -10,6 +10,27 @@
 //! Python never runs on the training hot path: `make artifacts` lowers the
 //! JAX programs to HLO text once; the Rust binary loads and executes them
 //! via PJRT (xla crate).
+//!
+//! # Host-side perf model
+//!
+//! The paper's headline claim is wall-clock superiority, so the Rust
+//! coordinator must never be the bottleneck around the AOT-compiled PJRT
+//! programs. Three structures keep the host off the critical path (see
+//! PERF.md for the measurement story):
+//!
+//! - **Incremental tokenizer** (`data::bpe`): training updates only the
+//!   pair counts adjacent to each applied merge (pair heap + linked token
+//!   list) instead of recounting the corpus per merge; encoding is the
+//!   O(n log n) rank-heap algorithm, fanned out across worker threads in
+//!   fixed-size chunks for corpus-scale encodes. Both are property-tested
+//!   byte-identical to the greedy reference.
+//! - **Prefetching data pipeline** (`data::prefetch`): a background
+//!   producer thread samples the next batch and stages its `xla::Literal`
+//!   into a reusable scratch buffer while the current dispatch runs
+//!   (double-buffered); the train loop's only host cost is a queue pop.
+//! - **Perf harness** (`perf`, `mosa perf`): times tokenizer scaling
+//!   (S vs 4S), batch prep, prefetch on/off overlap, and real steps/sec,
+//!   emitting `BENCH_pipeline.json` so regressions are caught per-PR.
 
 pub mod util;
 pub mod config;
@@ -20,3 +41,4 @@ pub mod coordinator;
 pub mod kvcache;
 pub mod evalharness;
 pub mod experiments;
+pub mod perf;

@@ -6,6 +6,7 @@
 //!   flops        regenerate the paper's analytic tables (Table 4 / 5)
 //!   kv           KV-cache accounting for a variant (Table 2 column)
 //!   data         inspect the data pipeline (corpus/BPE/batches)
+//!   perf         host-side perf harness -> BENCH_pipeline.json
 //!   downstream   run the synthetic zero-shot suite on a checkpoint
 //!   list         list manifest variants
 //!
@@ -45,6 +46,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         "flops" => cmd_flops(args),
         "kv" => cmd_kv(args),
         "data" => cmd_data(args),
+        "perf" => cmd_perf(args),
         "downstream" => cmd_downstream(args),
         "list" => cmd_list(args),
         "report" => cmd_report(args),
@@ -61,11 +63,12 @@ fn print_help() {
         "mosa — Mixture of Sparse Attention coordinator\n\n\
          usage: mosa <cmd> [--flags]\n\n\
          cmds:\n\
-         \x20 train      --variant <name> [--steps N] [--lr X] [--chunk] [--ckpt path]\n\
+         \x20 train      --variant <name> [--steps N] [--lr X] [--chunk] [--no-prefetch] [--ckpt path]\n\
          \x20 eval       --variant <name> --ckpt <path> [--eval-batches N]\n\
          \x20 flops      [--table4] [--table5]\n\
          \x20 kv         --variant <name> [--ctx T]\n\
          \x20 data       [--corpus-bytes N] [--vocab V]\n\
+         \x20 perf       [--smoke] [--corpus-bytes N] [--threads N] [--out path]\n\
          \x20 downstream --variant <name> --ckpt <path> [--n 50]\n\
          \x20 list       [--artifacts dir]\n"
     );
@@ -162,6 +165,18 @@ fn cmd_data(args: &Args) -> Result<()> {
         vocab,
         rc.corpus_bytes as f64 / ds.ids.len() as f64
     );
+    Ok(())
+}
+
+fn cmd_perf(args: &Args) -> Result<()> {
+    let mut cfg =
+        if args.has("smoke") { mosa::perf::PerfConfig::smoke() } else { mosa::perf::PerfConfig::default() };
+    cfg.corpus_bytes = args.get_usize("corpus-bytes", cfg.corpus_bytes);
+    cfg.vocab = args.get_usize("vocab", cfg.vocab);
+    cfg.threads = args.get_usize("threads", cfg.threads);
+    cfg.out_path = args.get_or("out", &cfg.out_path);
+    cfg.artifacts_dir = args.get_or("artifacts", &cfg.artifacts_dir);
+    mosa::perf::run(&cfg)?;
     Ok(())
 }
 

@@ -90,6 +90,19 @@ impl Engine {
         exe.execute::<L>(inputs).context("PJRT execute")
     }
 
+    /// `run` plus wall-clock accounting: returns the outputs and the
+    /// nanoseconds spent inside PJRT execute + result fetch. The trainer
+    /// uses this to note cumulative device time (`execute_ms_total`)
+    /// separately from host-side batch prep/stall in every run's metrics.
+    pub fn run_timed<L: std::borrow::Borrow<xla::Literal>>(
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[L],
+    ) -> Result<(Vec<xla::Literal>, u64)> {
+        let t0 = Instant::now();
+        let outs = Self::run(exe, inputs)?;
+        Ok((outs, t0.elapsed().as_nanos() as u64))
+    }
+
     pub fn cached_programs(&self) -> usize {
         self.cache.len()
     }

@@ -29,6 +29,7 @@ fn opts(steps: u64) -> TrainOptions {
         use_chunk: false,
         checkpoint: None,
         eval_every: 0,
+        prefetch: true,
     }
 }
 
@@ -131,6 +132,27 @@ fn chunked_and_per_step_training_agree() {
         );
     }
     let _ = &mut o1;
+}
+
+#[test]
+fn prefetched_and_inline_training_agree() {
+    // the prefetcher must not change the data stream or the math: same
+    // source seed => identical loss curves with prefetch on and off
+    let m = manifest();
+    let v = m.variant("micro_dense").unwrap();
+    let mut engine = Engine::cpu().unwrap();
+    let trainer = Trainer::new(&m, v);
+    let mut o_inline = opts(6);
+    o_inline.prefetch = false;
+    let o_prefetch = opts(6);
+    let mut s1 = rand_source(256, 21);
+    let mut s2 = rand_source(256, 21); // same stream
+    let (_, m1) = trainer.train(&mut engine, &mut s1, &o_inline).unwrap();
+    let (_, m2) = trainer.train(&mut engine, &mut s2, &o_prefetch).unwrap();
+    assert_eq!(m1.records.len(), m2.records.len());
+    for (a, b) in m1.records.iter().zip(&m2.records) {
+        assert_eq!(a.loss, b.loss, "step {}: inline vs prefetched drift", a.step);
+    }
 }
 
 #[test]
