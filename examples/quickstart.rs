@@ -45,6 +45,7 @@ fn main() -> Result<()> {
         checkpoint: None,
         eval_every: 0,
         prefetch: true, // batches + literals staged on a background thread
+        device_resident: true, // train state stays on device between steps
     };
     let mut sampler = train_ds.sampler(7);
     let (state, metrics) = trainer.train(&mut engine, &mut sampler, &opts)?;

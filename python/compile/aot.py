@@ -28,15 +28,22 @@ import jax
 import jax.numpy as jnp
 from jax._src.lib import xla_client as xc
 
+from . import decode as dec
 from . import flops, variants
 from .model import ModelConfig
 from .train import make_init, make_score, make_train_chunk, make_train_step
 
 
-def to_hlo_text(lowered) -> str:
+def to_hlo_text(lowered, return_tuple=False) -> str:
+    """Lower to HLO text. ``return_tuple=False`` leaves the multi-output
+    root as a plain tuple, which PJRT's untuple_result unpacks into one
+    buffer per leaf — the property the device-resident train/decode paths
+    need (each leaf can be fed back without a host round-trip). Programs
+    record ``"untupled": true`` in the manifest so the Rust engine knows
+    which convention an artifact was lowered with."""
     mlir_mod = lowered.compiler_ir("stablehlo")
     comp = xc._xla.mlir.mlir_module_to_xla_computation(
-        str(mlir_mod), use_tuple_args=False, return_tuple=True
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple
     )
     return comp.as_hlo_text()
 
@@ -64,12 +71,16 @@ def _init_spec(section: str, name: str) -> str:
     return "normal:0.02"
 
 
+def _path_name(path) -> str:
+    name = "".join(str(p) for p in path).replace("['", ".").replace("']", "")
+    return name.lstrip(".")
+
+
 def _leaf_entries(tree, section):
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
     out = []
     for path, leaf in flat:
-        name = "".join(str(p) for p in path).replace("['", ".").replace("']", "")
-        name = name.lstrip(".")
+        name = _path_name(path)
         out.append(
             {
                 "path": name,
@@ -78,6 +89,20 @@ def _leaf_entries(tree, section):
                 "init": _init_spec(section, name),
             }
         )
+    return out
+
+
+def _cache_entries(cfg: ModelConfig, batch: int, capacity: int):
+    """Manifest ``cache`` section: the flat KV-cache leaf layout of one
+    (batch, capacity) decode-program family, with each leaf tagged as
+    payload (``kv``) or bookkeeping (``meta``) plus its init rule."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(dec.cache_struct(cfg, batch, capacity))
+    out = []
+    for path, leaf in flat:
+        name = _path_name(path)
+        e = {"path": name, "shape": list(leaf.shape), "dtype": _dt(leaf)}
+        e.update(dec.leaf_meta(name))
+        out.append(e)
     return out
 
 
@@ -112,6 +137,7 @@ def lower_variant(v: variants.Variant, outdir: str) -> dict:
         with open(os.path.join(outdir, fname), "w") as f:
             f.write(text)
         return fname
+
 
     # "init" is host-side (see _init_spec); an HLO init program can still
     # be emitted for cross-checking with --with-init-hlo.
@@ -180,6 +206,64 @@ def lower_variant(v: variants.Variant, outdir: str) -> dict:
             "extra_inputs": [{"name": "tokens", "shape": [1, st + 1], "dtype": "i32"}],
             "extra_outputs": [{"name": "logprobs", "shape": [1, st], "dtype": "f32"}],
         }
+
+    if "decode" in v.programs and v.decode is not None:
+        dcap = v.decode.capacity
+        assert dcap >= t, f"{v.name}: decode capacity {dcap} < prompt length {t}"
+        vocab = cfg.vocab
+
+        def emit_step(pname, bb, cc):
+            step = dec.make_decode_step(cfg, cc, bb)
+            cstruct = dec.cache_struct(cfg, bb, cc)
+            fname = emit(
+                pname, step,
+                [params_s, state_s, _spec((bb,), jnp.int32), _spec((bb,), jnp.int32),
+                 _spec((bb,), jnp.int32), cstruct],
+            )
+            progs[pname] = {
+                "file": fname,
+                "batch": bb,
+                "capacity": cc,
+                "extra_inputs": [
+                    {"name": "token", "shape": [bb], "dtype": "i32"},
+                    {"name": "pos", "shape": [bb], "dtype": "i32"},
+                    {"name": "reset", "shape": [bb], "dtype": "i32"},
+                ],
+                "extra_outputs": [{"name": "logits", "shape": [bb, vocab], "dtype": "f32"}],
+                "cache": _cache_entries(cfg, bb, cc),
+            }
+
+        prefill = dec.make_prefill(cfg, dcap, b)
+        fname = emit(
+            "prefill", prefill,
+            [params_s, state_s, _spec((b, t), jnp.int32), _spec((b,), jnp.int32)],
+        )
+        progs["prefill"] = {
+            "file": fname,
+            "batch": b,
+            "capacity": dcap,
+            "prompt_len": t,
+            "extra_inputs": [
+                {"name": "tokens", "shape": [b, t], "dtype": "i32"},
+                {"name": "plen", "shape": [b], "dtype": "i32"},
+            ],
+            "extra_outputs": [
+                {"name": "logprobs", "shape": [b, t - 1], "dtype": "f32"},
+                {"name": "last_logits", "shape": [b, vocab], "dtype": "f32"},
+            ],
+            "cache": _cache_entries(cfg, b, dcap),
+        }
+        emit_step("decode_step", b, dcap)
+        for bb in v.decode.extra_batches:
+            emit_step(f"decode_step_b{bb}", bb, dcap)
+        for cc in v.decode.extra_capacities:
+            emit_step(f"decode_step_c{cc}", b, cc)
+
+    for prog in progs.values():
+        # everything in this generation is lowered with return_tuple=False
+        # (see to_hlo_text); the flag tells the Rust engine which output
+        # convention to expect, keeping old tuple-style artifacts loadable.
+        prog["untupled"] = True
 
     fwd_flops = flops.model_forward_flops(
         cfg.n_layers, cfg.d_model, cfg.d_head, cfg.d_ff, cfg.seq_len,

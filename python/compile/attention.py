@@ -130,8 +130,11 @@ def _proj(x, w):
     return jnp.einsum("bnkh,nhd->bnkd", x, w)
 
 
-def _dense_heads(p, x, spec: AttnSpec):
-    """Dense (or, with window > 0, local sliding-window) attention heads."""
+def _dense_heads(p, x, spec: AttnSpec, return_cache=False):
+    """Dense (or, with window > 0, local sliding-window) attention heads.
+
+    With ``return_cache`` also returns the per-head roped keys and values
+    ([B,n,T,d]) — the prefill program's KV-cache extraction (decode.py)."""
     b, t, h = x.shape
     n = spec.n_dense
     q = _proj(x, p["wq"])  # [B,n,T,d]
@@ -150,7 +153,10 @@ def _dense_heads(p, x, spec: AttnSpec):
         None,
         spec.window,
     ).reshape(b, n, t, d)
-    return jnp.einsum("bntd,ndh->bth", att, p["wo"])
+    y = jnp.einsum("bntd,ndh->bth", att, p["wo"])
+    if return_cache:
+        return y, {"k": k, "v": v}
+    return y
 
 
 def _gather_tokens(x, idx):
@@ -175,8 +181,14 @@ def _scatter_heads(y_heads, idx, t):
     return out.at[jnp.broadcast_to(bidx, idx.shape), idx].add(y_heads)
 
 
-def _mosa_heads(p, x, spec: AttnSpec):
-    """MoSA: expert-choice routed sparse heads (paper Sec 2.2)."""
+def _mosa_heads(p, x, spec: AttnSpec, sel_mask=None, return_cache=False):
+    """MoSA: expert-choice routed sparse heads (paper Sec 2.2).
+
+    ``sel_mask`` [B,T] bool restricts the expert choice to a valid prompt
+    prefix (masked positions get priority -1, below every sigmoid score);
+    with an all-true mask the computation is identical to the unmasked
+    path. ``return_cache`` also returns the selection (idx, priorities)
+    and the selected roped keys / values for the prefill cache."""
     b, t, h = x.shape
     n, d, ksel = spec.n_sparse, spec.d_head, spec.k_sel
     r = jax.nn.sigmoid(jnp.einsum("bth,nh->bnt", x, p["wr"]))  # [B,n,T]
@@ -185,9 +197,12 @@ def _mosa_heads(p, x, spec: AttnSpec):
         # force token 0 into every head's selection (attention-sink trick,
         # Sec 3.2); sigma < 1 < 2 so a score of 2 always wins top-k.
         sel = sel.at[:, :, 0].set(2.0)
+    if sel_mask is not None:
+        sel = jnp.where(sel_mask[:, None, :], sel, -1.0)
     _, idx = top_k_desc(sel, ksel)  # [B,n,K] indices into T
     idx = jnp.sort(idx, axis=-1).astype(jnp.int32)
     rsel = jnp.take_along_axis(r, idx, axis=-1)  # true router scores
+    prisel = jnp.take_along_axis(sel, idx, axis=-1)  # eviction priorities
     xs = _gather_tokens(x, idx)  # [B,n,K,h]
     q = _proj(xs, p["wq"])
     k = _proj(xs, p["wk"])
@@ -207,14 +222,18 @@ def _mosa_heads(p, x, spec: AttnSpec):
     ).reshape(b, n, ksel, d)
     att = att * rsel[..., None]  # router gradient path (diag(r) A)
     y = jnp.einsum("bnkd,ndh->bnkh", att, p["wo"])
-    return _scatter_heads(y, idx, t)
+    out = _scatter_heads(y, idx, t)
+    if return_cache:
+        return out, {"idx": idx, "pri": prisel, "k": k, "v": v}
+    return out
 
 
-def _fixed_heads(p, x, spec: AttnSpec):
+def _fixed_heads(p, x, spec: AttnSpec, return_cache=False):
     """Fixed sparse attention: the static stride-rho token subset.
 
     Special case of MoSA with I = [0, rho, 2rho, ...] and r = 1 (paper
-    Sec 3.1)."""
+    Sec 3.1). ``return_cache`` also returns the grid indices and the
+    selected roped keys / values (prefill cache extraction)."""
     b, t, h = x.shape
     n, d, ksel = spec.n_sparse, spec.d_head, spec.k_sel
     rho = spec.rho
@@ -236,10 +255,13 @@ def _fixed_heads(p, x, spec: AttnSpec):
         0,
     ).reshape(b, n, ksel, d)
     y = jnp.einsum("bnkd,ndh->bnkh", att, p["wo"])
-    return _scatter_heads(y, idx, t)
+    out = _scatter_heads(y, idx, t)
+    if return_cache:
+        return out, {"idx": idx, "k": k, "v": v}
+    return out
 
 
-def _routing_heads(p, x, state, spec: AttnSpec, ema_decay=0.999):
+def _routing_heads(p, x, state, spec: AttnSpec, ema_decay=0.999, return_cache=False):
     """Routing-Transformer attention head group (paper Sec 3.1).
 
     Shared Q=K projection (wq); keys and centroids L2-normalised; each of
@@ -285,6 +307,11 @@ def _routing_heads(p, x, state, spec: AttnSpec, ema_decay=0.999):
     sel_keys = take(kqn)  # [B,n,rho,K,d]
     mean_keys = jnp.mean(sel_keys, axis=(0, 3))  # [n,rho,d]
     new_mu = ema_decay * mun + (1.0 - ema_decay) * jax.lax.stop_gradient(mean_keys)
+    if return_cache:
+        # serving caches the *unroped* shared-QK vectors (rope is recomputed
+        # from cached positions at decode) plus the values — 2 vectors/token,
+        # matching the kvcache accounting for routing heads.
+        return out, {"centroids": new_mu}, {"kq": kq, "v": v}
     return out, {"centroids": new_mu}
 
 

@@ -1,0 +1,421 @@
+"""L2: autoregressive serving programs — ``prefill`` and ``decode_step``.
+
+The training programs process a whole [B, T] window per dispatch; serving
+needs the other shape: a prompt processed once (``prefill``) and then one
+token per dispatch (``decode_step``) against a device-resident KV-cache.
+This module lowers cache-aware variants of every head kind:
+
+- dense heads   append one (K, V) pair per token; cache slot = position.
+- local heads   keep a ring of ``window`` pairs; cache slot = pos % window.
+- MoSA heads    store only the k_sel pairs of their *selected* tokens plus
+                router state (selection priorities + original positions).
+                A new token enters the cache iff its router score beats the
+                lowest cached priority, evicting that slot. Because a token
+                outside top-k(prefix_t) can never be inside top-k(prefix_{t+1}),
+                this streaming rule reproduces expert-choice top-k over the
+                generated prefix *exactly*; it differs from the training
+                program only in that training selects over the full window
+                (expert-choice routing is not causal — the standard caveat).
+                With include_first the attention-sink token keeps priority
+                2.0 > sigma(.), so it is never evicted, matching training.
+- fixed heads   the static stride-rho grid: position p enters slot p/rho
+                iff p % rho == 0 and the grid slot exists. Fully causal, so
+                decode is exact w.r.t. the training program.
+- routing heads store all (shared-QK, V) pairs; at decode each new token
+                is assigned to its nearest centroid and attends over cached
+                tokens with the same assignment (the Routing Transformer's
+                own inference-time approximation of per-cluster top-k).
+
+Cache layout (per layer; flattened in jax.tree_util canonical order and
+recorded in the manifest's per-program ``cache`` section):
+
+    dense_k/dense_v [B, n, S, d]   dense_pos [B, n, S] i32
+    mosa_k/mosa_v   [B, n, K, d]   mosa_pos  [B, n, K] i32  mosa_pri [B, n, K] f32
+    fixed_k/fixed_v [B, n, K, d]   fixed_pos [B, n, K] i32
+    routing_qk/routing_v [B, n, C, d]  routing_pos [B, n, C] i32
+
+``*_k`` / ``*_v`` / ``*_qk`` leaves are the KV payload — their bytes are
+exactly ``kvcache::kv_bytes_total`` on the Rust side; ``*_pos`` / ``*_pri``
+are bookkeeping metadata. Empty slots carry ``POS_SENTINEL`` so the
+position-aware causal mask (qpos >= kpos) hides them with no extra mask
+input; MoSA priorities use -1 (< sigma(.)) so empty slots fill first.
+
+Continuous batching needs per-slot lifecycle control, so ``decode_step``
+takes per-slot ``pos`` counters and a ``reset`` flag that invalidates a
+slot's cache in-graph before the token is processed — admitting a new
+sequence into a used slot never round-trips the cache through the host.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (
+    AttnSpec,
+    _dense_heads,
+    _fixed_heads,
+    _mosa_heads,
+    _routing_heads,
+)
+from .kernels.ref import ref_rope
+from .model import ModelConfig, _layernorm
+
+# Empty-cache-slot position: larger than any real position, so the causal
+# mask qpos >= kpos can never select an empty slot. Mirrored in Rust
+# (decode::POS_SENTINEL); keep both in sync.
+POS_SENTINEL = 1 << 30
+
+
+# ---------------------------------------------------------------------------
+# cache layout
+# ---------------------------------------------------------------------------
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, capacity: int) -> dict:
+    """One layer's cache pytree as ShapeDtypeStructs (see module doc)."""
+    d = cfg.d_head
+    leaf = {}
+    if cfg.n_dense > 0:
+        n = cfg.n_dense
+        s = min(cfg.window, capacity) if cfg.window > 0 else capacity
+        leaf["dense_k"] = jax.ShapeDtypeStruct((batch, n, s, d), jnp.float32)
+        leaf["dense_v"] = jax.ShapeDtypeStruct((batch, n, s, d), jnp.float32)
+        leaf["dense_pos"] = jax.ShapeDtypeStruct((batch, n, s), jnp.int32)
+    if cfg.n_sparse > 0 and cfg.sparse_kind in ("mosa", "fixed"):
+        n, k = cfg.n_sparse, cfg.k_sel
+        pre = cfg.sparse_kind
+        leaf[f"{pre}_k"] = jax.ShapeDtypeStruct((batch, n, k, d), jnp.float32)
+        leaf[f"{pre}_v"] = jax.ShapeDtypeStruct((batch, n, k, d), jnp.float32)
+        leaf[f"{pre}_pos"] = jax.ShapeDtypeStruct((batch, n, k), jnp.int32)
+        if pre == "mosa":
+            leaf["mosa_pri"] = jax.ShapeDtypeStruct((batch, n, k), jnp.float32)
+    if cfg.n_sparse > 0 and cfg.sparse_kind == "routing":
+        n = cfg.n_sparse
+        leaf["routing_qk"] = jax.ShapeDtypeStruct((batch, n, capacity, d), jnp.float32)
+        leaf["routing_v"] = jax.ShapeDtypeStruct((batch, n, capacity, d), jnp.float32)
+        leaf["routing_pos"] = jax.ShapeDtypeStruct((batch, n, capacity), jnp.int32)
+    return leaf
+
+
+def cache_struct(cfg: ModelConfig, batch: int, capacity: int) -> dict:
+    return {"layers": [cache_shapes(cfg, batch, capacity) for _ in range(cfg.n_layers)]}
+
+
+def leaf_meta(name: str) -> dict:
+    """(kind, init) classification of a cache leaf by its name."""
+    if name.endswith("_pos"):
+        return {"kind": "meta", "init": "sentinel"}
+    if name.endswith("_pri"):
+        return {"kind": "meta", "init": "neg"}
+    return {"kind": "kv", "init": "zeros"}
+
+
+# ---------------------------------------------------------------------------
+# prefill: whole-prompt forward + cache extraction
+# ---------------------------------------------------------------------------
+
+
+def _pad_slots(x, target, fill=0.0):
+    """Pad cache axis 2 of [B, n, S0, ...] up to `target` slots."""
+    s0 = x.shape[2]
+    if s0 == target:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[2] = (0, target - s0)
+    return jnp.pad(x, pad, constant_values=fill)
+
+
+def _prefill_attention(p, lst, x, spec: AttnSpec, valid, plen, capacity):
+    """Training-path attention with cache extraction.
+
+    x [B,P,h]; valid [B,P] bool (position < plen); returns (y, cache dict).
+    The y path calls the *training* head functions, so prefill logits match
+    the score program bit-for-bit (MoSA's selection mask is the identity
+    whenever plen == P).
+    """
+    b, t, _ = x.shape
+    y = jnp.zeros_like(x)
+    cache = {}
+    pos_t = jnp.arange(t, dtype=jnp.int32)
+    if spec.n_dense > 0:
+        yd, c = _dense_heads(p["dense"], x, spec, return_cache=True)
+        y = y + yd
+        pos = jnp.where(valid, pos_t[None, :], POS_SENTINEL)  # [B,P]
+        pos = jnp.broadcast_to(pos[:, None, :], (b, spec.n_dense, t))
+        if spec.window > 0:
+            w = spec.window
+            s = jnp.arange(w, dtype=jnp.int32)
+            # latest position congruent to s (mod w) below plen, per batch
+            j = s[None, :] + w * ((plen[:, None] - 1 - s[None, :]) // w)  # [B,w]
+            ok = s[None, :] < plen[:, None]
+            jc = jnp.clip(j, 0, t - 1)[:, None, :]  # [B,1,w]
+            take = lambda z: jnp.take_along_axis(z, jc[..., None], axis=2)
+            cache["dense_k"] = take(c["k"])
+            cache["dense_v"] = take(c["v"])
+            ring_pos = jnp.where(ok, j, POS_SENTINEL)
+            cache["dense_pos"] = jnp.broadcast_to(ring_pos[:, None, :], (b, spec.n_dense, w))
+        else:
+            cache["dense_k"] = _pad_slots(c["k"], capacity)
+            cache["dense_v"] = _pad_slots(c["v"], capacity)
+            cache["dense_pos"] = _pad_slots(pos, capacity, POS_SENTINEL)
+    if spec.n_sparse > 0 and spec.sparse_kind == "mosa":
+        ym, c = _mosa_heads(p["sparse"], x, spec, sel_mask=valid, return_cache=True)
+        y = y + ym
+        ok = c["pri"] >= 0.0  # masked prompt slots carry priority -1
+        cache["mosa_k"] = c["k"]
+        cache["mosa_v"] = c["v"]
+        cache["mosa_pos"] = jnp.where(ok, c["idx"], POS_SENTINEL)
+        cache["mosa_pri"] = c["pri"]
+    if spec.n_sparse > 0 and spec.sparse_kind == "fixed":
+        yf, c = _fixed_heads(p["sparse"], x, spec, return_cache=True)
+        y = y + yf
+        ok = c["idx"] < plen[:, None, None]
+        cache["fixed_k"] = c["k"]
+        cache["fixed_v"] = c["v"]
+        cache["fixed_pos"] = jnp.where(ok, c["idx"], POS_SENTINEL)
+    if spec.n_sparse > 0 and spec.sparse_kind == "routing":
+        yr, _, c = _routing_heads(p["sparse"], x, lst, spec, return_cache=True)
+        y = y + yr
+        pos = jnp.where(valid, pos_t[None, :], POS_SENTINEL)
+        pos = jnp.broadcast_to(pos[:, None, :], (b, spec.n_sparse, t))
+        cache["routing_qk"] = _pad_slots(c["kq"], capacity)
+        cache["routing_v"] = _pad_slots(c["v"], capacity)
+        cache["routing_pos"] = _pad_slots(pos, capacity, POS_SENTINEL)
+    return y, cache
+
+
+def make_prefill(cfg: ModelConfig, capacity: int, batch: int):
+    """(params, state, tokens [B,P] i32, plen [B] i32) ->
+    (logprobs [B,P-1], last_logits [B,vocab], caches).
+
+    P = cfg.seq_len. ``logprobs`` follows the score program's convention
+    (log p(tokens[:,i+1] | forward) from the P-token forward), so with
+    plen == P it equals ``score``'s first P-1 columns exactly. Positions
+    >= plen produce garbage logits (masked out of every cache) — callers
+    read only the valid prefix. plen must be >= 1 per sequence.
+    """
+    spec = cfg.attn_spec()
+    p_len = cfg.seq_len
+
+    def prefill(params, state, tokens, plen):
+        b = tokens.shape[0]
+        valid = jnp.arange(p_len, dtype=jnp.int32)[None, :] < plen[:, None]
+        x = params["emb"][tokens]
+        caches = []
+        for lp, lst in zip(params["layers"], state["layers"]):
+            a, cache = _prefill_attention(
+                lp["attn"], lst, _layernorm(lp["ln1"], x), spec, valid, plen, capacity
+            )
+            x = x + a
+            hdn = _layernorm(lp["ln2"], x)
+            hdn = jax.nn.gelu(hdn @ lp["ffn"]["w1"] + lp["ffn"]["b1"])
+            x = x + hdn @ lp["ffn"]["w2"] + lp["ffn"]["b2"]
+            caches.append(cache)
+        x = _layernorm(params["lnf"], x)
+        logits = x @ params["out"] + params["out_b"]  # [B,P,V]
+        lp_all = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+        tgt = tokens[:, 1:]
+        logprobs = jnp.take_along_axis(lp_all, tgt[..., None], axis=-1)[..., 0]
+        last = jnp.clip(plen - 1, 0, p_len - 1)
+        last_logits = jnp.take_along_axis(logits, last[:, None, None], axis=1)[:, 0]
+        return logprobs, last_logits, {"layers": caches}
+
+    return prefill
+
+
+# ---------------------------------------------------------------------------
+# decode_step: one token per sequence against the cache
+# ---------------------------------------------------------------------------
+
+
+def _rope1(x, pos, theta):
+    """x [B,n,d], pos [B] -> roped [B,n,d] at each sequence's position."""
+    b, n, _ = x.shape
+    p = jnp.broadcast_to(pos[:, None, None], (b, n, 1))
+    return ref_rope(x[:, :, None, :], p, theta)[:, :, 0]
+
+
+def _att1(spec: AttnSpec, q, ck, cv, pos, cpos, window):
+    """Single-query attention: q [B,n,d] over cache [B,n,S,d] -> [B,n,d]."""
+    b, n, d = q.shape
+    s = ck.shape[2]
+    qpos = jnp.broadcast_to(pos[:, None, None], (b, n, 1))
+    return spec.att()(
+        q.reshape(b * n, 1, d),
+        ck.reshape(b * n, s, d),
+        cv.reshape(b * n, s, d),
+        qpos.reshape(b * n, 1),
+        cpos.reshape(b * n, s),
+        None,
+        window,
+    ).reshape(b, n, d)
+
+
+def _write_slot(cache_k, cache_v, cache_pos, slot, write, k, v, pos):
+    """Overwrite slot [B,n] (where `write` [B,n]) with the new (k, v, pos).
+
+    Slot values outside [0, S) never match the iota, so they drop the write
+    — used both for capacity overflow and for idle batch slots.
+    """
+    s = cache_k.shape[2]
+    hit = jnp.arange(s, dtype=jnp.int32)[None, None, :] == slot[:, :, None]  # [B,n,S]
+    hit = jnp.logical_and(hit, write[:, :, None])
+    ck = jnp.where(hit[..., None], k[:, :, None, :], cache_k)
+    cv = jnp.where(hit[..., None], v[:, :, None, :], cache_v)
+    cpos = jnp.where(hit, pos[:, None, None], cache_pos)
+    return ck, cv, cpos, hit
+
+
+def _step_dense(p, x, cache, pos, spec: AttnSpec):
+    b, _ = x.shape
+    n = spec.n_dense
+    q = jnp.einsum("bh,nhd->bnd", x, p["wq"])
+    k = jnp.einsum("bh,nhd->bnd", x, p["wk"])
+    v = jnp.einsum("bh,nhd->bnd", x, p["wv"])
+    q = _rope1(q, pos, spec.rope_theta)
+    k = _rope1(k, pos, spec.rope_theta)
+    s = cache["dense_k"].shape[2]
+    slot = jnp.mod(pos, s) if spec.window > 0 else pos  # ring vs append
+    slot = jnp.broadcast_to(slot[:, None], (b, n))
+    on = jnp.ones((b, n), bool)
+    ck, cv, cpos, _ = _write_slot(
+        cache["dense_k"], cache["dense_v"], cache["dense_pos"], slot, on, k, v, pos
+    )
+    att = _att1(spec, q, ck, cv, pos, cpos, spec.window)
+    y = jnp.einsum("bnd,ndh->bh", att, p["wo"])
+    return y, {"dense_k": ck, "dense_v": cv, "dense_pos": cpos}
+
+
+def _step_mosa(p, x, cache, pos, spec: AttnSpec):
+    """Streaming expert-choice: enter the cache iff the router score beats
+    the lowest cached priority (see module doc); output iff entered."""
+    b, _ = x.shape
+    n = spec.n_sparse
+    r = jax.nn.sigmoid(jnp.einsum("bh,nh->bn", x, p["wr"]))  # [B,n]
+    sel = r
+    if spec.include_first:
+        sel = jnp.where(pos[:, None] == 0, 2.0, sel)  # attention-sink slot
+    pri = cache["mosa_pri"]
+    low = jnp.min(pri, axis=-1)  # [B,n]
+    slot = jnp.argmin(pri, axis=-1).astype(jnp.int32)
+    enter = sel > low
+    q = jnp.einsum("bh,nhd->bnd", x, p["wq"])
+    k = jnp.einsum("bh,nhd->bnd", x, p["wk"])
+    v = jnp.einsum("bh,nhd->bnd", x, p["wv"])
+    q = _rope1(q, pos, spec.rope_theta)
+    k = _rope1(k, pos, spec.rope_theta)
+    ck, cv, cpos, hit = _write_slot(
+        cache["mosa_k"], cache["mosa_v"], cache["mosa_pos"], slot, enter, k, v, pos
+    )
+    cpri = jnp.where(hit, sel[:, :, None], pri)
+    att = _att1(spec, q, ck, cv, pos, cpos, 0)
+    att = att * jnp.where(enter, r, 0.0)[..., None]  # diag(r) path; 0 if unrouted
+    y = jnp.einsum("bnd,ndh->bh", att, p["wo"])
+    return y, {"mosa_k": ck, "mosa_v": cv, "mosa_pos": cpos, "mosa_pri": cpri}
+
+
+def _step_fixed(p, x, cache, pos, spec: AttnSpec):
+    b, _ = x.shape
+    n, ksel = spec.n_sparse, spec.k_sel
+    rho = spec.rho
+    on_grid = jnp.logical_and(jnp.mod(pos, rho) == 0, pos < ksel * rho)  # [B]
+    slot = jnp.where(on_grid, pos // rho, POS_SENTINEL)
+    q = jnp.einsum("bh,nhd->bnd", x, p["wq"])
+    k = jnp.einsum("bh,nhd->bnd", x, p["wk"])
+    v = jnp.einsum("bh,nhd->bnd", x, p["wv"])
+    q = _rope1(q, pos, spec.rope_theta)
+    k = _rope1(k, pos, spec.rope_theta)
+    write = jnp.broadcast_to(on_grid[:, None], (b, n))
+    ck, cv, cpos, _ = _write_slot(
+        cache["fixed_k"], cache["fixed_v"], cache["fixed_pos"],
+        jnp.broadcast_to(slot[:, None], (b, n)), write, k, v, pos,
+    )
+    att = _att1(spec, q, ck, cv, pos, cpos, 0)
+    att = att * write[..., None].astype(att.dtype)  # off-grid tokens: no output
+    y = jnp.einsum("bnd,ndh->bh", att, p["wo"])
+    return y, {"fixed_k": ck, "fixed_v": cv, "fixed_pos": cpos}
+
+
+def _step_routing(p, x, lst, cache, pos, spec: AttnSpec):
+    """Nearest-centroid assignment over the cached shared-QK vectors."""
+    b, _ = x.shape
+    n = spec.n_sparse
+    mu = lst["centroids"]  # [n, rho, d]
+    mun = mu / (jnp.linalg.norm(mu, axis=-1, keepdims=True) + 1e-6)
+    kq = jnp.einsum("bh,nhd->bnd", x, p["wq"])  # shared projection, unroped
+    v = jnp.einsum("bh,nhd->bnd", x, p["wv"])
+    s = cache["routing_qk"].shape[2]
+    slot = jnp.broadcast_to(pos[:, None], (b, n))
+    on = jnp.ones((b, n), bool)
+    cqk, cv, cpos, _ = _write_slot(
+        cache["routing_qk"], cache["routing_v"], cache["routing_pos"], slot, on, kq, v, pos
+    )
+    kqn = kq / (jnp.linalg.norm(kq, axis=-1, keepdims=True) + 1e-6)
+    own = jnp.argmax(jnp.einsum("bnd,nrd->bnr", kqn, mun), axis=-1)  # [B,n]
+    cn = cqk / (jnp.linalg.norm(cqk, axis=-1, keepdims=True) + 1e-6)
+    casg = jnp.argmax(jnp.einsum("bnsd,nrd->bnsr", cn, mun), axis=-1)  # [B,n,S]
+    same = casg == own[:, :, None]
+    # hide other-cluster entries behind the position sentinel
+    cpos_m = jnp.where(same, cpos, POS_SENTINEL)
+    q = _rope1(kq, pos, spec.rope_theta)
+    ck = ref_rope(cqk, cpos, spec.rope_theta)  # rope cached keys at their positions
+    att = _att1(spec, q, ck, cv, pos, cpos_m, 0)
+    y = jnp.einsum("bnd,ndh->bh", att, p["wo"])
+    return y, {"routing_qk": cqk, "routing_v": cv, "routing_pos": cpos}
+
+
+def _reset_cache(cache: dict, reset):
+    """In-graph slot invalidation (continuous-batching admission): where
+    reset != 0, positions go to the sentinel and priorities to -1; payload
+    bytes are left in place — the sentinel hides them from every mask."""
+    out = {}
+    hot = reset != 0  # [B]
+    for name, leaf in cache.items():
+        if name.endswith("_pos"):
+            out[name] = jnp.where(hot[:, None, None], POS_SENTINEL, leaf)
+        elif name.endswith("_pri"):
+            out[name] = jnp.where(hot[:, None, None], -1.0, leaf)
+        else:
+            out[name] = leaf
+    return out
+
+
+def make_decode_step(cfg: ModelConfig, capacity: int, batch: int):
+    """(params, state, token [B] i32, pos [B] i32, reset [B] i32, caches)
+    -> (logits [B, vocab], new caches)."""
+    spec = cfg.attn_spec()
+
+    def step(params, state, token, pos, reset, caches):
+        x = params["emb"][token]  # [B,h]
+        new_layers = []
+        for lp, lst, lc in zip(params["layers"], state["layers"], caches["layers"]):
+            lc = _reset_cache(lc, reset)
+            xin = _layernorm(lp["ln1"], x)
+            ap = lp["attn"]
+            a = jnp.zeros_like(x)
+            nc = {}
+            if spec.n_dense > 0:
+                yd, cd = _step_dense(ap["dense"], xin, lc, pos, spec)
+                a = a + yd
+                nc.update(cd)
+            if spec.n_sparse > 0 and spec.sparse_kind == "mosa":
+                ym, cm = _step_mosa(ap["sparse"], xin, lc, pos, spec)
+                a = a + ym
+                nc.update(cm)
+            if spec.n_sparse > 0 and spec.sparse_kind == "fixed":
+                yf, cf = _step_fixed(ap["sparse"], xin, lc, pos, spec)
+                a = a + yf
+                nc.update(cf)
+            if spec.n_sparse > 0 and spec.sparse_kind == "routing":
+                yr, cr = _step_routing(ap["sparse"], xin, lst, lc, pos, spec)
+                a = a + yr
+                nc.update(cr)
+            x = x + a
+            hdn = _layernorm(lp["ln2"], x)
+            hdn = jax.nn.gelu(hdn @ lp["ffn"]["w1"] + lp["ffn"]["b1"])
+            x = x + hdn @ lp["ffn"]["w2"] + lp["ffn"]["b2"]
+            new_layers.append(nc)
+        x = _layernorm(params["lnf"], x)
+        logits = x @ params["out"] + params["out_b"]
+        return logits, {"layers": new_layers}
+
+    return step

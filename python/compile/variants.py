@@ -45,14 +45,31 @@ CHUNK_STEPS = 8  # lax.scan steps per train_chunk dispatch
 SHORT_T = 64  # downstream-task scoring length (Sec 3.5)
 
 
+@dataclasses.dataclass(frozen=True)
+class DecodeSpec:
+    """Serving-program grid for one variant (see compile.decode).
+
+    ``capacity`` is the KV-cache context capacity of the canonical
+    ``prefill`` / ``decode_step`` programs; ``extra_batches`` adds
+    ``decode_step_b<N>`` programs (batch-scaling bench) and
+    ``extra_capacities`` adds ``decode_step_c<C>`` (context-scaling bench,
+    decode-only). Static shapes: one lowered program per grid point, the
+    standard bucketing of XLA serving."""
+
+    capacity: int = 1024
+    extra_batches: tuple = ()
+    extra_capacities: tuple = ()
+
+
 @dataclasses.dataclass
 class Variant:
     name: str
     cfg: ModelConfig
     batch: int
-    programs: List[str]  # subset of {init, train, train_chunk, score, score_short}
+    programs: List[str]  # subset of {init, train, train_chunk, score, score_short, decode}
     group: str  # which experiment family it belongs to
     base_heads: int  # dense-baseline head count the FLOP budget comes from
+    decode: Optional[DecodeSpec] = None  # present iff "decode" in programs
 
     def short_cfg(self) -> ModelConfig:
         """Config for the SHORT_T scoring program with the paper's adaptive
@@ -95,14 +112,30 @@ def _mk(preset: str, kind: str, rho: int, *, n_keep: Optional[int] = None,
     )
 
 
+DECODE_CAPACITY = 1024  # canonical serving context (the paper's Table 2 T)
+
+
 def core_variants() -> List[Variant]:
-    full = ["train", "train_chunk", "score", "score_short"]
-    return [
+    full = ["train", "train_chunk", "score", "score_short", "decode"]
+    # micro_dense and micro_mosa_r8 are the BENCH_decode pair: they get the
+    # batch- and context-scaling decode grids on top of the canonical
+    # C=1024 programs; fixed/routing get the canonical pair only (generate
+    # CLI coverage for every head kind).
+    bench_decode = DecodeSpec(
+        capacity=DECODE_CAPACITY, extra_batches=(1, 32), extra_capacities=(128, 256, 512)
+    )
+    plain_decode = DecodeSpec(capacity=DECODE_CAPACITY)
+    vs = [
         _mk("micro", "dense", 1, programs=full, group="core"),
         _mk("micro", "mosa", 8, programs=full, group="core"),
-        _mk("micro", "fixed", 8, programs=["train", "score", "score_short"], group="core"),
-        _mk("micro", "routing", 8, programs=["train", "score", "score_short"], group="core"),
+        _mk("micro", "fixed", 8, programs=["train", "score", "score_short", "decode"], group="core"),
+        _mk("micro", "routing", 8, programs=["train", "score", "score_short", "decode"], group="core"),
     ]
+    vs[0].decode = bench_decode
+    vs[1].decode = bench_decode
+    vs[2].decode = plain_decode
+    vs[3].decode = plain_decode
+    return vs
 
 
 def sweep_variants() -> List[Variant]:

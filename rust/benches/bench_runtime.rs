@@ -45,13 +45,14 @@ fn main() {
     });
     report("batch literal build 8x129", &s);
 
-    // score round-trip: inputs upload + execute + tuple download
+    // score round-trip: inputs upload + execute + result download
+    let untupled = v.program("score").unwrap().untupled;
     let exe_ptr = manifest.hlo_path(v, "score").unwrap();
     let exe = engine.load(&exe_ptr).unwrap();
     let mut inputs: Vec<xla::Literal> = state.model_leaves(v).to_vec();
     inputs.push(lit_i32(&tokens, &[b, t1]).unwrap());
     let s = bench(2, 15, || {
-        std::hint::black_box(Engine::run(exe, &inputs).unwrap());
+        std::hint::black_box(Engine::run(exe, &inputs, 1, untupled).unwrap());
     });
     report("score round-trip (fwd only)", &s);
 }

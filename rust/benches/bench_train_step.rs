@@ -40,6 +40,7 @@ fn main() {
             checkpoint: None,
             eval_every: 0,
             prefetch: true,
+            device_resident: true,
         };
         let (_, metrics) = trainer.train(&mut engine, &mut src, &opts).unwrap();
         let ms = metrics.mean_ms(4);
@@ -79,6 +80,7 @@ fn main() {
             checkpoint: None,
             eval_every: 0,
             prefetch: true,
+            device_resident: true,
         };
         let (_, metrics) = trainer.train(&mut engine, &mut src, &opts).unwrap();
         let hlo = std::fs::metadata(manifest.hlo_path(v, "train").unwrap())
@@ -111,6 +113,7 @@ fn main() {
                 checkpoint: None,
                 eval_every: 0,
                 prefetch: true,
+                device_resident: true,
             };
             let (_, metrics) = trainer.train(&mut engine, &mut src, &opts).unwrap();
             println!(

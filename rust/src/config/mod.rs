@@ -18,6 +18,9 @@ pub struct RunConfig {
     pub use_chunk: bool,
     /// background batch prefetch (on by default; `--no-prefetch` for A/B)
     pub prefetch: bool,
+    /// keep the train state device-resident between per-step dispatches
+    /// (on by default; `--no-device-resident` for A/B)
+    pub device_resident: bool,
 }
 
 impl Default for RunConfig {
@@ -33,6 +36,7 @@ impl Default for RunConfig {
             eval_batches: 8,
             use_chunk: false,
             prefetch: true,
+            device_resident: true,
         }
     }
 }
@@ -52,6 +56,7 @@ impl RunConfig {
             eval_batches: args.get_usize("eval-batches", d.eval_batches),
             use_chunk: args.has("chunk"),
             prefetch: !args.has("no-prefetch"),
+            device_resident: !args.has("no-device-resident"),
         }
     }
 }

@@ -16,7 +16,7 @@
 
 use std::time::Instant;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::data::prefetch::{run_pipeline, BatchShape, BatchStream, PrefetchMode, PrefetchStats};
 use crate::runtime::engine::{lit_f32, lit_scalar_f32, scalar_f32, to_vec_f32, Engine};
@@ -63,6 +63,11 @@ pub struct TrainOptions {
     /// build batches + literals on a background thread, overlapped with
     /// the PJRT dispatch (double-buffered); off = the seed's inline path
     pub prefetch: bool,
+    /// keep the train state on device between per-step dispatches
+    /// (requires untupled artifacts; falls back transparently otherwise).
+    /// Off = the seed behaviour: every leaf fetched to a host literal and
+    /// re-fed each step.
+    pub device_resident: bool,
 }
 
 impl TrainOptions {
@@ -76,6 +81,7 @@ impl TrainOptions {
             checkpoint: None,
             eval_every: 0,
             prefetch: true,
+            device_resident: true,
         }
     }
 
@@ -146,28 +152,101 @@ impl<'m> Trainer<'m> {
     ) -> Result<PrefetchStats> {
         let v = self.variant;
         let (b, t1) = (v.batch, v.config.seq_len + 1);
+        let spec = v.program("train")?;
+        let n_leaves = v.n_train_leaves;
+        let expected = n_leaves + spec.extra_outputs.len().max(1);
+        let untupled = spec.untupled;
+        // device residency needs one separable buffer per output leaf,
+        // which only untupled artifacts provide
+        let try_device = opts.device_resident && untupled;
         // compile up-front so step timings are pure execution
         engine.load_program(self.manifest, v, "train")?;
         let shape = BatchShape::per_step(b, t1);
         let mut exec_ns_total = 0u64;
+        // once Some, the whole train state lives on the device and only
+        // batch/lr uploads + the scalar loss fetch cross the host boundary
+        let mut dev_state: Option<Vec<xla::PjRtBuffer>> = None;
         let body = |stream: &mut BatchStream<'_>| -> Result<()> {
             for step in 0..opts.steps {
                 let batch = stream.next()?;
                 let lr = opts.schedule.lr(step) as f32;
                 let t0 = Instant::now();
-                // inputs by reference: execute() is generic over
-                // Borrow<Literal>, so the state literals are NOT
-                // host-copied per step (§Perf L3-1).
                 let lr_lit = lit_scalar_f32(lr);
-                let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(state.leaves.len() + 2);
-                inputs.extend(state.leaves.iter());
-                inputs.push(&batch.lit);
-                inputs.push(&lr_lit);
-                let exe = engine.load_program(self.manifest, v, "train")?;
-                let (outs, exec_ns) = Engine::run_timed(exe, &inputs)?;
-                exec_ns_total += exec_ns;
-                let extra = state.absorb(v, outs, 1)?;
-                let loss = scalar_f32(&extra[0])? as f64;
+                // execute_ms_total keeps the seed's semantics: PJRT
+                // execute + result fetch only (uploads / host absorb
+                // excluded), so it stays comparable across modes
+                let loss = if let Some(state_bufs) = dev_state.take() {
+                    // device-resident hot path (§Perf decode PR): state
+                    // leaves are fed back as the buffers PJRT returned
+                    let batch_b = engine.to_device(&batch.lit)?;
+                    let lr_b = engine.to_device(&lr_lit)?;
+                    let exe = engine.load_program(self.manifest, v, "train")?;
+                    let mut inputs: Vec<&xla::PjRtBuffer> =
+                        Vec::with_capacity(n_leaves + 2);
+                    inputs.extend(state_bufs.iter());
+                    inputs.push(&batch_b);
+                    inputs.push(&lr_b);
+                    let e0 = Instant::now();
+                    let bufs = Engine::run_on_buffers(exe, &inputs)?;
+                    drop(inputs);
+                    let mut outs = Engine::first_device_outputs(bufs, "train")?;
+                    if outs.len() != expected {
+                        bail!(
+                            "[{}] train output arity changed mid-run ({} != {})",
+                            v.name,
+                            outs.len(),
+                            expected
+                        );
+                    }
+                    let extras = outs.split_off(n_leaves);
+                    dev_state = Some(outs);
+                    let loss_lit = extras[0].to_literal_sync()?;
+                    exec_ns_total += e0.elapsed().as_nanos() as u64;
+                    scalar_f32(&loss_lit)? as f64
+                } else {
+                    // first step (or tuple-style artifact): literal inputs.
+                    // Inputs by reference: execute() is generic over
+                    // Borrow<Literal>, so the state literals are NOT
+                    // host-copied per step (§Perf L3-1).
+                    let mut inputs: Vec<&xla::Literal> =
+                        Vec::with_capacity(state.leaves.len() + 2);
+                    inputs.extend(state.leaves.iter());
+                    inputs.push(&batch.lit);
+                    inputs.push(&lr_lit);
+                    let exe = engine.load_program(self.manifest, v, "train")?;
+                    if try_device {
+                        let e0 = Instant::now();
+                        let bufs = Engine::run_buffers(exe, &inputs)?;
+                        drop(inputs);
+                        let mut outs = Engine::first_device_outputs(bufs, "train")?;
+                        if outs.len() == expected {
+                            let extras = outs.split_off(n_leaves);
+                            dev_state = Some(outs);
+                            state.step += 1;
+                            let loss_lit = extras[0].to_literal_sync()?;
+                            exec_ns_total += e0.elapsed().as_nanos() as u64;
+                            scalar_f32(&loss_lit)? as f64
+                        } else {
+                            // runtime kept the tuple together: stay on the
+                            // proven literal path for the rest of the run
+                            log::warn!(
+                                "[{}] train outputs not separable ({} buffers); \
+                                 device residency off",
+                                v.name,
+                                outs.len()
+                            );
+                            let lits = Engine::outputs_to_literals(vec![outs], expected, untupled)?;
+                            exec_ns_total += e0.elapsed().as_nanos() as u64;
+                            let extra = state.absorb(v, lits, 1)?;
+                            scalar_f32(&extra[0])? as f64
+                        }
+                    } else {
+                        let (outs, exec_ns) = Engine::run_timed(exe, &inputs, expected, untupled)?;
+                        exec_ns_total += exec_ns;
+                        let extra = state.absorb(v, outs, 1)?;
+                        scalar_f32(&extra[0])? as f64
+                    }
+                };
                 let ms = t0.elapsed().as_secs_f64() * 1e3;
                 metrics.record(step, loss, lr as f64, ms);
                 if opts.log_every > 0 && (step % opts.log_every == 0 || step + 1 == opts.steps) {
@@ -181,6 +260,28 @@ impl<'m> Trainer<'m> {
         };
         let ((), stats) = run_pipeline(data, shape, opts.steps, opts.prefetch_mode(), body)?;
         metrics.note("execute_ms_total", format!("{:.3}", exec_ns_total as f64 / 1e6));
+        // the state stayed on device for all but the first step: download
+        // it once so checkpointing / eval see literals again, and record
+        // the one-time cost that replaced a per-step round-trip
+        if let Some(bufs) = dev_state {
+            let t0 = Instant::now();
+            let mut leaves = Vec::with_capacity(bufs.len());
+            for (i, buf) in bufs.iter().enumerate() {
+                leaves.push(
+                    buf.to_literal_sync()
+                        .with_context(|| format!("downloading train leaf {i}"))?,
+                );
+            }
+            state.leaves = leaves;
+            state.step = opts.steps;
+            metrics.note("device_resident", "on");
+            metrics.note(
+                "state_fetch_ms_final",
+                format!("{:.3}", t0.elapsed().as_secs_f64() * 1e3),
+            );
+        } else {
+            metrics.note("device_resident", "off");
+        }
         Ok(stats)
     }
 
@@ -196,6 +297,8 @@ impl<'m> Trainer<'m> {
         let (b, t1) = (v.batch, v.config.seq_len + 1);
         let spec = v.program("train_chunk")?;
         let s = spec.chunk.unwrap_or(8);
+        let expected = v.n_train_leaves + spec.extra_outputs.len().max(1);
+        let untupled = spec.untupled;
         engine.load_program(self.manifest, v, "train_chunk")?;
         let shape = BatchShape::chunked(s, b, t1);
         let dispatches = opts.steps.div_ceil(s as u64);
@@ -221,7 +324,7 @@ impl<'m> Trainer<'m> {
                 inputs.push(&batch.lit);
                 inputs.push(&lr_lit);
                 let exe = engine.load_program(self.manifest, v, "train_chunk")?;
-                let (outs, exec_ns) = Engine::run_timed(exe, &inputs)?;
+                let (outs, exec_ns) = Engine::run_timed(exe, &inputs, expected, untupled)?;
                 exec_ns_total += exec_ns;
                 let extra = state.absorb(v, outs, s as u64)?;
                 let losses = to_vec_f32(&extra[0])?;
@@ -264,6 +367,7 @@ impl<'m> Trainer<'m> {
     ) -> Result<f64> {
         let v = self.variant;
         let (b, t1) = (v.batch, v.config.seq_len + 1);
+        let untupled = v.program("score")?.untupled;
         engine.load_program(self.manifest, v, "score")?;
         let mut total = 0.0f64;
         let mut count = 0usize;
@@ -276,7 +380,7 @@ impl<'m> Trainer<'m> {
             inputs.extend(state.model_leaves(v).iter());
             inputs.push(&batch_lit);
             let exe = engine.load_program(self.manifest, v, "score")?;
-            let outs = Engine::run(exe, &inputs)?;
+            let outs = Engine::run(exe, &inputs, 1, untupled)?;
             let lp = to_vec_f32(&outs[0])?;
             total += lp.iter().map(|&x| -x as f64).sum::<f64>();
             count += lp.len();

@@ -1,0 +1,296 @@
+//! Continuous batching: fixed device-side sequence slots, host-side
+//! admission and retirement.
+//!
+//! The decode program has a static batch dimension; the batcher maps a
+//! dynamic request queue onto those slots. Each slot carries its own
+//! position counter, so sequences at different depths coexist in one
+//! dispatch. Admission into a previously used slot raises the slot's
+//! `reset` flag for its first dispatched token — the decode program
+//! invalidates the slot's cache *in-graph* (positions to the sentinel,
+//! MoSA priorities to -1), so admitting never copies cache bytes through
+//! the host. A slot still consuming its prompt is teacher-forced
+//! (sampled logits ignored); once the prompt is exhausted the sample
+//! stream takes over until `max_new` tokens or EOS retire the sequence.
+//!
+//! The batcher is engine-independent (pure slot bookkeeping) — the
+//! decode session asks it for per-slot (token, pos, reset) vectors and
+//! hands back the sampled token per slot.
+
+use std::collections::VecDeque;
+
+#[derive(Debug, Clone)]
+pub struct SeqRequest {
+    pub id: u64,
+    /// must be non-empty (position 0 seeds the cache / attention sink)
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct FinishedSeq {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub generated: Vec<i32>,
+}
+
+#[derive(Debug)]
+struct Slot {
+    id: u64,
+    prompt: Vec<i32>,
+    /// prompt tokens already consumed (dispatched or prefetched)
+    fed: usize,
+    /// position of the next dispatched token
+    pos: i32,
+    generated: Vec<i32>,
+    max_new: usize,
+    needs_reset: bool,
+    /// last sampled token, awaiting dispatch
+    last: Option<i32>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Inflight {
+    Idle,
+    Prompt,
+    LastPrompt,
+    Gen,
+}
+
+pub struct ContinuousBatcher {
+    slots: Vec<Option<Slot>>,
+    pending: VecDeque<SeqRequest>,
+    inflight: Vec<Inflight>,
+    eos: Option<i32>,
+}
+
+impl ContinuousBatcher {
+    pub fn new(batch: usize, eos: Option<i32>) -> ContinuousBatcher {
+        ContinuousBatcher {
+            slots: (0..batch).map(|_| None).collect(),
+            pending: VecDeque::new(),
+            inflight: vec![Inflight::Idle; batch],
+            eos,
+        }
+    }
+
+    pub fn submit(&mut self, mut req: SeqRequest) {
+        if req.prompt.is_empty() {
+            req.prompt.push(0); // position 0 must exist (attention sink)
+        }
+        self.pending.push_back(req);
+    }
+
+    /// Move pending requests into free slots; returns how many admitted.
+    pub fn admit(&mut self) -> usize {
+        let mut n = 0;
+        for slot in self.slots.iter_mut() {
+            if slot.is_none() {
+                if let Some(req) = self.pending.pop_front() {
+                    *slot = Some(Slot {
+                        id: req.id,
+                        prompt: req.prompt,
+                        fed: 0,
+                        pos: 0,
+                        generated: Vec::new(),
+                        max_new: req.max_new,
+                        needs_reset: true,
+                        last: None,
+                    });
+                    n += 1;
+                } else {
+                    break;
+                }
+            }
+        }
+        n
+    }
+
+    pub fn active(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.pending.is_empty() && self.active() == 0
+    }
+
+    /// Stage the first wave of prompts for the batch `prefill` program
+    /// (prompt window `p`): returns (row-major [batch, p] tokens, per-slot
+    /// valid length >= 1). Only valid while every occupied slot is fresh
+    /// (nothing fed yet) — i.e. right after the first `admit()`. Prompts
+    /// longer than `p` keep their tail, which streams through decode_step
+    /// afterwards. Call `advance` with the sampled last-logit tokens next.
+    pub fn prefill_wave(&mut self, p: usize) -> (Vec<i32>, Vec<i32>) {
+        let b = self.slots.len();
+        let mut tokens = vec![0i32; b * p];
+        let mut plen = vec![1i32; b];
+        for (i, slot) in self.slots.iter_mut().enumerate() {
+            let Some(s) = slot else {
+                self.inflight[i] = Inflight::Idle;
+                continue;
+            };
+            assert_eq!(s.fed, 0, "prefill_wave on a slot that already streamed");
+            let take = s.prompt.len().min(p);
+            tokens[i * p..i * p + take].copy_from_slice(&s.prompt[..take]);
+            plen[i] = take as i32;
+            s.fed = take;
+            s.pos = take as i32;
+            s.needs_reset = false;
+            self.inflight[i] =
+                if take == s.prompt.len() { Inflight::LastPrompt } else { Inflight::Prompt };
+        }
+        (tokens, plen)
+    }
+
+    /// Per-slot (token, pos, reset) for the next decode_step dispatch.
+    pub fn next_inputs(&mut self, toks: &mut Vec<i32>, pos: &mut Vec<i32>, rst: &mut Vec<i32>) {
+        toks.clear();
+        pos.clear();
+        rst.clear();
+        for (i, slot) in self.slots.iter_mut().enumerate() {
+            let Some(s) = slot else {
+                // idle slots stay reset so their cache can never leak in
+                toks.push(0);
+                pos.push(0);
+                rst.push(1);
+                self.inflight[i] = Inflight::Idle;
+                continue;
+            };
+            if s.fed < s.prompt.len() {
+                toks.push(s.prompt[s.fed]);
+                pos.push(s.pos);
+                rst.push(if s.needs_reset { 1 } else { 0 });
+                s.fed += 1;
+                s.pos += 1;
+                s.needs_reset = false;
+                self.inflight[i] =
+                    if s.fed == s.prompt.len() { Inflight::LastPrompt } else { Inflight::Prompt };
+            } else {
+                let t = s.last.expect("slot out of prompt without a sampled token");
+                toks.push(t);
+                pos.push(s.pos);
+                rst.push(0);
+                s.pos += 1;
+                self.inflight[i] = Inflight::Gen;
+            }
+        }
+    }
+
+    /// Apply one dispatch's sampled tokens; returns retired sequences.
+    pub fn advance(&mut self, sampled: &[i32]) -> Vec<FinishedSeq> {
+        assert_eq!(sampled.len(), self.slots.len());
+        let mut done = Vec::new();
+        for (i, slot) in self.slots.iter_mut().enumerate() {
+            let kind = self.inflight[i];
+            self.inflight[i] = Inflight::Idle;
+            if matches!(kind, Inflight::Idle | Inflight::Prompt) {
+                continue;
+            }
+            let s = slot.as_mut().expect("inflight marker on empty slot");
+            let tok = sampled[i];
+            s.generated.push(tok);
+            s.last = Some(tok);
+            let hit_eos = self.eos == Some(tok);
+            if s.generated.len() >= s.max_new || hit_eos {
+                let s = slot.take().unwrap();
+                done.push(FinishedSeq { id: s.id, prompt: s.prompt, generated: s.generated });
+            }
+        }
+        done
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, prompt: &[i32], max_new: usize) -> SeqRequest {
+        SeqRequest { id, prompt: prompt.to_vec(), max_new }
+    }
+
+    fn step(b: &mut ContinuousBatcher, sampled: &[i32]) -> (Vec<i32>, Vec<i32>, Vec<i32>, Vec<FinishedSeq>) {
+        let (mut t, mut p, mut r) = (Vec::new(), Vec::new(), Vec::new());
+        b.next_inputs(&mut t, &mut p, &mut r);
+        let done = b.advance(sampled);
+        (t, p, r, done)
+    }
+
+    #[test]
+    fn teacher_forces_prompt_then_samples() {
+        let mut b = ContinuousBatcher::new(1, None);
+        b.submit(req(7, &[10, 11], 2));
+        b.admit();
+        // prompt token 0: reset raised, position 0
+        let (t, p, r, done) = step(&mut b, &[99]);
+        assert_eq!((t[0], p[0], r[0]), (10, 0, 1));
+        assert!(done.is_empty()); // mid-prompt sample ignored
+        // prompt token 1 (last): sample becomes the first generated token
+        let (t, p, r, done) = step(&mut b, &[42]);
+        assert_eq!((t[0], p[0], r[0]), (11, 1, 0));
+        assert!(done.is_empty());
+        // generated token dispatched back in; second sample retires (max_new=2)
+        let (t, p, _, done) = step(&mut b, &[43]);
+        assert_eq!((t[0], p[0]), (42, 2));
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].generated, vec![42, 43]);
+        assert!(b.is_done());
+    }
+
+    #[test]
+    fn slot_reuse_resets_and_positions_restart() {
+        let mut b = ContinuousBatcher::new(1, None);
+        b.submit(req(1, &[5], 1));
+        b.submit(req(2, &[6], 1));
+        b.admit();
+        let (_, _, r, done) = step(&mut b, &[50]);
+        assert_eq!(r[0], 1);
+        assert_eq!(done[0].id, 1);
+        assert_eq!(b.admit(), 1); // second request takes the freed slot
+        let (t, p, r, done) = step(&mut b, &[60]);
+        assert_eq!((t[0], p[0], r[0]), (6, 0, 1)); // fresh position + reset
+        assert_eq!(done[0].id, 2);
+    }
+
+    #[test]
+    fn eos_retires_early() {
+        let mut b = ContinuousBatcher::new(2, Some(3));
+        b.submit(req(1, &[1], 100));
+        b.submit(req(2, &[2], 100));
+        b.admit();
+        let (_, _, _, done) = step(&mut b, &[3, 9]); // slot 0 hits EOS
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, 1);
+        assert_eq!(b.active(), 1);
+    }
+
+    #[test]
+    fn idle_slots_stay_reset() {
+        let mut b = ContinuousBatcher::new(3, None);
+        b.submit(req(1, &[4], 2));
+        b.admit();
+        let (t, _, r, _) = step(&mut b, &[8, 8, 8]);
+        assert_eq!(t.len(), 3);
+        assert_eq!((r[1], r[2]), (1, 1));
+    }
+
+    #[test]
+    fn prefill_wave_consumes_prompts_and_overflow_streams() {
+        let mut b = ContinuousBatcher::new(2, None);
+        b.submit(req(1, &[1, 2], 1)); // fits the window
+        b.submit(req(2, &[1, 2, 3, 4, 5], 1)); // overflows a 4-wide window
+        b.admit();
+        let (tokens, plen) = b.prefill_wave(4);
+        assert_eq!(&tokens[0..4], &[1, 2, 0, 0]);
+        assert_eq!(&tokens[4..8], &[1, 2, 3, 4]);
+        assert_eq!(plen, vec![2, 4]);
+        // slot 0 finished its prompt in the prefill: sample counts
+        let done = b.advance(&[70, 71]);
+        assert_eq!(done.len(), 1); // max_new = 1
+        assert_eq!(done[0].generated, vec![70]);
+        // slot 1 still owes prompt token 5, teacher-forced at position 4
+        let (t, p, r, done) = step(&mut b, &[80, 81]);
+        assert_eq!((t[1], p[1], r[1]), (5, 4, 0));
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].generated, vec![81]);
+        assert!(b.is_done());
+    }
+}

@@ -1,0 +1,619 @@
+//! Batched autoregressive decoding: the serving-side hot path.
+//!
+//! The training programs process whole [B, T] windows; serving runs the
+//! other shape — a prompt processed once (`prefill`), then one token per
+//! dispatch (`decode_step`) against a KV-cache that stays **resident on
+//! the device**: the cache leaves PJRT returns from step t are fed
+//! straight back into step t+1 (`Engine::run_on_buffers`), so the K/V
+//! never round-trip through the host. Only the per-step scalars (token,
+//! position, reset flag) are uploaded, and only the logits are fetched.
+//!
+//! Cache layout per head kind (sized from the manifest's `cache` section,
+//! produced by `python/compile/decode.py`; `cache_layout` mirrors it for
+//! accounting without artifacts):
+//!
+//! - dense heads:   [B, n, C, d'] K and V, slot = position;
+//! - local heads:   [B, n, W, d'] ring, slot = position mod window;
+//! - MoSA heads:    [B, n, k, d'] K/V of the *selected* tokens only, plus
+//!   router state (per-slot priority + original position). A token enters
+//!   iff its router score beats the lowest cached priority — streaming
+//!   expert-choice, exactly top-k over the generated prefix;
+//! - fixed heads:   [B, n, k, d'] static stride-rho grid;
+//! - routing heads: [B, n, C, d'] shared-QK and V vectors.
+//!
+//! Payload (`kv`-kind) leaf bytes equal `kvcache::kv_bytes_total(cfg, C)`
+//! exactly — the measured number BENCH_decode reports next to the paper's
+//! Table 2 claim. Empty slots hide behind `POS_SENTINEL`, so admission,
+//! retirement and ragged prompts need no extra mask inputs; the
+//! `ContinuousBatcher` (see `batcher`) drives per-slot lifecycles with the
+//! in-graph `reset` flag, never copying the cache on admission.
+
+pub mod batcher;
+pub mod sample;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::runtime::engine::{lit_i32, to_vec_f32, Engine};
+use crate::runtime::manifest::{CacheLeaf, LeafSpec, Manifest, ModelCfg, ProgramSpec, Variant};
+use crate::runtime::state::TrainState;
+
+pub use batcher::{ContinuousBatcher, FinishedSeq, SeqRequest};
+pub use sample::{sample_row, SamplePolicy};
+
+/// Empty-cache-slot position: larger than any real position, so the
+/// causal mask (qpos >= kpos) can never select an empty slot. Must match
+/// `python/compile/decode.py::POS_SENTINEL`.
+pub const POS_SENTINEL: i32 = 1 << 30;
+
+// ---------------------------------------------------------------------------
+// cache layout + allocation
+// ---------------------------------------------------------------------------
+
+fn leaf(path: String, shape: Vec<usize>, dtype: &str, kind: &str, init: &str) -> CacheLeaf {
+    CacheLeaf {
+        spec: LeafSpec { path, shape, dtype: dtype.into(), init: init.into() },
+        kind: kind.into(),
+    }
+}
+
+/// The KV-cache leaf layout for a model config at `capacity` context and
+/// `batch` slots — the Rust mirror of `compile.decode.cache_shapes` (same
+/// per-layer leaf set and alphabetical order). The manifest is the source
+/// of truth at runtime; this mirror serves accounting and tests.
+pub fn cache_layout(cfg: &ModelCfg, batch: usize, capacity: usize) -> Vec<CacheLeaf> {
+    let d = cfg.d_head;
+    let mut out = Vec::new();
+    for li in 0..cfg.n_layers {
+        let p = |name: &str| format!("layers[{li}].{name}");
+        if cfg.n_dense > 0 {
+            let s = if cfg.window > 0 { cfg.window.min(capacity) } else { capacity };
+            let n = cfg.n_dense;
+            out.push(leaf(p("dense_k"), vec![batch, n, s, d], "f32", "kv", "zeros"));
+            out.push(leaf(p("dense_pos"), vec![batch, n, s], "i32", "meta", "sentinel"));
+            out.push(leaf(p("dense_v"), vec![batch, n, s, d], "f32", "kv", "zeros"));
+        }
+        if cfg.n_sparse > 0 {
+            let n = cfg.n_sparse;
+            match cfg.sparse_kind.as_str() {
+                "mosa" | "fixed" => {
+                    let k = cfg.k_sel;
+                    let pre = &cfg.sparse_kind;
+                    out.push(leaf(p(&format!("{pre}_k")), vec![batch, n, k, d], "f32", "kv", "zeros"));
+                    out.push(leaf(p(&format!("{pre}_pos")), vec![batch, n, k], "i32", "meta", "sentinel"));
+                    if pre == "mosa" {
+                        out.push(leaf(p("mosa_pri"), vec![batch, n, k], "f32", "meta", "neg"));
+                    }
+                    out.push(leaf(p(&format!("{pre}_v")), vec![batch, n, k, d], "f32", "kv", "zeros"));
+                }
+                "routing" => {
+                    out.push(leaf(p("routing_pos"), vec![batch, n, capacity], "i32", "meta", "sentinel"));
+                    out.push(leaf(p("routing_qk"), vec![batch, n, capacity, d], "f32", "kv", "zeros"));
+                    out.push(leaf(p("routing_v"), vec![batch, n, capacity, d], "f32", "kv", "zeros"));
+                }
+                _ => {}
+            }
+        }
+    }
+    // keep the per-layer alphabetical order jax.tree_util uses
+    let layer_of = |c: &CacheLeaf| -> usize {
+        let s = &c.spec.path["layers[".len()..];
+        s[..s.find(']').unwrap_or(0)].parse().unwrap_or(0)
+    };
+    out.sort_by(|a, b| (layer_of(a), &a.spec.path).cmp(&(layer_of(b), &b.spec.path)));
+    out
+}
+
+/// Host-side image of one decode-program family's KV-cache: the literal
+/// per leaf in its empty state, plus byte accounting split into payload
+/// (K/V vectors — the Table 2 number) and bookkeeping metadata.
+pub struct KvCacheBuffers {
+    pub layout: Vec<CacheLeaf>,
+    pub leaves: Vec<xla::Literal>,
+    pub batch: usize,
+}
+
+impl KvCacheBuffers {
+    pub fn alloc(layout: &[CacheLeaf], batch: usize) -> Result<KvCacheBuffers> {
+        let mut leaves = Vec::with_capacity(layout.len());
+        for l in layout {
+            let n = l.spec.elems();
+            let dims: Vec<i64> = l.spec.shape.iter().map(|&x| x as i64).collect();
+            let lit = match (l.spec.dtype.as_str(), l.spec.init.as_str()) {
+                ("i32", "sentinel") => xla::Literal::vec1(&vec![POS_SENTINEL; n]).reshape(&dims)?,
+                ("i32", _) => xla::Literal::vec1(&vec![0i32; n]).reshape(&dims)?,
+                ("f32", "neg") => xla::Literal::vec1(&vec![-1.0f32; n]).reshape(&dims)?,
+                ("f32", _) => xla::Literal::vec1(&vec![0.0f32; n]).reshape(&dims)?,
+                (d, _) => bail!("cache leaf {}: unsupported dtype {d}", l.spec.path),
+            };
+            leaves.push(lit);
+        }
+        Ok(KvCacheBuffers { layout: layout.to_vec(), leaves, batch })
+    }
+
+    pub fn from_program(spec: &ProgramSpec) -> Result<KvCacheBuffers> {
+        let batch = spec.batch.unwrap_or(1);
+        Self::alloc(&spec.cache, batch)
+    }
+
+    fn bytes_of(spec: &LeafSpec) -> u64 {
+        spec.elems() as u64 * 4 // f32 and i32 leaves only
+    }
+
+    /// KV payload bytes across the whole batch (kv-kind leaves only).
+    pub fn payload_bytes(&self) -> u64 {
+        self.layout.iter().filter(|l| l.kind == "kv").map(|l| Self::bytes_of(&l.spec)).sum()
+    }
+
+    /// KV payload bytes per sequence slot — directly comparable to
+    /// `kvcache::kv_bytes_total(cfg, capacity)`.
+    pub fn payload_bytes_per_seq(&self) -> u64 {
+        self.payload_bytes() / self.batch.max(1) as u64
+    }
+
+    /// All cache bytes (payload + positions/priorities).
+    pub fn total_bytes(&self) -> u64 {
+        self.layout.iter().map(|l| Self::bytes_of(&l.spec)).sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// decode session
+// ---------------------------------------------------------------------------
+
+enum CacheState {
+    Host(Vec<xla::Literal>),
+    Device(Vec<xla::PjRtBuffer>),
+}
+
+/// One serving session: a variant's weights plus a live KV-cache for
+/// `batch` sequence slots, stepped one token per dispatch.
+pub struct DecodeSession<'m> {
+    pub manifest: &'m Manifest,
+    pub variant: &'m Variant,
+    pub step_name: String,
+    pub batch: usize,
+    pub capacity: usize,
+    /// payload / total bytes of the allocated cache (fixed at alloc)
+    pub cache_payload_bytes_per_seq: u64,
+    pub cache_total_bytes: u64,
+    model_lits: Vec<xla::Literal>,
+    model_bufs: Option<Vec<xla::PjRtBuffer>>,
+    cache: CacheState,
+    /// device residency: requested at construction, demoted (with a log
+    /// line) the first time the runtime can't keep buffers separable
+    pub device_resident: bool,
+}
+
+impl<'m> DecodeSession<'m> {
+    /// `model` is the params+state literal prefix (e.g. drained from a
+    /// `TrainState`); `step_name` selects the decode program family
+    /// ("decode_step", "decode_step_b1", "decode_step_c256", ...).
+    pub fn new(
+        manifest: &'m Manifest,
+        variant: &'m Variant,
+        step_name: &str,
+        model: Vec<xla::Literal>,
+        device_resident: bool,
+    ) -> Result<DecodeSession<'m>> {
+        let spec = variant.program(step_name)?;
+        if model.len() != variant.n_model_leaves() {
+            bail!(
+                "decode session for {} needs {} model leaves, got {}",
+                variant.name,
+                variant.n_model_leaves(),
+                model.len()
+            );
+        }
+        let kv = KvCacheBuffers::from_program(spec)?;
+        let batch = spec.batch.unwrap_or(variant.batch);
+        let capacity = spec.capacity.unwrap_or(variant.config.seq_len);
+        Ok(DecodeSession {
+            manifest,
+            variant,
+            step_name: step_name.to_string(),
+            batch,
+            capacity,
+            cache_payload_bytes_per_seq: kv.payload_bytes_per_seq(),
+            cache_total_bytes: kv.total_bytes(),
+            model_lits: model,
+            model_bufs: None,
+            cache: CacheState::Host(kv.leaves),
+            device_resident,
+        })
+    }
+
+    /// Convenience: build the model leaves from a train state.
+    pub fn from_state(
+        manifest: &'m Manifest,
+        variant: &'m Variant,
+        step_name: &str,
+        mut state: TrainState,
+        device_resident: bool,
+    ) -> Result<DecodeSession<'m>> {
+        let model: Vec<xla::Literal> =
+            state.leaves.drain(..variant.n_model_leaves()).collect();
+        Self::new(manifest, variant, step_name, model, device_resident)
+    }
+
+    /// Reset every slot's cache to empty (drops any device copy).
+    pub fn reset_cache(&mut self) -> Result<()> {
+        let spec = self.variant.program(&self.step_name)?;
+        let kv = KvCacheBuffers::from_program(spec)?;
+        self.cache = CacheState::Host(kv.leaves);
+        Ok(())
+    }
+
+    fn demote(&mut self, why: &str) {
+        if self.device_resident {
+            log::warn!(
+                "[{}] decode falling back to host-side cache: {}",
+                self.variant.name,
+                why
+            );
+            self.device_resident = false;
+        }
+    }
+
+    /// Whole-prompt prefill into the cache. `tokens` is row-major
+    /// [batch, prompt_len]; `plen` the valid prefix per slot (>= 1).
+    /// Returns (logprobs [B, P-1], last_logits [B, vocab]) as literals.
+    pub fn prefill(
+        &mut self,
+        engine: &mut Engine,
+        tokens: &[i32],
+        plen: &[i32],
+    ) -> Result<(xla::Literal, xla::Literal)> {
+        let spec = self.variant.program("prefill")?;
+        let p = spec.prompt_len.ok_or_else(|| anyhow!("prefill spec missing prompt_len"))?;
+        if tokens.len() != self.batch * p || plen.len() != self.batch {
+            bail!("prefill expects {}x{} tokens (+{} lens)", self.batch, p, self.batch);
+        }
+        let expected = spec.extra_outputs.len() + spec.cache.len();
+        let tok_lit = lit_i32(tokens, &[self.batch, p])?;
+        let plen_lit = lit_i32(plen, &[self.batch])?;
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(self.model_lits.len() + 2);
+        inputs.extend(self.model_lits.iter());
+        inputs.push(&tok_lit);
+        inputs.push(&plen_lit);
+        let exe = engine.load_program(self.manifest, self.variant, "prefill")?;
+        let bufs = Engine::run_buffers(exe, &inputs)?;
+        let mut outs = Engine::first_device_outputs(bufs, "prefill")?;
+        if self.device_resident && outs.len() == expected {
+            let cache = outs.split_off(spec.extra_outputs.len());
+            let logprobs = outs[0].to_literal_sync().context("prefill logprobs")?;
+            let last = outs[1].to_literal_sync().context("prefill last_logits")?;
+            self.cache = CacheState::Device(cache);
+            return Ok((logprobs, last));
+        }
+        let mut lits = if outs.len() == expected {
+            // untupled but host mode requested: fetch everything
+            let mut lits = Vec::with_capacity(outs.len());
+            for b in &outs {
+                lits.push(b.to_literal_sync().context("prefill output")?);
+            }
+            lits
+        } else {
+            // single tuple buffer: decompose on host, stay in host mode
+            self.demote("prefill returned a tuple output (old-style artifact)");
+            Engine::outputs_to_literals(vec![outs], expected, false)?
+        };
+        let cache = lits.split_off(spec.extra_outputs.len());
+        self.cache = CacheState::Host(cache);
+        let logprobs = lits.swap_remove(0);
+        let last = lits.swap_remove(0);
+        Ok((logprobs, last))
+    }
+
+    /// One decode step: per-slot next token, position, and reset flag.
+    /// Returns the logits literal [batch, vocab].
+    pub fn step(
+        &mut self,
+        engine: &mut Engine,
+        tokens: &[i32],
+        pos: &[i32],
+        reset: &[i32],
+    ) -> Result<xla::Literal> {
+        if tokens.len() != self.batch || pos.len() != self.batch || reset.len() != self.batch {
+            bail!("decode step expects {} slots", self.batch);
+        }
+        let spec = self.variant.program(&self.step_name)?;
+        let n_extra = spec.extra_outputs.len();
+        let expected = n_extra + spec.cache.len();
+        let tok_lit = lit_i32(tokens, &[self.batch])?;
+        let pos_lit = lit_i32(pos, &[self.batch])?;
+        let rst_lit = lit_i32(reset, &[self.batch])?;
+        let step_name = self.step_name.clone();
+
+        if self.device_resident {
+            return self
+                .device_step(engine, &step_name, &tok_lit, &pos_lit, &rst_lit, n_extra, expected);
+        }
+
+        // host path: every leaf as a literal, outputs fetched per step
+        let cache_lits = match &self.cache {
+            CacheState::Host(lits) => lits,
+            CacheState::Device(_) => unreachable!("device cache in host path"),
+        };
+        let mut inputs: Vec<&xla::Literal> =
+            Vec::with_capacity(self.model_lits.len() + 3 + cache_lits.len());
+        inputs.extend(self.model_lits.iter());
+        inputs.push(&tok_lit);
+        inputs.push(&pos_lit);
+        inputs.push(&rst_lit);
+        inputs.extend(cache_lits.iter());
+        let exe = engine.load_program(self.manifest, self.variant, &step_name)?;
+        let mut lits = Engine::run(exe, &inputs, expected, spec.untupled)?;
+        let cache = lits.split_off(spec.extra_outputs.len());
+        self.cache = CacheState::Host(cache);
+        Ok(lits.swap_remove(0))
+    }
+
+    /// Device-resident step: K/V stays on device between tokens. If the
+    /// runtime hands back a tuple output instead of separable leaves, the
+    /// session decomposes it once, syncs the cache to the host, and
+    /// demotes itself so later steps go through the host path.
+    #[allow(clippy::too_many_arguments)]
+    fn device_step(
+        &mut self,
+        engine: &mut Engine,
+        step_name: &str,
+        tok: &xla::Literal,
+        pos: &xla::Literal,
+        rst: &xla::Literal,
+        n_extra: usize,
+        expected: usize,
+    ) -> Result<xla::Literal> {
+        // lazily move weights + cache onto the device
+        if self.model_bufs.is_none() {
+            let mut bufs = Vec::with_capacity(self.model_lits.len());
+            for l in &self.model_lits {
+                bufs.push(engine.to_device(l)?);
+            }
+            self.model_bufs = Some(bufs);
+        }
+        if let CacheState::Host(lits) = &self.cache {
+            let mut bufs = Vec::with_capacity(lits.len());
+            for l in lits {
+                bufs.push(engine.to_device(l)?);
+            }
+            self.cache = CacheState::Device(bufs);
+        }
+        let tok_b = engine.to_device(tok)?;
+        let pos_b = engine.to_device(pos)?;
+        let rst_b = engine.to_device(rst)?;
+        let exe = engine.load_program(self.manifest, self.variant, step_name)?;
+        let model = self.model_bufs.as_ref().unwrap();
+        let cache = match &self.cache {
+            CacheState::Device(bufs) => bufs,
+            CacheState::Host(_) => unreachable!(),
+        };
+        let mut inputs: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(model.len() + 3 + cache.len());
+        inputs.extend(model.iter());
+        inputs.push(&tok_b);
+        inputs.push(&pos_b);
+        inputs.push(&rst_b);
+        inputs.extend(cache.iter());
+        let bufs = Engine::run_on_buffers(exe, &inputs)?;
+        let mut outs = Engine::first_device_outputs(bufs, "decode_step")?;
+        if outs.len() == expected {
+            let cache = outs.split_off(n_extra);
+            let logits = outs[0].to_literal_sync().context("decode logits")?;
+            self.cache = CacheState::Device(cache);
+            return Ok(logits);
+        }
+        // tuple output: decompose once, keep going on the host
+        let mut lits = Engine::outputs_to_literals(vec![outs], expected, false)?;
+        let cache = lits.split_off(n_extra);
+        self.cache = CacheState::Host(cache);
+        self.demote("decode_step returned a tuple output (old-style artifact)");
+        Ok(lits.swap_remove(0))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// generation driver (the `mosa generate` CLI)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct GenerateOptions {
+    pub max_new: usize,
+    pub policy: SamplePolicy,
+    pub seed: u64,
+    pub eos: Option<i32>,
+    /// batch-prefill the first wave of prompts when the artifact has a
+    /// prefill program (admissions after that stream through decode_step)
+    pub use_prefill: bool,
+    pub device_resident: bool,
+}
+
+impl Default for GenerateOptions {
+    fn default() -> Self {
+        GenerateOptions {
+            max_new: 32,
+            policy: SamplePolicy::Greedy,
+            seed: 0,
+            eos: None,
+            use_prefill: true,
+            device_resident: true,
+        }
+    }
+}
+
+/// Serve `requests` to completion through a continuous batcher; returns
+/// finished sequences in retirement order.
+pub fn generate(
+    engine: &mut Engine,
+    manifest: &Manifest,
+    variant: &Variant,
+    state: TrainState,
+    requests: Vec<SeqRequest>,
+    opts: &GenerateOptions,
+) -> Result<Vec<FinishedSeq>> {
+    let mut session =
+        DecodeSession::from_state(manifest, variant, "decode_step", state, opts.device_resident)?;
+    let mut rng = crate::util::rng::Pcg::seeded(opts.seed ^ 0xdec0de);
+    let b = session.batch;
+    let vocab = variant.config.vocab;
+    let cap = session.capacity;
+    let mut batcher = ContinuousBatcher::new(b, opts.eos);
+    for mut r in requests {
+        // the cache holds `cap` positions; writes beyond it are dropped by
+        // design (static shapes), which would silently condition later
+        // tokens on a truncated context — clamp instead, loudly
+        if r.prompt.len() > cap {
+            log::warn!(
+                "[{}] request {}: prompt {} tokens > capacity {}, truncating",
+                variant.name,
+                r.id,
+                r.prompt.len(),
+                cap
+            );
+            r.prompt.truncate(cap);
+        }
+        let budget = cap - r.prompt.len();
+        if r.max_new > budget {
+            log::warn!(
+                "[{}] request {}: prompt {} + max_new {} exceeds capacity {}, clamping to {}",
+                variant.name,
+                r.id,
+                r.prompt.len(),
+                r.max_new,
+                cap,
+                budget
+            );
+            r.max_new = budget;
+        }
+        batcher.submit(r);
+    }
+    let mut finished = Vec::new();
+
+    // fast path: batch-prefill the first wave
+    if opts.use_prefill && variant.programs.contains_key("prefill") {
+        let p = variant.program("prefill")?.prompt_len.unwrap_or(variant.config.seq_len);
+        if batcher.admit() > 0 {
+            let (tokens, plen) = batcher.prefill_wave(p);
+            let (_, last) = session.prefill(engine, &tokens, &plen)?;
+            let logits = to_vec_f32(&last)?;
+            let sampled: Vec<i32> = (0..b)
+                .map(|i| sample_row(&logits[i * vocab..(i + 1) * vocab], &opts.policy, &mut rng))
+                .collect();
+            finished.extend(batcher.advance(&sampled));
+        }
+    }
+
+    let (mut toks, mut pos, mut rst) = (Vec::new(), Vec::new(), Vec::new());
+    loop {
+        batcher.admit();
+        if batcher.is_done() {
+            break;
+        }
+        batcher.next_inputs(&mut toks, &mut pos, &mut rst);
+        let logits_lit = session.step(engine, &toks, &pos, &rst)?;
+        let logits = to_vec_f32(&logits_lit)?;
+        let sampled: Vec<i32> = (0..b)
+            .map(|i| sample_row(&logits[i * vocab..(i + 1) * vocab], &opts.policy, &mut rng))
+            .collect();
+        finished.extend(batcher.advance(&sampled));
+    }
+    Ok(finished)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(
+        n_dense: usize,
+        window: usize,
+        n_sparse: usize,
+        kind: &str,
+        k: usize,
+        layers: usize,
+    ) -> ModelCfg {
+        ModelCfg {
+            vocab: 64,
+            d_model: 32,
+            d_head: 8,
+            d_ff: 64,
+            n_layers: layers,
+            seq_len: 64,
+            n_dense,
+            window,
+            n_sparse,
+            sparse_kind: kind.to_string(),
+            k_sel: k,
+        }
+    }
+
+    #[test]
+    fn prop_cache_payload_matches_kvcache_accounting() {
+        // the ISSUE acceptance property: measured KvCacheBuffers payload
+        // bytes == kvcache::kv_bytes_total, for random configs
+        let mut rng = crate::util::rng::Pcg::seeded(77);
+        for _ in 0..200 {
+            let kind = ["none", "mosa", "fixed", "routing"][rng.usize_below(4)];
+            let c = cfg(
+                rng.usize_below(6),
+                if rng.below(2) == 0 { 0 } else { 16 << rng.below(2) },
+                if kind == "none" { 0 } else { 1 + rng.usize_below(20) },
+                kind,
+                8 << rng.below(3),
+                1 + rng.usize_below(5),
+            );
+            let capacity = 128 << rng.below(4);
+            let batch = 1 + rng.usize_below(8);
+            let layout = cache_layout(&c, batch, capacity);
+            let kv = KvCacheBuffers::alloc(&layout, batch).unwrap();
+            assert_eq!(
+                kv.payload_bytes_per_seq(),
+                crate::kvcache::kv_bytes_total(&c, capacity),
+                "cfg {c:?} capacity {capacity}"
+            );
+            assert_eq!(kv.payload_bytes(), kv.payload_bytes_per_seq() * batch as u64);
+            assert!(kv.total_bytes() >= kv.payload_bytes());
+        }
+    }
+
+    #[test]
+    fn micro_pair_hits_the_table2_target() {
+        // micro_mosa_r8 vs micro_dense at T=1024: < 60% of the dense bytes
+        let dense = cfg(4, 0, 0, "none", 0, 2);
+        let mosa = cfg(2, 0, 20, "mosa", 16, 2);
+        let d = KvCacheBuffers::alloc(&cache_layout(&dense, 8, 1024), 8).unwrap();
+        let m = KvCacheBuffers::alloc(&cache_layout(&mosa, 8, 1024), 8).unwrap();
+        let ratio = m.payload_bytes_per_seq() as f64 / d.payload_bytes_per_seq() as f64;
+        assert!(ratio < 0.60, "ratio {ratio}");
+    }
+
+    #[test]
+    fn layout_orders_leaves_per_layer_alphabetically() {
+        let c = cfg(2, 0, 3, "mosa", 8, 2);
+        let names: Vec<&str> =
+            cache_layout(&c, 2, 64).iter().map(|l| l.spec.path.as_str()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "layers[0].dense_k",
+                "layers[0].dense_pos",
+                "layers[0].dense_v",
+                "layers[0].mosa_k",
+                "layers[0].mosa_pos",
+                "layers[0].mosa_pri",
+                "layers[0].mosa_v",
+                "layers[1].dense_k",
+                "layers[1].dense_pos",
+                "layers[1].dense_v",
+                "layers[1].mosa_k",
+                "layers[1].mosa_pos",
+                "layers[1].mosa_pri",
+                "layers[1].mosa_v",
+            ]
+        );
+    }
+
+    #[test]
+    fn sentinel_matches_python_side() {
+        assert_eq!(POS_SENTINEL, 1 << 30);
+    }
+}

@@ -1,0 +1,83 @@
+//! Host-side sampling over the logits a decode step returns.
+//!
+//! The logits literal is [batch, vocab] f32; sampling is per-row. Greedy
+//! is deterministic argmax; top-k renormalises the k largest logits at a
+//! temperature and draws from them (the standard serving default).
+
+use crate::util::rng::Pcg;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SamplePolicy {
+    Greedy,
+    TopK { k: usize, temperature: f32 },
+}
+
+/// Sample one token id from a single row of logits.
+pub fn sample_row(logits: &[f32], policy: &SamplePolicy, rng: &mut Pcg) -> i32 {
+    match policy {
+        SamplePolicy::Greedy => argmax(logits),
+        SamplePolicy::TopK { k, temperature } => top_k(logits, *k, *temperature, rng),
+    }
+}
+
+fn argmax(logits: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, &x) in logits.iter().enumerate() {
+        if x > logits[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+fn top_k(logits: &[f32], k: usize, temperature: f32, rng: &mut Pcg) -> i32 {
+    let k = k.max(1).min(logits.len());
+    let temp = temperature.max(1e-4);
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap_or(std::cmp::Ordering::Equal));
+    idx.truncate(k);
+    // softmax over the kept logits at the given temperature
+    let m = logits[idx[0]];
+    let weights: Vec<f64> = idx.iter().map(|&i| (((logits[i] - m) / temp) as f64).exp()).collect();
+    idx[rng.weighted(&weights)] as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_is_argmax() {
+        let mut rng = Pcg::seeded(1);
+        let logits = vec![0.1, 2.0, -1.0, 1.9];
+        assert_eq!(sample_row(&logits, &SamplePolicy::Greedy, &mut rng), 1);
+    }
+
+    #[test]
+    fn top_k_stays_in_support() {
+        let mut rng = Pcg::seeded(2);
+        let logits = vec![5.0, 4.0, -100.0, -100.0, 4.5];
+        for _ in 0..100 {
+            let t = sample_row(
+                &logits,
+                &SamplePolicy::TopK { k: 3, temperature: 1.0 },
+                &mut rng,
+            );
+            assert!(matches!(t, 0 | 1 | 4), "sampled {t}");
+        }
+    }
+
+    #[test]
+    fn low_temperature_approaches_greedy() {
+        let mut rng = Pcg::seeded(3);
+        let logits = vec![1.0, 3.0, 2.0];
+        for _ in 0..50 {
+            let t = sample_row(
+                &logits,
+                &SamplePolicy::TopK { k: 3, temperature: 1e-4 },
+                &mut rng,
+            );
+            assert_eq!(t, 1);
+        }
+    }
+}

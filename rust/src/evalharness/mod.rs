@@ -57,7 +57,7 @@ pub fn evaluate_tasks(
             inputs.extend(state.model_leaves(variant).iter());
             inputs.push(&batch_lit);
             let exe = engine.load_program(manifest, variant, "score_short")?;
-            let outs = Engine::run(exe, &inputs)?;
+            let outs = Engine::run(exe, &inputs, 1, spec.untupled)?;
             let lp = outs[0].to_vec::<f32>()?;
             // lp[j] = log p(token j+1 | <= j); option span is the tail
             let start = prompt_len.saturating_sub(1).min(used.saturating_sub(1));

@@ -54,6 +54,7 @@ pub fn run_variant(
         checkpoint: None,
         eval_every: 0,
         prefetch: rc.prefetch,
+        device_resident: rc.device_resident,
     };
     let mut sampler = train_ds.sampler(rc.seed ^ 0x7ea1);
     let (state, mut metrics) = trainer.train(engine, &mut sampler, &opts)?;

@@ -7,6 +7,12 @@
 //! window; routing heads (Q=K shared) cache T keys but reuse them as
 //! queries. We also model training activation memory to explain the
 //! Table 2 memory column.
+//!
+//! Since the decode PR this model is no longer only closed-form: the
+//! serving path (`crate::decode`) allocates real per-head cache buffers
+//! whose payload bytes must equal `kv_bytes_total` *exactly*
+//! (property-tested there, re-checked at runtime by `mosa perf`'s
+//! BENCH_decode harness).
 
 use crate::runtime::manifest::ModelCfg;
 

@@ -31,6 +31,29 @@
 //! - **Perf harness** (`perf`, `mosa perf`): times tokenizer scaling
 //!   (S vs 4S), batch prep, prefetch on/off overlap, and real steps/sec,
 //!   emitting `BENCH_pipeline.json` so regressions are caught per-PR.
+//!
+//! # Serving path (decode)
+//!
+//! The paper's resource headline (Table 2) is an *inference* claim —
+//! smaller KV-cache, faster wall-clock — so the repo carries a second
+//! measured hot path next to training (see PERF.md §Decode path):
+//!
+//! - **Cache-aware programs** (`python/compile/decode.py`): `prefill`
+//!   lowers the whole-prompt forward plus KV-cache extraction for every
+//!   head kind (dense append / local ring / MoSA streaming expert-choice /
+//!   fixed grid / routing nearest-centroid); `decode_step` advances one
+//!   token per sequence slot against static-shape caches recorded in the
+//!   manifest's per-program `cache` section.
+//! - **Device-resident serving** (`decode`): `DecodeSession` feeds the
+//!   cache buffers PJRT returns straight back into the next dispatch, so
+//!   K/V bytes never cross the host boundary between tokens; the
+//!   `ContinuousBatcher` admits/retires sequences into fixed batch slots
+//!   with per-slot positions and in-graph cache invalidation; greedy and
+//!   top-k sampling run on the returned logits (`mosa generate`).
+//! - **Decode harness** (`perf::decode`, part of `mosa perf`): emits
+//!   `BENCH_decode.json` — prefill ms, per-token ms vs context capacity,
+//!   tokens/sec at batch 1/8/32, and measured cache bytes dense-vs-MoSA
+//!   matching `kvcache::kv_bytes_total` exactly.
 
 pub mod util;
 pub mod config;
@@ -39,6 +62,7 @@ pub mod data;
 pub mod runtime;
 pub mod coordinator;
 pub mod kvcache;
+pub mod decode;
 pub mod evalharness;
 pub mod experiments;
 pub mod perf;

@@ -6,7 +6,8 @@
 //!   flops        regenerate the paper's analytic tables (Table 4 / 5)
 //!   kv           KV-cache accounting for a variant (Table 2 column)
 //!   data         inspect the data pipeline (corpus/BPE/batches)
-//!   perf         host-side perf harness -> BENCH_pipeline.json
+//!   perf         perf harnesses -> BENCH_pipeline.json + BENCH_decode.json
+//!   generate     batched autoregressive decoding from a checkpoint
 //!   downstream   run the synthetic zero-shot suite on a checkpoint
 //!   list         list manifest variants
 //!
@@ -18,6 +19,7 @@ use anyhow::{bail, Result};
 use mosa::config::RunConfig;
 use mosa::coordinator::Trainer;
 use mosa::data::{Bpe, CorpusGen, SequentialWindows, TokenDataset};
+use mosa::decode::{generate, GenerateOptions, SamplePolicy, SeqRequest};
 use mosa::evalharness::{self, make_tasks, TaskKind};
 use mosa::experiments::{build_datasets, run_variant};
 use mosa::flops::paper;
@@ -47,6 +49,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         "kv" => cmd_kv(args),
         "data" => cmd_data(args),
         "perf" => cmd_perf(args),
+        "generate" => cmd_generate(args),
         "downstream" => cmd_downstream(args),
         "list" => cmd_list(args),
         "report" => cmd_report(args),
@@ -68,10 +71,19 @@ fn print_help() {
          \x20 flops      [--table4] [--table5]\n\
          \x20 kv         --variant <name> [--ctx T]\n\
          \x20 data       [--corpus-bytes N] [--vocab V]\n\
-         \x20 perf       [--smoke] [--corpus-bytes N] [--threads N] [--out path]\n\
+         \x20 perf       [--smoke] [--corpus-bytes N] [--threads N] [--out path] [--decode-out path]\n\
+         \x20 generate   --variant <name> [--ckpt path] [--prompt text] [--n-seqs N]\n\
+         \x20            [--max-new N] [--top-k K] [--temp T] [--seed S] [--no-device-resident]\n\
          \x20 downstream --variant <name> --ckpt <path> [--n 50]\n\
          \x20 list       [--artifacts dir]\n"
     );
+}
+
+/// The tokenizer the serving/eval CLIs need must match training: rebuilt
+/// deterministically from the same synthetic corpus stream.
+fn training_bpe(rc: &RunConfig, vocab: usize) -> Result<Bpe> {
+    let text = CorpusGen::new(rc.seed + 1000).generate(rc.corpus_bytes);
+    Bpe::train(text.as_bytes(), vocab)
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -175,8 +187,63 @@ fn cmd_perf(args: &Args) -> Result<()> {
     cfg.vocab = args.get_usize("vocab", cfg.vocab);
     cfg.threads = args.get_usize("threads", cfg.threads);
     cfg.out_path = args.get_or("out", &cfg.out_path);
+    cfg.decode_out_path = args.get_or("decode-out", &cfg.decode_out_path);
     cfg.artifacts_dir = args.get_or("artifacts", &cfg.artifacts_dir);
     mosa::perf::run(&cfg)?;
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let rc = RunConfig::from_args(args);
+    let name = args.get("variant").unwrap_or("micro_mosa_r8");
+    let manifest = Manifest::load(&rc.artifacts_dir)?;
+    let variant = manifest.variant(name)?;
+    let mut engine = Engine::cpu()?;
+    // weights: a trained checkpoint when given, otherwise the host init
+    // (random weights — useful to exercise the serving path end-to-end)
+    let state = match args.get("ckpt") {
+        Some(ckpt) => TrainState::load(variant, ckpt)?,
+        None => {
+            log::warn!("no --ckpt: generating from randomly initialised weights");
+            TrainState::init_host(variant, rc.seed)?
+        }
+    };
+    let bpe = training_bpe(&rc, variant.config.vocab)?;
+    let prompt = args.get_or("prompt", "the reg ");
+    let prompt_ids: Vec<i32> = bpe.encode(prompt.as_bytes()).iter().map(|&x| x as i32).collect();
+    let n_seqs = args.get_usize("n-seqs", variant.program("decode_step")?.batch.unwrap_or(variant.batch));
+    let opts = GenerateOptions {
+        max_new: args.get_usize("max-new", 32),
+        policy: match args.get("top-k") {
+            Some(_) => SamplePolicy::TopK {
+                k: args.get_usize("top-k", 8),
+                temperature: args.get_f64("temp", 1.0) as f32,
+            },
+            None => SamplePolicy::Greedy,
+        },
+        seed: args.get_u64("seed", rc.seed),
+        eos: None,
+        use_prefill: !args.has("no-prefill"),
+        device_resident: rc.device_resident,
+    };
+    let requests: Vec<SeqRequest> = (0..n_seqs)
+        .map(|i| SeqRequest { id: i as u64, prompt: prompt_ids.clone(), max_new: opts.max_new })
+        .collect();
+    let t0 = std::time::Instant::now();
+    let finished = generate(&mut engine, &manifest, variant, state, requests, &opts)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let total_tokens: usize = finished.iter().map(|f| f.generated.len()).sum();
+    for f in &finished {
+        let bytes: Vec<u8> = f.generated.iter().map(|&t| t.max(0) as u32).flat_map(|t| bpe.decode(&[t])).collect();
+        println!("[seq {}] {:?}", f.id, String::from_utf8_lossy(&bytes));
+    }
+    println!(
+        "generated {} tokens across {} sequences in {:.2}s ({:.1} tok/s)",
+        total_tokens,
+        finished.len(),
+        wall,
+        total_tokens as f64 / wall.max(1e-9)
+    );
     Ok(())
 }
 
@@ -189,9 +256,7 @@ fn cmd_downstream(args: &Args) -> Result<()> {
     let variant = manifest.variant(name)?;
     let mut engine = Engine::cpu()?;
     let state = TrainState::load(variant, ckpt)?;
-    // the BPE must match training: rebuild deterministically from the corpus
-    let text = CorpusGen::new(rc.seed + 1000).generate(rc.corpus_bytes);
-    let bpe = Bpe::train(text.as_bytes(), variant.config.vocab)?;
+    let bpe = training_bpe(&rc, variant.config.vocab)?;
     for kind in TaskKind::all() {
         let tasks = make_tasks(kind, n, rc.seed + 7);
         let acc = evalharness::evaluate_tasks(&mut engine, &manifest, variant, &state, &bpe, &tasks)?;

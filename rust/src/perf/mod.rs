@@ -4,12 +4,18 @@
 //! present, and emits `BENCH_pipeline.json` so the perf trajectory is
 //! tracked across PRs (see PERF.md for how to read it).
 //!
+//! The decode-side twin lives in `perf::decode` (`BENCH_decode.json`):
+//! prefill/per-token latency, tokens/sec across batch sizes, measured
+//! KV-cache bytes dense-vs-MoSA — the wall-clock form of Table 2.
+//!
 //! Scaling probes run each tokenizer path at a base corpus size S and at
 //! 4S: a linear-ish implementation grows ~4× in wall-clock, the seed's
 //! quadratic one ~16×. The prefetch probe drives the pipeline against a
 //! simulated fixed-cost dispatch in both modes, so the overlap win is
 //! measurable without artifacts; with artifacts the real trainer is also
 //! timed prefetch-off vs prefetch-on.
+
+pub mod decode;
 
 use std::time::{Duration, Instant};
 
@@ -30,6 +36,8 @@ pub struct PerfConfig {
     pub corpus_bytes: usize,
     pub vocab: usize,
     pub out_path: String,
+    /// decode harness report (empty = skip the decode probes)
+    pub decode_out_path: String,
     pub threads: usize,
     pub artifacts_dir: String,
     /// tiny sizes for the CI smoke run
@@ -42,6 +50,7 @@ impl Default for PerfConfig {
             corpus_bytes: 150_000,
             vocab: 512,
             out_path: "BENCH_pipeline.json".into(),
+            decode_out_path: "BENCH_decode.json".into(),
             threads: host_threads(),
             artifacts_dir: "artifacts".into(),
             smoke: false,
@@ -72,7 +81,19 @@ fn spin_for(d: Duration) {
     }
 }
 
-/// Run every probe and write `cfg.out_path`; returns the report Json.
+fn write_report(path: &str, report: &Json) -> Result<()> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, report.to_string_pretty()).with_context(|| format!("writing {path}"))?;
+    println!("report -> {path}");
+    Ok(())
+}
+
+/// Run every probe; writes `cfg.out_path` (host pipeline) and
+/// `cfg.decode_out_path` (decode path). Returns the pipeline report Json.
 pub fn run(cfg: &PerfConfig) -> Result<Json> {
     println!("== mosa perf ({} mode) ==", if cfg.smoke { "smoke" } else { "full" });
     let tokenizer = bench_tokenizer(cfg)?;
@@ -88,14 +109,11 @@ pub fn run(cfg: &PerfConfig) -> Result<Json> {
         ("prefetch", prefetch),
         ("train", train),
     ]);
-    if let Some(dir) = std::path::Path::new(&cfg.out_path).parent() {
-        if !dir.as_os_str().is_empty() {
-            std::fs::create_dir_all(dir)?;
-        }
+    write_report(&cfg.out_path, &report)?;
+    if !cfg.decode_out_path.is_empty() {
+        let dreport = decode::bench_decode(cfg);
+        write_report(&cfg.decode_out_path, &dreport)?;
     }
-    std::fs::write(&cfg.out_path, report.to_string_pretty())
-        .with_context(|| format!("writing {}", cfg.out_path))?;
-    println!("report -> {}", cfg.out_path);
     Ok(report)
 }
 
@@ -273,7 +291,7 @@ fn bench_train_with(manifest: &Manifest, cfg: &PerfConfig) -> Result<Json> {
     let mut engine = Engine::cpu()?;
     let steps = if cfg.smoke { 8 } else { 24 };
     let vocab = v.config.vocab as u32;
-    let make_opts = |steps: u64, prefetch: bool| TrainOptions {
+    let make_opts = |steps: u64, prefetch: bool, device_resident: bool| TrainOptions {
         steps,
         schedule: LrSchedule::paper_like(1e-3, 2, steps),
         seed: 0,
@@ -282,6 +300,7 @@ fn bench_train_with(manifest: &Manifest, cfg: &PerfConfig) -> Result<Json> {
         checkpoint: None,
         eval_every: 0,
         prefetch,
+        device_resident,
     };
     // warmup: populate the XLA compile cache so neither A/B arm pays it
     {
@@ -289,10 +308,12 @@ fn bench_train_with(manifest: &Manifest, cfg: &PerfConfig) -> Result<Json> {
         let mut rng = Pcg::seeded(3);
         let mut src =
             move |b: usize, t: usize| (0..b * t).map(|_| rng.below(vocab) as i32).collect::<Vec<i32>>();
-        trainer.train(&mut engine, &mut src, &make_opts(2, false))?;
+        trainer.train(&mut engine, &mut src, &make_opts(2, false, false))?;
     }
     let mut rows = Vec::new();
-    for prefetch in [false, true] {
+    // three arms: the seed path, +prefetch, +prefetch+device-residency —
+    // so both host optimisations show up as separate wall-clock deltas
+    for (prefetch, device_resident) in [(false, false), (true, false), (true, true)] {
         let trainer = Trainer::new(manifest, v);
         let mut rng = Pcg::seeded(4);
         let mut src =
@@ -301,19 +322,20 @@ fn bench_train_with(manifest: &Manifest, cfg: &PerfConfig) -> Result<Json> {
         // stall (it is measured around the dispatch only), so wall time is
         // the number that actually moves when prefetch removes the stall
         let t0 = Instant::now();
-        let (_, metrics) = trainer.train(&mut engine, &mut src, &make_opts(steps, prefetch))?;
+        let (_, metrics) =
+            trainer.train(&mut engine, &mut src, &make_opts(steps, prefetch, device_resident))?;
         let wall_ms_per_step = t0.elapsed().as_secs_f64() * 1e3 / steps as f64;
         let dispatch_ms = metrics.mean_ms(4);
-        let stall_ms_total: f64 = metrics
-            .notes
-            .iter()
-            .find(|(k, _)| k == "batch_wait_ms_total")
-            .and_then(|(_, val)| val.parse().ok())
-            .unwrap_or(0.0);
+        let note = |k: &str| -> Option<String> {
+            metrics.notes.iter().find(|(kk, _)| kk == k).map(|(_, val)| val.clone())
+        };
+        let stall_ms_total: f64 = note("batch_wait_ms_total").and_then(|x| x.parse().ok()).unwrap_or(0.0);
+        let resident_on = note("device_resident").map(|x| x == "on").unwrap_or(false);
         println!(
-            "train[{}] {}: {:.1} ms/step wall ({:.2} steps/s), dispatch {:.1} ms, batch stall \
+            "train[{}{}] {}: {:.1} ms/step wall ({:.2} steps/s), dispatch {:.1} ms, batch stall \
              {:.2} ms/step",
             if prefetch { "prefetch" } else { "inline" },
+            if resident_on { "+resident" } else { "" },
             name,
             wall_ms_per_step,
             1e3 / wall_ms_per_step,
@@ -323,6 +345,8 @@ fn bench_train_with(manifest: &Manifest, cfg: &PerfConfig) -> Result<Json> {
         rows.push(Json::obj(vec![
             ("variant", Json::str(name)),
             ("prefetch", Json::Bool(prefetch)),
+            ("device_resident_requested", Json::Bool(device_resident)),
+            ("device_resident_effective", Json::Bool(resident_on)),
             ("steps", Json::num(steps as f64)),
             ("wall_ms_per_step", Json::num(wall_ms_per_step)),
             ("steps_per_sec", Json::num(1e3 / wall_ms_per_step)),
@@ -344,7 +368,13 @@ mod tests {
         cfg.vocab = 280;
         let out = std::env::temp_dir().join("mosa_perf_smoke.json");
         cfg.out_path = out.to_string_lossy().into_owned();
+        let dout = std::env::temp_dir().join("mosa_perf_smoke_decode.json");
+        cfg.decode_out_path = dout.to_string_lossy().into_owned();
         let report = run(&cfg).unwrap();
+        // the decode twin must exist and parse even without artifacts
+        let dbody = std::fs::read_to_string(&dout).unwrap();
+        let dparsed = Json::parse(&dbody).unwrap();
+        assert_eq!(dparsed.get("schema").unwrap().as_str().unwrap(), "mosa-bench-decode-v1");
         let body = std::fs::read_to_string(&out).unwrap();
         let parsed = Json::parse(&body).unwrap();
         assert_eq!(parsed, report);

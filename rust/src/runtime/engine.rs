@@ -11,7 +11,7 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use super::manifest::{Manifest, Variant};
 
@@ -66,28 +66,96 @@ impl Engine {
         self.load(path)
     }
 
+    /// Copy a host literal onto the device (PJRT buffer). The decode and
+    /// device-resident train paths upload only the small per-step inputs
+    /// (token / position / batch / lr) this way; weights and KV-caches
+    /// stay resident as the buffers PJRT returned.
+    pub fn to_device(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_literal(None, lit)
+            .context("uploading literal to device")
+    }
+
+    /// First device's output buffers, with a contextual error instead of
+    /// an unchecked `bufs[0][0]` index when PJRT hands back nothing.
+    pub fn first_device_outputs(
+        bufs: Vec<Vec<xla::PjRtBuffer>>,
+        what: &str,
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        let dev = bufs
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("{what}: PJRT execute returned no per-device output list"))?;
+        if dev.is_empty() {
+            bail!("{what}: PJRT execute returned an empty output list for device 0");
+        }
+        Ok(dev)
+    }
+
+    /// Convert one program invocation's output buffers into flat literals,
+    /// handling both lowering conventions:
+    /// - `untupled` artifacts (`ProgramSpec::untupled`, return_tuple=False):
+    ///   one buffer per output leaf, fetched directly;
+    /// - tuple artifacts (pre-decode manifests, return_tuple=True): a
+    ///   single buffer holding one tuple literal — decomposed on the host
+    ///   exactly like the seed runtime did.
+    /// `expected` is the flat output arity from the manifest.
+    pub fn outputs_to_literals(
+        bufs: Vec<Vec<xla::PjRtBuffer>>,
+        expected: usize,
+        untupled: bool,
+    ) -> Result<Vec<xla::Literal>> {
+        let dev = Self::first_device_outputs(bufs, "outputs")?;
+        if untupled && dev.len() == expected {
+            return dev
+                .iter()
+                .map(|b| b.to_literal_sync().context("fetching output leaf"))
+                .collect();
+        }
+        if dev.len() == 1 {
+            let lit = dev[0].to_literal_sync().context("fetching result")?;
+            let outs = lit.to_tuple().context("decomposing output tuple")?;
+            if outs.len() != expected {
+                bail!("program returned {} leaves, manifest expects {}", outs.len(), expected);
+            }
+            return Ok(outs);
+        }
+        bail!("program returned {} output buffers, manifest expects {}", dev.len(), expected)
+    }
+
     /// Execute a compiled program on flat literal inputs; returns the flat
-    /// list of output literals (the 1-tuple output decomposed). Generic
-    /// over `Borrow<Literal>` so callers pass `&Literal` references and
-    /// avoid host-copying the train state every step (§Perf L3-1).
+    /// list of output literals. Generic over `Borrow<Literal>` so callers
+    /// pass `&Literal` references and avoid host-copying the train state
+    /// every step (§Perf L3-1). `expected` is the manifest's flat output
+    /// arity and `untupled` its lowering convention (see
+    /// `outputs_to_literals`).
     pub fn run<L: std::borrow::Borrow<xla::Literal>>(
         exe: &xla::PjRtLoadedExecutable,
         inputs: &[L],
+        expected: usize,
+        untupled: bool,
     ) -> Result<Vec<xla::Literal>> {
         let bufs = exe.execute::<L>(inputs).context("PJRT execute")?;
-        let lit = bufs[0][0].to_literal_sync().context("fetching result")?;
-        let outs = lit.to_tuple().context("decomposing output tuple")?;
-        Ok(outs)
+        Self::outputs_to_literals(bufs, expected, untupled)
     }
 
-    /// Execute and keep results on device (hot-path variant used by the
-    /// chunked trainer: the returned tuple buffer is immediately converted
-    /// once, so per-step conversions are amortised over the chunk).
+    /// Execute and keep results on device: the returned buffers can be fed
+    /// straight back into the next dispatch via `run_on_buffers`, so large
+    /// state (train leaves, KV-caches) never round-trips through the host.
     pub fn run_buffers<L: std::borrow::Borrow<xla::Literal>>(
         exe: &xla::PjRtLoadedExecutable,
         inputs: &[L],
     ) -> Result<Vec<Vec<xla::PjRtBuffer>>> {
         exe.execute::<L>(inputs).context("PJRT execute")
+    }
+
+    /// Execute with device-resident buffer inputs (the decode hot path and
+    /// the device-resident train loop).
+    pub fn run_on_buffers<B: std::borrow::Borrow<xla::PjRtBuffer>>(
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[B],
+    ) -> Result<Vec<Vec<xla::PjRtBuffer>>> {
+        exe.execute_b::<B>(inputs).context("PJRT execute (buffers)")
     }
 
     /// `run` plus wall-clock accounting: returns the outputs and the
@@ -97,9 +165,11 @@ impl Engine {
     pub fn run_timed<L: std::borrow::Borrow<xla::Literal>>(
         exe: &xla::PjRtLoadedExecutable,
         inputs: &[L],
+        expected: usize,
+        untupled: bool,
     ) -> Result<(Vec<xla::Literal>, u64)> {
         let t0 = Instant::now();
-        let outs = Self::run(exe, inputs)?;
+        let outs = Self::run(exe, inputs, expected, untupled)?;
         Ok((outs, t0.elapsed().as_nanos() as u64))
     }
 

@@ -29,6 +29,20 @@ impl LeafSpec {
     }
 }
 
+/// One KV-cache leaf of a decode-program family (`cache` section).
+///
+/// `kind` splits the layout into the KV payload (`"kv"`: the K/V/shared-QK
+/// vectors whose bytes are exactly `kvcache::kv_bytes_total`) and
+/// bookkeeping metadata (`"meta"`: slot positions / MoSA priorities).
+/// `init` is the empty-cache fill rule: "zeros" (payload), "sentinel"
+/// (positions — `decode::POS_SENTINEL` hides the slot from the causal
+/// mask) or "neg" (MoSA priorities -1, below every router score).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CacheLeaf {
+    pub spec: LeafSpec,
+    pub kind: String,
+}
+
 #[derive(Debug, Clone)]
 pub struct ProgramSpec {
     pub name: String,
@@ -37,6 +51,16 @@ pub struct ProgramSpec {
     pub extra_outputs: Vec<LeafSpec>,
     pub chunk: Option<usize>,    // train_chunk only
     pub seq_len: Option<usize>,  // score_short only
+    /// decode programs: batch slots, cache context capacity, prefill length
+    pub batch: Option<usize>,
+    pub capacity: Option<usize>,
+    pub prompt_len: Option<usize>,
+    /// KV-cache leaf layout (decode programs; input order appends these
+    /// after the extra inputs, output order after the extra outputs)
+    pub cache: Vec<CacheLeaf>,
+    /// lowered with return_tuple=False: PJRT hands back one buffer per
+    /// output leaf instead of a single tuple buffer (device residency)
+    pub untupled: bool,
 }
 
 #[derive(Debug, Clone)]
@@ -80,9 +104,19 @@ impl Variant {
     }
 
     pub fn program(&self, name: &str) -> Result<&ProgramSpec> {
-        self.programs
-            .get(name)
-            .ok_or_else(|| anyhow!("variant {} has no program '{}'", self.name, name))
+        self.programs.get(name).ok_or_else(|| {
+            anyhow!(
+                "variant {} has no program '{}' (available: {}). Rebuild the \
+                 artifacts if the program set changed (`make artifacts`).",
+                self.name,
+                name,
+                if self.programs.is_empty() {
+                    "none".to_string()
+                } else {
+                    self.programs.keys().cloned().collect::<Vec<_>>().join(", ")
+                }
+            )
+        })
     }
 }
 
@@ -172,6 +206,18 @@ impl Manifest {
                         None => Ok(vec![]),
                     }
                 };
+                let mut cache = Vec::new();
+                if let Some(arr) = pj.get("cache").and_then(Json::as_arr) {
+                    for l in arr {
+                        let spec = leaf_from_json(l)?;
+                        let kind = l
+                            .get("kind")
+                            .and_then(Json::as_str)
+                            .unwrap_or("kv")
+                            .to_string();
+                        cache.push(CacheLeaf { spec, kind });
+                    }
+                }
                 programs.insert(
                     pname.clone(),
                     ProgramSpec {
@@ -181,6 +227,11 @@ impl Manifest {
                         extra_outputs: parse_leaves("extra_outputs")?,
                         chunk: pj.get("chunk").and_then(Json::as_usize),
                         seq_len: pj.get("seq_len").and_then(Json::as_usize),
+                        batch: pj.get("batch").and_then(Json::as_usize),
+                        capacity: pj.get("capacity").and_then(Json::as_usize),
+                        prompt_len: pj.get("prompt_len").and_then(Json::as_usize),
+                        cache,
+                        untupled: pj.get("untupled").and_then(Json::as_bool).unwrap_or(false),
                     },
                 );
             }
@@ -249,7 +300,20 @@ mod tests {
             "programs": {"train": {"file": "t.train.hlo.txt",
               "extra_inputs": [{"name": "batch", "shape": [2, 9], "dtype": "i32"},
                                 {"name": "lr", "shape": [], "dtype": "f32"}],
-              "extra_outputs": [{"name": "loss", "shape": [], "dtype": "f32"}]}}
+              "extra_outputs": [{"name": "loss", "shape": [], "dtype": "f32"}]},
+              "decode_step": {"file": "t.decode_step.hlo.txt", "untupled": true,
+              "batch": 2, "capacity": 64,
+              "extra_inputs": [{"name": "token", "shape": [2], "dtype": "i32"},
+                                {"name": "pos", "shape": [2], "dtype": "i32"},
+                                {"name": "reset", "shape": [2], "dtype": "i32"}],
+              "extra_outputs": [{"name": "logits", "shape": [2, 16], "dtype": "f32"}],
+              "cache": [
+                {"path": "layers[0].mosa_k", "shape": [2, 1, 2, 4], "dtype": "f32",
+                 "kind": "kv", "init": "zeros"},
+                {"path": "layers[0].mosa_pos", "shape": [2, 1, 2], "dtype": "i32",
+                 "kind": "meta", "init": "sentinel"},
+                {"path": "layers[0].mosa_pri", "shape": [2, 1, 2], "dtype": "f32",
+                 "kind": "meta", "init": "neg"}]}}
         }]}"#
     }
 
@@ -266,8 +330,42 @@ mod tests {
         let p = v.program("train").unwrap();
         assert_eq!(p.extra_inputs[0].shape, vec![2, 9]);
         assert_eq!(p.extra_outputs[0].dtype, "f32");
+        assert!(!p.untupled, "legacy programs default to tuple lowering");
+        assert!(p.cache.is_empty());
         assert!(v.program("score").is_err());
         assert!(m.variant("nope").is_err());
+    }
+
+    #[test]
+    fn parses_decode_program_cache_section() {
+        let dir = std::env::temp_dir().join("mosa_manifest_decode_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), manifest_json()).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let v = m.variant("t").unwrap();
+        let p = v.program("decode_step").unwrap();
+        assert!(p.untupled);
+        assert_eq!(p.batch, Some(2));
+        assert_eq!(p.capacity, Some(64));
+        assert_eq!(p.cache.len(), 3);
+        assert_eq!(p.cache[0].kind, "kv");
+        assert_eq!(p.cache[0].spec.shape, vec![2, 1, 2, 4]);
+        assert_eq!(p.cache[1].spec.init, "sentinel");
+        assert_eq!(p.cache[2].spec.init, "neg");
+    }
+
+    #[test]
+    fn missing_program_error_lists_available() {
+        let dir = std::env::temp_dir().join("mosa_manifest_err_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), manifest_json()).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let v = m.variant("t").unwrap();
+        let msg = format!("{:#}", v.program("prefill").unwrap_err());
+        assert!(msg.contains("prefill"), "{msg}");
+        assert!(msg.contains("available: decode_step, train"), "{msg}");
+        let msg = format!("{:#}", m.hlo_path(v, "nope").unwrap_err());
+        assert!(msg.contains("available:"), "{msg}");
     }
 
     #[test]

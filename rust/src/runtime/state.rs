@@ -63,8 +63,9 @@ impl TrainState {
         if !variant.programs.contains_key("init") {
             return Self::init_host(variant, seed as u64);
         }
+        let spec = variant.program("init")?;
         let exe = engine.load_program(manifest, variant, "init")?;
-        let outs = Engine::run(exe, &[lit_scalar_i32(seed)])?;
+        let outs = Engine::run(exe, &[lit_scalar_i32(seed)], variant.n_train_leaves, spec.untupled)?;
         if outs.len() != variant.n_train_leaves {
             bail!(
                 "init produced {} leaves, manifest says {}",

@@ -30,6 +30,7 @@ fn opts(steps: u64) -> TrainOptions {
         checkpoint: None,
         eval_every: 0,
         prefetch: true,
+        device_resident: true,
     }
 }
 
@@ -204,6 +205,147 @@ fn failure_injection_bad_inputs() {
     let bytes = std::fs::read(&good).unwrap();
     std::fs::write(&good, &bytes[..bytes.len() / 2]).unwrap();
     assert!(TrainState::load(v, &good).is_err());
+}
+
+// -- decode path (artifact-gated like everything above; pre-decode
+// artifacts simply skip via the programs check) -------------------------
+
+#[test]
+fn decode_prefill_matches_score_program() {
+    // teacher-forcing anchor, Rust side: the prefill program's logprobs
+    // must equal the score program's on the same weights and tokens for
+    // every decode-capable variant (exact by construction — prefill
+    // lowers the same forward; see python/tests/test_decode.py for the
+    // per-step decode equivalence at tolerance 1e-4).
+    let m = manifest();
+    let mut engine = Engine::cpu().unwrap();
+    for name in ["micro_dense", "micro_mosa_r8"] {
+        let v = m.variant(name).unwrap();
+        if !v.programs.contains_key("prefill") {
+            continue; // pre-decode or partially rebuilt artifacts
+        }
+        let (b, t) = (v.batch, v.config.seq_len);
+        let state = TrainState::init_host(v, 2).unwrap();
+        let mut rng = Pcg::seeded(31);
+        let tokens: Vec<i32> = (0..b * (t + 1)).map(|_| rng.below(v.config.vocab as u32) as i32).collect();
+        // score on [b, t+1]
+        let score_spec = v.program("score").unwrap();
+        let batch_lit = mosa::runtime::engine::lit_i32(&tokens, &[b, t + 1]).unwrap();
+        let mut inputs: Vec<&xla::Literal> = state.model_leaves(v).iter().collect();
+        inputs.push(&batch_lit);
+        let exe = engine.load_program(&m, v, "score").unwrap();
+        let outs = Engine::run(exe, &inputs, 1, score_spec.untupled).unwrap();
+        let score_lp = outs[0].to_vec::<f32>().unwrap(); // [b, t]
+        // prefill on the first t tokens of each row
+        let mut session =
+            mosa::decode::DecodeSession::from_state(&m, v, "decode_step", state, true).unwrap();
+        let prompt: Vec<i32> = (0..b).flat_map(|i| tokens[i * (t + 1)..i * (t + 1) + t].to_vec()).collect();
+        let plen = vec![t as i32; b];
+        let (lp_lit, last) = session.prefill(&mut engine, &prompt, &plen).unwrap();
+        let lp = lp_lit.to_vec::<f32>().unwrap(); // [b, t-1]
+        for i in 0..b {
+            for j in 0..t - 1 {
+                let a = score_lp[i * t + j];
+                let p = lp[i * (t - 1) + j];
+                assert!((a - p).abs() < 1e-4, "{name} [{i},{j}]: score {a} vs prefill {p}");
+            }
+        }
+        let last_v = last.to_vec::<f32>().unwrap();
+        assert_eq!(last_v.len(), b * v.config.vocab);
+        assert!(last_v.iter().all(|x| x.is_finite()));
+    }
+}
+
+#[test]
+fn decode_cache_bytes_match_accounting_at_runtime() {
+    let m = manifest();
+    for name in ["micro_dense", "micro_mosa_r8", "micro_fixed_r8", "micro_routing_r8"] {
+        let Ok(v) = m.variant(name) else { continue };
+        let Ok(spec) = v.program("decode_step") else { continue };
+        let state = TrainState::init_host(v, 0).unwrap();
+        let session = mosa::decode::DecodeSession::from_state(&m, v, "decode_step", state, true).unwrap();
+        let cap = spec.capacity.unwrap();
+        assert_eq!(
+            session.cache_payload_bytes_per_seq,
+            mosa::kvcache::kv_bytes_total(&v.config, cap),
+            "{name}: manifest cache layout drifted from the accounting"
+        );
+        // the manifest layout must also agree with the Rust mirror
+        let mirror = mosa::decode::cache_layout(&v.config, spec.batch.unwrap(), cap);
+        let mirror_kv = mosa::decode::KvCacheBuffers::alloc(&mirror, spec.batch.unwrap()).unwrap();
+        assert_eq!(session.cache_total_bytes, mirror_kv.total_bytes(), "{name}");
+    }
+}
+
+#[test]
+fn generate_serves_more_requests_than_slots() {
+    let m = manifest();
+    let v = m.variant("micro_mosa_r8").unwrap();
+    if !v.programs.contains_key("decode_step") {
+        return; // pre-decode artifacts
+    }
+    let mut engine = Engine::cpu().unwrap();
+    let state = TrainState::init_host(v, 4).unwrap();
+    let slots = v.program("decode_step").unwrap().batch.unwrap_or(v.batch);
+    let n_req = slots + 2; // forces at least one admission wave after retirement
+    let requests: Vec<mosa::decode::SeqRequest> = (0..n_req as u64)
+        .map(|id| mosa::decode::SeqRequest {
+            id,
+            prompt: vec![1, 2, 3, (id % 7) as i32],
+            max_new: 3,
+        })
+        .collect();
+    let opts = mosa::decode::GenerateOptions {
+        max_new: 3,
+        policy: mosa::decode::SamplePolicy::Greedy,
+        seed: 9,
+        eos: None,
+        use_prefill: true,
+        device_resident: true,
+    };
+    let finished = mosa::decode::generate(&mut engine, &m, v, state, requests, &opts).unwrap();
+    assert_eq!(finished.len(), n_req);
+    let mut ids: Vec<u64> = finished.iter().map(|f| f.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..n_req as u64).collect::<Vec<_>>());
+    for f in &finished {
+        assert_eq!(f.generated.len(), 3, "seq {} retired early", f.id);
+        assert!(f.generated.iter().all(|&t| (0..v.config.vocab as i32).contains(&t)));
+    }
+}
+
+#[test]
+fn decode_device_and_host_paths_agree() {
+    // the device-resident cache and the host round-trip cache must be the
+    // same computation: identical greedy outputs on identical inputs
+    let m = manifest();
+    let v = m.variant("micro_dense").unwrap();
+    if !v.programs.contains_key("decode_step") {
+        return;
+    }
+    let mut engine = Engine::cpu().unwrap();
+    let mut out = Vec::new();
+    for resident in [true, false] {
+        let state = TrainState::init_host(v, 6).unwrap();
+        let mut session =
+            mosa::decode::DecodeSession::from_state(&m, v, "decode_step", state, resident).unwrap();
+        let b = session.batch;
+        let mut logits_trace = Vec::new();
+        let mut reset = vec![1i32; b];
+        for s in 0..4 {
+            let toks: Vec<i32> = (0..b).map(|i| ((i + s) % 50) as i32).collect();
+            let pos = vec![s as i32; b];
+            let lit = session.step(&mut engine, &toks, &pos, &reset).unwrap();
+            logits_trace.push(lit.to_vec::<f32>().unwrap());
+            reset.iter_mut().for_each(|r| *r = 0);
+        }
+        out.push(logits_trace);
+    }
+    for (a, b) in out[0].iter().zip(&out[1]) {
+        for (x, y) in a.iter().zip(b) {
+            assert!((x - y).abs() < 1e-5, "device vs host drift: {x} vs {y}");
+        }
+    }
 }
 
 #[test]

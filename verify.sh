@@ -37,7 +37,13 @@ run cargo build --release
 run cargo test -q
 run cargo fmt --check
 run cargo clippy --all-targets -- -D warnings
-run cargo run --release --bin mosa -- perf --smoke --out /tmp/BENCH_pipeline.smoke.json
+# perf smoke: host pipeline probes always run; the decode probe is
+# artifact-gated (graceful `available: false` without `make artifacts`),
+# so decode-latency regressions diff in BENCH_decode.smoke.json when
+# artifacts are present and CI stays green when they are not.
+run cargo run --release --bin mosa -- perf --smoke \
+    --out /tmp/BENCH_pipeline.smoke.json \
+    --decode-out /tmp/BENCH_decode.smoke.json
 
 if [ "$fail" -eq 0 ]; then
     echo "verify: OK"
