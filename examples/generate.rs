@@ -58,6 +58,7 @@ fn main() -> Result<()> {
         eos: None,
         use_prefill: true,
         device_resident: true,
+        device_sample: true,
     };
     let t0 = std::time::Instant::now();
     let finished = generate(&mut engine, &manifest, variant, state, requests, &opts)?;

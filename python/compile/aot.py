@@ -15,6 +15,16 @@ program list with their extra inputs/outputs, FLOP and parameter counts.
 Array flattening is jax.tree_util's canonical order — identical between
 init outputs, train inputs/outputs, and checkpoints.
 
+Mutable-state programs (train / train_chunk / decode_step*) are lowered
+with ``donate_argnums`` over their state or cache trees: XLA records an
+``input_output_alias`` map in the HLO header (outputs written into the
+donated input buffers — zero-copy stepping on the Rust side) and each
+program's manifest entry mirrors it as a ``donated`` section, parsed
+back from the artifact text and checked to be the leaf-for-leaf
+identity. ``decode_step_sample*`` twins fuse in-graph sampling (top-k /
+temperature / inverse-CDF over a host-supplied uniform) so serving
+downloads sampled ids, not logits.
+
 Usage:  cd python && python -m compile.aot --set core --out ../artifacts
 """
 
@@ -22,6 +32,7 @@ import argparse
 import dataclasses
 import json
 import os
+import re
 import sys
 
 import jax
@@ -46,6 +57,49 @@ def to_hlo_text(lowered, return_tuple=False) -> str:
         str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple
     )
     return comp.as_hlo_text()
+
+
+# HLO-text alias entries: `{out_idx}: (in_idx, {}, may-alias)` inside the
+# module header's `input_output_alias={ ... }` clause. With untupled
+# lowering the output shape index is always a single tuple position.
+_ALIAS_ENTRY = re.compile(r"\{\s*(\d*)\s*\}:\s*\((\d+),\s*\{\s*\},\s*(?:may|must)-alias\)")
+
+
+def parse_alias_map(hlo_text: str):
+    """Extract the input→output buffer alias pairs XLA recorded from
+    ``donate_argnums`` — the contract the Rust runtime's donated execute
+    path replays. Returns ``[[input_idx, output_idx], ...]`` sorted by
+    input index (empty when the program donates nothing)."""
+    header = hlo_text.split("\n", 1)[0]
+    m = re.search(r"input_output_alias=\{", header)
+    if m is None:
+        return []
+    # the clause nests one brace level ({out_idx}); scan to its close
+    depth, end = 0, len(header)
+    for i in range(m.end() - 1, len(header)):
+        depth += {"{": 1, "}": -1}.get(header[i], 0)
+        if depth == 0:
+            end = i
+            break
+    pairs = [
+        [int(e.group(2)), int(e.group(1) or 0)]
+        for e in _ALIAS_ENTRY.finditer(header[m.end(): end + 1])
+    ]
+    return sorted(pairs)
+
+
+def _check_aliases(pname, aliases, n_donated, in_offset, out_offset):
+    """Donated lowerings must alias leaf-for-leaf: donated input
+    ``in_offset + j`` -> output ``out_offset + j``. jax matches donated
+    buffers to outputs greedily in order within each (shape, dtype)
+    class, and our donated trees appear in the same order on both sides,
+    so the map is exactly the identity over the donated range — anything
+    else means the lowering convention drifted and the Rust runtime
+    would re-feed dead buffers."""
+    want = [[in_offset + j, out_offset + j] for j in range(n_donated)]
+    assert aliases == want, (
+        f"{pname}: alias map {aliases} != expected identity {want}"
+    )
 
 
 def _dt(x) -> str:
@@ -130,29 +184,40 @@ def lower_variant(v: variants.Variant, outdir: str) -> dict:
 
     progs = {}
 
-    def emit(pname, fn, args):
-        lowered = jax.jit(fn).lower(*args)
+    def emit(pname, fn, args, donate=()):
+        """Lower one program; with ``donate`` (argnums), XLA records an
+        input→output alias for every donated leaf, the runtime's license
+        to update state/cache buffers in place instead of materialising a
+        second copy per step. Returns (file name, alias pairs)."""
+        lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
         text = to_hlo_text(lowered)
         fname = f"{v.name}.{pname}.hlo.txt"
         with open(os.path.join(outdir, fname), "w") as f:
             f.write(text)
-        return fname
+        return fname, parse_alias_map(text)
 
 
     # "init" is host-side (see _init_spec); an HLO init program can still
     # be emitted for cross-checking with --with-init-hlo.
+    n_train_leaves = n_params_leaves * 3 + n_state_leaves + 1
+
     if "init_hlo" in v.programs:
-        fname = emit("init", init_fn, [_spec((), jnp.int32)])
+        fname, _ = emit("init", init_fn, [_spec((), jnp.int32)])
         progs["init"] = {"file": fname, "extra_inputs": [
             {"name": "seed", "shape": [], "dtype": "i32"}]}
 
     if "train" in v.programs:
         step = make_train_step(cfg)
-        fname = emit(
+        # donate the whole train state (params/state/m/v/t): outputs alias
+        # the input buffers, so a step updates the resident state in place
+        # instead of materialising a second full copy on device
+        fname, aliases = emit(
             "train", step,
             [params_s, state_s, m_s, v_s, t_s,
              _spec((b, t + 1), jnp.int32), _spec((), jnp.float32)],
+            donate=(0, 1, 2, 3, 4),
         )
+        _check_aliases("train", aliases, n_train_leaves, 0, 0)
         progs["train"] = {
             "file": fname,
             "extra_inputs": [
@@ -160,16 +225,19 @@ def lower_variant(v: variants.Variant, outdir: str) -> dict:
                 {"name": "lr", "shape": [], "dtype": "f32"},
             ],
             "extra_outputs": [{"name": "loss", "shape": [], "dtype": "f32"}],
+            "donated": {"aliases": aliases},
         }
 
     if "train_chunk" in v.programs:
         s = variants.CHUNK_STEPS
         chunk = make_train_chunk(cfg, s)
-        fname = emit(
+        fname, aliases = emit(
             "train_chunk", chunk,
             [params_s, state_s, m_s, v_s, t_s,
              _spec((s, b, t + 1), jnp.int32), _spec((s,), jnp.float32)],
+            donate=(0, 1, 2, 3, 4),
         )
+        _check_aliases("train_chunk", aliases, n_train_leaves, 0, 0)
         progs["train_chunk"] = {
             "file": fname,
             "chunk": s,
@@ -178,12 +246,13 @@ def lower_variant(v: variants.Variant, outdir: str) -> dict:
                 {"name": "lrs", "shape": [s], "dtype": "f32"},
             ],
             "extra_outputs": [{"name": "losses", "shape": [s], "dtype": "f32"}],
+            "donated": {"aliases": aliases},
         }
 
     if "score" in v.programs:
         score = make_score(cfg)
-        fname = emit("score", lambda p, s, tok: score(p, s, tok),
-                     [params_s, state_s, _spec((b, t + 1), jnp.int32)])
+        fname, _ = emit("score", lambda p, s, tok: score(p, s, tok),
+                        [params_s, state_s, _spec((b, t + 1), jnp.int32)])
         progs["score"] = {
             "file": fname,
             "extra_inputs": [{"name": "tokens", "shape": [b, t + 1], "dtype": "i32"}],
@@ -197,8 +266,8 @@ def lower_variant(v: variants.Variant, outdir: str) -> dict:
             # centroid count must be preserved: the trained state is an input
             assert scfg.attn_spec().rho == cfg.attn_spec().rho, v.name
         score = make_score(dataclasses.replace(scfg))
-        fname = emit("score_short", lambda p, s, tok: score(p, s, tok),
-                     [params_s, state_s, _spec((1, st + 1), jnp.int32)])
+        fname, _ = emit("score_short", lambda p, s, tok: score(p, s, tok),
+                        [params_s, state_s, _spec((1, st + 1), jnp.int32)])
         progs["score_short"] = {
             "file": fname,
             "seq_len": st,
@@ -211,15 +280,21 @@ def lower_variant(v: variants.Variant, outdir: str) -> dict:
         dcap = v.decode.capacity
         assert dcap >= t, f"{v.name}: decode capacity {dcap} < prompt length {t}"
         vocab = cfg.vocab
+        n_model = n_params_leaves + n_state_leaves
 
         def emit_step(pname, bb, cc):
             step = dec.make_decode_step(cfg, cc, bb)
             cstruct = dec.cache_struct(cfg, bb, cc)
-            fname = emit(
+            cache_entries = _cache_entries(cfg, bb, cc)
+            # donate the cache tree (arg 5): every cache leaf aliases its
+            # output slot, so the resident cache is stepped in place
+            fname, aliases = emit(
                 pname, step,
                 [params_s, state_s, _spec((bb,), jnp.int32), _spec((bb,), jnp.int32),
                  _spec((bb,), jnp.int32), cstruct],
+                donate=(5,),
             )
+            _check_aliases(pname, aliases, len(cache_entries), n_model + 3, 1)
             progs[pname] = {
                 "file": fname,
                 "batch": bb,
@@ -230,11 +305,52 @@ def lower_variant(v: variants.Variant, outdir: str) -> dict:
                     {"name": "reset", "shape": [bb], "dtype": "i32"},
                 ],
                 "extra_outputs": [{"name": "logits", "shape": [bb, vocab], "dtype": "f32"}],
-                "cache": _cache_entries(cfg, bb, cc),
+                "cache": cache_entries,
+                "donated": {"aliases": aliases},
+            }
+
+        def emit_sample(pname, bb, cc):
+            """decode_step fused with in-graph sampling: host traffic per
+            token is O(batch) both ways (uniform up, sampled ids down)."""
+            kmx = dec.sample_k_max(cfg)
+            step = dec.make_decode_sample(cfg, cc, bb)
+            cstruct = dec.cache_struct(cfg, bb, cc)
+            cache_entries = _cache_entries(cfg, bb, cc)
+            fname, aliases = emit(
+                pname, step,
+                [params_s, state_s, _spec((bb,), jnp.int32), _spec((bb,), jnp.int32),
+                 _spec((bb,), jnp.int32), _spec((bb,), jnp.float32),
+                 _spec((), jnp.float32), _spec((), jnp.int32), cstruct],
+                donate=(8,),
+            )
+            _check_aliases(pname, aliases, len(cache_entries), n_model + 6, 3)
+            progs[pname] = {
+                "file": fname,
+                "batch": bb,
+                "capacity": cc,
+                "sample_k": kmx,
+                "extra_inputs": [
+                    {"name": "token", "shape": [bb], "dtype": "i32"},
+                    {"name": "pos", "shape": [bb], "dtype": "i32"},
+                    {"name": "reset", "shape": [bb], "dtype": "i32"},
+                    {"name": "uniform", "shape": [bb], "dtype": "f32"},
+                    {"name": "temp", "shape": [], "dtype": "f32"},
+                    {"name": "k", "shape": [], "dtype": "i32"},
+                ],
+                "extra_outputs": [
+                    {"name": "ids", "shape": [bb], "dtype": "i32"},
+                    {"name": "topk_vals", "shape": [bb, kmx], "dtype": "f32"},
+                    {"name": "topk_ids", "shape": [bb, kmx], "dtype": "i32"},
+                ],
+                "cache": cache_entries,
+                "donated": {"aliases": aliases},
             }
 
         prefill = dec.make_prefill(cfg, dcap, b)
-        fname = emit(
+        # prefill builds the cache from scratch (cache leaves are outputs
+        # only), so there is nothing aliasable to donate; the empty
+        # `donated` section still marks the artifact donation-aware.
+        fname, _ = emit(
             "prefill", prefill,
             [params_s, state_s, _spec((b, t), jnp.int32), _spec((b,), jnp.int32)],
         )
@@ -252,10 +368,13 @@ def lower_variant(v: variants.Variant, outdir: str) -> dict:
                 {"name": "last_logits", "shape": [b, vocab], "dtype": "f32"},
             ],
             "cache": _cache_entries(cfg, b, dcap),
+            "donated": {"aliases": []},
         }
         emit_step("decode_step", b, dcap)
+        emit_sample("decode_step_sample", b, dcap)
         for bb in v.decode.extra_batches:
             emit_step(f"decode_step_b{bb}", bb, dcap)
+            emit_sample(f"decode_step_sample_b{bb}", bb, dcap)
         for cc in v.decode.extra_capacities:
             emit_step(f"decode_step_c{cc}", b, cc)
 
@@ -284,7 +403,7 @@ def lower_variant(v: variants.Variant, outdir: str) -> dict:
         "n_params": int(n_params),
         "n_params_leaves": n_params_leaves,
         "n_state_leaves": n_state_leaves,
-        "n_train_leaves": n_params_leaves * 3 + n_state_leaves + 1,
+        "n_train_leaves": n_train_leaves,
         "sections": sections,
         "programs": progs,
     }

@@ -55,6 +55,7 @@ from .attention import (
     _fixed_heads,
     _mosa_heads,
     _routing_heads,
+    top_k_desc,
 )
 from .kernels.ref import ref_rope
 from .model import ModelConfig, _layernorm
@@ -377,6 +378,70 @@ def _reset_cache(cache: dict, reset):
         else:
             out[name] = leaf
     return out
+
+
+# ---------------------------------------------------------------------------
+# in-graph sampling: decode_step fused with top-k / temperature / inverse-CDF
+# ---------------------------------------------------------------------------
+
+# Static width of the in-graph top-k selection. Runtime `k` is clipped to
+# [1, sample_k_max]; k = 1 is exact greedy (lax.top_k breaks ties toward
+# the lower index, same as the Rust host sampler's argmax).
+SAMPLE_K_MAX = 32
+
+
+def sample_k_max(cfg: ModelConfig) -> int:
+    return min(SAMPLE_K_MAX, cfg.vocab)
+
+
+def sample_from_logits(logits, uniform, temp, k, k_max: int):
+    """Fused sampling head: (logits [B,V], uniform [B] in [0,1), temp [],
+    k []) -> (ids [B] i32, topk_vals [B,k_max] f32, topk_ids [B,k_max] i32).
+
+    The draw is inverse-CDF against the f32 cumulative sum of
+    exp((v - v_max)/temp) over the top-k_max logits (entries past the
+    runtime k masked to 0), selecting the first slot whose cumsum reaches
+    uniform * total. This is arithmetic-for-arithmetic the Rust host
+    sampler (`decode::sample::sample_row_u`), so device- and host-side
+    sampling agree token-for-token given the same uniforms — the parity
+    the A/B harness and the artifact-gated tests pin down. Keeping the
+    uniform a host input (rather than lowering a threefry graph) keeps
+    the program small and the draw reproducible from either side.
+    """
+    # argsort-based top-k (not lax.top_k): lowers to a plain `sort` the
+    # pinned HLO-text parser accepts; stable, so ties break toward the
+    # lower index — same rule as the Rust host sampler
+    vals, idx = top_k_desc(logits, k_max)
+    temp_c = jnp.maximum(temp, 1e-4)
+    kcl = jnp.clip(k, 1, k_max)
+    keep = jnp.arange(k_max, dtype=jnp.int32)[None, :] < kcl
+    w = jnp.where(keep, jnp.exp((vals - vals[:, :1]) / temp_c), 0.0)
+    cum = jnp.cumsum(w, axis=-1)
+    # total := cum[-1] (not a separate sum) so uniform < 1 guarantees a hit
+    x = uniform[:, None] * cum[:, -1:]
+    choice = jnp.argmax(cum >= x, axis=-1)  # first slot reaching the draw
+    ids = jnp.take_along_axis(idx, choice[:, None], axis=-1)[:, 0]
+    return ids.astype(jnp.int32), vals, idx.astype(jnp.int32)
+
+
+def make_decode_sample(cfg: ModelConfig, capacity: int, batch: int):
+    """The zero-copy serving step: `make_decode_step` fused with in-graph
+    sampling, so the host uploads O(B) bytes (token/pos/reset/uniform) and
+    downloads O(B) bytes (sampled ids) per token instead of the full
+    [B, vocab] logits. (params, state, token [B] i32, pos [B] i32,
+    reset [B] i32, uniform [B] f32, temp [] f32, k [] i32, caches) ->
+    (ids [B] i32, topk_vals [B,K] f32, topk_ids [B,K] i32, new caches);
+    the top-k tail is a small logging/debug output the runtime fetches
+    only on request."""
+    step = make_decode_step(cfg, capacity, batch)
+    kmx = sample_k_max(cfg)
+
+    def sample_step(params, state, token, pos, reset, uniform, temp, k, caches):
+        logits, new_caches = step(params, state, token, pos, reset, caches)
+        ids, tvals, tids = sample_from_logits(logits, uniform, temp, k, kmx)
+        return ids, tvals, tids, new_caches
+
+    return sample_step
 
 
 def make_decode_step(cfg: ModelConfig, capacity: int, batch: int):

@@ -126,6 +126,41 @@ def test_hlo_text_reparses(tiny_variant):
     assert arity == n_expected, f"{arity} != {n_expected}"
 
 
+def test_parse_alias_map_header_forms():
+    hdr = ("HloModule jit_step, input_output_alias={ {0}: (0, {}, may-alias), "
+           "{2}: (5, {}, must-alias) }, entry_computation_layout={()->()}")
+    assert aot.parse_alias_map(hdr + "\n\nENTRY main {}") == [[0, 0], [5, 2]]
+    # single-output form: empty tuple index means output 0
+    hdr1 = "HloModule m, input_output_alias={ {}: (1, {}, may-alias) }"
+    assert aot.parse_alias_map(hdr1) == [[1, 0]]
+    assert aot.parse_alias_map("HloModule m, entry_computation_layout={()->()}") == []
+
+
+def test_train_program_donates_full_state(tiny_variant):
+    """train is lowered with donate_argnums over params/state/m/v/t: the
+    alias map must be the identity over every train-state leaf (input i
+    aliases output i), so the Rust runtime can step the state in place."""
+    entry, out = tiny_variant
+    d = entry["programs"]["train"]["donated"]
+    n = entry["n_train_leaves"]
+    assert d["aliases"] == [[i, i] for i in range(n)]
+    text = open(os.path.join(out, entry["programs"]["train"]["file"])).read()
+    assert "input_output_alias=" in text.splitlines()[0]
+    assert aot.parse_alias_map(text) == d["aliases"]
+    # the batch/lr extra inputs and the loss output stay unaliased
+    ins = {i for i, _ in d["aliases"]}
+    outs = {o for _, o in d["aliases"]}
+    assert n not in ins and n + 1 not in ins and n not in outs
+
+
+def test_score_program_not_donated(tiny_variant):
+    """score takes the model read-only: no donation, no alias header."""
+    entry, out = tiny_variant
+    assert "donated" not in entry["programs"]["score"]
+    text = open(os.path.join(out, entry["programs"]["score"]["file"])).read()
+    assert "input_output_alias=" not in text.splitlines()[0]
+
+
 def test_perf_set_has_kernel_ablation_pair():
     vs = {v.name: v for v in variants.get_set("perf")}
     assert vs["micro_mosa_r8_nokernel"].cfg.use_kernel is False

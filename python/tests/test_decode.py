@@ -177,6 +177,102 @@ def test_mosa_sink_never_evicted():
 
 
 # ---------------------------------------------------------------------------
+# in-graph sampling (decode_step_sample)
+# ---------------------------------------------------------------------------
+
+
+def _host_sample_mirror(logits, uniforms, temp, k, k_max):
+    """Reference mirror of rust decode::sample::sample_row_u: stable
+    descending top-k (ties -> lower index), f32 weights
+    exp((v - v0)/temp), *sequential* f32 cumsum, inverse-CDF draw."""
+    out = []
+    for row, u in zip(np.asarray(logits), np.asarray(uniforms)):
+        order = sorted(range(len(row)), key=lambda i: (-row[i], i))[:k_max]
+        kcl = min(max(int(k), 1), k_max)
+        m = row[order[0]]
+        t = np.float32(max(temp, 1e-4))
+        acc = np.float32(0)
+        cum = []
+        for j, i in enumerate(order):
+            w = np.float32(np.exp(np.float32((np.float32(row[i]) - m) / t))) if j < kcl else np.float32(0)
+            acc = np.float32(acc + w)
+            cum.append(acc)
+        x = np.float32(u) * cum[-1]
+        sel = next(j for j, c in enumerate(cum) if c >= x)
+        out.append(order[sel])
+    return np.array(out, np.int32)
+
+
+def test_sample_from_logits_matches_sequential_host_mirror():
+    """The in-graph sampler must agree token-for-token with the host-side
+    sequential-f32 mirror (the Rust `sample_row_u` contract) given the
+    same uniforms — XLA CPU's cumsum accumulates in the same order."""
+    rng = np.random.default_rng(0)
+    k_max = 32
+    fn = jax.jit(lambda lg, u, t, k: dec.sample_from_logits(lg, u, t, k, k_max)[0])
+    for trial in range(40):
+        logits = (rng.normal(size=(8, 96)) * 3).astype(np.float32)
+        u = rng.random(8).astype(np.float32)
+        for k in (1, 4, 32):
+            got = np.asarray(fn(logits, u, np.float32(0.9), np.int32(k)))
+            want = _host_sample_mirror(logits, u, 0.9, k, k_max)
+            np.testing.assert_array_equal(got, want, err_msg=f"trial {trial} k {k}")
+
+
+def test_sample_greedy_k1_is_argmax_with_tie_break():
+    logits = np.array([[1.0, 3.0, 3.0, 2.0], [0.5, 0.5, 0.5, 0.5]], np.float32)
+    ids, vals, tidx = dec.sample_from_logits(
+        jnp.asarray(logits), jnp.asarray([0.99, 0.01], jnp.float32),
+        jnp.float32(1.0), jnp.int32(1), 4,
+    )
+    # ties break to the lower index, uniform ignored at k=1
+    np.testing.assert_array_equal(np.asarray(ids), [1, 0])
+    assert vals.shape == (2, 4) and tidx.shape == (2, 4)
+    # top-k tail is sorted descending
+    assert bool(jnp.all(vals[:, :-1] >= vals[:, 1:]))
+
+
+def test_sample_ids_always_in_topk_support():
+    rng = np.random.default_rng(3)
+    logits = (rng.normal(size=(4, 64)) * 2).astype(np.float32)
+    for k in (2, 5):
+        for _ in range(20):
+            u = rng.random(4).astype(np.float32)
+            ids, _, tidx = dec.sample_from_logits(
+                jnp.asarray(logits), jnp.asarray(u), jnp.float32(1.0), jnp.int32(k), 16
+            )
+            for b in range(4):
+                assert int(ids[b]) in set(np.asarray(tidx)[b, :k].tolist())
+
+
+def test_decode_sample_step_matches_decode_step():
+    """decode_step_sample is decode_step + the fused sampling head: same
+    cache trajectory, and its ids equal sampling the plain step's logits."""
+    cfg = CFGS["mosa"]
+    params, state, tokens = setup(cfg, seed=9)
+    cap = 32
+    step = dec.make_decode_step(cfg, cap, B)
+    samp = dec.make_decode_sample(cfg, cap, B)
+    prefill = dec.make_prefill(cfg, cap, B)
+    _, _, c1 = prefill(params, state, tokens, jnp.full((B,), 4, jnp.int32))
+    c2 = c1
+    rng = np.random.default_rng(5)
+    for t in range(4, 10):
+        tok = tokens[:, t]
+        pos = jnp.full((B,), t, jnp.int32)
+        zero = jnp.zeros((B,), jnp.int32)
+        u = jnp.asarray(rng.random(B), jnp.float32)
+        logits, c1 = step(params, state, tok, pos, zero, c1)
+        ids, _, _, c2 = samp(params, state, tok, pos, zero, u,
+                             jnp.float32(0.8), jnp.int32(4), c2)
+        ref, _, _ = dec.sample_from_logits(logits, u, jnp.float32(0.8),
+                                           jnp.int32(4), dec.sample_k_max(cfg))
+        np.testing.assert_array_equal(np.asarray(ids), np.asarray(ref))
+        for a, b in zip(jax.tree_util.tree_leaves(c1), jax.tree_util.tree_leaves(c2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
 # continuous-batching mechanics
 # ---------------------------------------------------------------------------
 
@@ -252,7 +348,10 @@ def test_lowered_decode_programs_and_manifest(tmp_path):
     )
     entry = aot.lower_variant(v, str(tmp_path))
     progs = entry["programs"]
-    assert set(progs) == {"score", "prefill", "decode_step", "decode_step_b1"}
+    assert set(progs) == {
+        "score", "prefill", "decode_step", "decode_step_b1",
+        "decode_step_sample", "decode_step_sample_b1",
+    }
     for pname, prog in progs.items():
         assert prog["untupled"] is True
         text = open(tmp_path / prog["file"]).read()
@@ -292,6 +391,32 @@ def test_lowered_decode_programs_and_manifest(tmp_path):
     b1 = progs["decode_step_b1"]
     assert b1["batch"] == 1
     assert all(e["shape"][0] == 1 for e in b1["cache"])
+    # donated sections: decode_step aliases cache input j -> output 1 + j
+    # (after the logits), the sampling twin -> output 3 + j (after
+    # ids/topk_vals/topk_ids), prefill donates nothing (cache is
+    # output-only)
+    n_cache = len(step["cache"])
+    assert step["donated"]["aliases"] == [
+        [n_model + 3 + j, 1 + j] for j in range(n_cache)
+    ]
+    samp = progs["decode_step_sample"]
+    assert samp["donated"]["aliases"] == [
+        [n_model + 6 + j, 3 + j] for j in range(n_cache)
+    ]
+    assert progs["prefill"]["donated"] == {"aliases": []}
+    # the sampling twin's manifest surface
+    assert samp["sample_k"] == min(32, cfg.vocab)
+    assert [e["name"] for e in samp["extra_inputs"]] == [
+        "token", "pos", "reset", "uniform", "temp", "k",
+    ]
+    assert [e["name"] for e in samp["extra_outputs"]] == ["ids", "topk_vals", "topk_ids"]
+    assert samp["extra_outputs"][0] == {"name": "ids", "shape": [B], "dtype": "i32"}
+    assert samp["extra_outputs"][1]["shape"] == [B, samp["sample_k"]]
+    assert samp["cache"] == step["cache"]
+    # the donating programs carry the alias clause in their HLO header
+    text = open(tmp_path / step["file"]).read()
+    assert "input_output_alias=" in text.splitlines()[0]
+    assert aot.parse_alias_map(text) == step["donated"]["aliases"]
 
 
 def test_core_variants_carry_decode_specs():

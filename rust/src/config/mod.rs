@@ -21,6 +21,10 @@ pub struct RunConfig {
     /// keep the train state device-resident between per-step dispatches
     /// (on by default; `--no-device-resident` for A/B)
     pub device_resident: bool,
+    /// honour the artifacts' buffer-donation aliases so state/cache
+    /// buffers are stepped in place (on by default; `--no-donate`
+    /// compiles the copying twin for A/B runs)
+    pub donate: bool,
 }
 
 impl Default for RunConfig {
@@ -37,6 +41,7 @@ impl Default for RunConfig {
             use_chunk: false,
             prefetch: true,
             device_resident: true,
+            donate: true,
         }
     }
 }
@@ -57,7 +62,15 @@ impl RunConfig {
             use_chunk: args.has("chunk"),
             prefetch: !args.has("no-prefetch"),
             device_resident: !args.has("no-device-resident"),
+            donate: !args.has("no-donate"),
         }
+    }
+
+    /// A PJRT engine honouring this run's donation mode.
+    pub fn engine(&self) -> anyhow::Result<crate::runtime::Engine> {
+        let mut e = crate::runtime::Engine::cpu()?;
+        e.donate = self.donate;
+        Ok(e)
     }
 }
 
@@ -80,5 +93,12 @@ mod tests {
     fn no_prefetch_flag_disables_pipeline() {
         let a = Args::parse(["--no-prefetch".to_string()]);
         assert!(!RunConfig::from_args(&a).prefetch);
+    }
+
+    #[test]
+    fn no_donate_flag_selects_copying_twin() {
+        assert!(RunConfig::default().donate, "donation defaults on");
+        let a = Args::parse(["--no-donate".to_string()]);
+        assert!(!RunConfig::from_args(&a).donate);
     }
 }

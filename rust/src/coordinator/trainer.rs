@@ -94,6 +94,103 @@ impl TrainOptions {
     }
 }
 
+/// Outcome of a training loop's first dispatch when device residency is
+/// requested: either the runtime handed back separable buffers (adopted
+/// as the resident state) or it kept the output tuple together (the
+/// literal copying path continues).
+enum FirstDispatch {
+    /// (resident state buffers, first extra output fetched, exec ns)
+    Device(Vec<xla::PjRtBuffer>, xla::Literal, u64),
+    /// flat output literals (tuple decomposed), exec ns
+    Literal(Vec<xla::Literal>, u64),
+}
+
+/// First-dispatch adoption attempt shared by the per-step and chunked
+/// loops: run from literal inputs, keep the outputs on device when they
+/// come back one-buffer-per-leaf.
+fn try_adopt_device(
+    exe: &xla::PjRtLoadedExecutable,
+    inputs: &[&xla::Literal],
+    prog: &str,
+    n_leaves: usize,
+    expected: usize,
+    untupled: bool,
+) -> Result<FirstDispatch> {
+    let e0 = Instant::now();
+    let bufs = Engine::run_buffers(exe, inputs)?;
+    let mut outs = Engine::first_device_outputs(bufs, prog)?;
+    if outs.len() == expected {
+        let extras = outs.split_off(n_leaves);
+        let lit = extras[0].to_literal_sync()?;
+        return Ok(FirstDispatch::Device(outs, lit, e0.elapsed().as_nanos() as u64));
+    }
+    let lits = Engine::outputs_to_literals(vec![outs], expected, untupled)?;
+    Ok(FirstDispatch::Literal(lits, e0.elapsed().as_nanos() as u64))
+}
+
+/// One device-resident dispatch shared by the per-step and chunked
+/// loops: upload the small per-dispatch inputs (batch, lr), feed the
+/// resident state buffers back (donated artifacts update them in
+/// place), and fetch only the first extra output (loss / losses).
+/// Returns (new state buffers, that literal, exec ns).
+#[allow(clippy::too_many_arguments)]
+fn device_dispatch(
+    engine: &mut Engine,
+    manifest: &Manifest,
+    v: &Variant,
+    prog: &str,
+    state_bufs: &[xla::PjRtBuffer],
+    batch_lit: &xla::Literal,
+    lr_lit: &xla::Literal,
+    n_leaves: usize,
+    expected: usize,
+) -> Result<(Vec<xla::PjRtBuffer>, xla::Literal, u64)> {
+    let batch_b = engine.to_device(batch_lit)?;
+    let lr_b = engine.to_device(lr_lit)?;
+    let exe = engine.load_program(manifest, v, prog)?;
+    let mut inputs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(n_leaves + 2);
+    inputs.extend(state_bufs.iter());
+    inputs.push(&batch_b);
+    inputs.push(&lr_b);
+    let e0 = Instant::now();
+    let bufs = Engine::run_on_buffers(exe, &inputs)?;
+    drop(inputs);
+    let mut outs = Engine::first_device_outputs(bufs, prog)?;
+    if outs.len() != expected {
+        bail!(
+            "[{}] {prog} output arity changed mid-run ({} != {})",
+            v.name,
+            outs.len(),
+            expected
+        );
+    }
+    let extras = outs.split_off(n_leaves);
+    let lit = extras[0].to_literal_sync()?;
+    Ok((outs, lit, e0.elapsed().as_nanos() as u64))
+}
+
+/// End-of-run hand-back shared by both loops: download the resident
+/// state once (replacing a per-dispatch round-trip) and note the cost.
+fn finish_device_state(
+    state: &mut TrainState,
+    bufs: Vec<xla::PjRtBuffer>,
+    steps: u64,
+    metrics: &mut RunMetrics,
+) -> Result<()> {
+    let t0 = Instant::now();
+    let mut leaves = Vec::with_capacity(bufs.len());
+    for (i, buf) in bufs.iter().enumerate() {
+        leaves.push(
+            buf.to_literal_sync().with_context(|| format!("downloading train leaf {i}"))?,
+        );
+    }
+    state.leaves = leaves;
+    state.step = steps;
+    metrics.note("device_resident", "on");
+    metrics.note("state_fetch_ms_final", format!("{:.3}", t0.elapsed().as_secs_f64() * 1e3));
+    Ok(())
+}
+
 pub struct Trainer<'m> {
     pub manifest: &'m Manifest,
     pub variant: &'m Variant,
@@ -157,10 +254,17 @@ impl<'m> Trainer<'m> {
         let expected = n_leaves + spec.extra_outputs.len().max(1);
         let untupled = spec.untupled;
         // device residency needs one separable buffer per output leaf,
-        // which only untupled artifacts provide
-        let try_device = opts.device_resident && untupled;
+        // which only untupled artifacts provide; cleared permanently the
+        // first time the runtime keeps the tuple together
+        let mut try_device = opts.device_resident && untupled;
         // compile up-front so step timings are pure execution
         engine.load_program(self.manifest, v, "train")?;
+        // donated artifacts update the resident state in place (no second
+        // on-device copy per step); the engine may demote per-program
+        metrics.note(
+            "donated",
+            if engine.donation_active(self.manifest.hlo_path(v, "train")?) { "on" } else { "off" },
+        );
         let shape = BatchShape::per_step(b, t1);
         let mut exec_ns_total = 0u64;
         // once Some, the whole train state lives on the device and only
@@ -176,32 +280,14 @@ impl<'m> Trainer<'m> {
                 // execute + result fetch only (uploads / host absorb
                 // excluded), so it stays comparable across modes
                 let loss = if let Some(state_bufs) = dev_state.take() {
-                    // device-resident hot path (§Perf decode PR): state
-                    // leaves are fed back as the buffers PJRT returned
-                    let batch_b = engine.to_device(&batch.lit)?;
-                    let lr_b = engine.to_device(&lr_lit)?;
-                    let exe = engine.load_program(self.manifest, v, "train")?;
-                    let mut inputs: Vec<&xla::PjRtBuffer> =
-                        Vec::with_capacity(n_leaves + 2);
-                    inputs.extend(state_bufs.iter());
-                    inputs.push(&batch_b);
-                    inputs.push(&lr_b);
-                    let e0 = Instant::now();
-                    let bufs = Engine::run_on_buffers(exe, &inputs)?;
-                    drop(inputs);
-                    let mut outs = Engine::first_device_outputs(bufs, "train")?;
-                    if outs.len() != expected {
-                        bail!(
-                            "[{}] train output arity changed mid-run ({} != {})",
-                            v.name,
-                            outs.len(),
-                            expected
-                        );
-                    }
-                    let extras = outs.split_off(n_leaves);
-                    dev_state = Some(outs);
-                    let loss_lit = extras[0].to_literal_sync()?;
-                    exec_ns_total += e0.elapsed().as_nanos() as u64;
+                    // device-resident hot path: state leaves fed back as
+                    // the buffers PJRT returned (donated: updated in place)
+                    let (bufs, loss_lit, exec_ns) = device_dispatch(
+                        engine, self.manifest, v, "train", &state_bufs, &batch.lit, &lr_lit,
+                        n_leaves, expected,
+                    )?;
+                    dev_state = Some(bufs);
+                    exec_ns_total += exec_ns;
                     scalar_f32(&loss_lit)? as f64
                 } else {
                     // first step (or tuple-style artifact): literal inputs.
@@ -215,30 +301,26 @@ impl<'m> Trainer<'m> {
                     inputs.push(&lr_lit);
                     let exe = engine.load_program(self.manifest, v, "train")?;
                     if try_device {
-                        let e0 = Instant::now();
-                        let bufs = Engine::run_buffers(exe, &inputs)?;
-                        drop(inputs);
-                        let mut outs = Engine::first_device_outputs(bufs, "train")?;
-                        if outs.len() == expected {
-                            let extras = outs.split_off(n_leaves);
-                            dev_state = Some(outs);
-                            state.step += 1;
-                            let loss_lit = extras[0].to_literal_sync()?;
-                            exec_ns_total += e0.elapsed().as_nanos() as u64;
-                            scalar_f32(&loss_lit)? as f64
-                        } else {
-                            // runtime kept the tuple together: stay on the
-                            // proven literal path for the rest of the run
-                            log::warn!(
-                                "[{}] train outputs not separable ({} buffers); \
-                                 device residency off",
-                                v.name,
-                                outs.len()
-                            );
-                            let lits = Engine::outputs_to_literals(vec![outs], expected, untupled)?;
-                            exec_ns_total += e0.elapsed().as_nanos() as u64;
-                            let extra = state.absorb(v, lits, 1)?;
-                            scalar_f32(&extra[0])? as f64
+                        match try_adopt_device(exe, &inputs, "train", n_leaves, expected, untupled)?
+                        {
+                            FirstDispatch::Device(bufs, loss_lit, exec_ns) => {
+                                dev_state = Some(bufs);
+                                state.step += 1;
+                                exec_ns_total += exec_ns;
+                                scalar_f32(&loss_lit)? as f64
+                            }
+                            FirstDispatch::Literal(lits, exec_ns) => {
+                                // runtime kept the tuple together: stay on
+                                // the proven literal path for the whole run
+                                try_device = false;
+                                log::warn!(
+                                    "[{}] train outputs not separable; device residency off",
+                                    v.name
+                                );
+                                exec_ns_total += exec_ns;
+                                let extra = state.absorb(v, lits, 1)?;
+                                scalar_f32(&extra[0])? as f64
+                            }
                         }
                     } else {
                         let (outs, exec_ns) = Engine::run_timed(exe, &inputs, expected, untupled)?;
@@ -261,24 +343,9 @@ impl<'m> Trainer<'m> {
         let ((), stats) = run_pipeline(data, shape, opts.steps, opts.prefetch_mode(), body)?;
         metrics.note("execute_ms_total", format!("{:.3}", exec_ns_total as f64 / 1e6));
         // the state stayed on device for all but the first step: download
-        // it once so checkpointing / eval see literals again, and record
-        // the one-time cost that replaced a per-step round-trip
+        // it once so checkpointing / eval see literals again
         if let Some(bufs) = dev_state {
-            let t0 = Instant::now();
-            let mut leaves = Vec::with_capacity(bufs.len());
-            for (i, buf) in bufs.iter().enumerate() {
-                leaves.push(
-                    buf.to_literal_sync()
-                        .with_context(|| format!("downloading train leaf {i}"))?,
-                );
-            }
-            state.leaves = leaves;
-            state.step = opts.steps;
-            metrics.note("device_resident", "on");
-            metrics.note(
-                "state_fetch_ms_final",
-                format!("{:.3}", t0.elapsed().as_secs_f64() * 1e3),
-            );
+            finish_device_state(state, bufs, opts.steps, metrics)?;
         } else {
             metrics.note("device_resident", "off");
         }
@@ -297,12 +364,27 @@ impl<'m> Trainer<'m> {
         let (b, t1) = (v.batch, v.config.seq_len + 1);
         let spec = v.program("train_chunk")?;
         let s = spec.chunk.unwrap_or(8);
-        let expected = v.n_train_leaves + spec.extra_outputs.len().max(1);
+        let n_leaves = v.n_train_leaves;
+        let expected = n_leaves + spec.extra_outputs.len().max(1);
         let untupled = spec.untupled;
+        // like train_per_step: untupled artifacts keep the state on the
+        // device between chunk dispatches, donated ones update it in
+        // place; latched off if the runtime keeps the tuple together
+        let mut try_device = opts.device_resident && untupled;
         engine.load_program(self.manifest, v, "train_chunk")?;
+        metrics.note(
+            "donated",
+            if engine.donation_active(self.manifest.hlo_path(v, "train_chunk")?) {
+                "on"
+            } else {
+                "off"
+            },
+        );
         let shape = BatchShape::chunked(s, b, t1);
         let dispatches = opts.steps.div_ceil(s as u64);
         let mut exec_ns_total = 0u64;
+        let mut dev_state: Option<Vec<xla::PjRtBuffer>> = None;
+        let mut dev_steps = 0u64;
         let body = |stream: &mut BatchStream<'_>| -> Result<()> {
             let mut step = 0u64;
             let mut lrs: Vec<f32> = Vec::with_capacity(s);
@@ -319,15 +401,51 @@ impl<'m> Trainer<'m> {
                 }
                 let t0 = Instant::now();
                 let lr_lit = lit_f32(&lrs, &[s])?;
-                let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(state.leaves.len() + 2);
-                inputs.extend(state.leaves.iter());
-                inputs.push(&batch.lit);
-                inputs.push(&lr_lit);
-                let exe = engine.load_program(self.manifest, v, "train_chunk")?;
-                let (outs, exec_ns) = Engine::run_timed(exe, &inputs, expected, untupled)?;
-                exec_ns_total += exec_ns;
-                let extra = state.absorb(v, outs, s as u64)?;
-                let losses = to_vec_f32(&extra[0])?;
+                let losses = if let Some(state_bufs) = dev_state.take() {
+                    // device-resident chunk: state fed back as buffers
+                    let (bufs, losses_lit, exec_ns) = device_dispatch(
+                        engine, self.manifest, v, "train_chunk", &state_bufs, &batch.lit,
+                        &lr_lit, n_leaves, expected,
+                    )?;
+                    dev_state = Some(bufs);
+                    dev_steps += s as u64;
+                    exec_ns_total += exec_ns;
+                    to_vec_f32(&losses_lit)?
+                } else {
+                    let mut inputs: Vec<&xla::Literal> =
+                        Vec::with_capacity(state.leaves.len() + 2);
+                    inputs.extend(state.leaves.iter());
+                    inputs.push(&batch.lit);
+                    inputs.push(&lr_lit);
+                    let exe = engine.load_program(self.manifest, v, "train_chunk")?;
+                    if try_device {
+                        match try_adopt_device(
+                            exe, &inputs, "train_chunk", n_leaves, expected, untupled,
+                        )? {
+                            FirstDispatch::Device(bufs, losses_lit, exec_ns) => {
+                                dev_state = Some(bufs);
+                                dev_steps += s as u64;
+                                exec_ns_total += exec_ns;
+                                to_vec_f32(&losses_lit)?
+                            }
+                            FirstDispatch::Literal(lits, exec_ns) => {
+                                try_device = false;
+                                log::warn!(
+                                    "[{}] train_chunk outputs not separable; device residency off",
+                                    v.name
+                                );
+                                exec_ns_total += exec_ns;
+                                let extra = state.absorb(v, lits, s as u64)?;
+                                to_vec_f32(&extra[0])?
+                            }
+                        }
+                    } else {
+                        let (outs, exec_ns) = Engine::run_timed(exe, &inputs, expected, untupled)?;
+                        exec_ns_total += exec_ns;
+                        let extra = state.absorb(v, outs, s as u64)?;
+                        to_vec_f32(&extra[0])?
+                    }
+                };
                 let ms = t0.elapsed().as_secs_f64() * 1e3 / s as f64;
                 for (i, loss) in losses.iter().enumerate().take(n) {
                     metrics.record(step + i as u64, *loss as f64, lrs[i] as f64, ms);
@@ -354,6 +472,13 @@ impl<'m> Trainer<'m> {
         };
         let ((), stats) = run_pipeline(data, shape, dispatches, opts.prefetch_mode(), body)?;
         metrics.note("execute_ms_total", format!("{:.3}", exec_ns_total as f64 / 1e6));
+        // one download at the end of the run replaces a per-chunk state
+        // round-trip (same contract as train_per_step)
+        if let Some(bufs) = dev_state {
+            finish_device_state(state, bufs, dev_steps, metrics)?;
+        } else {
+            metrics.note("device_resident", "off");
+        }
         Ok(stats)
     }
 

@@ -33,12 +33,14 @@ pub mod sample;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::runtime::engine::{lit_i32, to_vec_f32, Engine};
+use crate::runtime::engine::{
+    fill_vec_f32, lit_f32, lit_i32, lit_scalar_f32, lit_scalar_i32, to_vec_f32, to_vec_i32, Engine,
+};
 use crate::runtime::manifest::{CacheLeaf, LeafSpec, Manifest, ModelCfg, ProgramSpec, Variant};
 use crate::runtime::state::TrainState;
 
 pub use batcher::{ContinuousBatcher, FinishedSeq, SeqRequest};
-pub use sample::{sample_row, SamplePolicy};
+pub use sample::{sample_row, sample_row_u, SamplePolicy, SampleScratch};
 
 /// Empty-cache-slot position: larger than any real position, so the
 /// causal mask (qpos >= kpos) can never select an empty slot. Must match
@@ -163,6 +165,21 @@ impl KvCacheBuffers {
 enum CacheState {
     Host(Vec<xla::Literal>),
     Device(Vec<xla::PjRtBuffer>),
+    /// A donated dispatch consumed the device buffers and then failed
+    /// before its outputs were adopted: the old cache is dead (PJRT
+    /// rejects donated buffers) and the session must be re-prefilled or
+    /// `reset_cache()`-ed before stepping again.
+    Consumed,
+}
+
+/// The sampled-ids result of one in-graph sampling step.
+pub struct SampledTokens {
+    /// one token id per batch slot — the only mandatory device→host
+    /// bytes of a zero-copy decode step (O(batch))
+    pub ids: Vec<i32>,
+    /// the `(values, ids)` top-`sample_k` logging tail, fetched only on
+    /// request (it costs `batch × K × 8` bytes per step)
+    pub topk: Option<(Vec<f32>, Vec<i32>)>,
 }
 
 /// One serving session: a variant's weights plus a live KV-cache for
@@ -171,6 +188,11 @@ pub struct DecodeSession<'m> {
     pub manifest: &'m Manifest,
     pub variant: &'m Variant,
     pub step_name: String,
+    /// the in-graph sampling twin ("decode_step_sample*"), when the
+    /// artifact carries one for this step family
+    pub sample_name: Option<String>,
+    /// static top-k width of the sampling twin (runtime k is clipped)
+    pub sample_k: Option<usize>,
     pub batch: usize,
     pub capacity: usize,
     /// payload / total bytes of the allocated cache (fixed at alloc)
@@ -182,6 +204,9 @@ pub struct DecodeSession<'m> {
     /// device residency: requested at construction, demoted (with a log
     /// line) the first time the runtime can't keep buffers separable
     pub device_resident: bool,
+    /// host→device / device→host bytes since the last `take_traffic`
+    up_bytes: u64,
+    down_bytes: u64,
 }
 
 impl<'m> DecodeSession<'m> {
@@ -207,10 +232,17 @@ impl<'m> DecodeSession<'m> {
         let kv = KvCacheBuffers::from_program(spec)?;
         let batch = spec.batch.unwrap_or(variant.batch);
         let capacity = spec.capacity.unwrap_or(variant.config.seq_len);
+        let sname = step_name.replacen("decode_step", "decode_step_sample", 1);
+        let (sample_name, sample_k) = match variant.programs.get(&sname) {
+            Some(s) if sname != step_name => (Some(sname), s.sample_k),
+            _ => (None, None),
+        };
         Ok(DecodeSession {
             manifest,
             variant,
             step_name: step_name.to_string(),
+            sample_name,
+            sample_k,
             batch,
             capacity,
             cache_payload_bytes_per_seq: kv.payload_bytes_per_seq(),
@@ -219,7 +251,19 @@ impl<'m> DecodeSession<'m> {
             model_bufs: None,
             cache: CacheState::Host(kv.leaves),
             device_resident,
+            up_bytes: 0,
+            down_bytes: 0,
         })
+    }
+
+    /// Host↔device traffic (bytes up, bytes down) accumulated since the
+    /// last call; resets the counters. The perf harness divides this by
+    /// steps to report `host_bytes_per_token`.
+    pub fn take_traffic(&mut self) -> (u64, u64) {
+        let r = (self.up_bytes, self.down_bytes);
+        self.up_bytes = 0;
+        self.down_bytes = 0;
+        r
     }
 
     /// Convenience: build the model leaves from a train state.
@@ -263,7 +307,8 @@ impl<'m> DecodeSession<'m> {
         tokens: &[i32],
         plen: &[i32],
     ) -> Result<(xla::Literal, xla::Literal)> {
-        let spec = self.variant.program("prefill")?;
+        let variant = self.variant;
+        let spec = variant.program("prefill")?;
         let p = spec.prompt_len.ok_or_else(|| anyhow!("prefill spec missing prompt_len"))?;
         if tokens.len() != self.batch * p || plen.len() != self.batch {
             bail!("prefill expects {}x{} tokens (+{} lens)", self.batch, p, self.batch);
@@ -275,13 +320,15 @@ impl<'m> DecodeSession<'m> {
         inputs.extend(self.model_lits.iter());
         inputs.push(&tok_lit);
         inputs.push(&plen_lit);
-        let exe = engine.load_program(self.manifest, self.variant, "prefill")?;
+        self.up_bytes += inputs.iter().map(|l| l.size_bytes() as u64).sum::<u64>();
+        let exe = engine.load_program(self.manifest, variant, "prefill")?;
         let bufs = Engine::run_buffers(exe, &inputs)?;
         let mut outs = Engine::first_device_outputs(bufs, "prefill")?;
         if self.device_resident && outs.len() == expected {
             let cache = outs.split_off(spec.extra_outputs.len());
             let logprobs = outs[0].to_literal_sync().context("prefill logprobs")?;
             let last = outs[1].to_literal_sync().context("prefill last_logits")?;
+            self.down_bytes += (logprobs.size_bytes() + last.size_bytes()) as u64;
             self.cache = CacheState::Device(cache);
             return Ok((logprobs, last));
         }
@@ -297,6 +344,7 @@ impl<'m> DecodeSession<'m> {
             self.demote("prefill returned a tuple output (old-style artifact)");
             Engine::outputs_to_literals(vec![outs], expected, false)?
         };
+        self.down_bytes += lits.iter().map(|l| l.size_bytes() as u64).sum::<u64>();
         let cache = lits.split_off(spec.extra_outputs.len());
         self.cache = CacheState::Host(cache);
         let logprobs = lits.swap_remove(0);
@@ -305,7 +353,9 @@ impl<'m> DecodeSession<'m> {
     }
 
     /// One decode step: per-slot next token, position, and reset flag.
-    /// Returns the logits literal [batch, vocab].
+    /// Returns the logits literal [batch, vocab] — `batch × vocab × 4`
+    /// device→host bytes per token; the zero-copy serving loop uses
+    /// `step_sample` instead and downloads O(batch).
     pub fn step(
         &mut self,
         engine: &mut Engine,
@@ -316,98 +366,204 @@ impl<'m> DecodeSession<'m> {
         if tokens.len() != self.batch || pos.len() != self.batch || reset.len() != self.batch {
             bail!("decode step expects {} slots", self.batch);
         }
-        let spec = self.variant.program(&self.step_name)?;
-        let n_extra = spec.extra_outputs.len();
-        let expected = n_extra + spec.cache.len();
-        let tok_lit = lit_i32(tokens, &[self.batch])?;
-        let pos_lit = lit_i32(pos, &[self.batch])?;
-        let rst_lit = lit_i32(reset, &[self.batch])?;
-        let step_name = self.step_name.clone();
+        let extras = vec![
+            lit_i32(tokens, &[self.batch])?,
+            lit_i32(pos, &[self.batch])?,
+            lit_i32(reset, &[self.batch])?,
+        ];
+        let name = self.step_name.clone();
+        let mut outs = self.step_program(engine, &name, extras, &[true])?;
+        Ok(outs.swap_remove(0).expect("fetched logits"))
+    }
+
+    /// One zero-copy decode step through the in-graph sampling twin:
+    /// uploads the per-slot token/pos/reset plus one uniform in [0, 1)
+    /// per slot, downloads the sampled ids `[batch] i32` — O(batch)
+    /// host traffic both ways. `temp`/`k` follow `SamplePolicy::temp_k`
+    /// (k is clipped in-graph to the program's `sample_k`); set
+    /// `fetch_topk` to also pull the `(values, ids)` logging tail.
+    #[allow(clippy::too_many_arguments)]
+    pub fn step_sample(
+        &mut self,
+        engine: &mut Engine,
+        tokens: &[i32],
+        pos: &[i32],
+        reset: &[i32],
+        uniforms: &[f32],
+        temp: f32,
+        k: usize,
+        fetch_topk: bool,
+    ) -> Result<SampledTokens> {
+        let b = self.batch;
+        if tokens.len() != b || pos.len() != b || reset.len() != b || uniforms.len() != b {
+            bail!("sampled decode step expects {} slots", b);
+        }
+        let name = self
+            .sample_name
+            .clone()
+            .ok_or_else(|| {
+                anyhow!(
+                    "variant {} has no in-graph sampling program for '{}' — rebuild the \
+                     artifacts (`make artifacts`) or sample on the host",
+                    self.variant.name,
+                    self.step_name
+                )
+            })?;
+        let extras = vec![
+            lit_i32(tokens, &[b])?,
+            lit_i32(pos, &[b])?,
+            lit_i32(reset, &[b])?,
+            lit_f32(uniforms, &[b])?,
+            lit_scalar_f32(temp),
+            lit_scalar_i32(k as i32),
+        ];
+        let fetch = [true, fetch_topk, fetch_topk];
+        let mut outs = self.step_program(engine, &name, extras, &fetch)?;
+        let ids = to_vec_i32(&outs[0].take().expect("fetched ids"))?;
+        let topk = match (outs[1].take(), outs[2].take()) {
+            (Some(vals), Some(tids)) => Some((to_vec_f32(&vals)?, to_vec_i32(&tids)?)),
+            _ => None,
+        };
+        Ok(SampledTokens { ids, topk })
+    }
+
+    /// Shared engine of `step` / `step_sample`: run one cache-stepping
+    /// program on the resident cache, store the returned cache leaves,
+    /// and hand back the program's extra outputs — `fetch[i]` selects
+    /// which of them cross back to the host (`None` = left on device /
+    /// dropped). On the device path the donated executable consumes the
+    /// previous cache buffers and this method replaces them with the
+    /// aliased outputs, so the cache is stepped strictly in place; on
+    /// the host path (or after demotion) every leaf round-trips as a
+    /// literal — the copying twin the A/B flags select.
+    fn step_program(
+        &mut self,
+        engine: &mut Engine,
+        name: &str,
+        extras: Vec<xla::Literal>,
+        fetch: &[bool],
+    ) -> Result<Vec<Option<xla::Literal>>> {
+        let variant = self.variant;
+        let spec = variant.program(name)?;
+        let n_extra_out = spec.extra_outputs.len();
+        debug_assert_eq!(fetch.len(), n_extra_out);
+        let expected = n_extra_out + spec.cache.len();
+        if matches!(self.cache, CacheState::Consumed) {
+            bail!(
+                "[{}] cache was consumed by a failed donated dispatch — reset_cache() or \
+                 re-prefill before stepping",
+                variant.name
+            );
+        }
 
         if self.device_resident {
-            return self
-                .device_step(engine, &step_name, &tok_lit, &pos_lit, &rst_lit, n_extra, expected);
+            // lazily move weights + cache onto the device (first step)
+            if self.model_bufs.is_none() {
+                let mut bufs = Vec::with_capacity(self.model_lits.len());
+                for l in &self.model_lits {
+                    self.up_bytes += l.size_bytes() as u64;
+                    bufs.push(engine.to_device(l)?);
+                }
+                self.model_bufs = Some(bufs);
+            }
+            if let CacheState::Host(lits) = &self.cache {
+                let mut bufs = Vec::with_capacity(lits.len());
+                for l in lits {
+                    bufs.push(engine.to_device(l)?);
+                }
+                self.up_bytes +=
+                    lits.iter().map(|l| l.size_bytes() as u64).sum::<u64>();
+                self.cache = CacheState::Device(bufs);
+            }
+            let mut extra_bufs = Vec::with_capacity(extras.len());
+            for l in &extras {
+                self.up_bytes += l.size_bytes() as u64;
+                extra_bufs.push(engine.to_device(l)?);
+            }
+            let prog_path = self.manifest.hlo_path(variant, name)?;
+            engine.load_program(self.manifest, variant, name)?; // compile (cached)
+            // with donation active, the dispatch consumes the cache input
+            // buffers: a failure after this point must leave the session
+            // reading Consumed (stepping again would feed dead buffers);
+            // without donation (--no-donate / demoted) the buffers survive
+            // errors and the cache is restored
+            let donated = engine.donation_active(&prog_path);
+            let exe = engine.load_program(self.manifest, variant, name)?;
+            let cache_bufs = match std::mem::replace(&mut self.cache, CacheState::Consumed) {
+                CacheState::Device(bufs) => bufs,
+                _ => unreachable!("cache uploaded above"),
+            };
+            let model = self.model_bufs.as_ref().unwrap();
+            let mut inputs: Vec<&xla::PjRtBuffer> =
+                Vec::with_capacity(model.len() + extra_bufs.len() + cache_bufs.len());
+            inputs.extend(model.iter());
+            inputs.extend(extra_bufs.iter());
+            inputs.extend(cache_bufs.iter());
+            let run_result = Engine::run_on_buffers(exe, &inputs)
+                .and_then(|bufs| Engine::first_device_outputs(bufs, name));
+            drop(inputs);
+            let mut outs = match run_result {
+                Ok(outs) => outs,
+                Err(e) => {
+                    if !donated {
+                        self.cache = CacheState::Device(cache_bufs);
+                    }
+                    return Err(e);
+                }
+            };
+            if outs.len() == expected {
+                let cache = outs.split_off(n_extra_out);
+                // adopt the (possibly aliased) output cache buffers
+                self.cache = CacheState::Device(cache);
+                let mut res = Vec::with_capacity(n_extra_out);
+                for (buf, &want) in outs.iter().zip(fetch) {
+                    if want {
+                        let lit = buf.to_literal_sync().with_context(|| format!("{name} output"))?;
+                        self.down_bytes += lit.size_bytes() as u64;
+                        res.push(Some(lit));
+                    } else {
+                        res.push(None);
+                    }
+                }
+                return Ok(res);
+            }
+            // tuple output (never aliased: old-style artifacts predate
+            // donation): decompose once, keep going on the host
+            let mut lits = match Engine::outputs_to_literals(vec![outs], expected, false) {
+                Ok(lits) => lits,
+                Err(e) => {
+                    if !donated {
+                        self.cache = CacheState::Device(cache_bufs);
+                    }
+                    return Err(e);
+                }
+            };
+            self.down_bytes += lits.iter().map(|l| l.size_bytes() as u64).sum::<u64>();
+            let cache = lits.split_off(n_extra_out);
+            self.cache = CacheState::Host(cache);
+            self.demote("step returned a tuple output (old-style artifact)");
+            return Ok(lits.into_iter().map(Some).collect());
         }
 
         // host path: every leaf as a literal, outputs fetched per step
         let cache_lits = match &self.cache {
             CacheState::Host(lits) => lits,
-            CacheState::Device(_) => unreachable!("device cache in host path"),
+            _ => unreachable!("device cache in host path"),
         };
         let mut inputs: Vec<&xla::Literal> =
-            Vec::with_capacity(self.model_lits.len() + 3 + cache_lits.len());
+            Vec::with_capacity(self.model_lits.len() + extras.len() + cache_lits.len());
         inputs.extend(self.model_lits.iter());
-        inputs.push(&tok_lit);
-        inputs.push(&pos_lit);
-        inputs.push(&rst_lit);
+        inputs.extend(extras.iter());
         inputs.extend(cache_lits.iter());
-        let exe = engine.load_program(self.manifest, self.variant, &step_name)?;
+        let up = inputs.iter().map(|l| l.size_bytes() as u64).sum::<u64>();
+        let exe = engine.load_program(self.manifest, variant, name)?;
         let mut lits = Engine::run(exe, &inputs, expected, spec.untupled)?;
-        let cache = lits.split_off(spec.extra_outputs.len());
+        drop(inputs);
+        self.up_bytes += up;
+        self.down_bytes += lits.iter().map(|l| l.size_bytes() as u64).sum::<u64>();
+        let cache = lits.split_off(n_extra_out);
         self.cache = CacheState::Host(cache);
-        Ok(lits.swap_remove(0))
-    }
-
-    /// Device-resident step: K/V stays on device between tokens. If the
-    /// runtime hands back a tuple output instead of separable leaves, the
-    /// session decomposes it once, syncs the cache to the host, and
-    /// demotes itself so later steps go through the host path.
-    #[allow(clippy::too_many_arguments)]
-    fn device_step(
-        &mut self,
-        engine: &mut Engine,
-        step_name: &str,
-        tok: &xla::Literal,
-        pos: &xla::Literal,
-        rst: &xla::Literal,
-        n_extra: usize,
-        expected: usize,
-    ) -> Result<xla::Literal> {
-        // lazily move weights + cache onto the device
-        if self.model_bufs.is_none() {
-            let mut bufs = Vec::with_capacity(self.model_lits.len());
-            for l in &self.model_lits {
-                bufs.push(engine.to_device(l)?);
-            }
-            self.model_bufs = Some(bufs);
-        }
-        if let CacheState::Host(lits) = &self.cache {
-            let mut bufs = Vec::with_capacity(lits.len());
-            for l in lits {
-                bufs.push(engine.to_device(l)?);
-            }
-            self.cache = CacheState::Device(bufs);
-        }
-        let tok_b = engine.to_device(tok)?;
-        let pos_b = engine.to_device(pos)?;
-        let rst_b = engine.to_device(rst)?;
-        let exe = engine.load_program(self.manifest, self.variant, step_name)?;
-        let model = self.model_bufs.as_ref().unwrap();
-        let cache = match &self.cache {
-            CacheState::Device(bufs) => bufs,
-            CacheState::Host(_) => unreachable!(),
-        };
-        let mut inputs: Vec<&xla::PjRtBuffer> =
-            Vec::with_capacity(model.len() + 3 + cache.len());
-        inputs.extend(model.iter());
-        inputs.push(&tok_b);
-        inputs.push(&pos_b);
-        inputs.push(&rst_b);
-        inputs.extend(cache.iter());
-        let bufs = Engine::run_on_buffers(exe, &inputs)?;
-        let mut outs = Engine::first_device_outputs(bufs, "decode_step")?;
-        if outs.len() == expected {
-            let cache = outs.split_off(n_extra);
-            let logits = outs[0].to_literal_sync().context("decode logits")?;
-            self.cache = CacheState::Device(cache);
-            return Ok(logits);
-        }
-        // tuple output: decompose once, keep going on the host
-        let mut lits = Engine::outputs_to_literals(vec![outs], expected, false)?;
-        let cache = lits.split_off(n_extra);
-        self.cache = CacheState::Host(cache);
-        self.demote("decode_step returned a tuple output (old-style artifact)");
-        Ok(lits.swap_remove(0))
+        Ok(lits.into_iter().map(Some).collect())
     }
 }
 
@@ -425,6 +581,12 @@ pub struct GenerateOptions {
     /// prefill program (admissions after that stream through decode_step)
     pub use_prefill: bool,
     pub device_resident: bool,
+    /// sample in-graph (`decode_step_sample`) so only O(batch) bytes
+    /// cross the host boundary per token; falls back to host sampling
+    /// when the artifact lacks the program or the policy's k exceeds its
+    /// static top-k width. Host and device sampling draw the same
+    /// per-slot uniforms, so the generated streams are identical.
+    pub device_sample: bool,
 }
 
 impl Default for GenerateOptions {
@@ -436,6 +598,7 @@ impl Default for GenerateOptions {
             eos: None,
             use_prefill: true,
             device_resident: true,
+            device_sample: true,
         }
     }
 }
@@ -456,6 +619,21 @@ pub fn generate(
     let b = session.batch;
     let vocab = variant.config.vocab;
     let cap = session.capacity;
+    let (temp, k) = opts.policy.temp_k();
+    let device_sample = opts.device_sample
+        && match (&session.sample_name, session.sample_k) {
+            (Some(_), Some(kmax)) if k <= kmax => true,
+            (Some(_), kmax) => {
+                log::warn!(
+                    "[{}] top-k {} exceeds the in-graph sampler width {:?}; sampling on the host",
+                    variant.name,
+                    k,
+                    kmax
+                );
+                false
+            }
+            (None, _) => false,
+        };
     let mut batcher = ContinuousBatcher::new(b, opts.eos);
     for mut r in requests {
         // the cache holds `cap` positions; writes beyond it are dropped by
@@ -487,6 +665,13 @@ pub fn generate(
         batcher.submit(r);
     }
     let mut finished = Vec::new();
+    // one scratch for the whole run: the uniform draws (shared by both
+    // sampling paths so their token streams agree), the host sampler's
+    // selection/cumsum buffers, and the reusable logits staging vector
+    // (no full-vocab allocation per token on the host path)
+    let mut uniforms = vec![0f32; b];
+    let mut scratch = SampleScratch::default();
+    let mut logits_buf: Vec<f32> = Vec::new();
 
     // fast path: batch-prefill the first wave
     if opts.use_prefill && variant.programs.contains_key("prefill") {
@@ -494,9 +679,17 @@ pub fn generate(
         if batcher.admit() > 0 {
             let (tokens, plen) = batcher.prefill_wave(p);
             let (_, last) = session.prefill(engine, &tokens, &plen)?;
-            let logits = to_vec_f32(&last)?;
+            fill_vec_f32(&last, &mut logits_buf)?;
+            uniforms.iter_mut().for_each(|u| *u = rng.f32());
             let sampled: Vec<i32> = (0..b)
-                .map(|i| sample_row(&logits[i * vocab..(i + 1) * vocab], &opts.policy, &mut rng))
+                .map(|i| {
+                    sample_row_u(
+                        &logits_buf[i * vocab..(i + 1) * vocab],
+                        &opts.policy,
+                        uniforms[i],
+                        &mut scratch,
+                    )
+                })
                 .collect();
             finished.extend(batcher.advance(&sampled));
         }
@@ -509,11 +702,26 @@ pub fn generate(
             break;
         }
         batcher.next_inputs(&mut toks, &mut pos, &mut rst);
-        let logits_lit = session.step(engine, &toks, &pos, &rst)?;
-        let logits = to_vec_f32(&logits_lit)?;
-        let sampled: Vec<i32> = (0..b)
-            .map(|i| sample_row(&logits[i * vocab..(i + 1) * vocab], &opts.policy, &mut rng))
-            .collect();
+        uniforms.iter_mut().for_each(|u| *u = rng.f32());
+        let sampled: Vec<i32> = if device_sample {
+            // zero-copy: sampled in-graph, O(batch) bytes both ways
+            session
+                .step_sample(engine, &toks, &pos, &rst, &uniforms, temp, k, false)?
+                .ids
+        } else {
+            let logits_lit = session.step(engine, &toks, &pos, &rst)?;
+            fill_vec_f32(&logits_lit, &mut logits_buf)?;
+            (0..b)
+                .map(|i| {
+                    sample_row_u(
+                        &logits_buf[i * vocab..(i + 1) * vocab],
+                        &opts.policy,
+                        uniforms[i],
+                        &mut scratch,
+                    )
+                })
+                .collect()
+        };
         finished.extend(batcher.advance(&sampled));
     }
     Ok(finished)

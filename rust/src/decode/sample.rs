@@ -1,8 +1,23 @@
-//! Host-side sampling over the logits a decode step returns.
+//! Host-side sampling over decode-step logits.
 //!
-//! The logits literal is [batch, vocab] f32; sampling is per-row. Greedy
-//! is deterministic argmax; top-k renormalises the k largest logits at a
-//! temperature and draws from them (the standard serving default).
+//! Two entry points share one algorithm:
+//! - `sample_row` draws its own uniform from a `Pcg` (CLI / tests);
+//! - `sample_row_u` takes a pre-drawn uniform in [0, 1) and is the exact
+//!   host mirror of the in-graph sampler (`decode_step_sample`): stable
+//!   descending top-k (ties break toward the lower index), f32 weights
+//!   `exp((v - v_max)/temp)`, *sequential* f32 cumulative sum, and an
+//!   inverse-CDF draw selecting the first slot whose cumsum reaches
+//!   `uniform * total`. Device- and host-side sampling therefore agree
+//!   token-for-token given the same uniforms (pinned by the artifact-
+//!   gated parity test and `python/tests/test_decode.py`'s mirror test).
+//!
+//! Selection is `select_nth_unstable_by` partial selection — O(V + k log k)
+//! per row instead of the previous full-vocab sort's O(V log V) — with a
+//! total comparator (logit desc, index asc on ties/NaN), so the selected
+//! set and its order are identical to the full sort: the sampling
+//! distribution is unchanged. `SampleScratch` carries the index and
+//! cumsum buffers across rows and steps, so the serving loop allocates
+//! nothing per token.
 
 use crate::util::rng::Pcg;
 
@@ -12,11 +27,45 @@ pub enum SamplePolicy {
     TopK { k: usize, temperature: f32 },
 }
 
-/// Sample one token id from a single row of logits.
+impl SamplePolicy {
+    /// (temperature, k) as the in-graph sampling program consumes them:
+    /// greedy is exactly k = 1 (`top_k` ties break like argmax).
+    pub fn temp_k(&self) -> (f32, usize) {
+        match self {
+            SamplePolicy::Greedy => (1.0, 1),
+            SamplePolicy::TopK { k, temperature } => (*temperature, (*k).max(1)),
+        }
+    }
+}
+
+/// Reusable per-caller scratch: one index buffer and one cumulative-
+/// weight buffer shared across rows and steps.
+#[derive(Debug, Default)]
+pub struct SampleScratch {
+    idx: Vec<u32>,
+    cum: Vec<f32>,
+}
+
+/// Sample one token id from a single row of logits, drawing the uniform
+/// from `rng`. Greedy consumes one draw too (unused), so greedy and
+/// top-k runs advance the stream identically — and so does the
+/// device-sampling path, which uploads the same per-row uniforms.
 pub fn sample_row(logits: &[f32], policy: &SamplePolicy, rng: &mut Pcg) -> i32 {
+    let mut scratch = SampleScratch::default();
+    sample_row_u(logits, policy, rng.f32(), &mut scratch)
+}
+
+/// Sample one token id given a pre-drawn uniform in [0, 1) (see module
+/// doc for the exact-parity contract with the in-graph sampler).
+pub fn sample_row_u(
+    logits: &[f32],
+    policy: &SamplePolicy,
+    u: f32,
+    scratch: &mut SampleScratch,
+) -> i32 {
     match policy {
         SamplePolicy::Greedy => argmax(logits),
-        SamplePolicy::TopK { k, temperature } => top_k(logits, *k, *temperature, rng),
+        SamplePolicy::TopK { k, temperature } => top_k(logits, *k, *temperature, u, scratch),
     }
 }
 
@@ -30,16 +79,45 @@ fn argmax(logits: &[f32]) -> i32 {
     best as i32
 }
 
-fn top_k(logits: &[f32], k: usize, temperature: f32, rng: &mut Pcg) -> i32 {
-    let k = k.max(1).min(logits.len());
+fn top_k(logits: &[f32], k: usize, temperature: f32, u: f32, scratch: &mut SampleScratch) -> i32 {
+    let v = logits.len();
+    let k = k.max(1).min(v);
     let temp = temperature.max(1e-4);
-    let mut idx: Vec<usize> = (0..logits.len()).collect();
-    idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap_or(std::cmp::Ordering::Equal));
-    idx.truncate(k);
-    // softmax over the kept logits at the given temperature
-    let m = logits[idx[0]];
-    let weights: Vec<f64> = idx.iter().map(|&i| (((logits[i] - m) / temp) as f64).exp()).collect();
-    idx[rng.weighted(&weights)] as i32
+    // total order: logit descending, index ascending on ties (NaN sorts
+    // by index, matching the seed comparator's Equal fallback)
+    let desc = |a: &u32, b: &u32| {
+        let (x, y) = (logits[*a as usize], logits[*b as usize]);
+        match y.partial_cmp(&x) {
+            Some(std::cmp::Ordering::Equal) | None => a.cmp(b),
+            Some(o) => o,
+        }
+    };
+    let idx = &mut scratch.idx;
+    idx.clear();
+    idx.extend(0..v as u32);
+    if k < v {
+        // O(V) partition: the k largest land (unordered) in idx[..k]
+        idx.select_nth_unstable_by(k - 1, desc);
+        idx.truncate(k);
+    }
+    idx.sort_unstable_by(desc);
+    // inverse-CDF over the f32 sequential cumsum of the kept weights —
+    // the arithmetic the in-graph sampler replays exactly
+    let m = logits[idx[0] as usize];
+    let cum = &mut scratch.cum;
+    cum.clear();
+    let mut acc = 0f32;
+    for &i in idx.iter() {
+        acc += ((logits[i as usize] - m) / temp).exp();
+        cum.push(acc);
+    }
+    let x = u * acc;
+    for (j, &c) in cum.iter().enumerate() {
+        if c >= x {
+            return idx[j] as i32;
+        }
+    }
+    idx[k - 1] as i32
 }
 
 #[cfg(test)]
@@ -79,5 +157,96 @@ mod tests {
             );
             assert_eq!(t, 1);
         }
+    }
+
+    #[test]
+    fn k1_equals_greedy_for_any_uniform() {
+        let mut scratch = SampleScratch::default();
+        let mut rng = Pcg::seeded(4);
+        for _ in 0..50 {
+            let logits: Vec<f32> = (0..64).map(|_| rng.f32() * 8.0 - 4.0).collect();
+            let u = rng.f32();
+            let g = sample_row_u(&logits, &SamplePolicy::Greedy, u, &mut scratch);
+            let k1 = sample_row_u(
+                &logits,
+                &SamplePolicy::TopK { k: 1, temperature: 1.0 },
+                u,
+                &mut scratch,
+            );
+            assert_eq!(g, k1);
+        }
+    }
+
+    /// The seed implementation's selection: full stable sort descending,
+    /// truncate to k — the oracle the partial selection must reproduce.
+    fn reference_top_k_order(logits: &[f32], k: usize) -> Vec<u32> {
+        let mut idx: Vec<u32> = (0..logits.len() as u32).collect();
+        idx.sort_by(|&a, &b| {
+            logits[b as usize]
+                .partial_cmp(&logits[a as usize])
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        idx.truncate(k.max(1).min(logits.len()));
+        idx
+    }
+
+    #[test]
+    fn prop_partial_selection_matches_full_sort_with_ties() {
+        let mut rng = Pcg::seeded(7);
+        let mut scratch = SampleScratch::default();
+        for _ in 0..200 {
+            let v = 8 + rng.usize_below(120);
+            // coarse quantisation forces plenty of ties
+            let logits: Vec<f32> =
+                (0..v).map(|_| (rng.below(16) as f32) * 0.5 - 4.0).collect();
+            let k = 1 + rng.usize_below(v);
+            let want = reference_top_k_order(&logits, k);
+            let u = rng.f32();
+            let got = sample_row_u(
+                &logits,
+                &SamplePolicy::TopK { k, temperature: 0.7 },
+                u,
+                &mut scratch,
+            );
+            // whatever index came back must be the one the reference
+            // arithmetic picks for the same uniform
+            let m = logits[want[0] as usize];
+            let mut acc = 0f32;
+            let mut cum = Vec::with_capacity(want.len());
+            for &i in &want {
+                acc += ((logits[i as usize] - m) / 0.7f32).exp();
+                cum.push(acc);
+            }
+            let x = u * acc;
+            let pick = cum
+                .iter()
+                .position(|&c| c >= x)
+                .map(|j| want[j] as i32)
+                .unwrap_or(want[want.len() - 1] as i32);
+            assert_eq!(got, pick, "v={v} k={k}");
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_stateless_across_rows() {
+        let mut scratch = SampleScratch::default();
+        let a = vec![1.0f32, 9.0, 2.0, 3.0];
+        let b = vec![4.0f32, 1.0, 8.0];
+        let pol = SamplePolicy::TopK { k: 2, temperature: 0.5 };
+        let fresh = |row: &[f32], u: f32| {
+            let mut s = SampleScratch::default();
+            sample_row_u(row, &pol, u, &mut s)
+        };
+        for u in [0.0, 0.3, 0.77, 0.999] {
+            assert_eq!(sample_row_u(&a, &pol, u, &mut scratch), fresh(&a, u));
+            assert_eq!(sample_row_u(&b, &pol, u, &mut scratch), fresh(&b, u));
+        }
+    }
+
+    #[test]
+    fn policy_temp_k_mapping() {
+        assert_eq!(SamplePolicy::Greedy.temp_k(), (1.0, 1));
+        assert_eq!(SamplePolicy::TopK { k: 8, temperature: 0.5 }.temp_k(), (0.5, 8));
+        assert_eq!(SamplePolicy::TopK { k: 0, temperature: 2.0 }.temp_k(), (2.0, 1));
     }
 }

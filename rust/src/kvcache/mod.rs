@@ -70,6 +70,35 @@ pub fn train_activation_bytes(cfg: &ModelCfg, batch: usize) -> u64 {
     cfg.n_layers as u64 * per_layer * b * 4
 }
 
+/// Device high-water bytes of a step's *mutable state* (train leaves or
+/// KV-cache) while one dispatch runs. The copying path materialises the
+/// step's outputs next to its still-live inputs — 2x the state — at the
+/// hand-over point; a donated executable (`input_output_alias` from
+/// `donate_argnums`) writes the outputs into the input buffers, so the
+/// high-water stays 1x. `state_bytes` should come from the manifest
+/// layout (`Variant::state_bytes` / the decode program's cache section)
+/// so the model cross-checks the real artifact.
+pub fn step_state_highwater_bytes(state_bytes: u64, donated: bool) -> u64 {
+    if donated {
+        state_bytes
+    } else {
+        2 * state_bytes
+    }
+}
+
+/// Training-step device high-water: the activation model plus the
+/// donated-vs-copied train-state term — the number `BENCH_pipeline`'s
+/// train probe reports per arm (paper Table 2's memory column, now
+/// including what donation saves).
+pub fn train_step_highwater_bytes(
+    cfg: &ModelCfg,
+    batch: usize,
+    state_bytes: u64,
+    donated: bool,
+) -> u64 {
+    train_activation_bytes(cfg, batch) + step_state_highwater_bytes(state_bytes, donated)
+}
+
 /// An autoregressive decode simulation: walk a context of length `t`,
 /// tracking live KV entries step by step; returns (peak_pairs, final_pairs).
 /// Validates the closed-form accounting (property-tested against it).
@@ -162,6 +191,20 @@ mod tests {
             assert_eq!(fin, kv_pairs_total(&c, t));
             assert_eq!(peak, fin); // cache grows monotonically
         }
+    }
+
+    #[test]
+    fn donated_highwater_halves_the_state_term() {
+        assert_eq!(step_state_highwater_bytes(1000, true), 1000);
+        assert_eq!(step_state_highwater_bytes(1000, false), 2000);
+        let c = cfg(4, 17, "mosa", 32, 6, 1024);
+        let act = train_activation_bytes(&c, 8);
+        assert_eq!(train_step_highwater_bytes(&c, 8, 5000, true), act + 5000);
+        assert_eq!(train_step_highwater_bytes(&c, 8, 5000, false), act + 10000);
+        // donation saves exactly the state bytes, independent of the model
+        let saved = train_step_highwater_bytes(&c, 8, 5000, false)
+            - train_step_highwater_bytes(&c, 8, 5000, true);
+        assert_eq!(saved, 5000);
     }
 
     #[test]

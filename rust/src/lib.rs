@@ -36,24 +36,38 @@
 //!
 //! The paper's resource headline (Table 2) is an *inference* claim —
 //! smaller KV-cache, faster wall-clock — so the repo carries a second
-//! measured hot path next to training (see PERF.md §Decode path):
+//! measured hot path next to training (see PERF.md §Decode path and
+//! §Zero-copy stepping):
 //!
 //! - **Cache-aware programs** (`python/compile/decode.py`): `prefill`
 //!   lowers the whole-prompt forward plus KV-cache extraction for every
 //!   head kind (dense append / local ring / MoSA streaming expert-choice /
 //!   fixed grid / routing nearest-centroid); `decode_step` advances one
 //!   token per sequence slot against static-shape caches recorded in the
-//!   manifest's per-program `cache` section.
+//!   manifest's per-program `cache` section; `decode_step_sample` fuses
+//!   the sampling head in-graph (top-k + temperature + inverse-CDF
+//!   against a host-supplied uniform), returning sampled ids instead of
+//!   full logits.
+//! - **Zero-copy stepping**: every mutable-state program is lowered with
+//!   buffer donation (`donate_argnums`; the manifest's per-program
+//!   `donated` alias map, validated at parse time), so the resident
+//!   train state and KV-cache are updated *in place* — no second device
+//!   copy per dispatch — and the engine can strip the aliases for the
+//!   `--no-donate` copying A/B twin.
 //! - **Device-resident serving** (`decode`): `DecodeSession` feeds the
 //!   cache buffers PJRT returns straight back into the next dispatch, so
 //!   K/V bytes never cross the host boundary between tokens; the
 //!   `ContinuousBatcher` admits/retires sequences into fixed batch slots
-//!   with per-slot positions and in-graph cache invalidation; greedy and
-//!   top-k sampling run on the returned logits (`mosa generate`).
+//!   with per-slot positions and in-graph cache invalidation; sampling
+//!   runs in-graph (`step_sample`, O(batch) host bytes per token both
+//!   ways) or on the host over fetched logits (`sample_row_u`, the exact
+//!   mirror — identical tokens given the same uniforms).
 //! - **Decode harness** (`perf::decode`, part of `mosa perf`): emits
 //!   `BENCH_decode.json` — prefill ms, per-token ms vs context capacity,
-//!   tokens/sec at batch 1/8/32, and measured cache bytes dense-vs-MoSA
-//!   matching `kvcache::kv_bytes_total` exactly.
+//!   tokens/sec at batch 1/8/32, measured cache bytes dense-vs-MoSA
+//!   matching `kvcache::kv_bytes_total` exactly, and the donate ×
+//!   sampling 2×2 with measured `host_bytes_per_token` (gated in
+//!   `verify.sh` at 16 × batch on the device-sampling path).
 
 pub mod util;
 pub mod config;

@@ -23,7 +23,7 @@ use mosa::decode::{generate, GenerateOptions, SamplePolicy, SeqRequest};
 use mosa::evalharness::{self, make_tasks, TaskKind};
 use mosa::experiments::{build_datasets, run_variant};
 use mosa::flops::paper;
-use mosa::runtime::{Engine, Manifest, TrainState};
+use mosa::runtime::{Manifest, TrainState};
 use mosa::util::cli::Args;
 
 fn main() {
@@ -66,7 +66,8 @@ fn print_help() {
         "mosa — Mixture of Sparse Attention coordinator\n\n\
          usage: mosa <cmd> [--flags]\n\n\
          cmds:\n\
-         \x20 train      --variant <name> [--steps N] [--lr X] [--chunk] [--no-prefetch] [--ckpt path]\n\
+         \x20 train      --variant <name> [--steps N] [--lr X] [--chunk] [--no-prefetch]\n\
+         \x20            [--no-device-resident] [--no-donate] [--ckpt path]\n\
          \x20 eval       --variant <name> --ckpt <path> [--eval-batches N]\n\
          \x20 flops      [--table4] [--table5]\n\
          \x20 kv         --variant <name> [--ctx T]\n\
@@ -74,6 +75,7 @@ fn print_help() {
          \x20 perf       [--smoke] [--corpus-bytes N] [--threads N] [--out path] [--decode-out path]\n\
          \x20 generate   --variant <name> [--ckpt path] [--prompt text] [--n-seqs N]\n\
          \x20            [--max-new N] [--top-k K] [--temp T] [--seed S] [--no-device-resident]\n\
+         \x20            [--host-sample] [--no-donate]\n\
          \x20 downstream --variant <name> --ckpt <path> [--n 50]\n\
          \x20 list       [--artifacts dir]\n"
     );
@@ -91,7 +93,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let name = args.get("variant").unwrap_or("micro_mosa_r8");
     let manifest = Manifest::load(&rc.artifacts_dir)?;
     let variant = manifest.variant(name)?;
-    let mut engine = Engine::cpu()?;
+    let mut engine = rc.engine()?;
     let (train_ds, test_ds) = build_datasets(&rc, variant.config.vocab)?;
     log::info!(
         "dataset: {} train / {} test tokens (vocab {})",
@@ -123,7 +125,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let ckpt = args.get("ckpt").ok_or_else(|| anyhow::anyhow!("--ckpt required"))?;
     let manifest = Manifest::load(&rc.artifacts_dir)?;
     let variant = manifest.variant(name)?;
-    let mut engine = Engine::cpu()?;
+    let mut engine = rc.engine()?;
     let state = TrainState::load(variant, ckpt)?;
     let (_, test_ds) = build_datasets(&rc, variant.config.vocab)?;
     let trainer = Trainer::new(&manifest, variant);
@@ -198,7 +200,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
     let name = args.get("variant").unwrap_or("micro_mosa_r8");
     let manifest = Manifest::load(&rc.artifacts_dir)?;
     let variant = manifest.variant(name)?;
-    let mut engine = Engine::cpu()?;
+    let mut engine = rc.engine()?;
     // weights: a trained checkpoint when given, otherwise the host init
     // (random weights — useful to exercise the serving path end-to-end)
     let state = match args.get("ckpt") {
@@ -225,6 +227,9 @@ fn cmd_generate(args: &Args) -> Result<()> {
         eos: None,
         use_prefill: !args.has("no-prefill"),
         device_resident: rc.device_resident,
+        // in-graph sampling keeps per-token host traffic O(batch);
+        // --host-sample selects the logits-download twin for A/B runs
+        device_sample: !args.has("host-sample"),
     };
     let requests: Vec<SeqRequest> = (0..n_seqs)
         .map(|i| SeqRequest { id: i as u64, prompt: prompt_ids.clone(), max_new: opts.max_new })
@@ -254,7 +259,7 @@ fn cmd_downstream(args: &Args) -> Result<()> {
     let n = args.get_usize("n", 50);
     let manifest = Manifest::load(&rc.artifacts_dir)?;
     let variant = manifest.variant(name)?;
-    let mut engine = Engine::cpu()?;
+    let mut engine = rc.engine()?;
     let state = TrainState::load(variant, ckpt)?;
     let bpe = training_bpe(&rc, variant.config.vocab)?;
     for kind in TaskKind::all() {

@@ -5,12 +5,20 @@
 //! - **cache bytes**: the allocated `KvCacheBuffers` payload per sequence
 //!   at the serving capacity, cross-checked (exactly) against
 //!   `kvcache::kv_bytes_total` — plus the MoSA/dense ratio the paper
-//!   reports as "drastically reduced";
+//!   reports as "drastically reduced" — and the donated-vs-copied device
+//!   high-water of the stepped cache (`step_state_highwater_bytes`);
 //! - **prefill**: wall-clock ms to process a full prompt window into the
 //!   cache (XLA compile time reported separately, never mixed in);
 //! - **steady-state decode**: per-token ms and tokens/sec with the cache
 //!   device-resident, and the same loop with the host-roundtrip cache
 //!   (`--no-device-resident` twin) so the residency win is a number;
+//! - **zero-copy 2×2** (`zero_copy`): donate {on, off} × sampling
+//!   {in-graph, host} with measured `host_bytes_per_token` in both
+//!   directions — the number `verify.sh` gates at 16 × batch on the
+//!   device-sampling path — plus a closed-form projection of the traffic
+//!   reduction at a serving vocab of 8192. The same two donate arms run
+//!   on the `decode_step_b32` family (`zero_copy_b32`) for the
+//!   batch-32 latency acceptance;
 //! - **batch scaling**: tokens/sec at batch 1 / native / 32 via the
 //!   `decode_step_b*` program family;
 //! - **context scaling**: per-token ms at capacities 128..1024 via
@@ -24,14 +32,19 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::decode::DecodeSession;
+use crate::decode::{sample_row_u, DecodeSession, SamplePolicy, SampleScratch};
 use crate::kvcache;
+use crate::runtime::engine::fill_vec_f32;
 use crate::runtime::state::TrainState;
 use crate::runtime::{Engine, Manifest, Variant};
 use crate::util::json::Json;
 use crate::util::rng::Pcg;
 
 use super::PerfConfig;
+
+/// Sampling policy both 2×2 arms replay (host mirrors the in-graph
+/// sampler given the same uniforms, so the arms do identical work).
+const AB_POLICY: SamplePolicy = SamplePolicy::TopK { k: 8, temperature: 0.9 };
 
 /// Variants the decode bench looks for, in report order. The first two
 /// are the ISSUE's Table 2 pair.
@@ -110,6 +123,70 @@ fn rand_tokens(rng: &mut Pcg, n: usize, vocab: usize) -> Vec<i32> {
     (0..n).map(|_| rng.below(vocab as u32) as i32).collect()
 }
 
+/// One 2×2 arm: steady-state decode with donation `donate` and sampling
+/// either in-graph (`device_sample`) or on the host over fetched logits.
+/// Returns (ms/step, host bytes up per step, host bytes down per step).
+#[allow(clippy::too_many_arguments)]
+fn time_arm(
+    engine: &mut Engine,
+    manifest: &Manifest,
+    v: &Variant,
+    step_name: &str,
+    donate: bool,
+    device_sample: bool,
+    steps: usize,
+    rng: &mut Pcg,
+) -> Result<(f64, f64, f64)> {
+    let prev = engine.donate;
+    engine.donate = donate;
+    let mut run = || -> Result<(f64, f64, f64)> {
+        let vocab = v.config.vocab;
+        let mut s = session_for(manifest, v, step_name, true)?;
+        let b = s.batch;
+        let (temp, k) = AB_POLICY.temp_k();
+        let mut scratch = SampleScratch::default();
+        let mut logits_buf: Vec<f32> = Vec::new();
+        let mut uniforms = vec![0f32; b];
+        let mut reset: Vec<i32> = vec![1; b];
+        let mut one = |s: &mut DecodeSession<'_>, engine: &mut Engine, rng: &mut Pcg, pos0: i32,
+                       reset: &[i32]|
+         -> Result<()> {
+            let toks = rand_tokens(rng, b, vocab);
+            let pos: Vec<i32> = vec![pos0; b];
+            uniforms.iter_mut().for_each(|u| *u = rng.f32());
+            if device_sample {
+                s.step_sample(engine, &toks, &pos, reset, &uniforms, temp, k, false)?;
+            } else {
+                let lit = s.step(engine, &toks, &pos, reset)?;
+                fill_vec_f32(&lit, &mut logits_buf)?;
+                for i in 0..b {
+                    sample_row_u(
+                        &logits_buf[i * vocab..(i + 1) * vocab],
+                        &AB_POLICY,
+                        uniforms[i],
+                        &mut scratch,
+                    );
+                }
+            }
+            Ok(())
+        };
+        // warmup pays compile + first-touch uploads, then the counters reset
+        one(&mut s, engine, rng, 0, &reset)?;
+        reset.iter_mut().for_each(|r| *r = 0);
+        s.take_traffic();
+        let t0 = Instant::now();
+        for i in 0..steps {
+            one(&mut s, engine, rng, 1 + i as i32, &reset)?;
+        }
+        let ms = t0.elapsed().as_secs_f64() * 1e3 / steps.max(1) as f64;
+        let (up, down) = s.take_traffic();
+        Ok((ms, up as f64 / steps as f64, down as f64 / steps as f64))
+    };
+    let out = run();
+    engine.donate = prev;
+    out
+}
+
 /// Steady-state decode loop over `steps` tokens starting at `pos0`;
 /// returns mean ms per dispatch. The cache starts empty (first dispatch
 /// resets), which leaves latency untouched — static shapes make the step
@@ -179,6 +256,19 @@ fn bench_variant(
             ("total_bytes", Json::num(session.cache_total_bytes as f64)),
             ("kv_bytes_accounting", Json::num(accounting as f64)),
             ("matches_accounting", Json::Bool(measured == accounting)),
+            // donation's memory story: the copying path keeps old + new
+            // cache live across the hand-over, the donated path steps in
+            // place (same model for the train state, see BENCH_pipeline)
+            (
+                "step_highwater_donated",
+                Json::num(kvcache::step_state_highwater_bytes(session.cache_total_bytes, true)
+                    as f64),
+            ),
+            (
+                "step_highwater_copied",
+                Json::num(kvcache::step_state_highwater_bytes(session.cache_total_bytes, false)
+                    as f64),
+            ),
         ]),
     ));
 
@@ -234,6 +324,103 @@ fn bench_variant(
         ]));
     }
     row.push(("decode", Json::Arr(modes)));
+
+    // --- zero-copy stepping: donate × sampling 2×2 ------------------------
+    // `host_bytes_per_token` is the device→host direction per dispatched
+    // step (batch tokens advance per step); the device-sampling arm must
+    // stay O(batch) — verify.sh gates it at 16 × batch.
+    if v.programs.contains_key("decode_step_sample") {
+        let mut arms = Vec::new();
+        let mut measured: Vec<(bool, bool, f64, f64, f64)> = Vec::new();
+        for (donate, device_sample) in [(true, true), (true, false), (false, true), (false, false)]
+        {
+            let (ms, up, down) =
+                time_arm(engine, manifest, v, "decode_step", donate, device_sample, steps, &mut rng)?;
+            let prog = if device_sample { "decode_step_sample" } else { "decode_step" };
+            let prev = engine.donate;
+            engine.donate = donate;
+            let effective = engine.donation_active(manifest.hlo_path(v, prog)?);
+            engine.donate = prev;
+            println!(
+                "decode[{}] zero-copy donate={} sample={}: {:.2} ms/token, host {:.0}B up / \
+                 {:.0}B down per token",
+                v.name,
+                donate,
+                if device_sample { "device" } else { "host" },
+                ms,
+                up,
+                down
+            );
+            measured.push((donate, device_sample, ms, up, down));
+            arms.push(Json::obj(vec![
+                ("donate_requested", Json::Bool(donate)),
+                ("donate_effective", Json::Bool(effective)),
+                ("sample", Json::str(if device_sample { "device" } else { "host" })),
+                ("steps", Json::num(steps as f64)),
+                ("ms_per_token", Json::num(ms)),
+                ("tokens_per_sec", Json::num(batch as f64 * 1e3 / ms)),
+                ("host_bytes_per_token", Json::num(down)),
+                ("host_bytes_per_token_up", Json::num(up)),
+            ]));
+        }
+        row.push(("zero_copy", Json::Arr(arms)));
+        // traffic headline: measured total reduction, plus the closed-form
+        // projection at a serving vocabulary of 8k (the logits download is
+        // batch×vocab×4, so the win scales linearly with vocab)
+        let dev = measured.iter().find(|m| m.0 && m.1);
+        let host = measured.iter().find(|m| m.0 && !m.1);
+        if let (Some(&(_, _, _, dup, ddown)), Some(&(_, _, _, hup, hdown))) = (dev, host) {
+            let reduction = (hup + hdown) / (dup + ddown).max(1.0);
+            let host_down_8k = batch as f64 * 8192.0 * 4.0;
+            let projection_8k = (host_down_8k + hup) / (dup + ddown).max(1.0);
+            println!(
+                "decode[{}] host traffic: {:.0}B -> {:.0}B per token ({:.0}x; projected {:.0}x \
+                 at vocab 8192)",
+                v.name,
+                hup + hdown,
+                dup + ddown,
+                reduction,
+                projection_8k
+            );
+            row.push((
+                "host_traffic",
+                Json::obj(vec![
+                    ("device_sampling_bytes_per_token", Json::num(dup + ddown)),
+                    ("host_sampling_bytes_per_token", Json::num(hup + hdown)),
+                    ("reduction", Json::num(reduction)),
+                    ("vocab", Json::num(vocab as f64)),
+                    ("projected_reduction_vocab8k", Json::num(projection_8k)),
+                ]),
+            ));
+        }
+    }
+
+    // the acceptance A/B: donate on vs off at batch 32, device sampling
+    if v.programs.contains_key("decode_step_sample_b32") {
+        let mut arms = Vec::new();
+        for donate in [true, false] {
+            let (ms, up, down) =
+                time_arm(engine, manifest, v, "decode_step_b32", donate, true, steps, &mut rng)?;
+            let b32 = v.program("decode_step_b32")?.batch.unwrap_or(32);
+            println!(
+                "decode[{}] b32 donate={}: {:.2} ms/token ({:.1} tok/s)",
+                v.name,
+                donate,
+                ms,
+                b32 as f64 * 1e3 / ms
+            );
+            arms.push(Json::obj(vec![
+                ("batch", Json::num(b32 as f64)),
+                ("donate_requested", Json::Bool(donate)),
+                ("sample", Json::str("device")),
+                ("ms_per_token", Json::num(ms)),
+                ("tokens_per_sec", Json::num(b32 as f64 * 1e3 / ms)),
+                ("host_bytes_per_token", Json::num(down)),
+                ("host_bytes_per_token_up", Json::num(up)),
+            ]));
+        }
+        row.push(("zero_copy_b32", Json::Arr(arms)));
+    }
 
     // --- batch + context scaling families (full mode only) ---------------
     if !cfg.smoke {

@@ -331,6 +331,7 @@ fn bench_train_with(manifest: &Manifest, cfg: &PerfConfig) -> Result<Json> {
         };
         let stall_ms_total: f64 = note("batch_wait_ms_total").and_then(|x| x.parse().ok()).unwrap_or(0.0);
         let resident_on = note("device_resident").map(|x| x == "on").unwrap_or(false);
+        let donated_on = note("donated").map(|x| x == "on").unwrap_or(false);
         println!(
             "train[{}{}] {}: {:.1} ms/step wall ({:.2} steps/s), dispatch {:.1} ms, batch stall \
              {:.2} ms/step",
@@ -347,6 +348,7 @@ fn bench_train_with(manifest: &Manifest, cfg: &PerfConfig) -> Result<Json> {
             ("prefetch", Json::Bool(prefetch)),
             ("device_resident_requested", Json::Bool(device_resident)),
             ("device_resident_effective", Json::Bool(resident_on)),
+            ("donated_effective", Json::Bool(donated_on)),
             ("steps", Json::num(steps as f64)),
             ("wall_ms_per_step", Json::num(wall_ms_per_step)),
             ("steps_per_sec", Json::num(1e3 / wall_ms_per_step)),
@@ -354,7 +356,28 @@ fn bench_train_with(manifest: &Manifest, cfg: &PerfConfig) -> Result<Json> {
             ("batch_stall_ms_per_step", Json::num(stall_ms_total / steps as f64)),
         ]));
     }
-    Ok(Json::obj(vec![("available", Json::Bool(true)), ("runs", Json::Arr(rows))]))
+    // the donated-vs-copied device high-water of the train state, from
+    // the manifest leaf layout (cross-checks kvcache's memory model
+    // against the real artifact; Table 2's training-memory column)
+    let sb = v.state_bytes();
+    let mem = Json::obj(vec![
+        ("state_bytes", Json::num(sb as f64)),
+        (
+            "step_highwater_donated",
+            Json::num(crate::kvcache::train_step_highwater_bytes(&v.config, v.batch, sb, true)
+                as f64),
+        ),
+        (
+            "step_highwater_copied",
+            Json::num(crate::kvcache::train_step_highwater_bytes(&v.config, v.batch, sb, false)
+                as f64),
+        ),
+    ]);
+    Ok(Json::obj(vec![
+        ("available", Json::Bool(true)),
+        ("memory", mem),
+        ("runs", Json::Arr(rows)),
+    ]))
 }
 
 #[cfg(test)]

@@ -2,10 +2,26 @@
 //! many times.
 //!
 //! The engine wraps `xla::PjRtClient` (CPU) with an executable cache keyed
-//! by artifact file, so sweeps that revisit a variant don't recompile.
-//! Programs follow the AOT convention: flat positional inputs, one tuple
-//! output (lowered with `return_tuple=True`), decomposed back into a flat
-//! `Vec<Literal>` after each call.
+//! by (artifact file, donation mode), so sweeps that revisit a variant
+//! don't recompile. Programs follow the AOT convention: flat positional
+//! inputs; modern artifacts are lowered untupled (one PJRT buffer per
+//! output leaf), old ones return a single tuple literal — both decomposed
+//! back into a flat `Vec<Literal>` on the host paths.
+//!
+//! # Buffer donation
+//!
+//! Donated artifacts carry an `input_output_alias={...}` clause in their
+//! HLO-module header (from `donate_argnums` on the Python side): XLA
+//! updates the aliased state/cache buffers *in place* instead of
+//! materialising a second copy per dispatch, and the donated input
+//! buffers are consumed by the execute. The resident train/decode loops
+//! already feed back the returned buffers and never touch the previous
+//! generation, so the same calling code is correct with donation on or
+//! off. `donate = false` (the `--no-donate` A/B twin) compiles the same
+//! artifact with the alias clause stripped — bit-identical computation,
+//! copying buffer semantics. If the pinned XLA rejects an aliased
+//! module, the engine demotes that program to the stripped form and
+//! reports donation inactive.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -17,7 +33,13 @@ use super::manifest::{Manifest, Variant};
 
 pub struct Engine {
     client: xla::PjRtClient,
-    cache: HashMap<PathBuf, xla::PjRtLoadedExecutable>,
+    cache: HashMap<(PathBuf, bool), xla::PjRtLoadedExecutable>,
+    /// per (path, donate-mode): whether the compiled executable actually
+    /// kept its input/output aliases (donation can be demoted per-program)
+    alias_active: HashMap<(PathBuf, bool), bool>,
+    /// honour `input_output_alias` clauses when compiling (default on;
+    /// `--no-donate` turns the whole engine into the copying A/B twin)
+    pub donate: bool,
     /// cumulative compile time, exposed for the perf logs
     pub compile_seconds: f64,
 }
@@ -25,34 +47,98 @@ pub struct Engine {
 impl Engine {
     pub fn cpu() -> Result<Engine> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Engine { client, cache: HashMap::new(), compile_seconds: 0.0 })
+        Ok(Engine {
+            client,
+            cache: HashMap::new(),
+            alias_active: HashMap::new(),
+            donate: true,
+            compile_seconds: 0.0,
+        })
     }
 
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
 
-    /// Load + compile an HLO-text artifact (cached).
+    /// Whether the executable compiled for `path` under the engine's
+    /// current donation mode kept its buffer aliases.
+    pub fn donation_active(&self, path: impl AsRef<Path>) -> bool {
+        self.alias_active
+            .get(&(path.as_ref().to_path_buf(), self.donate))
+            .copied()
+            .unwrap_or(false)
+    }
+
+    /// Compile an HLO-text artifact file as-is.
+    fn compile_file(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        client.compile(&comp).with_context(|| format!("XLA-compiling {}", path.display()))
+    }
+
+    /// Compile modified (alias-stripped) HLO text: the xla crate parses
+    /// HLO text from files only, so the text is staged through a
+    /// uniquely-named temp file (pid + atomic counter — engines on
+    /// parallel test threads share one pid).
+    fn compile_text(
+        client: &xla::PjRtClient,
+        text: &str,
+        path: &Path,
+    ) -> Result<xla::PjRtLoadedExecutable> {
+        static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        let n = SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let tmp = std::env::temp_dir()
+            .join(format!("mosa_hlo_{}_{}.txt", std::process::id(), n));
+        std::fs::write(&tmp, text)
+            .with_context(|| format!("staging HLO text for {}", path.display()))?;
+        let parsed = xla::HloModuleProto::from_text_file(&tmp)
+            .with_context(|| format!("parsing HLO text {}", path.display()));
+        let _ = std::fs::remove_file(&tmp);
+        let comp = xla::XlaComputation::from_proto(&parsed?);
+        client.compile(&comp).with_context(|| format!("XLA-compiling {}", path.display()))
+    }
+
+    /// Load + compile an HLO-text artifact (cached per donation mode).
     pub fn load(&mut self, path: impl AsRef<Path>) -> Result<&xla::PjRtLoadedExecutable> {
         let path = path.as_ref().to_path_buf();
-        if !self.cache.contains_key(&path) {
+        let key = (path.clone(), self.donate);
+        if !self.cache.contains_key(&key) {
             let t0 = Instant::now();
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .with_context(|| format!("parsing HLO text {}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .with_context(|| format!("XLA-compiling {}", path.display()))?;
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("reading HLO text {}", path.display()))?;
+            let has_alias = text.contains("input_output_alias=");
+            let (exe, aliased) = if has_alias && self.donate {
+                match Self::compile_file(&self.client, &path) {
+                    Ok(exe) => (exe, true),
+                    Err(e) => {
+                        // graceful demotion: the copying twin is the same
+                        // computation, only slower/heavier on memory
+                        log::warn!(
+                            "{}: aliased compile failed ({e:#}); donation off for this program",
+                            path.display()
+                        );
+                        let stripped = strip_input_output_alias(&text);
+                        (Self::compile_text(&self.client, &stripped, &path)?, false)
+                    }
+                }
+            } else if has_alias {
+                let stripped = strip_input_output_alias(&text);
+                (Self::compile_text(&self.client, &stripped, &path)?, false)
+            } else {
+                (Self::compile_file(&self.client, &path)?, false)
+            };
             self.compile_seconds += t0.elapsed().as_secs_f64();
             log::info!(
-                "compiled {} in {:.2}s",
+                "compiled {} in {:.2}s (donation {})",
                 path.file_name().unwrap_or_default().to_string_lossy(),
-                t0.elapsed().as_secs_f64()
+                t0.elapsed().as_secs_f64(),
+                if aliased { "on" } else { "off" }
             );
-            self.cache.insert(path.clone(), exe);
+            self.alias_active.insert(key.clone(), aliased);
+            self.cache.insert(key.clone(), exe);
         }
-        Ok(&self.cache[&path])
+        Ok(&self.cache[&key])
     }
 
     /// Compile a variant's program by name.
@@ -178,6 +264,45 @@ impl Engine {
     }
 }
 
+/// Remove the `input_output_alias={...}` clause from an HLO-text module
+/// header, turning a donating artifact into its copying twin: the
+/// computation is untouched, only the buffer-assignment license goes
+/// away. Used for the `--no-donate` A/B arm and for graceful demotion
+/// when the pinned XLA rejects an aliased module.
+pub fn strip_input_output_alias(text: &str) -> String {
+    let needle = "input_output_alias={";
+    let Some(start) = text.find(needle) else {
+        return text.to_string();
+    };
+    // scan to the matching close brace (entries nest one level: `{0}`)
+    let bytes = text.as_bytes();
+    let mut depth = 0usize;
+    let mut end = text.len() - 1;
+    for (i, &b) in bytes.iter().enumerate().skip(start + needle.len() - 1) {
+        match b {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    end = i;
+                    break;
+                }
+            }
+            _ => {}
+        }
+    }
+    // drop the clause plus one separating ", " (header clauses are
+    // comma-separated: `HloModule name, input_output_alias={...}, ...`)
+    let mut pre = start;
+    let mut post = end + 1;
+    if text[..start].ends_with(", ") {
+        pre -= 2;
+    } else if text[post..].starts_with(", ") {
+        post += 2;
+    }
+    format!("{}{}", &text[..pre], &text[post..])
+}
+
 // ---------------------------------------------------------------------------
 // literal helpers
 // ---------------------------------------------------------------------------
@@ -211,4 +336,45 @@ pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
 
 pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
     Ok(lit.to_vec::<f32>()?)
+}
+
+pub fn to_vec_i32(lit: &xla::Literal) -> Result<Vec<i32>> {
+    Ok(lit.to_vec::<i32>()?)
+}
+
+/// Copy a literal's f32 payload into a reusable scratch buffer — the
+/// no-allocation twin of `to_vec_f32` for per-token hot loops (the
+/// buffer's capacity is retained across calls).
+pub fn fill_vec_f32(lit: &xla::Literal, out: &mut Vec<f32>) -> Result<()> {
+    let n = lit.element_count();
+    out.clear();
+    out.resize(n, 0.0);
+    lit.copy_raw_to(out).map_err(|e| anyhow!("copying literal into scratch: {e}"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const HDR: &str = "HloModule jit_step, input_output_alias={ {0}: (0, {}, may-alias), \
+                       {1}: (1, {}, may-alias) }, entry_computation_layout={()->()}\n\nENTRY x {}\n";
+
+    #[test]
+    fn strip_alias_removes_only_the_clause() {
+        let s = strip_input_output_alias(HDR);
+        assert!(!s.contains("input_output_alias"));
+        assert!(s.starts_with("HloModule jit_step, entry_computation_layout="));
+        assert!(s.ends_with("ENTRY x {}\n"));
+        // idempotent on already-stripped text
+        assert_eq!(strip_input_output_alias(&s), s);
+    }
+
+    #[test]
+    fn strip_alias_handles_clause_first_form() {
+        let t = "HloModule m\ninput_output_alias={ {}: (2, {}, must-alias) }, foo=bar\n";
+        let s = strip_input_output_alias(t);
+        assert!(!s.contains("input_output_alias"));
+        assert!(s.contains("foo=bar"));
+    }
 }

@@ -61,6 +61,24 @@ pub struct ProgramSpec {
     /// lowered with return_tuple=False: PJRT hands back one buffer per
     /// output leaf instead of a single tuple buffer (device residency)
     pub untupled: bool,
+    /// XLA input→output buffer aliases from `donate_argnums` lowering:
+    /// flat positional (input_index, output_index) pairs — the donated
+    /// execute path's license to feed state/cache buffers back in place.
+    /// `None` = pre-donation artifact (the copying path runs);
+    /// `Some(vec![])` = donation-aware program with nothing aliasable
+    /// (prefill: its cache is output-only). Validated at parse time
+    /// against the program's flat input/output leaf layout.
+    pub donated: Option<Vec<(usize, usize)>>,
+    /// in-graph sampling programs (`decode_step_sample*`): the static
+    /// top-k width K of the fused sampler (runtime k is clipped to it)
+    pub sample_k: Option<usize>,
+}
+
+impl ProgramSpec {
+    /// Whether this program was lowered with buffer donation.
+    pub fn donates(&self) -> bool {
+        self.donated.as_ref().map(|a| !a.is_empty()).unwrap_or(false)
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -117,6 +135,86 @@ impl Variant {
                 }
             )
         })
+    }
+
+    /// Total train-state bytes from the manifest leaf layout (all leaves
+    /// are 4-byte f32/i32) — the number the donated-vs-copied high-water
+    /// accounting (`kvcache::step_state_highwater_bytes`) is fed with.
+    pub fn state_bytes(&self) -> u64 {
+        self.leaves.iter().map(|l| l.elems() as u64 * 4).sum()
+    }
+
+    /// Flat input leaf layout of a state-consuming program: the state
+    /// prefix (full train state for `train*`, params+state otherwise),
+    /// then the extra inputs, then the cache leaves — the positional
+    /// order every AOT program is lowered with. Prefill is the one
+    /// cache-carrying program whose cache is output-only (it builds the
+    /// cache from scratch), so its input layout stops at the extras.
+    pub fn input_specs<'a>(&'a self, p: &'a ProgramSpec) -> Vec<&'a LeafSpec> {
+        let prefix =
+            if p.name.starts_with("train") { &self.leaves[..] } else { &self.leaves[..self.n_model_leaves()] };
+        let cache_inputs: &[CacheLeaf] =
+            if p.name.starts_with("prefill") { &[] } else { &p.cache };
+        prefix
+            .iter()
+            .chain(p.extra_inputs.iter())
+            .chain(cache_inputs.iter().map(|c| &c.spec))
+            .collect()
+    }
+
+    /// Flat output leaf layout: train programs return the stepped state
+    /// then their extras; decode programs their extras then the cache.
+    pub fn output_specs<'a>(&'a self, p: &'a ProgramSpec) -> Vec<&'a LeafSpec> {
+        if p.name.starts_with("train") {
+            self.leaves.iter().chain(p.extra_outputs.iter()).collect()
+        } else {
+            p.extra_outputs.iter().chain(p.cache.iter().map(|c| &c.spec)).collect()
+        }
+    }
+
+    /// Parse-time validation of every program's donated alias map: each
+    /// (input, output) pair must be in range, unique on both sides, and
+    /// shape/dtype-compatible — a bad map would make the runtime feed
+    /// dead buffers back into the next dispatch.
+    fn validate_donations(&self) -> Result<()> {
+        for p in self.programs.values() {
+            let Some(aliases) = &p.donated else { continue };
+            let ins = self.input_specs(p);
+            let outs = self.output_specs(p);
+            let mut seen_in = vec![false; ins.len()];
+            let mut seen_out = vec![false; outs.len()];
+            for &(i, o) in aliases {
+                if i >= ins.len() || o >= outs.len() {
+                    bail!(
+                        "{}.{}: alias ({i}, {o}) out of range ({} inputs, {} outputs)",
+                        self.name,
+                        p.name,
+                        ins.len(),
+                        outs.len()
+                    );
+                }
+                if seen_in[i] || seen_out[o] {
+                    bail!("{}.{}: duplicate alias index in ({i}, {o})", self.name, p.name);
+                }
+                seen_in[i] = true;
+                seen_out[o] = true;
+                if ins[i].shape != outs[o].shape || ins[i].dtype != outs[o].dtype {
+                    bail!(
+                        "{}.{}: alias ({i}, {o}) shape/dtype mismatch: input {} {:?} {} vs \
+                         output {} {:?} {}",
+                        self.name,
+                        p.name,
+                        ins[i].path,
+                        ins[i].shape,
+                        ins[i].dtype,
+                        outs[o].path,
+                        outs[o].shape,
+                        outs[o].dtype
+                    );
+                }
+            }
+        }
+        Ok(())
     }
 }
 
@@ -218,6 +316,27 @@ impl Manifest {
                         cache.push(CacheLeaf { spec, kind });
                     }
                 }
+                let donated = match pj.get("donated") {
+                    None => None,
+                    Some(d) => {
+                        let arr = d.get("aliases").and_then(Json::as_arr).ok_or_else(|| {
+                            anyhow!("{name}.{pname}: donated section missing 'aliases'")
+                        })?;
+                        let mut pairs = Vec::with_capacity(arr.len());
+                        for p in arr {
+                            let pa = p.as_arr().filter(|a| a.len() == 2).ok_or_else(|| {
+                                anyhow!("{name}.{pname}: alias entry must be [input, output]")
+                            })?;
+                            let gi = |i: usize| {
+                                pa[i].as_usize().ok_or_else(|| {
+                                    anyhow!("{name}.{pname}: non-integer alias index")
+                                })
+                            };
+                            pairs.push((gi(0)?, gi(1)?));
+                        }
+                        Some(pairs)
+                    }
+                };
                 programs.insert(
                     pname.clone(),
                     ProgramSpec {
@@ -232,6 +351,8 @@ impl Manifest {
                         prompt_len: pj.get("prompt_len").and_then(Json::as_usize),
                         cache,
                         untupled: pj.get("untupled").and_then(Json::as_bool).unwrap_or(false),
+                        donated,
+                        sample_k: pj.get("sample_k").and_then(Json::as_usize),
                     },
                 );
             }
@@ -242,7 +363,7 @@ impl Manifest {
         if n_train_leaves != leaves.len() {
             bail!("{name}: n_train_leaves {} != layout leaves {}", n_train_leaves, leaves.len());
         }
-        Ok(Variant {
+        let variant = Variant {
             name,
             group: v.get("group").and_then(Json::as_str).unwrap_or("").to_string(),
             batch: v.get("batch").and_then(Json::as_usize).unwrap_or(1),
@@ -256,7 +377,9 @@ impl Manifest {
             config,
             leaves,
             programs,
-        })
+        };
+        variant.validate_donations()?;
+        Ok(variant)
     }
 
     pub fn variant(&self, name: &str) -> Result<&Variant> {
@@ -300,13 +423,30 @@ mod tests {
             "programs": {"train": {"file": "t.train.hlo.txt",
               "extra_inputs": [{"name": "batch", "shape": [2, 9], "dtype": "i32"},
                                 {"name": "lr", "shape": [], "dtype": "f32"}],
-              "extra_outputs": [{"name": "loss", "shape": [], "dtype": "f32"}]},
+              "extra_outputs": [{"name": "loss", "shape": [], "dtype": "f32"}],
+              "donated": {"aliases": [[0, 0], [1, 1], [2, 2], [3, 3], [4, 4],
+                                       [5, 5], [6, 6]]}},
+              "prefill": {"file": "t.prefill.hlo.txt", "untupled": true,
+              "batch": 2, "capacity": 64, "prompt_len": 8,
+              "extra_inputs": [{"name": "tokens", "shape": [2, 8], "dtype": "i32"},
+                                {"name": "plen", "shape": [2], "dtype": "i32"}],
+              "extra_outputs": [{"name": "logprobs", "shape": [2, 7], "dtype": "f32"},
+                                 {"name": "last_logits", "shape": [2, 16], "dtype": "f32"}],
+              "donated": {"aliases": []},
+              "cache": [
+                {"path": "layers[0].mosa_k", "shape": [2, 1, 2, 4], "dtype": "f32",
+                 "kind": "kv", "init": "zeros"},
+                {"path": "layers[0].mosa_pos", "shape": [2, 1, 2], "dtype": "i32",
+                 "kind": "meta", "init": "sentinel"},
+                {"path": "layers[0].mosa_pri", "shape": [2, 1, 2], "dtype": "f32",
+                 "kind": "meta", "init": "neg"}]},
               "decode_step": {"file": "t.decode_step.hlo.txt", "untupled": true,
               "batch": 2, "capacity": 64,
               "extra_inputs": [{"name": "token", "shape": [2], "dtype": "i32"},
                                 {"name": "pos", "shape": [2], "dtype": "i32"},
                                 {"name": "reset", "shape": [2], "dtype": "i32"}],
               "extra_outputs": [{"name": "logits", "shape": [2, 16], "dtype": "f32"}],
+              "donated": {"aliases": [[5, 1], [6, 2], [7, 3]]},
               "cache": [
                 {"path": "layers[0].mosa_k", "shape": [2, 1, 2, 4], "dtype": "f32",
                  "kind": "kv", "init": "zeros"},
@@ -332,8 +472,80 @@ mod tests {
         assert_eq!(p.extra_outputs[0].dtype, "f32");
         assert!(!p.untupled, "legacy programs default to tuple lowering");
         assert!(p.cache.is_empty());
+        // donated alias map: identity over the 7 train leaves
+        assert!(p.donates());
+        assert_eq!(p.donated.as_ref().unwrap().len(), 7);
+        assert_eq!(p.donated.as_ref().unwrap()[3], (3, 3));
+        // params (2x128 elems) mirrored by m and v, plus the scalar t
+        assert_eq!(v.state_bytes(), (128 + 128) * 3 * 4 + 4);
         assert!(v.program("score").is_err());
         assert!(m.variant("nope").is_err());
+    }
+
+    #[test]
+    fn program_io_specs_follow_lowering_order() {
+        let dir = std::env::temp_dir().join("mosa_manifest_specs_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), manifest_json()).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let v = m.variant("t").unwrap();
+        let t = v.program("train").unwrap();
+        let ins = v.input_specs(t);
+        assert_eq!(ins.len(), 7 + 2);
+        assert_eq!(ins[7].path, "batch");
+        let outs = v.output_specs(t);
+        assert_eq!(outs.len(), 7 + 1);
+        assert_eq!(outs[7].path, "loss");
+        let d = v.program("decode_step").unwrap();
+        let ins = v.input_specs(d);
+        assert_eq!(ins.len(), 2 + 3 + 3);
+        assert_eq!(ins[5].path, "layers[0].mosa_k");
+        let outs = v.output_specs(d);
+        assert_eq!(outs.len(), 1 + 3);
+        assert_eq!(outs[0].path, "logits");
+        assert_eq!(outs[3].path, "layers[0].mosa_pri");
+        // prefill's cache is output-only: its input layout stops at the
+        // extras, while the cache still appears among the outputs
+        let pf = v.program("prefill").unwrap();
+        let ins = v.input_specs(pf);
+        assert_eq!(ins.len(), 2 + 2);
+        assert_eq!(ins[2].path, "tokens");
+        let outs = v.output_specs(pf);
+        assert_eq!(outs.len(), 2 + 3);
+        assert_eq!(outs[2].path, "layers[0].mosa_k");
+        assert!(!pf.donates());
+    }
+
+    #[test]
+    fn donation_validation_rejects_bad_alias_maps() {
+        let base = manifest_json();
+        let cases = [
+            // out-of-range input index
+            (r#""donated": {"aliases": [[5, 1], [6, 2], [7, 3]]}"#,
+             r#""donated": {"aliases": [[50, 1]]}"#, "out of range"),
+            // duplicate output index
+            (r#""donated": {"aliases": [[5, 1], [6, 2], [7, 3]]}"#,
+             r#""donated": {"aliases": [[5, 1], [6, 1]]}"#, "duplicate"),
+            // dtype mismatch: mosa_pos (i32) aliased onto logits (f32)
+            (r#""donated": {"aliases": [[5, 1], [6, 2], [7, 3]]}"#,
+             r#""donated": {"aliases": [[6, 0]]}"#, "mismatch"),
+            // malformed entry
+            (r#""donated": {"aliases": [[5, 1], [6, 2], [7, 3]]}"#,
+             r#""donated": {"aliases": [[5]]}"#, "[input, output]"),
+            // prefill donating a phantom cache input (its cache is
+            // output-only, so inputs end at the extras: arity 4)
+            (r#""donated": {"aliases": []}"#,
+             r#""donated": {"aliases": [[4, 2]]}"#, "out of range"),
+        ];
+        for (i, (from, to, needle)) in cases.iter().enumerate() {
+            let bad = base.replace(from, to);
+            assert_ne!(bad, base, "case {i}: pattern not found");
+            let dir = std::env::temp_dir().join(format!("mosa_manifest_badalias_{i}"));
+            std::fs::create_dir_all(&dir).unwrap();
+            std::fs::write(dir.join("manifest.json"), bad).unwrap();
+            let err = format!("{:#}", Manifest::load(&dir).unwrap_err());
+            assert!(err.contains(needle), "case {i}: {err}");
+        }
     }
 
     #[test]
@@ -361,9 +573,9 @@ mod tests {
         std::fs::write(dir.join("manifest.json"), manifest_json()).unwrap();
         let m = Manifest::load(&dir).unwrap();
         let v = m.variant("t").unwrap();
-        let msg = format!("{:#}", v.program("prefill").unwrap_err());
-        assert!(msg.contains("prefill"), "{msg}");
-        assert!(msg.contains("available: decode_step, train"), "{msg}");
+        let msg = format!("{:#}", v.program("score").unwrap_err());
+        assert!(msg.contains("score"), "{msg}");
+        assert!(msg.contains("available: decode_step, prefill, train"), "{msg}");
         let msg = format!("{:#}", m.hlo_path(v, "nope").unwrap_err());
         assert!(msg.contains("available:"), "{msg}");
     }

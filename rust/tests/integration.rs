@@ -302,6 +302,7 @@ fn generate_serves_more_requests_than_slots() {
         eos: None,
         use_prefill: true,
         device_resident: true,
+        device_sample: true,
     };
     let finished = mosa::decode::generate(&mut engine, &m, v, state, requests, &opts).unwrap();
     assert_eq!(finished.len(), n_req);
@@ -344,6 +345,132 @@ fn decode_device_and_host_paths_agree() {
     for (a, b) in out[0].iter().zip(&out[1]) {
         for (x, y) in a.iter().zip(b) {
             assert!((x - y).abs() < 1e-5, "device vs host drift: {x} vs {y}");
+        }
+    }
+}
+
+// -- zero-copy stepping: donation round-trips + in-graph sampling parity --
+
+#[test]
+fn donated_resident_train_matches_copying_path() {
+    // the donated resident path (state stepped in place on device) must
+    // be the same computation as the copying literal path (donation
+    // stripped at compile): bit-identical losses on the same stream
+    let m = manifest();
+    let v = m.variant("micro_mosa_r8").unwrap();
+    if v.program("train").unwrap().donated.is_none() {
+        return; // pre-donation artifacts
+    }
+    let mut curves = Vec::new();
+    for (donate, resident) in [(true, true), (false, false)] {
+        let mut engine = Engine::cpu().unwrap();
+        engine.donate = donate;
+        let trainer = Trainer::new(&m, v);
+        let mut o = opts(5);
+        o.device_resident = resident;
+        let mut src = rand_source(256, 77);
+        let (state, metrics) = trainer.train(&mut engine, &mut src, &o).unwrap();
+        assert_eq!(state.step, 5);
+        curves.push(metrics.records.iter().map(|r| r.loss).collect::<Vec<_>>());
+    }
+    assert_eq!(curves[0], curves[1], "donated resident vs copying loss drift");
+}
+
+#[test]
+fn donated_decode_matches_copying_decode() {
+    // same tokens through the donated resident cache and through the
+    // donation-stripped host round-trip cache: identical logits
+    let m = manifest();
+    let v = m.variant("micro_mosa_r8").unwrap();
+    if !v.programs.contains_key("decode_step")
+        || v.program("decode_step").unwrap().donated.is_none()
+    {
+        return;
+    }
+    let mut traces = Vec::new();
+    for (donate, resident) in [(true, true), (false, false)] {
+        let mut engine = Engine::cpu().unwrap();
+        engine.donate = donate;
+        let state = TrainState::init_host(v, 11).unwrap();
+        let mut session =
+            mosa::decode::DecodeSession::from_state(&m, v, "decode_step", state, resident).unwrap();
+        let b = session.batch;
+        let mut reset = vec![1i32; b];
+        let mut trace = Vec::new();
+        for s in 0..5 {
+            let toks: Vec<i32> = (0..b).map(|i| ((3 * i + s) % 40) as i32).collect();
+            let pos = vec![s as i32; b];
+            let lit = session.step(&mut engine, &toks, &pos, &reset).unwrap();
+            trace.push(lit.to_vec::<f32>().unwrap());
+            reset.iter_mut().for_each(|r| *r = 0);
+        }
+        assert!(session.device_resident == resident, "unexpected demotion");
+        traces.push(trace);
+    }
+    assert_eq!(traces[0], traces[1], "donated vs copying decode drift");
+}
+
+#[test]
+fn in_graph_sampling_matches_host_sampler() {
+    // the ISSUE parity acceptance: device-side sampling and the host
+    // `sample_row_u` must produce identical ids given the same uniforms,
+    // greedy and top-k, at batch > 1
+    use mosa::decode::{sample_row_u, SamplePolicy, SampleScratch};
+    let m = manifest();
+    let v = m.variant("micro_mosa_r8").unwrap();
+    if !v.programs.contains_key("decode_step_sample") {
+        return; // pre-sampling artifacts
+    }
+    let mut engine = Engine::cpu().unwrap();
+    let vocab = v.config.vocab;
+    for policy in [SamplePolicy::Greedy, SamplePolicy::TopK { k: 6, temperature: 0.85 }] {
+        let (temp, k) = policy.temp_k();
+        let s1 = TrainState::init_host(v, 13).unwrap();
+        let s2 = TrainState::init_host(v, 13).unwrap();
+        let mut dev =
+            mosa::decode::DecodeSession::from_state(&m, v, "decode_step", s1, true).unwrap();
+        let mut host =
+            mosa::decode::DecodeSession::from_state(&m, v, "decode_step", s2, true).unwrap();
+        assert!(dev.sample_k.unwrap() >= k, "policy k exceeds the lowered sampler width");
+        let b = dev.batch;
+        assert!(b > 1, "parity must cover batch > 1");
+        let mut rng = Pcg::seeded(99);
+        let mut scratch = SampleScratch::default();
+        let mut reset = vec![1i32; b];
+        for s in 0..6 {
+            // identical teacher-forced streams keep both caches in lockstep
+            let toks: Vec<i32> = (0..b).map(|i| ((7 * i + 3 * s) % 50) as i32).collect();
+            let pos = vec![s as i32; b];
+            let uniforms: Vec<f32> = (0..b).map(|_| rng.f32()).collect();
+            let sampled = dev
+                .step_sample(&mut engine, &toks, &pos, &reset, &uniforms, temp, k, true)
+                .unwrap();
+            let logits_lit = host.step(&mut engine, &toks, &pos, &reset).unwrap();
+            let logits = logits_lit.to_vec::<f32>().unwrap();
+            let want: Vec<i32> = (0..b)
+                .map(|i| {
+                    sample_row_u(
+                        &logits[i * vocab..(i + 1) * vocab],
+                        &policy,
+                        uniforms[i],
+                        &mut scratch,
+                    )
+                })
+                .collect();
+            assert_eq!(sampled.ids, want, "policy {policy:?} step {s}");
+            // the logging tail: k_max per row, values sorted descending,
+            // the sampled id inside the top-k support
+            let (vals, ids) = sampled.topk.expect("topk tail requested");
+            let kmax = dev.sample_k.unwrap();
+            assert_eq!(vals.len(), b * kmax);
+            assert_eq!(ids.len(), b * kmax);
+            for i in 0..b {
+                let row = &vals[i * kmax..(i + 1) * kmax];
+                assert!(row.windows(2).all(|w| w[0] >= w[1]), "topk not sorted");
+                let support = &ids[i * kmax..i * kmax + k];
+                assert!(support.contains(&sampled.ids[i]));
+            }
+            reset.iter_mut().for_each(|r| *r = 0);
         }
     }
 }
