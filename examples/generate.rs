@@ -59,6 +59,7 @@ fn main() -> Result<()> {
         use_prefill: true,
         device_resident: true,
         device_sample: true,
+        use_paged: true,
     };
     let t0 = std::time::Instant::now();
     let finished = generate(&mut engine, &manifest, variant, state, requests, &opts)?;

@@ -25,6 +25,14 @@ identity. ``decode_step_sample*`` twins fuse in-graph sampling (top-k /
 temperature / inverse-CDF over a host-supplied uniform) so serving
 downloads sampled ids, not logits.
 
+Every decode grid point additionally gets a *paged* twin
+(``prefill_paged`` / ``decode_step_paged*`` / ``decode_step_sample_paged*``):
+the cache lives in fixed-size pages of one shared pool per leaf,
+addressed through an extra ``page_index [B, pages_per_slot] i32`` input,
+with the paging geometry (page size, per-kind row segments, pool sizes,
+overcommit) recorded in a per-program ``pages`` manifest section. The
+contiguous programs survive unchanged as the ``--no-paged`` A/B twin.
+
 Usage:  cd python && python -m compile.aot --set core --out ../artifacts
 """
 
@@ -151,6 +159,23 @@ def _cache_entries(cfg: ModelConfig, batch: int, capacity: int):
     (batch, capacity) decode-program family, with each leaf tagged as
     payload (``kv``) or bookkeeping (``meta``) plus its init rule."""
     flat, _ = jax.tree_util.tree_flatten_with_path(dec.cache_struct(cfg, batch, capacity))
+    out = []
+    for path, leaf in flat:
+        name = _path_name(path)
+        e = {"path": name, "shape": list(leaf.shape), "dtype": _dt(leaf)}
+        e.update(dec.leaf_meta(name))
+        out.append(e)
+    return out
+
+
+def _paged_cache_entries(cfg: ModelConfig, batch: int, capacity: int, pspec: dict):
+    """``cache`` section of a paged program: the same leaf names, pool
+    shapes [pool_pages, n, page_size(, d)] — one shared pool per leaf,
+    addressed through the ``page_index`` input (see the ``pages``
+    section)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        dec.paged_cache_struct(cfg, batch, capacity, pspec)
+    )
     out = []
     for path, leaf in flat:
         name = _path_name(path)
@@ -346,6 +371,83 @@ def lower_variant(v: variants.Variant, outdir: str) -> dict:
                 "donated": {"aliases": aliases},
             }
 
+        def pages_of(bb, cc):
+            return dec.page_spec(
+                cfg, bb, cc, page_size=v.decode.page_size, pool_frac=v.decode.pool_frac
+            )
+
+        def emit_step_paged(pname, bb, cc):
+            """The paged twin of `emit_step`: same computation over pooled
+            pages, addressed through an extra `page_index` input (the only
+            per-step host→device traffic the layout adds)."""
+            pspec = pages_of(bb, cc)
+            step = dec.make_decode_step_paged(cfg, cc, bb, pspec)
+            pstruct = dec.paged_cache_struct(cfg, bb, cc, pspec)
+            cache_entries = _paged_cache_entries(cfg, bb, cc, pspec)
+            row = pspec["pages_per_slot"]
+            fname, aliases = emit(
+                pname, step,
+                [params_s, state_s, _spec((bb,), jnp.int32), _spec((bb,), jnp.int32),
+                 _spec((bb,), jnp.int32), _spec((bb, row), jnp.int32), pstruct],
+                donate=(6,),
+            )
+            _check_aliases(pname, aliases, len(cache_entries), n_model + 4, 1)
+            progs[pname] = {
+                "file": fname,
+                "batch": bb,
+                "capacity": cc,
+                "extra_inputs": [
+                    {"name": "token", "shape": [bb], "dtype": "i32"},
+                    {"name": "pos", "shape": [bb], "dtype": "i32"},
+                    {"name": "reset", "shape": [bb], "dtype": "i32"},
+                    {"name": "page_index", "shape": [bb, row], "dtype": "i32"},
+                ],
+                "extra_outputs": [{"name": "logits", "shape": [bb, vocab], "dtype": "f32"}],
+                "cache": cache_entries,
+                "pages": pspec,
+                "donated": {"aliases": aliases},
+            }
+
+        def emit_sample_paged(pname, bb, cc):
+            pspec = pages_of(bb, cc)
+            kmx = dec.sample_k_max(cfg)
+            step = dec.make_decode_sample_paged(cfg, cc, bb, pspec)
+            pstruct = dec.paged_cache_struct(cfg, bb, cc, pspec)
+            cache_entries = _paged_cache_entries(cfg, bb, cc, pspec)
+            row = pspec["pages_per_slot"]
+            fname, aliases = emit(
+                pname, step,
+                [params_s, state_s, _spec((bb,), jnp.int32), _spec((bb,), jnp.int32),
+                 _spec((bb,), jnp.int32), _spec((bb,), jnp.float32),
+                 _spec((), jnp.float32), _spec((), jnp.int32),
+                 _spec((bb, row), jnp.int32), pstruct],
+                donate=(9,),
+            )
+            _check_aliases(pname, aliases, len(cache_entries), n_model + 7, 3)
+            progs[pname] = {
+                "file": fname,
+                "batch": bb,
+                "capacity": cc,
+                "sample_k": kmx,
+                "extra_inputs": [
+                    {"name": "token", "shape": [bb], "dtype": "i32"},
+                    {"name": "pos", "shape": [bb], "dtype": "i32"},
+                    {"name": "reset", "shape": [bb], "dtype": "i32"},
+                    {"name": "uniform", "shape": [bb], "dtype": "f32"},
+                    {"name": "temp", "shape": [], "dtype": "f32"},
+                    {"name": "k", "shape": [], "dtype": "i32"},
+                    {"name": "page_index", "shape": [bb, row], "dtype": "i32"},
+                ],
+                "extra_outputs": [
+                    {"name": "ids", "shape": [bb], "dtype": "i32"},
+                    {"name": "topk_vals", "shape": [bb, kmx], "dtype": "f32"},
+                    {"name": "topk_ids", "shape": [bb, kmx], "dtype": "i32"},
+                ],
+                "cache": cache_entries,
+                "pages": pspec,
+                "donated": {"aliases": aliases},
+            }
+
         prefill = dec.make_prefill(cfg, dcap, b)
         # prefill builds the cache from scratch (cache leaves are outputs
         # only), so there is nothing aliasable to donate; the empty
@@ -370,13 +472,46 @@ def lower_variant(v: variants.Variant, outdir: str) -> dict:
             "cache": _cache_entries(cfg, b, dcap),
             "donated": {"aliases": []},
         }
+        # the paged prefill twin: same forward, cache scattered into the
+        # shared pools through the page table (output-only, no donation)
+        ppf_spec = pages_of(b, dcap)
+        prefill_paged = dec.make_prefill_paged(cfg, dcap, b, ppf_spec)
+        ppf_row = ppf_spec["pages_per_slot"]
+        fname, _ = emit(
+            "prefill_paged", prefill_paged,
+            [params_s, state_s, _spec((b, t), jnp.int32), _spec((b,), jnp.int32),
+             _spec((b, ppf_row), jnp.int32)],
+        )
+        progs["prefill_paged"] = {
+            "file": fname,
+            "batch": b,
+            "capacity": dcap,
+            "prompt_len": t,
+            "extra_inputs": [
+                {"name": "tokens", "shape": [b, t], "dtype": "i32"},
+                {"name": "plen", "shape": [b], "dtype": "i32"},
+                {"name": "page_index", "shape": [b, ppf_row], "dtype": "i32"},
+            ],
+            "extra_outputs": [
+                {"name": "logprobs", "shape": [b, t - 1], "dtype": "f32"},
+                {"name": "last_logits", "shape": [b, vocab], "dtype": "f32"},
+            ],
+            "cache": _paged_cache_entries(cfg, b, dcap, ppf_spec),
+            "pages": ppf_spec,
+            "donated": {"aliases": []},
+        }
         emit_step("decode_step", b, dcap)
         emit_sample("decode_step_sample", b, dcap)
+        emit_step_paged("decode_step_paged", b, dcap)
+        emit_sample_paged("decode_step_sample_paged", b, dcap)
         for bb in v.decode.extra_batches:
             emit_step(f"decode_step_b{bb}", bb, dcap)
             emit_sample(f"decode_step_sample_b{bb}", bb, dcap)
+            emit_step_paged(f"decode_step_paged_b{bb}", bb, dcap)
+            emit_sample_paged(f"decode_step_sample_paged_b{bb}", bb, dcap)
         for cc in v.decode.extra_capacities:
             emit_step(f"decode_step_c{cc}", b, cc)
+            emit_step_paged(f"decode_step_paged_c{cc}", b, cc)
 
     for prog in progs.values():
         # everything in this generation is lowered with return_tuple=False

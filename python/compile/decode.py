@@ -46,6 +46,8 @@ slot's cache in-graph before the token is processed — admitting a new
 sequence into a used slot never round-trips the cache through the host.
 """
 
+import math
+
 import jax
 import jax.numpy as jnp
 
@@ -64,6 +66,11 @@ from .model import ModelConfig, _layernorm
 # mask qpos >= kpos can never select an empty slot. Mirrored in Rust
 # (decode::POS_SENTINEL); keep both in sync.
 POS_SENTINEL = 1 << 30
+
+# Unbacked page-table entry: far above any physical page id, so scatters
+# through it drop (jax out-of-bounds scatter semantics) and gathers are
+# explicitly masked. Mirrored in Rust (kvcache::paged::PAGE_SENTINEL).
+PAGE_SENTINEL = 1 << 30
 
 
 # ---------------------------------------------------------------------------
@@ -446,7 +453,12 @@ def make_decode_sample(cfg: ModelConfig, capacity: int, batch: int):
 
 def make_decode_step(cfg: ModelConfig, capacity: int, batch: int):
     """(params, state, token [B] i32, pos [B] i32, reset [B] i32, caches)
-    -> (logits [B, vocab], new caches)."""
+    -> (logits [B, vocab], new caches).
+
+    The contiguous layout: every slot owns its full-capacity cache leaves.
+    The paged twin (``make_decode_step_paged``) stores the same logical
+    cache in fixed-size pages of one shared pool and is bit-identical to
+    this program on any fully-backed page table."""
     spec = cfg.attn_spec()
 
     def step(params, state, token, pos, reset, caches):
@@ -484,3 +496,312 @@ def make_decode_step(cfg: ModelConfig, capacity: int, batch: int):
         return logits, {"layers": new_layers}
 
     return step
+
+
+# ---------------------------------------------------------------------------
+# paged KV-cache: fixed-size pages in one pool + a host-side page table
+# ---------------------------------------------------------------------------
+#
+# vLLM-style paging, specialised for MoSA's head mix. Each head kind's
+# per-slot cache axis S is split into pages of `page_size` token slots;
+# the physical storage is one pool per cache leaf, shaped
+#
+#     payload [pool_pages, n, page_size, d]     (was [B, n, S, d])
+#     meta    [pool_pages, n, page_size]        (was [B, n, S])
+#
+# shared by every batch slot. A single `page_index [B, pages_per_slot]`
+# i32 input maps each slot's logical pages to physical rows; the row is
+# the concatenation of per-kind segments (dense / mosa / fixed / routing
+# have different per-head capacities, so different page counts — the
+# manifest `pages` section records each kind's row_offset). The same
+# physical page id addresses that kind's pool in EVERY layer: one table
+# upload serves the whole model.
+#
+# Overcommit is the point: the pool may hold fewer pages than
+# B × pages_per_slot (lowered statically via `pool_frac`), so short
+# sequences stop reserving full-capacity buffers and admission can
+# oversubscribe device memory. Bounded kinds (MoSA/fixed k-slot caches,
+# local rings) are never overcommitted — their pages are tiny, which is
+# exactly the paper's Table 2 argument — only the capacity-sized kinds
+# (dense-append, routing) page lazily with position.
+#
+# In-graph, the step gathers the logical view from the pools, runs the
+# *same* per-head step functions as the contiguous program, and scatters
+# the updated view back:
+#   - gather indices are masked to 0 for unbacked entries and the
+#     gathered positions/priorities forced to their empty-slot values
+#     (POS_SENTINEL / -1), so garbage from recycled pages is invisible;
+#   - scatter goes through the raw table, so unbacked entries
+#     (PAGE_SENTINEL, out of bounds) DROP their writes — a parked slot
+#     can never clobber another slot's pages.
+# On a fully-backed table this is gather→identical-math→scatter, hence
+# bit-identical logits and cache contents vs the contiguous program (the
+# differential test harness pins this down).
+
+# Cap on the default page size: small pages are what make overcommit
+# effective at short sequence lengths.
+DEFAULT_PAGE_CAP = 64
+
+
+def page_kinds(cfg: ModelConfig, capacity: int):
+    """Ordered (kind, per-slot cache slots, lazy) for every head kind in
+    the cache layout. `lazy` kinds grow their page set with position
+    (slot index == position); bounded kinds (ring / k-slot) are fully
+    mapped at admission — their caches are small by construction."""
+    kinds = []
+    if cfg.n_dense > 0:
+        if cfg.window > 0:
+            kinds.append(("dense", min(cfg.window, capacity), False))
+        else:
+            kinds.append(("dense", capacity, True))
+    if cfg.n_sparse > 0 and cfg.sparse_kind in ("mosa", "fixed"):
+        kinds.append((cfg.sparse_kind, cfg.k_sel, False))
+    if cfg.n_sparse > 0 and cfg.sparse_kind == "routing":
+        kinds.append(("routing", capacity, True))
+    return kinds
+
+
+def default_page_size(cfg: ModelConfig, capacity: int) -> int:
+    """Largest power-friendly page size dividing every kind's slot count,
+    capped at DEFAULT_PAGE_CAP."""
+    g = 0
+    for _, slots, _ in page_kinds(cfg, capacity):
+        g = math.gcd(g, slots)
+    g = g or 1
+    cap = min(g, DEFAULT_PAGE_CAP)
+    # largest divisor of g that is <= cap
+    for cand in range(cap, 0, -1):
+        if g % cand == 0:
+            return cand
+    return 1
+
+
+def page_spec(cfg: ModelConfig, batch: int, capacity: int,
+              page_size=None, pool_frac: float = 1.0) -> dict:
+    """The paging geometry of one (batch, capacity) decode family.
+
+    Returns the dict recorded as the manifest ``pages`` section:
+      page_size, pages_per_slot (total page_index row width), sentinel,
+      pool_frac, and per-kind entries {kind, slots, pages_per_slot,
+      row_offset, pool_pages, lazy}.
+
+    Pool sizing: bounded kinds get the full batch × pages_per_slot (no
+    overcommit — these caches are tiny); lazy kinds get
+    max(pages_per_slot, ceil(batch × pages_per_slot × pool_frac)), i.e.
+    at least one full-capacity sequence always fits.
+    """
+    if page_size is None:
+        page_size = default_page_size(cfg, capacity)
+    kinds = []
+    off = 0
+    for kind, slots, lazy in page_kinds(cfg, capacity):
+        assert slots % page_size == 0, (
+            f"page_size {page_size} must divide {kind} capacity {slots}"
+        )
+        ppk = slots // page_size
+        if lazy:
+            pool = max(ppk, math.ceil(batch * ppk * pool_frac))
+        else:
+            pool = batch * ppk
+        kinds.append({
+            "kind": kind, "slots": slots, "pages_per_slot": ppk,
+            "row_offset": off, "pool_pages": int(pool), "lazy": lazy,
+        })
+        off += ppk
+    return {
+        "page_size": int(page_size),
+        "pages_per_slot": off,
+        "sentinel": PAGE_SENTINEL,
+        "pool_frac": float(pool_frac),
+        "kinds": kinds,
+    }
+
+
+def _kind_of_leaf(name: str) -> str:
+    return name.split("_", 1)[0]
+
+
+def _kind_entry(spec: dict, name: str) -> dict:
+    kind = _kind_of_leaf(name)
+    for e in spec["kinds"]:
+        if e["kind"] == kind:
+            return e
+    raise KeyError(f"cache leaf {name} has no pages entry ({kind})")
+
+
+def paged_cache_shapes(cfg: ModelConfig, batch: int, capacity: int, spec: dict) -> dict:
+    """One layer's pool pytree: the paged twin of `cache_shapes` — same
+    leaf names, slot axes regrouped as [pool_pages, n, page_size(, d)]."""
+    ps = spec["page_size"]
+    out = {}
+    for name, leaf in cache_shapes(cfg, batch, capacity).items():
+        e = _kind_entry(spec, name)
+        n = leaf.shape[1]
+        shape = (e["pool_pages"], n, ps) + tuple(leaf.shape[3:])
+        out[name] = jax.ShapeDtypeStruct(shape, leaf.dtype)
+    return out
+
+
+def paged_cache_struct(cfg: ModelConfig, batch: int, capacity: int, spec: dict) -> dict:
+    return {
+        "layers": [paged_cache_shapes(cfg, batch, capacity, spec) for _ in range(cfg.n_layers)]
+    }
+
+
+def init_pools(cfg: ModelConfig, batch: int, capacity: int, spec: dict) -> dict:
+    """Empty pools: payload zeros, positions POS_SENTINEL, priorities -1
+    (same init rules as the contiguous cache leaves)."""
+    def fill(name, leaf):
+        meta = leaf_meta(name)
+        if meta["init"] == "sentinel":
+            return jnp.full(leaf.shape, POS_SENTINEL, leaf.dtype)
+        if meta["init"] == "neg":
+            return jnp.full(leaf.shape, -1.0, leaf.dtype)
+        return jnp.zeros(leaf.shape, leaf.dtype)
+
+    struct = paged_cache_struct(cfg, batch, capacity, spec)
+    return {
+        "layers": [
+            {name: fill(name, leaf) for name, leaf in layer.items()}
+            for layer in struct["layers"]
+        ]
+    }
+
+
+def _gather_leaf(spec: dict, name: str, pool, page_index):
+    """pool [P, n, ps(, d)] -> logical [B, n, S(, d)] via the table row
+    segment of this leaf's kind, with empty-slot masking on meta leaves."""
+    e = _kind_entry(spec, name)
+    ps = spec["page_size"]
+    ppk, off = e["pages_per_slot"], e["row_offset"]
+    pi = page_index[:, off:off + ppk]  # [B, ppk]
+    valid = jnp.logical_and(pi >= 0, pi < e["pool_pages"])
+    idx = jnp.where(valid, pi, 0)
+    view = jnp.take(pool, idx, axis=0)  # [B, ppk, n, ps(, d)]
+    if pool.ndim == 4:
+        b, _, n, _, d = view.shape
+        view = view.transpose(0, 2, 1, 3, 4).reshape(b, n, ppk * ps, d)
+        return view
+    b, _, n, _ = view.shape
+    view = view.transpose(0, 2, 1, 3).reshape(b, n, ppk * ps)
+    # hide recycled-page garbage behind the empty-slot value: an unbacked
+    # page must read as "no cached entries", exactly like a fresh slot
+    vmask = jnp.repeat(valid, ps, axis=1)[:, None, :]  # [B, 1, S]
+    if name.endswith("_pos"):
+        return jnp.where(vmask, view, POS_SENTINEL)
+    if name.endswith("_pri"):
+        return jnp.where(vmask, view, -1.0)
+    return view
+
+
+def _scatter_leaf(spec: dict, name: str, pool, page_index, logical):
+    """logical [B, n, S(, d)] -> pool, written through the raw table row
+    (unbacked PAGE_SENTINEL entries are out of range: the write drops)."""
+    e = _kind_entry(spec, name)
+    ps = spec["page_size"]
+    ppk, off = e["pages_per_slot"], e["row_offset"]
+    idx = page_index[:, off:off + ppk].reshape(-1)  # [B*ppk]
+    if pool.ndim == 4:
+        b, n, s, d = logical.shape
+        pages = logical.reshape(b, n, ppk, ps, d).transpose(0, 2, 1, 3, 4)
+        pages = pages.reshape(b * ppk, n, ps, d)
+    else:
+        b, n, s = logical.shape
+        pages = logical.reshape(b, n, ppk, ps).transpose(0, 2, 1, 3)
+        pages = pages.reshape(b * ppk, n, ps)
+    return pool.at[idx].set(pages, mode="drop")
+
+
+def gather_pools(spec: dict, pools: dict, page_index) -> dict:
+    """Pools + page table -> the logical cache pytree the contiguous step
+    functions consume."""
+    return {
+        "layers": [
+            {name: _gather_leaf(spec, name, pool, page_index) for name, pool in layer.items()}
+            for layer in pools["layers"]
+        ]
+    }
+
+
+def scatter_pools(spec: dict, pools: dict, page_index, caches: dict) -> dict:
+    """Write an updated logical cache back into the pools."""
+    return {
+        "layers": [
+            {
+                name: _scatter_leaf(spec, name, pool, page_index, lc[name])
+                for name, pool in layer.items()
+            }
+            for layer, lc in zip(pools["layers"], caches["layers"])
+        ]
+    }
+
+
+def identity_page_table(spec: dict, batch: int):
+    """The fully-backed canonical mapping: slot b's logical page j of each
+    kind -> physical row b * pages_per_slot_kind + j. Only valid when no
+    lazy kind is overcommitted (pool_pages == batch * pages_per_slot);
+    the bit-exactness tests run on this table (or any permutation of it)."""
+    import numpy as _np
+
+    table = _np.full((batch, spec["pages_per_slot"]), PAGE_SENTINEL, _np.int32)
+    for e in spec["kinds"]:
+        ppk, off = e["pages_per_slot"], e["row_offset"]
+        for b in range(batch):
+            base = b * ppk
+            assert base + ppk <= e["pool_pages"], (
+                f"identity table needs pool_pages >= batch*pages_per_slot for {e['kind']}"
+            )
+            table[b, off:off + ppk] = _np.arange(base, base + ppk, dtype=_np.int32)
+    return jnp.asarray(table)
+
+
+def make_decode_step_paged(cfg: ModelConfig, capacity: int, batch: int, spec: dict):
+    """(params, state, token [B] i32, pos [B] i32, reset [B] i32,
+    page_index [B, pages_per_slot] i32, pools) -> (logits [B, vocab],
+    new pools). Gather → contiguous step → scatter (see module section
+    doc); bit-identical to `make_decode_step` on a fully-backed table."""
+    step = make_decode_step(cfg, capacity, batch)
+
+    def step_paged(params, state, token, pos, reset, page_index, pools):
+        caches = gather_pools(spec, pools, page_index)
+        logits, new_caches = step(params, state, token, pos, reset, caches)
+        new_pools = scatter_pools(spec, pools, page_index, new_caches)
+        return logits, new_pools
+
+    return step_paged
+
+
+def make_decode_sample_paged(cfg: ModelConfig, capacity: int, batch: int, spec: dict):
+    """The paged twin of `make_decode_sample`: in-graph sampling over the
+    paged step; host traffic per token stays O(batch) + the table upload."""
+    step = make_decode_step_paged(cfg, capacity, batch, spec)
+    kmx = sample_k_max(cfg)
+
+    def sample_step(params, state, token, pos, reset, uniform, temp, k,
+                    page_index, pools):
+        logits, new_pools = step(params, state, token, pos, reset, page_index, pools)
+        ids, tvals, tids = sample_from_logits(logits, uniform, temp, k, kmx)
+        return ids, tvals, tids, new_pools
+
+    return sample_step
+
+
+def make_prefill_paged(cfg: ModelConfig, capacity: int, batch: int, spec: dict):
+    """(params, state, tokens [B,P] i32, plen [B] i32,
+    page_index [B, pages_per_slot] i32) -> (logprobs, last_logits, pools).
+
+    The contiguous prefill builds the logical cache from scratch; the
+    paged twin scatters it into freshly-initialised pools. Pages the
+    table leaves unbacked silently drop their slots' entries — the host
+    must map every page covering the prompt before dispatch (lazy kinds:
+    ceil(plen / page_size) pages; bounded kinds: all of them)."""
+    prefill = make_prefill(cfg, capacity, batch)
+
+    def prefill_paged(params, state, tokens, plen, page_index):
+        logprobs, last, caches = prefill(params, state, tokens, plen)
+        pools = scatter_pools(
+            spec, init_pools(cfg, batch, capacity, spec), page_index, caches
+        )
+        return logprobs, last, pools
+
+    return prefill_paged

@@ -54,11 +54,24 @@ class DecodeSpec:
     ``decode_step_b<N>`` programs (batch-scaling bench) and
     ``extra_capacities`` adds ``decode_step_c<C>`` (context-scaling bench,
     decode-only). Static shapes: one lowered program per grid point, the
-    standard bucketing of XLA serving."""
+    standard bucketing of XLA serving.
+
+    Every grid point is also lowered as a paged twin (``prefill_paged``,
+    ``decode_step_paged*``, ``decode_step_sample_paged*``) storing the
+    cache in fixed-size pages of a shared pool addressed through a
+    host-supplied page table. ``page_size`` overrides the per-variant
+    default (gcd of the per-kind capacities, capped at 64);
+    ``pool_frac`` statically overcommits the capacity-sized (lazy) page
+    pools — 0.25 means the device reserves a quarter of the contiguous
+    worst case, and admission parks/replays sequences under pressure.
+    Bounded kinds (MoSA/fixed k-slots, local rings) are never
+    overcommitted: their tiny caches are the paper's Table 2 point."""
 
     capacity: int = 1024
     extra_batches: tuple = ()
     extra_capacities: tuple = ()
+    page_size: Optional[int] = None
+    pool_frac: float = 0.25
 
 
 @dataclasses.dataclass

@@ -1,0 +1,127 @@
+"""Fallback BENCH publisher for toolchain-limited CI containers.
+
+`verify.sh`'s perf smoke is the real publisher of `BENCH_pipeline.json` /
+`BENCH_decode.json`, but it needs cargo. Some CI containers carry only
+the Python artifact toolchain — historically verify.sh then published
+*nothing*, the repo-root BENCH files never appeared, and the perf
+trajectory stayed empty with no explanation.
+
+This module is the honest fallback: when the Rust side cannot run, it
+still proves the lowering toolchain works end-to-end — it lowers a tiny
+paged+contiguous decode variant, validates the manifest invariants the
+Rust runtime would check (pages geometry, donated alias identity), and
+publishes BENCH stubs that say exactly *why* no wall-clock numbers exist
+(`available: false`, `reason`, plus the measured lowering seconds, which
+*is* a host-side perf signal: a pathological lowering regression shows
+up here as a diff).
+
+A stub never overwrites a report with real measured numbers
+(`available: true`): trajectory data always wins over explanations.
+
+Usage: cd python && python -m compile.verify_smoke \
+           --pipeline-out ../BENCH_pipeline.json \
+           --decode-out ../BENCH_decode.json \
+           --reason "cargo not on PATH in this container"
+"""
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+
+
+def lowering_smoke() -> dict:
+    """Lower a tiny decode-capable variant (contiguous + paged programs)
+    and cross-check the manifest sections; returns the timing/shape
+    summary. Raises on any lowering or invariant failure."""
+    import jax
+
+    jax.config.update("jax_platform_name", "cpu")
+    from compile import aot, variants
+    from compile.model import ModelConfig
+
+    cfg = ModelConfig(
+        vocab=32, d_model=16, d_head=8, d_ff=32, n_layers=1, seq_len=16,
+        n_dense=1, n_sparse=2, sparse_kind="mosa", k_sel=4, use_kernel=False,
+    )
+    v = variants.Variant(
+        name="verify_smoke", cfg=cfg, batch=2, programs=["decode"],
+        group="verify", base_heads=2,
+        decode=variants.DecodeSpec(capacity=32, page_size=4, pool_frac=0.5),
+    )
+    t0 = time.monotonic()
+    with tempfile.TemporaryDirectory() as out:
+        entry = aot.lower_variant(v, out)
+    seconds = time.monotonic() - t0
+    progs = entry["programs"]
+    paged = [p for p in progs if "paged" in p]
+    assert "decode_step_paged" in progs and "prefill_paged" in progs, sorted(progs)
+    pages = progs["decode_step_paged"]["pages"]
+    off = 0
+    for e in pages["kinds"]:
+        assert e["row_offset"] == off and e["slots"] % pages["page_size"] == 0
+        off += e["pages_per_slot"]
+        assert e["pool_pages"] >= e["pages_per_slot"]
+    assert off == pages["pages_per_slot"]
+    n_cache = len(progs["decode_step_paged"]["cache"])
+    assert len(progs["decode_step_paged"]["donated"]["aliases"]) == n_cache
+    return {
+        "variant": v.name,
+        "programs": len(progs),
+        "paged_programs": len(paged),
+        "lowering_seconds": round(seconds, 3),
+        "page_size": pages["page_size"],
+        "pages_per_slot": pages["pages_per_slot"],
+    }
+
+
+def has_real_numbers(path: str) -> bool:
+    """Does an existing report carry measured data a stub must not clobber?"""
+    try:
+        with open(path) as f:
+            return bool(json.load(f).get("available"))
+    except (OSError, ValueError):
+        return False
+
+
+def publish(path: str, report: dict) -> None:
+    if has_real_numbers(path):
+        print(f"verify_smoke: {path} holds real measured numbers; stub not published")
+        return
+    with open(path, "w") as f:
+        json.dump(report, f, indent=1)
+        f.write("\n")
+    print(f"verify_smoke: published {path} ({report.get('reason', 'no reason')})")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pipeline-out", required=True)
+    ap.add_argument("--decode-out", required=True)
+    ap.add_argument("--reason", default="rust toolchain unavailable")
+    args = ap.parse_args()
+
+    try:
+        smoke = lowering_smoke()
+        ok = True
+        err = None
+    except Exception as e:  # publish the failure, don't hide it
+        smoke, ok, err = None, False, f"{type(e).__name__}: {e}"
+        print(f"verify_smoke: lowering smoke FAILED: {err}", file=sys.stderr)
+
+    base = {
+        "smoke": True,
+        "available": False,
+        "reason": args.reason,
+        "publisher": "compile.verify_smoke (python fallback)",
+        "lowering_smoke": {"ok": ok, **({"error": err} if err else {}), **(smoke or {})},
+    }
+    publish(args.pipeline_out, {"schema": "mosa-bench-pipeline-v1", **base})
+    publish(args.decode_out, {"schema": "mosa-bench-decode-v1", **base})
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,481 @@
+"""Paged KV-cache tests: the differential paged-vs-contiguous contract.
+
+The paged decode programs (compile/decode.py §paged) must be
+*bit-identical* to the contiguous programs whenever every logical page
+the computation touches is backed — any page table, any physical order.
+These tests pin that down across every head kind, plus the safety
+property that makes host-side overcommit sound: writes through unbacked
+(PAGE_SENTINEL) table entries drop instead of clobbering other slots'
+pages, and unbacked reads are masked to the empty-slot values.
+
+Schema tests mirror the PR 4 ``donated``-section tests: the manifest
+``pages`` section must carry a geometry the Rust runtime can trust
+blindly (divisibility, row partition, pool bounds, in-range identity
+tables).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import jax.tree_util as jtu
+import numpy as np
+import pytest
+
+from compile import decode as dec
+from compile.model import ModelConfig, forward, init_params
+
+jax.config.update("jax_platform_name", "cpu")
+
+B = 2
+CAP = 32
+
+
+def make_cfg(**kw):
+    base = dict(
+        vocab=48, d_model=16, d_head=8, d_ff=32, n_layers=2, seq_len=16,
+        n_dense=2, window=0, n_sparse=0, sparse_kind="none", k_sel=0,
+        use_kernel=False,
+    )
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+CFGS = {
+    "dense": make_cfg(),
+    "local": make_cfg(window=4),
+    "mosa": make_cfg(n_dense=1, n_sparse=2, sparse_kind="mosa", k_sel=4),
+    "fixed": make_cfg(n_dense=1, n_sparse=2, sparse_kind="fixed", k_sel=4),
+    "routing": make_cfg(n_dense=1, n_sparse=2, sparse_kind="routing", k_sel=4),
+}
+
+
+def setup(cfg, seed=0):
+    params, state = init_params(jax.random.PRNGKey(seed), cfg)
+    tokens = jax.random.randint(
+        jax.random.PRNGKey(seed + 1), (B, cfg.seq_len), 0, cfg.vocab
+    )
+    return params, state, tokens.astype(jnp.int32)
+
+
+def empty_caches(cfg, cap=CAP):
+    """Contiguous caches in their init state (the KvCacheBuffers image)."""
+    flat, treedef = jtu.tree_flatten_with_path(dec.cache_struct(cfg, B, cap))
+
+    def initleaf(path, leaf):
+        meta = dec.leaf_meta(str(path[-1]).strip("[']"))
+        if meta["init"] == "sentinel":
+            return jnp.full(leaf.shape, dec.POS_SENTINEL, leaf.dtype)
+        if meta["init"] == "neg":
+            return jnp.full(leaf.shape, -1.0, leaf.dtype)
+        return jnp.zeros(leaf.shape, leaf.dtype)
+
+    return jtu.tree_unflatten(treedef, [initleaf(p, l) for p, l in flat])
+
+
+def permuted_table(spec, seed=7):
+    """A fully-backed table in deliberately non-identity physical order:
+    each kind's pool rows are permuted by a seeded permutation."""
+    rng = np.random.default_rng(seed)
+    table = np.array(dec.identity_page_table(spec, B))
+    for e in spec["kinds"]:
+        perm = rng.permutation(e["pool_pages"]).astype(np.int32)
+        seg = table[:, e["row_offset"]:e["row_offset"] + e["pages_per_slot"]]
+        table[:, e["row_offset"]:e["row_offset"] + e["pages_per_slot"]] = perm[seg]
+    return jnp.asarray(table)
+
+
+# ---------------------------------------------------------------------------
+# pages geometry / schema invariants
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", list(CFGS))
+def test_page_spec_schema_invariants(name):
+    cfg = CFGS[name]
+    for page_size in (None, 4):
+        spec = dec.page_spec(cfg, B, CAP, page_size=page_size, pool_frac=0.5)
+        assert spec["sentinel"] == dec.PAGE_SENTINEL
+        ps = spec["page_size"]
+        assert ps >= 1
+        # the kinds partition the page_index row contiguously
+        off = 0
+        for e in spec["kinds"]:
+            assert e["row_offset"] == off
+            off += e["pages_per_slot"]
+            # page_size divides every kind's per-slot capacity
+            assert e["slots"] % ps == 0
+            assert e["pages_per_slot"] == e["slots"] // ps
+            # one full-capacity sequence always fits
+            assert e["pool_pages"] >= e["pages_per_slot"]
+            if e["lazy"]:
+                # lazy pools never exceed the contiguous worst case
+                assert e["pool_pages"] <= B * e["pages_per_slot"]
+            else:
+                # bounded kinds cover worst-case admission exactly:
+                # every slot can hold its whole (tiny) cache
+                assert e["pool_pages"] == B * e["pages_per_slot"]
+        assert off == spec["pages_per_slot"]
+
+
+@pytest.mark.parametrize("name", list(CFGS))
+def test_identity_table_indices_in_range(name):
+    cfg = CFGS[name]
+    spec = dec.page_spec(cfg, B, CAP, page_size=4)  # pool_frac 1: fully backed
+    table = np.asarray(dec.identity_page_table(spec, B))
+    for e in spec["kinds"]:
+        seg = table[:, e["row_offset"]:e["row_offset"] + e["pages_per_slot"]]
+        assert seg.min() >= 0 and seg.max() < e["pool_pages"]
+        # no physical page mapped twice
+        assert len(np.unique(seg)) == seg.size
+
+
+def test_page_spec_rejects_nondividing_page_size():
+    with pytest.raises(AssertionError):
+        dec.page_spec(CFGS["mosa"], B, CAP, page_size=3)
+
+
+def test_default_page_size_divides_and_caps():
+    for name, cfg in CFGS.items():
+        ps = dec.default_page_size(cfg, 1024)
+        assert ps <= dec.DEFAULT_PAGE_CAP
+        for _, slots, _ in dec.page_kinds(cfg, 1024):
+            assert slots % ps == 0, name
+
+
+def test_pool_shapes_match_logical_capacity():
+    """Pool leaves regroup exactly the logical slots: pool_pages ×
+    page_size elements per (head, dim) — and the lazy pools shrink by
+    pool_frac while bounded pools don't."""
+    cfg = CFGS["mosa"]
+    spec = dec.page_spec(cfg, B, CAP, page_size=4, pool_frac=0.5)
+    contiguous = dec.cache_shapes(cfg, B, CAP)
+    paged = dec.paged_cache_shapes(cfg, B, CAP, spec)
+    assert set(paged) == set(contiguous)
+    for nm, leaf in paged.items():
+        e = [k for k in spec["kinds"] if k["kind"] == nm.split("_")[0]][0]
+        assert leaf.shape[0] == e["pool_pages"]
+        assert leaf.shape[2] == spec["page_size"]
+        assert leaf.shape[1] == contiguous[nm].shape[1]
+    dense_k = paged["dense_k"]
+    # 0.5 pool_frac on the lazy dense pool: half the contiguous slots
+    assert dense_k.shape[0] * dense_k.shape[2] == B * CAP // 2
+    mosa_k = paged["mosa_k"]
+    assert mosa_k.shape[0] * mosa_k.shape[2] == B * cfg.k_sel
+
+
+# ---------------------------------------------------------------------------
+# the differential contract: paged == contiguous, bitwise
+# ---------------------------------------------------------------------------
+
+
+def run_pair(cfg, table_fn, page_size=4, pool_frac=1.0, p0=4, seed=0):
+    """Drive prefill + teacher-forced decode through both layouts on the
+    same weights/tokens; returns (contiguous logits, paged logits,
+    contiguous caches, gathered paged caches, table)."""
+    params, state, tokens = setup(cfg, seed)
+    spec = dec.page_spec(cfg, B, CAP, page_size=page_size, pool_frac=pool_frac)
+    table = table_fn(spec)
+    prefill = dec.make_prefill(cfg, CAP, B)
+    step = dec.make_decode_step(cfg, CAP, B)
+    prefill_p = dec.make_prefill_paged(cfg, CAP, B, spec)
+    step_p = dec.make_decode_step_paged(cfg, CAP, B, spec)
+    plen = jnp.full((B,), p0, jnp.int32)
+    lps_c, last_c, caches = prefill(params, state, tokens, plen)
+    lps_p, last_p, pools = prefill_p(params, state, tokens, plen, table)
+    np.testing.assert_array_equal(np.asarray(lps_c), np.asarray(lps_p))
+    np.testing.assert_array_equal(np.asarray(last_c), np.asarray(last_p))
+    zero = jnp.zeros((B,), jnp.int32)
+    outs_c, outs_p = [], []
+    for t in range(p0, cfg.seq_len):
+        pos = jnp.full((B,), t, jnp.int32)
+        lc, caches = step(params, state, tokens[:, t], pos, zero, caches)
+        lp, pools = step_p(params, state, tokens[:, t], pos, zero, table, pools)
+        outs_c.append(np.asarray(lc))
+        outs_p.append(np.asarray(lp))
+    gathered = dec.gather_pools(spec, pools, table)
+    return outs_c, outs_p, caches, gathered, table
+
+
+@pytest.mark.parametrize("name", list(CFGS))
+def test_paged_decode_bit_identical_identity_table(name):
+    cfg = CFGS[name]
+    ps = 4 if name != "local" else 2  # window 4: exercise >1 page per ring
+    outs_c, outs_p, caches, gathered, _ = run_pair(
+        cfg, lambda s: dec.identity_page_table(s, B), page_size=ps
+    )
+    for t, (a, b) in enumerate(zip(outs_c, outs_p)):
+        np.testing.assert_array_equal(a, b, err_msg=f"{name} step {t}")
+    # cache *payloads* (and metadata) identical through the page table
+    for a, b in zip(jtu.tree_leaves(caches), jtu.tree_leaves(gathered)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=name)
+
+
+@pytest.mark.parametrize("name", list(CFGS))
+def test_paged_decode_bit_identical_permuted_table(name):
+    """Physical placement must be invisible: a permuted (non-identity)
+    table yields bit-identical logits and logical cache contents."""
+    cfg = CFGS[name]
+    outs_c, outs_p, caches, gathered, table = run_pair(
+        cfg, lambda s: permuted_table(s, seed=11), page_size=4 if name != "local" else 2
+    )
+    # the permutation is actually non-identity somewhere
+    spec = dec.page_spec(cfg, B, CAP, page_size=4 if name != "local" else 2)
+    assert not np.array_equal(np.asarray(table), np.asarray(dec.identity_page_table(spec, B)))
+    for t, (a, b) in enumerate(zip(outs_c, outs_p)):
+        np.testing.assert_array_equal(a, b, err_msg=f"{name} step {t}")
+    for a, b in zip(jtu.tree_leaves(caches), jtu.tree_leaves(gathered)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=name)
+
+
+def test_unbacked_pages_never_clobber_backed_slots():
+    """Overcommit safety: a slot whose lazy pages are unbacked
+    (PAGE_SENTINEL) drops every write; the backed slot's logits stay
+    bit-identical to a contiguous run, and the pools are untouched where
+    nothing was mapped."""
+    cfg = CFGS["mosa"]
+    params, state, tokens = setup(cfg, seed=3)
+    spec = dec.page_spec(cfg, B, CAP, page_size=4, pool_frac=0.5)
+    dense = [e for e in spec["kinds"] if e["kind"] == "dense"][0]
+    mosa = [e for e in spec["kinds"] if e["kind"] == "mosa"][0]
+    assert dense["pool_pages"] == B * dense["pages_per_slot"] // 2  # overcommitted
+    table = np.full((B, spec["pages_per_slot"]), dec.PAGE_SENTINEL, np.int32)
+    # slot 0 fully backed; slot 1's dense pages left unbacked
+    table[0, dense["row_offset"]:dense["row_offset"] + dense["pages_per_slot"]] = np.arange(
+        dense["pages_per_slot"], dtype=np.int32
+    )
+    for b in range(B):
+        o = mosa["row_offset"]
+        table[b, o:o + mosa["pages_per_slot"]] = np.arange(
+            b * mosa["pages_per_slot"], (b + 1) * mosa["pages_per_slot"], dtype=np.int32
+        )
+    table = jnp.asarray(table)
+    step_p = dec.make_decode_step_paged(cfg, CAP, B, spec)
+    step = dec.make_decode_step(cfg, CAP, B)
+    pools = dec.init_pools(cfg, B, CAP, spec)
+    caches = empty_caches(cfg)
+    reset = jnp.asarray([1, 1], jnp.int32)
+    for t in range(6):
+        pos = jnp.full((B,), t, jnp.int32)
+        lp, pools = step_p(params, state, tokens[:, t], pos, reset, table, pools)
+        lc, caches = step(params, state, tokens[:, t], pos, reset, caches)
+        # the backed slot is exact despite its neighbour's dropped writes
+        np.testing.assert_array_equal(np.asarray(lp[0]), np.asarray(lc[0]), err_msg=str(t))
+        assert bool(jnp.all(jnp.isfinite(lp)))
+        reset = jnp.zeros((B,), jnp.int32)
+
+
+def test_park_and_readmit_replay_matches_fresh_run():
+    """The runtime's evict-and-readmit story, in-graph half: park a slot
+    (its pages go back to the pool and get recycled by another slot),
+    then re-admit it on fresh pages with reset + replay — the replayed
+    slot's logits equal a contiguous run of the same stream."""
+    cfg = CFGS["mosa"]
+    params, state, tokens = setup(cfg, seed=5)
+    spec = dec.page_spec(cfg, B, CAP, page_size=4, pool_frac=0.5)
+    dense = [e for e in spec["kinds"] if e["kind"] == "dense"][0]
+    mosa = [e for e in spec["kinds"] if e["kind"] == "mosa"][0]
+    step_p = dec.make_decode_step_paged(cfg, CAP, B, spec)
+    step = dec.make_decode_step(cfg, CAP, B)
+    pools = dec.init_pools(cfg, B, CAP, spec)
+
+    def tab(slot0_dense, slot1_dense):
+        t = np.full((B, spec["pages_per_slot"]), dec.PAGE_SENTINEL, np.int32)
+        for b, pages in ((0, slot0_dense), (1, slot1_dense)):
+            if pages is not None:
+                o = dense["row_offset"]
+                t[b, o:o + len(pages)] = np.asarray(pages, np.int32)
+            o = mosa["row_offset"]
+            t[b, o:o + mosa["pages_per_slot"]] = np.arange(
+                b * mosa["pages_per_slot"], (b + 1) * mosa["pages_per_slot"], dtype=np.int32
+            )
+        return jnp.asarray(t)
+
+    npages = dense["pages_per_slot"]
+    half = list(range(npages // 2))
+    # phase 1: slot 0 runs on dense pages [0..half); slot 1 idle/unbacked
+    table = tab(half, None)
+    reset = jnp.asarray([1, 1], jnp.int32)
+    for t in range(4):
+        pos = jnp.asarray([t, 0], jnp.int32)
+        _, pools = step_p(params, state, tokens[:, t], pos, reset, table, pools)
+        reset = jnp.zeros((B,), jnp.int32)
+    # phase 2: slot 0 parked — its pages are recycled INTO slot 1, which
+    # admits (reset) and runs its own stream over the same physical rows
+    table = tab(None, half)
+    reset = jnp.asarray([1, 1], jnp.int32)
+    for t in range(4):
+        pos = jnp.asarray([0, t], jnp.int32)
+        _, pools = step_p(params, state, tokens[:, ::-1][:, t], pos, reset, table, pools)
+        reset = jnp.zeros((B,), jnp.int32)
+    # phase 3: slot 0 re-admitted on the *other* pages, replaying its
+    # stream from scratch; slot 1 keeps generating
+    other = list(range(npages // 2, npages))
+    table = tab(other, half)
+    outs_replay = []
+    reset = jnp.asarray([1, 0], jnp.int32)
+    for t in range(6):
+        pos = jnp.asarray([t, 4 + t], jnp.int32)
+        tok = jnp.stack([tokens[0, t], tokens[:, ::-1][1, 4 + t]])
+        lp, pools = step_p(params, state, tok, pos, reset, table, pools)
+        outs_replay.append(np.asarray(lp[0]))
+        reset = jnp.zeros((B,), jnp.int32)
+    # reference: the same slot-0 stream through a fresh contiguous cache
+    caches = empty_caches(cfg)
+    reset = jnp.asarray([1, 1], jnp.int32)
+    outs_ref = []
+    for t in range(6):
+        pos = jnp.full((B,), t, jnp.int32)
+        lc, caches = step(params, state, tokens[:, t], pos, reset, caches)
+        outs_ref.append(np.asarray(lc[0]))
+        reset = jnp.zeros((B,), jnp.int32)
+    for t, (a, b) in enumerate(zip(outs_replay, outs_ref)):
+        np.testing.assert_array_equal(a, b, err_msg=f"replayed step {t}")
+
+
+def test_paged_sample_step_matches_contiguous_sample_step():
+    """decode_step_sample_paged: same ids and cache trajectory as the
+    contiguous sampling twin given the same uniforms."""
+    cfg = CFGS["mosa"]
+    params, state, tokens = setup(cfg, seed=9)
+    spec = dec.page_spec(cfg, B, CAP, page_size=4)
+    table = permuted_table(spec, seed=13)
+    samp_c = dec.make_decode_sample(cfg, CAP, B)
+    samp_p = dec.make_decode_sample_paged(cfg, CAP, B, spec)
+    prefill = dec.make_prefill(cfg, CAP, B)
+    prefill_p = dec.make_prefill_paged(cfg, CAP, B, spec)
+    plen = jnp.full((B,), 4, jnp.int32)
+    _, _, caches = prefill(params, state, tokens, plen)
+    _, _, pools = prefill_p(params, state, tokens, plen, table)
+    rng = np.random.default_rng(5)
+    zero = jnp.zeros((B,), jnp.int32)
+    for t in range(4, 10):
+        pos = jnp.full((B,), t, jnp.int32)
+        u = jnp.asarray(rng.random(B), jnp.float32)
+        ids_c, tv_c, ti_c, caches = samp_c(
+            params, state, tokens[:, t], pos, zero, u, jnp.float32(0.8), jnp.int32(4), caches
+        )
+        ids_p, tv_p, ti_p, pools = samp_p(
+            params, state, tokens[:, t], pos, zero, u, jnp.float32(0.8), jnp.int32(4),
+            table, pools
+        )
+        np.testing.assert_array_equal(np.asarray(ids_c), np.asarray(ids_p))
+        np.testing.assert_array_equal(np.asarray(tv_c), np.asarray(tv_p))
+        np.testing.assert_array_equal(np.asarray(ti_c), np.asarray(ti_p))
+    gathered = dec.gather_pools(spec, pools, table)
+    for a, b in zip(jtu.tree_leaves(caches), jtu.tree_leaves(gathered)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# AOT lowering of the paged programs + pages manifest schema
+# ---------------------------------------------------------------------------
+
+
+def test_lowered_paged_programs_and_pages_manifest(tmp_path):
+    """lower_variant emits the paged twins with a `pages` section the
+    Rust runtime can validate blindly, and the paged HLO reparses through
+    the pinned converter — mirroring the PR 4 donated-section tests."""
+    from jax._src.lib import xla_client as xc
+
+    from compile import aot, variants
+
+    cfg = CFGS["mosa"]
+    v = variants.Variant(
+        name="t_paged", cfg=cfg, batch=B, programs=["decode"],
+        group="test", base_heads=2,
+        decode=variants.DecodeSpec(
+            capacity=CAP, extra_batches=(1,), extra_capacities=(),
+            page_size=4, pool_frac=0.5,
+        ),
+    )
+    entry = aot.lower_variant(v, str(tmp_path))
+    progs = entry["programs"]
+    assert {
+        "prefill_paged", "decode_step_paged", "decode_step_sample_paged",
+        "decode_step_paged_b1", "decode_step_sample_paged_b1",
+    } <= set(progs)
+    n_model = entry["n_params_leaves"] + entry["n_state_leaves"]
+    step = progs["decode_step_paged"]
+    pages = step["pages"]
+    # schema: geometry the Rust PageAllocator trusts
+    assert pages["page_size"] == 4
+    assert pages["sentinel"] == dec.PAGE_SENTINEL
+    off = 0
+    for e in pages["kinds"]:
+        assert e["row_offset"] == off
+        off += e["pages_per_slot"]
+        assert e["slots"] % pages["page_size"] == 0
+        assert e["pool_pages"] >= e["pages_per_slot"]
+        if not e["lazy"]:
+            assert e["pool_pages"] == step["batch"] * e["pages_per_slot"]
+    assert off == pages["pages_per_slot"]
+    # page_index is the last extra input, [batch, pages_per_slot] i32
+    pi = step["extra_inputs"][-1]
+    assert pi == {
+        "name": "page_index", "shape": [B, pages["pages_per_slot"]], "dtype": "i32",
+    }
+    # pool leaves: [pool_pages, n, page_size(, d)] per kind, kind/init tags kept
+    by = {e["path"]: e for e in step["cache"]}
+    dense = [e for e in pages["kinds"] if e["kind"] == "dense"][0]
+    assert by["layers[0].dense_k"]["shape"] == [
+        dense["pool_pages"], cfg.n_dense, 4, cfg.d_head
+    ]
+    assert by["layers[0].dense_k"]["kind"] == "kv"
+    assert by["layers[0].mosa_pos"]["init"] == "sentinel"
+    assert by["layers[0].mosa_pri"]["init"] == "neg"
+    # donated aliases: pools donate leaf-for-leaf after the page_index input
+    n_cache = len(step["cache"])
+    assert step["donated"]["aliases"] == [
+        [n_model + 4 + j, 1 + j] for j in range(n_cache)
+    ]
+    samp = progs["decode_step_sample_paged"]
+    assert samp["donated"]["aliases"] == [
+        [n_model + 7 + j, 3 + j] for j in range(n_cache)
+    ]
+    assert samp["pages"] == pages
+    assert [e["name"] for e in samp["extra_inputs"]] == [
+        "token", "pos", "reset", "uniform", "temp", "k", "page_index",
+    ]
+    # prefill_paged: pages section present, cache output-only (no donation)
+    ppf = progs["prefill_paged"]
+    assert ppf["pages"] == pages
+    assert ppf["donated"] == {"aliases": []}
+    assert [e["name"] for e in ppf["extra_inputs"]] == ["tokens", "plen", "page_index"]
+    # contiguous twins survive unchanged, without a pages section
+    assert "pages" not in progs["decode_step"]
+    assert "pages" not in progs["prefill"]
+    # all paged HLO reparses through the pinned converter; donating
+    # programs carry the alias clause
+    for name in ["prefill_paged", "decode_step_paged", "decode_step_sample_paged"]:
+        text = open(tmp_path / progs[name]["file"]).read()
+        assert text.startswith("HloModule")
+        assert "largest" not in text
+        assert xc._xla.hlo_module_from_text(text) is not None
+        if name != "prefill_paged":
+            assert "input_output_alias=" in text.splitlines()[0]
+            assert aot.parse_alias_map(text) == progs[name]["donated"]["aliases"]
+    # the b1 family rescales the bounded pools and the table rows
+    b1 = progs["decode_step_paged_b1"]
+    assert b1["batch"] == 1
+    assert b1["extra_inputs"][-1]["shape"] == [1, b1["pages"]["pages_per_slot"]]
+    for e in b1["pages"]["kinds"]:
+        if not e["lazy"]:
+            assert e["pool_pages"] == e["pages_per_slot"]
+
+
+def test_core_decode_specs_carry_paging():
+    from compile import variants
+
+    core = {v.name: v for v in variants.core_variants()}
+    for name in ("micro_dense", "micro_mosa_r8", "micro_fixed_r8", "micro_routing_r8"):
+        d = core[name].decode
+        assert d.pool_frac < 1.0, "bench variants must exercise overcommit"
+        spec = dec.page_spec(core[name].cfg, core[name].batch, d.capacity,
+                             page_size=d.page_size, pool_frac=d.pool_frac)
+        # the acceptance headline: paged resident payload ≤ half the
+        # contiguous worst case for the capacity-sized kinds
+        lazy = [e for e in spec["kinds"] if e["lazy"]]
+        assert lazy, name
+        for e in lazy:
+            assert e["pool_pages"] * 2 <= core[name].batch * e["pages_per_slot"], name

@@ -15,6 +15,20 @@
 //! The batcher is engine-independent (pure slot bookkeeping) — the
 //! decode session asks it for per-slot (token, pos, reset) vectors and
 //! hands back the sampled token per slot.
+//!
+//! Paged serving adds two verbs. `plan()` previews the next dispatch
+//! without consuming tokens, so the serving loop can back each active
+//! slot's pages (`DecodeSession::prepare_pages`) before committing.
+//! `park(slot)` evicts a sequence under pool pressure: its pages go back
+//! to the pool and the sequence re-queues to teacher-force its whole
+//! history (prompt, then its own generated tokens) from a cache reset
+//! before generating further — a deterministic replay, so a greedy
+//! stream is bit-identical whether or not it was ever parked, and the
+//! finished record keeps the original prompt/generated split. Admission
+//! overcommits by design; `admit_if` lets the loop gate new admissions
+//! on a demand-debiting page budget (`kvcache::AdmissionBudget`), and
+//! `prefill_plan` previews the prefill wave's page demand so the pool
+//! is backed (parking victims if needed) before prompts are consumed.
 
 use std::collections::VecDeque;
 
@@ -37,15 +51,53 @@ pub struct FinishedSeq {
 struct Slot {
     id: u64,
     prompt: Vec<i32>,
-    /// prompt tokens already consumed (dispatched or prefetched)
+    /// history tokens already consumed (dispatched or prefetched); the
+    /// history is `prompt` followed by the first `replay` generated
+    /// tokens (a resumed sequence re-feeds its own past output)
     fed: usize,
     /// position of the next dispatched token
     pos: i32,
     generated: Vec<i32>,
+    /// generated tokens to teacher-force after the prompt (nonzero only
+    /// after a park/resume; samples during replay are ignored)
+    replay: usize,
     max_new: usize,
     needs_reset: bool,
     /// last sampled token, awaiting dispatch
     last: Option<i32>,
+}
+
+impl Slot {
+    /// prompt + replayed-generation tokens to teacher-force
+    fn history_len(&self) -> usize {
+        self.prompt.len() + self.replay
+    }
+
+    fn history_token(&self, i: usize) -> i32 {
+        if i < self.prompt.len() {
+            self.prompt[i]
+        } else {
+            self.generated[i - self.prompt.len()]
+        }
+    }
+}
+
+/// Queue entry: a fresh request, or a parked sequence awaiting replay.
+#[derive(Debug)]
+enum Pending {
+    Fresh(SeqRequest),
+    Resume(Slot),
+}
+
+impl Pending {
+    /// Tokens the entry will teacher-force at admission (the paged
+    /// admission gate sizes pool headroom against this).
+    fn history_len(&self) -> usize {
+        match self {
+            Pending::Fresh(r) => r.prompt.len(),
+            Pending::Resume(s) => s.history_len(),
+        }
+    }
 }
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -56,11 +108,22 @@ enum Inflight {
     Gen,
 }
 
+/// One slot's next-dispatch preview (see `ContinuousBatcher::plan`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SlotPlan {
+    pub active: bool,
+    /// position of the token the slot would dispatch next
+    pub pos: i32,
+    /// the dispatch would raise the in-graph reset flag
+    pub reset: bool,
+}
+
 pub struct ContinuousBatcher {
     slots: Vec<Option<Slot>>,
-    pending: VecDeque<SeqRequest>,
+    pending: VecDeque<Pending>,
     inflight: Vec<Inflight>,
     eos: Option<i32>,
+    parked: usize,
 }
 
 impl ContinuousBatcher {
@@ -70,6 +133,7 @@ impl ContinuousBatcher {
             pending: VecDeque::new(),
             inflight: vec![Inflight::Idle; batch],
             eos,
+            parked: 0,
         }
     }
 
@@ -77,32 +141,131 @@ impl ContinuousBatcher {
         if req.prompt.is_empty() {
             req.prompt.push(0); // position 0 must exist (attention sink)
         }
-        self.pending.push_back(req);
+        self.pending.push_back(Pending::Fresh(req));
+    }
+
+    fn admit_into(slot: &mut Option<Slot>, entry: Pending) {
+        *slot = Some(match entry {
+            Pending::Fresh(req) => Slot {
+                id: req.id,
+                prompt: req.prompt,
+                fed: 0,
+                pos: 0,
+                generated: Vec::new(),
+                replay: 0,
+                max_new: req.max_new,
+                needs_reset: true,
+                last: None,
+            },
+            // a parked sequence resumes from scratch: reset cache, replay
+            // its history, keep generating where it left off
+            Pending::Resume(s) => s,
+        });
     }
 
     /// Move pending requests into free slots; returns how many admitted.
     pub fn admit(&mut self) -> usize {
+        self.admit_if(|_| true)
+    }
+
+    /// `admit`, but each admission must pass the gate, called with the
+    /// entry's history length — the tokens it will teacher-force (paged
+    /// serving gates on pool headroom). The head of the queue blocks the
+    /// tail: FIFO order is preserved, no starvation by smaller requests.
+    pub fn admit_if(&mut self, mut gate: impl FnMut(usize) -> bool) -> usize {
         let mut n = 0;
         for slot in self.slots.iter_mut() {
-            if slot.is_none() {
-                if let Some(req) = self.pending.pop_front() {
-                    *slot = Some(Slot {
-                        id: req.id,
-                        prompt: req.prompt,
-                        fed: 0,
-                        pos: 0,
-                        generated: Vec::new(),
-                        max_new: req.max_new,
-                        needs_reset: true,
-                        last: None,
-                    });
-                    n += 1;
-                } else {
-                    break;
-                }
+            if slot.is_some() {
+                continue;
             }
+            let head_ok = self.pending.front().map(|e| gate(e.history_len())).unwrap_or(false);
+            if !head_ok {
+                break;
+            }
+            Self::admit_into(slot, self.pending.pop_front().unwrap());
+            n += 1;
         }
         n
+    }
+
+    /// Force exactly one admission, gate-free (deadlock escape: a lone
+    /// sequence can always be served). Returns 0 if nothing is pending
+    /// or no slot is free.
+    pub fn admit_one(&mut self) -> usize {
+        for slot in self.slots.iter_mut() {
+            if slot.is_none() {
+                if let Some(entry) = self.pending.pop_front() {
+                    Self::admit_into(slot, entry);
+                    return 1;
+                }
+                return 0;
+            }
+        }
+        0
+    }
+
+    /// Preview the next dispatch per slot without consuming anything:
+    /// what `next_inputs` would emit, minus the token. The paged serving
+    /// loop maps pages against this plan (and parks on pressure) before
+    /// committing to the dispatch.
+    pub fn plan(&self) -> Vec<SlotPlan> {
+        self.slots
+            .iter()
+            .map(|slot| match slot {
+                None => SlotPlan { active: false, pos: 0, reset: true },
+                Some(s) => SlotPlan { active: true, pos: s.pos, reset: s.needs_reset },
+            })
+            .collect()
+    }
+
+    /// Preview the prefill wave for window `p` without consuming
+    /// anything: per active slot, the LAST position the prefill program
+    /// will write (`min(history, p) - 1`), with reset raised. The paged
+    /// serving loop backs these pages — parking victims on pressure —
+    /// BEFORE `prefill_wave` consumes the prompts, so an overcommitted
+    /// pool never aborts the wave.
+    pub fn prefill_plan(&self, p: usize) -> Vec<SlotPlan> {
+        self.slots
+            .iter()
+            .map(|slot| match slot {
+                None => SlotPlan { active: false, pos: 0, reset: true },
+                Some(s) => SlotPlan {
+                    active: true,
+                    pos: (s.history_len().min(p).max(1) - 1) as i32,
+                    reset: true,
+                },
+            })
+            .collect()
+    }
+
+    /// Evict a sequence under pool pressure: the slot frees up and the
+    /// sequence re-queues to replay its whole history (prompt + its own
+    /// generated tokens, teacher-forced from position 0 with a cache
+    /// reset) before continuing to generate. The replay is
+    /// deterministic, so a greedy stream is bit-identical whether or not
+    /// it was ever parked, and the finished record keeps the original
+    /// prompt/generated split. Returns the parked id. Only valid between
+    /// `advance` and the next `next_inputs`.
+    pub fn park(&mut self, i: usize) -> Option<u64> {
+        assert!(
+            matches!(self.inflight[i], Inflight::Idle),
+            "park of slot {i} with a dispatch in flight"
+        );
+        let mut s = self.slots[i].take()?;
+        s.fed = 0;
+        s.pos = 0;
+        s.replay = s.generated.len();
+        s.needs_reset = true;
+        s.last = None;
+        self.parked += 1;
+        let id = s.id;
+        self.pending.push_back(Pending::Resume(s));
+        Some(id)
+    }
+
+    /// Sequences parked so far (cumulative).
+    pub fn parked_total(&self) -> usize {
+        self.parked
     }
 
     pub fn active(&self) -> usize {
@@ -129,14 +292,16 @@ impl ContinuousBatcher {
                 continue;
             };
             assert_eq!(s.fed, 0, "prefill_wave on a slot that already streamed");
-            let take = s.prompt.len().min(p);
-            tokens[i * p..i * p + take].copy_from_slice(&s.prompt[..take]);
+            let take = s.history_len().min(p);
+            for j in 0..take {
+                tokens[i * p + j] = s.history_token(j);
+            }
             plen[i] = take as i32;
             s.fed = take;
             s.pos = take as i32;
             s.needs_reset = false;
             self.inflight[i] =
-                if take == s.prompt.len() { Inflight::LastPrompt } else { Inflight::Prompt };
+                if take == s.history_len() { Inflight::LastPrompt } else { Inflight::Prompt };
         }
         (tokens, plen)
     }
@@ -155,15 +320,18 @@ impl ContinuousBatcher {
                 self.inflight[i] = Inflight::Idle;
                 continue;
             };
-            if s.fed < s.prompt.len() {
-                toks.push(s.prompt[s.fed]);
+            if s.fed < s.history_len() {
+                // teacher-force the prompt, then (after a park) the
+                // replayed generated tokens; only the final history
+                // token's sample starts/continues real generation
+                toks.push(s.history_token(s.fed));
                 pos.push(s.pos);
                 rst.push(if s.needs_reset { 1 } else { 0 });
                 s.fed += 1;
                 s.pos += 1;
                 s.needs_reset = false;
                 self.inflight[i] =
-                    if s.fed == s.prompt.len() { Inflight::LastPrompt } else { Inflight::Prompt };
+                    if s.fed == s.history_len() { Inflight::LastPrompt } else { Inflight::Prompt };
             } else {
                 let t = s.last.expect("slot out of prompt without a sampled token");
                 toks.push(t);
@@ -270,6 +438,106 @@ mod tests {
         let (t, _, r, _) = step(&mut b, &[8, 8, 8]);
         assert_eq!(t.len(), 3);
         assert_eq!((r[1], r[2]), (1, 1));
+    }
+
+    #[test]
+    fn plan_previews_without_consuming() {
+        let mut b = ContinuousBatcher::new(2, None);
+        b.submit(req(1, &[10, 11], 2));
+        b.admit();
+        let plan = b.plan();
+        assert_eq!(plan[0], SlotPlan { active: true, pos: 0, reset: true });
+        assert_eq!(plan[1], SlotPlan { active: false, pos: 0, reset: true });
+        // the preview matches what next_inputs then emits
+        let (t, p, r, _) = step(&mut b, &[9, 9]);
+        assert_eq!((t[0], p[0], r[0]), (10, 0, 1));
+        assert_eq!(b.plan()[0], SlotPlan { active: true, pos: 1, reset: false });
+    }
+
+    #[test]
+    fn park_replays_history_and_keeps_the_record_split() {
+        let mut b = ContinuousBatcher::new(1, None);
+        b.submit(req(5, &[10, 11], 3));
+        b.admit();
+        step(&mut b, &[50]); // prompt 10 (mid-prompt sample ignored)
+        step(&mut b, &[60]); // prompt 11 -> first generated token 60
+        // park mid-generation: the sequence re-queues to replay
+        // prompt ++ generated-so-far before continuing
+        assert_eq!(b.park(0), Some(5));
+        assert_eq!(b.active(), 0);
+        assert_eq!(b.parked_total(), 1);
+        assert!(!b.is_done());
+        assert_eq!(b.admit(), 1);
+        // replay teacher-forces 10, 11, 60 from position 0 with reset;
+        // samples during the replay are ignored
+        let (t, p, r, done) = step(&mut b, &[0]);
+        assert_eq!((t[0], p[0], r[0]), (10, 0, 1));
+        assert!(done.is_empty());
+        let (t, _, _, done) = step(&mut b, &[0]);
+        assert_eq!(t[0], 11);
+        assert!(done.is_empty());
+        // the final replayed token: its sample is generated token #2
+        let (t, p, _, done) = step(&mut b, &[61]);
+        assert_eq!((t[0], p[0]), (60, 2));
+        assert!(done.is_empty());
+        let (t, _, _, done) = step(&mut b, &[62]);
+        assert_eq!(t[0], 61);
+        assert_eq!(done.len(), 1);
+        // original prompt/generated split survives the park: generated
+        // holds ALL generated tokens, pre- and post-park
+        assert_eq!(done[0].id, 5);
+        assert_eq!(done[0].prompt, vec![10, 11]);
+        assert_eq!(done[0].generated, vec![60, 61, 62]);
+        assert!(b.is_done());
+    }
+
+    #[test]
+    fn park_before_any_generation_replays_the_prompt_only() {
+        let mut b = ContinuousBatcher::new(1, None);
+        b.submit(req(9, &[7, 8], 1));
+        b.admit();
+        step(&mut b, &[0]); // prompt 7
+        assert_eq!(b.park(0), Some(9));
+        b.admit();
+        let (t, p, r, _) = step(&mut b, &[0]);
+        assert_eq!((t[0], p[0], r[0]), (7, 0, 1));
+        let (t, _, _, done) = step(&mut b, &[33]);
+        assert_eq!(t[0], 8);
+        assert_eq!(done[0].generated, vec![33]);
+    }
+
+    #[test]
+    fn prefill_plan_previews_the_wave_without_consuming() {
+        let mut b = ContinuousBatcher::new(3, None);
+        b.submit(req(1, &[1, 2], 4)); // fits the window
+        b.submit(req(2, &[1, 2, 3, 4, 5], 4)); // overflows a 4-wide window
+        b.admit();
+        let plan = b.prefill_plan(4);
+        // last written position: plen - 1 = min(history, p) - 1
+        assert_eq!(plan[0], SlotPlan { active: true, pos: 1, reset: true });
+        assert_eq!(plan[1], SlotPlan { active: true, pos: 3, reset: true });
+        assert_eq!(plan[2], SlotPlan { active: false, pos: 0, reset: true });
+        // nothing consumed: the wave itself still sees fresh slots
+        let (tokens, plen) = b.prefill_wave(4);
+        assert_eq!(plen, vec![2, 4, 1]);
+        assert_eq!(&tokens[0..2], &[1, 2]);
+    }
+
+    #[test]
+    fn admit_if_gates_and_preserves_fifo() {
+        let mut b = ContinuousBatcher::new(3, None);
+        b.submit(req(1, &[1, 2, 3], 1));
+        b.submit(req(2, &[2], 1));
+        // gate blocks the head (history length 3): nothing admits — no
+        // queue-jumping by the shorter request behind it
+        assert_eq!(b.admit_if(|h| h < 3), 0);
+        assert_eq!(b.admit_if(|_| true), 2);
+        assert_eq!(b.active(), 2);
+        // forced single admission ignores the gate
+        b.submit(req(3, &[3], 1));
+        assert_eq!(b.admit_one(), 1);
+        assert_eq!(b.active(), 3);
+        assert_eq!(b.admit_one(), 0); // no free slot
     }
 
     #[test]

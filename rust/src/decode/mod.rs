@@ -27,19 +27,36 @@
 //! retirement and ragged prompts need no extra mask inputs; the
 //! `ContinuousBatcher` (see `batcher`) drives per-slot lifecycles with the
 //! in-graph `reset` flag, never copying the cache on admission.
+//!
+//! # Paged serving
+//!
+//! The layout above is the *contiguous* one: every slot owns
+//! full-capacity leaves. Artifacts also carry a paged twin
+//! (`prefill_paged` / `decode_step_paged*`): the same logical cache in
+//! fixed-size pages of one shared pool per leaf, addressed through a
+//! `page_index` table this module uploads per step and manages through
+//! `kvcache::PageTable` (see [`KvCacheStore`] / [`PagedKvCache`]). The
+//! capacity-sized pools are lowered overcommitted, so a `DecodeSession`
+//! on the paged family holds a fraction of the contiguous resident
+//! bytes; under pool pressure `generate` parks the hungriest sequence
+//! (pages freed, deterministic replay re-queued via
+//! `ContinuousBatcher::park`) — greedy output is bit-identical with or
+//! without evictions, and always bit-identical to the `--no-paged`
+//! contiguous twin.
 
 pub mod batcher;
 pub mod sample;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::kvcache::{PageLayout, PagePressure, PageTable};
 use crate::runtime::engine::{
     fill_vec_f32, lit_f32, lit_i32, lit_scalar_f32, lit_scalar_i32, to_vec_f32, to_vec_i32, Engine,
 };
 use crate::runtime::manifest::{CacheLeaf, LeafSpec, Manifest, ModelCfg, ProgramSpec, Variant};
 use crate::runtime::state::TrainState;
 
-pub use batcher::{ContinuousBatcher, FinishedSeq, SeqRequest};
+pub use batcher::{ContinuousBatcher, FinishedSeq, SeqRequest, SlotPlan};
 pub use sample::{sample_row, sample_row_u, SamplePolicy, SampleScratch};
 
 /// Empty-cache-slot position: larger than any real position, so the
@@ -137,13 +154,9 @@ impl KvCacheBuffers {
         Self::alloc(&spec.cache, batch)
     }
 
-    fn bytes_of(spec: &LeafSpec) -> u64 {
-        spec.elems() as u64 * 4 // f32 and i32 leaves only
-    }
-
     /// KV payload bytes across the whole batch (kv-kind leaves only).
     pub fn payload_bytes(&self) -> u64 {
-        self.layout.iter().filter(|l| l.kind == "kv").map(|l| Self::bytes_of(&l.spec)).sum()
+        layout_payload_bytes(&self.layout)
     }
 
     /// KV payload bytes per sequence slot — directly comparable to
@@ -154,7 +167,137 @@ impl KvCacheBuffers {
 
     /// All cache bytes (payload + positions/priorities).
     pub fn total_bytes(&self) -> u64 {
-        self.layout.iter().map(|l| Self::bytes_of(&l.spec)).sum()
+        layout_total_bytes(&self.layout)
+    }
+}
+
+/// KV payload bytes of a cache-leaf layout as allocated — the one
+/// accounting shared by `KvCacheBuffers` and both cache stores (all
+/// leaves are 4-byte f32/i32).
+fn layout_payload_bytes(layout: &[CacheLeaf]) -> u64 {
+    layout.iter().filter(|l| l.kind == "kv").map(|l| l.spec.elems() as u64 * 4).sum()
+}
+
+/// All cache bytes (payload + metadata) of a layout as allocated.
+fn layout_total_bytes(layout: &[CacheLeaf]) -> u64 {
+    layout.iter().map(|l| l.spec.elems() as u64 * 4).sum()
+}
+
+// ---------------------------------------------------------------------------
+// cache stores: the contiguous layout and its paged twin behind one trait
+// ---------------------------------------------------------------------------
+
+/// The cache-store abstraction a `DecodeSession` runs against.
+///
+/// The contiguous store ([`ContiguousKvCache`]) is the original layout:
+/// every slot owns full-capacity leaves, resident bytes == logical
+/// bytes. The paged store ([`PagedKvCache`]) keeps the same *logical*
+/// cache in fixed-size pages of shared pools, so its resident bytes are
+/// bounded by the (possibly overcommitted) pool size instead of
+/// `batch × capacity` — and it owns the page table that maps slots onto
+/// the pools. `--no-paged` (or a contiguous `step_name`) selects the
+/// contiguous twin, which is the differential-test reference.
+pub trait KvCacheStore {
+    /// Empty-state literals of every cache leaf (pool leaves when paged).
+    fn alloc_leaves(&self) -> Result<Vec<xla::Literal>>;
+    /// Bytes of KV payload actually allocated on the device.
+    fn resident_payload_bytes(&self) -> u64;
+    /// Logical KV payload bytes one sequence can address at capacity —
+    /// `kvcache::kv_bytes_total(cfg, capacity)` in both layouts.
+    fn logical_payload_bytes_per_seq(&self) -> u64;
+    /// All allocated cache bytes (payload + metadata, all slots/pools).
+    fn total_bytes(&self) -> u64;
+    /// The page table, when this store is paged.
+    fn page_table_mut(&mut self) -> Option<&mut PageTable> {
+        None
+    }
+    fn page_table(&self) -> Option<&PageTable> {
+        None
+    }
+}
+
+/// The fixed per-slot contiguous layout (the `--no-paged` A/B twin).
+pub struct ContiguousKvCache {
+    layout: Vec<CacheLeaf>,
+    batch: usize,
+}
+
+impl ContiguousKvCache {
+    pub fn new(layout: Vec<CacheLeaf>, batch: usize) -> ContiguousKvCache {
+        ContiguousKvCache { layout, batch }
+    }
+}
+
+impl KvCacheStore for ContiguousKvCache {
+    fn alloc_leaves(&self) -> Result<Vec<xla::Literal>> {
+        Ok(KvCacheBuffers::alloc(&self.layout, self.batch)?.leaves)
+    }
+
+    fn resident_payload_bytes(&self) -> u64 {
+        layout_payload_bytes(&self.layout)
+    }
+
+    fn logical_payload_bytes_per_seq(&self) -> u64 {
+        self.resident_payload_bytes() / self.batch.max(1) as u64
+    }
+
+    fn total_bytes(&self) -> u64 {
+        layout_total_bytes(&self.layout)
+    }
+}
+
+/// The paged layout: shared pools + the host page table.
+pub struct PagedKvCache {
+    layout: Vec<CacheLeaf>,
+    table: PageTable,
+}
+
+impl PagedKvCache {
+    pub fn new(layout: Vec<CacheLeaf>, batch: usize, pages: PageLayout) -> PagedKvCache {
+        PagedKvCache { layout, table: PageTable::new(pages, batch) }
+    }
+
+    fn kind_of(&self, path: &str) -> Option<&crate::kvcache::PageKind> {
+        let leaf = path.rsplit('.').next().unwrap_or(path);
+        let prefix = leaf.split('_').next().unwrap_or(leaf);
+        self.table.layout().kinds.iter().find(|k| k.kind == prefix)
+    }
+}
+
+impl KvCacheStore for PagedKvCache {
+    fn alloc_leaves(&self) -> Result<Vec<xla::Literal>> {
+        // pool leaves share the contiguous init rules (zeros / sentinel /
+        // neg), so the allocation path is the same code
+        Ok(KvCacheBuffers::alloc(&self.layout, self.table.slots())?.leaves)
+    }
+
+    fn resident_payload_bytes(&self) -> u64 {
+        layout_payload_bytes(&self.layout)
+    }
+
+    fn logical_payload_bytes_per_seq(&self) -> u64 {
+        // per payload pool leaf [pool_pages, n, ps, d]: one sequence can
+        // address pages_per_slot of those pages => n * S * d floats
+        self.layout
+            .iter()
+            .filter(|l| l.kind == "kv")
+            .map(|l| {
+                let Some(k) = self.kind_of(&l.spec.path) else { return 0 };
+                (l.spec.elems() / k.pool_pages.max(1)) as u64 * k.pages_per_slot as u64 * 4
+            })
+            .sum()
+    }
+
+    fn total_bytes(&self) -> u64 {
+        layout_total_bytes(&self.layout)
+    }
+
+    fn page_table_mut(&mut self) -> Option<&mut PageTable> {
+        Some(&mut self.table)
+    }
+
+    fn page_table(&self) -> Option<&PageTable> {
+        Some(&self.table)
     }
 }
 
@@ -195,9 +338,19 @@ pub struct DecodeSession<'m> {
     pub sample_k: Option<usize>,
     pub batch: usize,
     pub capacity: usize,
-    /// payload / total bytes of the allocated cache (fixed at alloc)
+    /// logical payload bytes one sequence addresses at capacity / total
+    /// allocated cache bytes (fixed at alloc; both layouts)
     pub cache_payload_bytes_per_seq: u64,
     pub cache_total_bytes: u64,
+    /// device-resident payload bytes: equals `batch × per_seq` for the
+    /// contiguous layout, the (overcommittable) pool size when paged
+    pub cache_resident_payload_bytes: u64,
+    /// whether this session steps a paged program (`decode_step_paged*`)
+    pub paged: bool,
+    store: Box<dyn KvCacheStore>,
+    /// paged only: an explicit `prepare_pages` already ran for the next
+    /// dispatch (the batcher-aware path); cleared after every step
+    pages_prepared: bool,
     model_lits: Vec<xla::Literal>,
     model_bufs: Option<Vec<xla::PjRtBuffer>>,
     cache: CacheState,
@@ -229,9 +382,18 @@ impl<'m> DecodeSession<'m> {
                 model.len()
             );
         }
-        let kv = KvCacheBuffers::from_program(spec)?;
         let batch = spec.batch.unwrap_or(variant.batch);
         let capacity = spec.capacity.unwrap_or(variant.config.seq_len);
+        let store: Box<dyn KvCacheStore> = match &spec.pages {
+            Some(pg) => Box::new(PagedKvCache::new(
+                spec.cache.clone(),
+                batch,
+                PageLayout::from_spec(pg),
+            )),
+            None => Box::new(ContiguousKvCache::new(spec.cache.clone(), batch)),
+        };
+        let paged = spec.pages.is_some();
+        let leaves = store.alloc_leaves()?;
         let sname = step_name.replacen("decode_step", "decode_step_sample", 1);
         let (sample_name, sample_k) = match variant.programs.get(&sname) {
             Some(s) if sname != step_name => (Some(sname), s.sample_k),
@@ -245,11 +407,15 @@ impl<'m> DecodeSession<'m> {
             sample_k,
             batch,
             capacity,
-            cache_payload_bytes_per_seq: kv.payload_bytes_per_seq(),
-            cache_total_bytes: kv.total_bytes(),
+            cache_payload_bytes_per_seq: store.logical_payload_bytes_per_seq(),
+            cache_total_bytes: store.total_bytes(),
+            cache_resident_payload_bytes: store.resident_payload_bytes(),
+            paged,
+            store,
+            pages_prepared: false,
             model_lits: model,
             model_bufs: None,
-            cache: CacheState::Host(kv.leaves),
+            cache: CacheState::Host(leaves),
             device_resident,
             up_bytes: 0,
             down_bytes: 0,
@@ -279,12 +445,112 @@ impl<'m> DecodeSession<'m> {
         Self::new(manifest, variant, step_name, model, device_resident)
     }
 
-    /// Reset every slot's cache to empty (drops any device copy).
+    /// Reset every slot's cache to empty (drops any device copy; paged
+    /// sessions also return every page to its pool).
     pub fn reset_cache(&mut self) -> Result<()> {
-        let spec = self.variant.program(&self.step_name)?;
-        let kv = KvCacheBuffers::from_program(spec)?;
-        self.cache = CacheState::Host(kv.leaves);
+        self.cache = CacheState::Host(self.store.alloc_leaves()?);
+        if let Some(table) = self.store.page_table_mut() {
+            for slot in 0..table.slots() {
+                table.release_slot(slot);
+            }
+        }
+        self.pages_prepared = false;
         Ok(())
+    }
+
+    // -- paged-session page management ------------------------------------
+
+    /// Back the next dispatch's pages from a batcher plan: inactive (and
+    /// resetting) slots release their pages first, then every active
+    /// slot maps up to its position. On pressure the caller parks a
+    /// victim (see `generate`) and retries — partial mappings persist,
+    /// so the retry is incremental. Marks the dispatch prepared; `step`
+    /// then skips its own all-lanes-active fallback.
+    pub fn prepare_pages(&mut self, plan: &[SlotPlan]) -> std::result::Result<(), PagePressure> {
+        let table = self
+            .store
+            .page_table_mut()
+            .expect("prepare_pages on a contiguous session");
+        assert_eq!(plan.len(), table.slots(), "plan arity != slots");
+        for (i, sp) in plan.iter().enumerate() {
+            if !sp.active || sp.reset {
+                table.release_slot(i);
+            }
+        }
+        for (i, sp) in plan.iter().enumerate() {
+            if sp.active {
+                table.ensure(i, sp.pos)?;
+            }
+        }
+        self.pages_prepared = true;
+        Ok(())
+    }
+
+    /// Pages currently mapped for one slot (paged sessions; 0 otherwise).
+    pub fn mapped_pages(&self, slot: usize) -> usize {
+        self.store.page_table().map(|t| t.mapped_pages(slot)).unwrap_or(0)
+    }
+
+    /// Return a parked/retired slot's pages to the pools.
+    pub fn release_slot_pages(&mut self, slot: usize) -> usize {
+        self.store.page_table_mut().map(|t| t.release_slot(slot)).unwrap_or(0)
+    }
+
+    /// Whether a fresh admission can be backed right now (paged: pool
+    /// headroom; contiguous: always).
+    pub fn admission_headroom(&self) -> bool {
+        self.store.page_table().map(|t| t.admission_headroom()).unwrap_or(true)
+    }
+
+    /// Demand-debiting admission gate for one wave (paged sessions
+    /// only): each accepted admission subtracts the pages its history
+    /// will need, so one free page cannot approve a whole wave.
+    pub fn admission_budget(&self) -> Option<crate::kvcache::AdmissionBudget> {
+        self.store.page_table().map(|t| t.admission_budget())
+    }
+
+    /// (pages in use, pool pages total) — the paged BENCH arm's live
+    /// occupancy numbers; (0, 0) for contiguous sessions.
+    pub fn page_occupancy(&self) -> (usize, usize) {
+        self.store
+            .page_table()
+            .map(|t| (t.pages_in_use(), t.pool_pages_total()))
+            .unwrap_or((0, 0))
+    }
+
+    /// The page_index literal for the next dispatch — O(slots ×
+    /// pages_per_slot) i32, the only per-step host→device traffic the
+    /// paged layout adds on top of token/pos/reset.
+    fn page_index_literal(&self) -> Result<xla::Literal> {
+        let table = self
+            .store
+            .page_table()
+            .ok_or_else(|| anyhow!("[{}] not a paged session", self.variant.name))?;
+        lit_i32(table.table(), &[table.slots(), table.layout().pages_per_slot])
+    }
+
+    /// The implicit prepare for batcher-less callers (tests, the perf
+    /// harness): every lane treated as active at its given position,
+    /// resetting lanes remapped from scratch. Errors on pool pressure —
+    /// driving an overcommitted pool needs the batcher-aware
+    /// `prepare_pages` + park loop.
+    fn auto_prepare(&mut self, pos: &[i32], reset: &[i32]) -> Result<()> {
+        if self.pages_prepared {
+            return Ok(());
+        }
+        let plan: Vec<SlotPlan> = pos
+            .iter()
+            .zip(reset)
+            .map(|(&p, &r)| SlotPlan { active: true, pos: p, reset: r != 0 })
+            .collect();
+        self.prepare_pages(&plan).map_err(|p| {
+            anyhow!(
+                "[{}] {p}: the pool is overcommitted — drive this session through \
+                 a ContinuousBatcher (which parks victims) or rebuild artifacts \
+                 with a larger pool_frac",
+                self.variant.name
+            )
+        })
     }
 
     fn demote(&mut self, why: &str) {
@@ -301,6 +567,9 @@ impl<'m> DecodeSession<'m> {
     /// Whole-prompt prefill into the cache. `tokens` is row-major
     /// [batch, prompt_len]; `plen` the valid prefix per slot (>= 1).
     /// Returns (logprobs [B, P-1], last_logits [B, vocab]) as literals.
+    /// Paged sessions run `prefill_paged` and map every page the prompt
+    /// extraction writes (lanes without a real sequence should be
+    /// released afterwards — `generate` does).
     pub fn prefill(
         &mut self,
         engine: &mut Engine,
@@ -308,7 +577,8 @@ impl<'m> DecodeSession<'m> {
         plen: &[i32],
     ) -> Result<(xla::Literal, xla::Literal)> {
         let variant = self.variant;
-        let spec = variant.program("prefill")?;
+        let pname = if self.paged { "prefill_paged" } else { "prefill" };
+        let spec = variant.program(pname)?;
         let p = spec.prompt_len.ok_or_else(|| anyhow!("prefill spec missing prompt_len"))?;
         if tokens.len() != self.batch * p || plen.len() != self.batch {
             bail!("prefill expects {}x{} tokens (+{} lens)", self.batch, p, self.batch);
@@ -316,14 +586,33 @@ impl<'m> DecodeSession<'m> {
         let expected = spec.extra_outputs.len() + spec.cache.len();
         let tok_lit = lit_i32(tokens, &[self.batch, p])?;
         let plen_lit = lit_i32(plen, &[self.batch])?;
-        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(self.model_lits.len() + 2);
+        let table_lit = if self.paged {
+            // prefill writes slots [0, plen): back the covering pages.
+            // An explicit `prepare_pages` (the batcher-aware path, which
+            // can park under pressure — `ContinuousBatcher::prefill_plan`)
+            // takes precedence; the fallback maps every lane by its plen
+            // (reset semantics: a prefilled lane starts a new sequence).
+            if !self.pages_prepared {
+                let reset = vec![1i32; self.batch];
+                let pos: Vec<i32> = plen.iter().map(|&l| l.max(1) - 1).collect();
+                self.auto_prepare(&pos, &reset)?;
+            }
+            self.pages_prepared = false;
+            Some(self.page_index_literal()?)
+        } else {
+            None
+        };
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(self.model_lits.len() + 3);
         inputs.extend(self.model_lits.iter());
         inputs.push(&tok_lit);
         inputs.push(&plen_lit);
+        if let Some(t) = &table_lit {
+            inputs.push(t);
+        }
         self.up_bytes += inputs.iter().map(|l| l.size_bytes() as u64).sum::<u64>();
-        let exe = engine.load_program(self.manifest, variant, "prefill")?;
+        let exe = engine.load_program(self.manifest, variant, pname)?;
         let bufs = Engine::run_buffers(exe, &inputs)?;
-        let mut outs = Engine::first_device_outputs(bufs, "prefill")?;
+        let mut outs = Engine::first_device_outputs(bufs, pname)?;
         if self.device_resident && outs.len() == expected {
             let cache = outs.split_off(spec.extra_outputs.len());
             let logprobs = outs[0].to_literal_sync().context("prefill logprobs")?;
@@ -366,11 +655,15 @@ impl<'m> DecodeSession<'m> {
         if tokens.len() != self.batch || pos.len() != self.batch || reset.len() != self.batch {
             bail!("decode step expects {} slots", self.batch);
         }
-        let extras = vec![
+        let mut extras = vec![
             lit_i32(tokens, &[self.batch])?,
             lit_i32(pos, &[self.batch])?,
             lit_i32(reset, &[self.batch])?,
         ];
+        if self.paged {
+            self.auto_prepare(pos, reset)?;
+            extras.push(self.page_index_literal()?);
+        }
         let name = self.step_name.clone();
         let mut outs = self.step_program(engine, &name, extras, &[true])?;
         Ok(outs.swap_remove(0).expect("fetched logits"))
@@ -409,7 +702,7 @@ impl<'m> DecodeSession<'m> {
                     self.step_name
                 )
             })?;
-        let extras = vec![
+        let mut extras = vec![
             lit_i32(tokens, &[b])?,
             lit_i32(pos, &[b])?,
             lit_i32(reset, &[b])?,
@@ -417,6 +710,10 @@ impl<'m> DecodeSession<'m> {
             lit_scalar_f32(temp),
             lit_scalar_i32(k as i32),
         ];
+        if self.paged {
+            self.auto_prepare(pos, reset)?;
+            extras.push(self.page_index_literal()?);
+        }
         let fetch = [true, fetch_topk, fetch_topk];
         let mut outs = self.step_program(engine, &name, extras, &fetch)?;
         let ids = to_vec_i32(&outs[0].take().expect("fetched ids"))?;
@@ -448,6 +745,9 @@ impl<'m> DecodeSession<'m> {
         let n_extra_out = spec.extra_outputs.len();
         debug_assert_eq!(fetch.len(), n_extra_out);
         let expected = n_extra_out + spec.cache.len();
+        // each dispatch consumes its page preparation: the next one must
+        // re-prepare (positions advance, slots churn)
+        self.pages_prepared = false;
         if matches!(self.cache, CacheState::Consumed) {
             bail!(
                 "[{}] cache was consumed by a failed donated dispatch — reset_cache() or \
@@ -587,6 +887,12 @@ pub struct GenerateOptions {
     /// static top-k width. Host and device sampling draw the same
     /// per-slot uniforms, so the generated streams are identical.
     pub device_sample: bool,
+    /// serve through the paged cache programs (`decode_step_paged*`)
+    /// when the artifact carries them: resident cache bytes bounded by
+    /// the page pools, admission overcommits and parks under pressure.
+    /// `--no-paged` selects the contiguous twin — same math, fixed
+    /// full-capacity slots (the differential-test reference).
+    pub use_paged: bool,
 }
 
 impl Default for GenerateOptions {
@@ -599,8 +905,22 @@ impl Default for GenerateOptions {
             use_prefill: true,
             device_resident: true,
             device_sample: true,
+            use_paged: true,
         }
     }
+}
+
+/// Serving-loop statistics `generate_with_stats` reports next to the
+/// finished sequences.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct GenStats {
+    /// decode_step dispatches (excluding the prefill wave)
+    pub dispatches: usize,
+    /// sequences parked (pages freed, replay re-queued) under pool
+    /// pressure — nonzero only on overcommitted paged sessions
+    pub parked: usize,
+    /// whether the paged program family actually served the run
+    pub paged: bool,
 }
 
 /// Serve `requests` to completion through a continuous batcher; returns
@@ -613,8 +933,27 @@ pub fn generate(
     requests: Vec<SeqRequest>,
     opts: &GenerateOptions,
 ) -> Result<Vec<FinishedSeq>> {
+    Ok(generate_with_stats(engine, manifest, variant, state, requests, opts)?.0)
+}
+
+/// `generate` plus the serving-loop stats (dispatch count, sequences
+/// parked under pool pressure, which layout ran).
+pub fn generate_with_stats(
+    engine: &mut Engine,
+    manifest: &Manifest,
+    variant: &Variant,
+    state: TrainState,
+    requests: Vec<SeqRequest>,
+    opts: &GenerateOptions,
+) -> Result<(Vec<FinishedSeq>, GenStats)> {
+    let step_name = if opts.use_paged && variant.programs.contains_key("decode_step_paged") {
+        "decode_step_paged"
+    } else {
+        "decode_step"
+    };
     let mut session =
-        DecodeSession::from_state(manifest, variant, "decode_step", state, opts.device_resident)?;
+        DecodeSession::from_state(manifest, variant, step_name, state, opts.device_resident)?;
+    let mut stats = GenStats { paged: session.paged, ..GenStats::default() };
     let mut rng = crate::util::rng::Pcg::seeded(opts.seed ^ 0xdec0de);
     let b = session.batch;
     let vocab = variant.config.vocab;
@@ -673,10 +1012,77 @@ pub fn generate(
     let mut scratch = SampleScratch::default();
     let mut logits_buf: Vec<f32> = Vec::new();
 
+    // paged admission gate: a demand-debiting budget over the pools'
+    // free pages — each admission subtracts what its history will need,
+    // so one free page cannot approve a whole wave (over-admitting only
+    // causes park/replay thrash, never wrong output). If nothing is
+    // active and the gate still blocks, force one admission — a lone
+    // slot can always reach capacity (pool_pages >= pages_per_slot).
+    let admit = |batcher: &mut ContinuousBatcher, session: &DecodeSession| -> usize {
+        let n = match session.admission_budget() {
+            Some(mut budget) => batcher.admit_if(|history| budget.admit(history)),
+            None => batcher.admit(),
+        };
+        if n == 0 && batcher.active() == 0 {
+            batcher.admit_one()
+        } else {
+            n
+        }
+    };
+
+    // pool-pressure fallback shared by the prefill wave and the decode
+    // loop: park the active slot holding the most pages (freeing the
+    // most) so the caller can retry — each park shrinks the active set,
+    // so retries terminate, and a lone slot always maps (pool >= one
+    // full-capacity sequence, validated at manifest load)
+    let park_for = |batcher: &mut ContinuousBatcher,
+                    session: &mut DecodeSession,
+                    plan: &[SlotPlan],
+                    pressure: &PagePressure,
+                    parked: &mut usize|
+     -> Result<()> {
+        let victim = plan
+            .iter()
+            .enumerate()
+            .filter(|(_, sp)| sp.active)
+            .max_by_key(|(i, _)| session.mapped_pages(*i))
+            .map(|(i, _)| i)
+            .ok_or_else(|| anyhow!("[{}] {pressure} with no active slot", session.variant.name))?;
+        let id = batcher
+            .park(victim)
+            .ok_or_else(|| anyhow!("[{}] park victim {victim} was empty", session.variant.name))?;
+        session.release_slot_pages(victim);
+        *parked += 1;
+        log::debug!(
+            "[{}] {pressure}: parked seq {id} (slot {victim}) for replay",
+            session.variant.name
+        );
+        Ok(())
+    };
+
     // fast path: batch-prefill the first wave
-    if opts.use_prefill && variant.programs.contains_key("prefill") {
-        let p = variant.program("prefill")?.prompt_len.unwrap_or(variant.config.seq_len);
-        if batcher.admit() > 0 {
+    let prefill_prog = if session.paged { "prefill_paged" } else { "prefill" };
+    if opts.use_prefill && variant.programs.contains_key(prefill_prog) {
+        let p = variant.program(prefill_prog)?.prompt_len.unwrap_or(variant.config.seq_len);
+        if admit(&mut batcher, &session) > 0 {
+            if session.paged {
+                // back every page the prefill extraction will write,
+                // parking victims (back to pending, streamed later)
+                // instead of aborting on an overcommitted pool
+                loop {
+                    let plan = batcher.prefill_plan(p);
+                    match session.prepare_pages(&plan) {
+                        Ok(()) => break,
+                        Err(pressure) => park_for(
+                            &mut batcher,
+                            &mut session,
+                            &plan,
+                            &pressure,
+                            &mut stats.parked,
+                        )?,
+                    }
+                }
+            }
             let (tokens, plen) = batcher.prefill_wave(p);
             let (_, last) = session.prefill(engine, &tokens, &plen)?;
             fill_vec_f32(&last, &mut logits_buf)?;
@@ -697,9 +1103,25 @@ pub fn generate(
 
     let (mut toks, mut pos, mut rst) = (Vec::new(), Vec::new(), Vec::new());
     loop {
-        batcher.admit();
+        admit(&mut batcher, &session);
         if batcher.is_done() {
             break;
+        }
+        if session.paged {
+            // back the dispatch's pages; on pressure park-and-retry
+            loop {
+                let plan = batcher.plan();
+                match session.prepare_pages(&plan) {
+                    Ok(()) => break,
+                    Err(pressure) => park_for(
+                        &mut batcher,
+                        &mut session,
+                        &plan,
+                        &pressure,
+                        &mut stats.parked,
+                    )?,
+                }
+            }
         }
         batcher.next_inputs(&mut toks, &mut pos, &mut rst);
         uniforms.iter_mut().for_each(|u| *u = rng.f32());
@@ -722,9 +1144,10 @@ pub fn generate(
                 })
                 .collect()
         };
+        stats.dispatches += 1;
         finished.extend(batcher.advance(&sampled));
     }
-    Ok(finished)
+    Ok((finished, stats))
 }
 
 #[cfg(test)]
@@ -823,5 +1246,136 @@ mod tests {
     #[test]
     fn sentinel_matches_python_side() {
         assert_eq!(POS_SENTINEL, 1 << 30);
+    }
+
+    /// The Rust mirror of `compile.decode.page_spec` + `paged_cache_*`
+    /// for one config: pool leaves + layout, pool_frac on lazy kinds.
+    fn paged_fixture(
+        c: &ModelCfg,
+        batch: usize,
+        capacity: usize,
+        page_size: usize,
+        pool_frac: f64,
+    ) -> (Vec<CacheLeaf>, crate::kvcache::PageLayout) {
+        use crate::kvcache::{PageKind, PageLayout};
+        let mut kinds = Vec::new();
+        let mut off = 0;
+        let mut push = |kind: &str, slots: usize, lazy: bool| {
+            let ppk = slots / page_size;
+            let pool = if lazy {
+                ((batch as f64 * ppk as f64 * pool_frac).ceil() as usize).max(ppk)
+            } else {
+                batch * ppk
+            };
+            kinds.push(PageKind {
+                kind: kind.into(),
+                slots,
+                pages_per_slot: ppk,
+                row_offset: off,
+                pool_pages: pool,
+                lazy,
+            });
+            off += ppk;
+        };
+        if c.n_dense > 0 {
+            if c.window > 0 {
+                push("dense", c.window.min(capacity), false);
+            } else {
+                push("dense", capacity, true);
+            }
+        }
+        match c.sparse_kind.as_str() {
+            "mosa" | "fixed" if c.n_sparse > 0 => push(&c.sparse_kind.clone(), c.k_sel, false),
+            "routing" if c.n_sparse > 0 => push("routing", capacity, true),
+            _ => {}
+        }
+        let layout = PageLayout { page_size, pages_per_slot: off, kinds };
+        // pool leaves: regroup each contiguous leaf [B, n, S(, d)] as
+        // [pool_pages, n, page_size(, d)]
+        let pools = cache_layout(c, batch, capacity)
+            .into_iter()
+            .map(|mut l| {
+                let leafname = l.spec.path.rsplit('.').next().unwrap().to_string();
+                let prefix = leafname.split('_').next().unwrap();
+                let k = layout.kinds.iter().find(|k| k.kind == prefix).unwrap();
+                l.spec.shape[0] = k.pool_pages;
+                l.spec.shape[2] = page_size;
+                l
+            })
+            .collect();
+        (pools, layout)
+    }
+
+    #[test]
+    fn paged_store_logical_accounting_matches_contiguous() {
+        // both stores must agree on the LOGICAL per-sequence bytes
+        // (= kvcache::kv_bytes_total), while the paged RESIDENT bytes
+        // shrink by pool_frac on the lazy kinds and never on the bounded
+        let mut rng = crate::util::rng::Pcg::seeded(41);
+        for _ in 0..100 {
+            let kind = ["none", "mosa", "fixed", "routing"][rng.usize_below(4)];
+            let c = cfg(
+                1 + rng.usize_below(4),
+                if rng.below(2) == 0 { 0 } else { 16 << rng.below(2) },
+                if kind == "none" { 0 } else { 1 + rng.usize_below(8) },
+                kind,
+                16 << rng.below(2),
+                1 + rng.usize_below(3),
+            );
+            let capacity = 256 << rng.below(2);
+            let batch = 2 + rng.usize_below(6);
+            let page_size = 16;
+            let frac = [0.25, 0.5, 1.0][rng.usize_below(3)];
+            let (pools, layout) = paged_fixture(&c, batch, capacity, page_size, frac);
+            let paged = PagedKvCache::new(pools, batch, layout.clone());
+            let contiguous = ContiguousKvCache::new(cache_layout(&c, batch, capacity), batch);
+            assert_eq!(
+                paged.logical_payload_bytes_per_seq(),
+                contiguous.logical_payload_bytes_per_seq(),
+                "cfg {c:?} capacity {capacity}"
+            );
+            assert_eq!(
+                contiguous.logical_payload_bytes_per_seq(),
+                crate::kvcache::kv_bytes_total(&c, capacity)
+            );
+            assert!(paged.resident_payload_bytes() <= contiguous.resident_payload_bytes());
+            if (frac - 1.0).abs() < 1e-9 {
+                assert_eq!(
+                    paged.resident_payload_bytes(),
+                    contiguous.resident_payload_bytes()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn paged_store_quarter_pool_hits_the_acceptance_ratio() {
+        // the acceptance config shape: capacity 1024, pool_frac 0.25 on
+        // the lazy kinds -> >= 2x lower resident bytes than contiguous
+        for (nd, ns, kind, k) in [(4usize, 0usize, "none", 0usize), (2, 20, "mosa", 16)] {
+            let c = cfg(nd, 0, ns, kind, k, 2);
+            let (pools, layout) = paged_fixture(&c, 8, 1024, 16, 0.25);
+            let paged = PagedKvCache::new(pools, 8, layout);
+            let contiguous = ContiguousKvCache::new(cache_layout(&c, 8, 1024), 8);
+            let ratio =
+                paged.resident_payload_bytes() as f64 / contiguous.resident_payload_bytes() as f64;
+            assert!(ratio <= 0.5, "{kind}: resident ratio {ratio}");
+        }
+    }
+
+    #[test]
+    fn paged_store_allocates_pool_shaped_leaves() {
+        let c = cfg(1, 0, 2, "mosa", 16, 1);
+        let (pools, layout) = paged_fixture(&c, 4, 256, 16, 0.5);
+        let store = PagedKvCache::new(pools.clone(), 4, layout);
+        let leaves = store.alloc_leaves().unwrap();
+        assert_eq!(leaves.len(), pools.len());
+        for (lit, leaf) in leaves.iter().zip(&pools) {
+            assert_eq!(lit.element_count(), leaf.spec.elems(), "{}", leaf.spec.path);
+        }
+        // page table starts empty: all sentinel, full pool free
+        let t = store.page_table().unwrap();
+        assert!(t.table().iter().all(|&p| p == crate::kvcache::PAGE_SENTINEL));
+        assert_eq!(t.pages_free(), t.pool_pages_total());
     }
 }

@@ -13,6 +13,18 @@
 //! whose payload bytes must equal `kv_bytes_total` *exactly*
 //! (property-tested there, re-checked at runtime by `mosa perf`'s
 //! BENCH_decode harness).
+//!
+//! The `paged` submodule holds the host bookkeeping of the paged cache
+//! layout (fixed-size pages in shared pools + a per-slot page table):
+//! `kv_bytes_total` stays the *logical* per-sequence accounting, while
+//! the paged pools bound the *resident* bytes independently of how many
+//! slots are admitted — the overcommit the paged serving path exploits.
+
+pub mod paged;
+
+pub use paged::{
+    AdmissionBudget, PageAllocator, PageKind, PageLayout, PagePressure, PageTable, PAGE_SENTINEL,
+};
 
 use crate::runtime::manifest::ModelCfg;
 

@@ -1,0 +1,657 @@
+//! Paged KV-cache bookkeeping: the host half of the paged serving path.
+//!
+//! The paged decode programs (`decode_step_paged*`, `prefill_paged`;
+//! lowered by `python/compile/decode.py`) store each head kind's cache in
+//! fixed-size pages of one shared device pool per leaf, addressed through
+//! a `page_index [slots, pages_per_slot] i32` input. This module owns the
+//! page accounting the device never sees:
+//!
+//! - [`PageAllocator`]: one free list + refcounts per kind pool. Pages
+//!   are handed out on demand and returned when a slot retires or is
+//!   parked; refcounts exist so future sharing (prefix caching, beam
+//!   forks) can pin a page under several slots.
+//! - [`PageLayout`] / [`PageKind`]: the geometry parsed from the
+//!   manifest's per-program `pages` section — page size, per-kind row
+//!   segments of the table, pool sizes, and whether the kind pages
+//!   *lazily* with position (dense-append, routing) or is fully mapped
+//!   at admission (MoSA/fixed k-slots, local rings — the tiny caches
+//!   that are never overcommitted).
+//! - [`PageTable`]: the per-slot logical→physical map uploaded before
+//!   every dispatch. Unbacked entries carry [`PAGE_SENTINEL`], which is
+//!   out of range for every pool: the lowered program masks gathers
+//!   through it and *drops* scatters, so a parked slot can never read or
+//!   clobber another slot's pages.
+//!
+//! Overcommit is the point of the layout: lazy pools are lowered smaller
+//! than `slots × pages_per_slot` (`pool_frac` in the manifest), so
+//! admission can oversubscribe device memory and the batcher parks —
+//! frees the pages of — a victim sequence when [`PageTable::ensure`]
+//! reports pressure, replaying it later. The invariant `pool_pages >=
+//! pages_per_slot` (validated at manifest load) guarantees a lone active
+//! slot can always reach full capacity, so parking makes progress.
+
+use crate::runtime::manifest::{PageKindSpec, PagesSpec};
+
+/// Unbacked page-table entry: far above any physical page id, so the
+/// lowered gather masks it and the scatter drops it. Must match
+/// `python/compile/decode.py::PAGE_SENTINEL`.
+pub const PAGE_SENTINEL: i32 = 1 << 30;
+
+// ---------------------------------------------------------------------------
+// allocator
+// ---------------------------------------------------------------------------
+
+/// Fixed-pool page allocator: free-list stack + per-page refcounts.
+///
+/// `alloc` pops the free list at refcount 1; `retain`/`release` move the
+/// refcount, returning the page to the free list when it reaches zero.
+/// The conservation invariant `in_use + free == n_pages` holds after
+/// every operation (property-tested below).
+#[derive(Debug, Clone)]
+pub struct PageAllocator {
+    free: Vec<u32>,
+    refs: Vec<u16>,
+}
+
+impl PageAllocator {
+    pub fn new(n_pages: usize) -> PageAllocator {
+        PageAllocator {
+            // pop order: low page ids first (purely cosmetic, but it makes
+            // fresh single-slot tables equal the python identity table)
+            free: (0..n_pages as u32).rev().collect(),
+            refs: vec![0; n_pages],
+        }
+    }
+
+    pub fn n_pages(&self) -> usize {
+        self.refs.len()
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn in_use(&self) -> usize {
+        self.refs.iter().filter(|&&r| r > 0).count()
+    }
+
+    /// Hand out a free page at refcount 1, or `None` under pressure.
+    pub fn alloc(&mut self) -> Option<u32> {
+        let p = self.free.pop()?;
+        debug_assert_eq!(self.refs[p as usize], 0, "free list held a live page");
+        self.refs[p as usize] = 1;
+        Some(p)
+    }
+
+    /// Pin an already-live page under one more owner (prefix sharing).
+    pub fn retain(&mut self, page: u32) {
+        let r = &mut self.refs[page as usize];
+        assert!(*r > 0, "retain of a dead page {page}");
+        *r += 1;
+    }
+
+    /// Drop one owner; returns true when the page went back to the pool.
+    pub fn release(&mut self, page: u32) -> bool {
+        let r = &mut self.refs[page as usize];
+        assert!(*r > 0, "release of a dead page {page} (double free)");
+        *r -= 1;
+        if *r == 0 {
+            self.free.push(page);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// layout
+// ---------------------------------------------------------------------------
+
+/// One head kind's slice of the paging geometry (mirror of the manifest
+/// `pages.kinds[]` entry, converted to plain host types).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PageKind {
+    pub kind: String,
+    /// logical per-slot cache slots of this kind (S)
+    pub slots: usize,
+    pub pages_per_slot: usize,
+    /// start of this kind's segment in every page_index row
+    pub row_offset: usize,
+    pub pool_pages: usize,
+    /// true: pages map on demand as the position crosses page boundaries
+    /// (slot index == position); false: fully mapped at admission
+    pub lazy: bool,
+}
+
+/// The paging geometry of one decode-program family.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PageLayout {
+    pub page_size: usize,
+    /// total page_index row width (sum of the kind segments)
+    pub pages_per_slot: usize,
+    pub kinds: Vec<PageKind>,
+}
+
+impl PageLayout {
+    pub fn from_spec(spec: &PagesSpec) -> PageLayout {
+        PageLayout {
+            page_size: spec.page_size,
+            pages_per_slot: spec.pages_per_slot,
+            kinds: spec
+                .kinds
+                .iter()
+                .map(|k: &PageKindSpec| PageKind {
+                    kind: k.kind.clone(),
+                    slots: k.slots,
+                    pages_per_slot: k.pages_per_slot,
+                    row_offset: k.row_offset,
+                    pool_pages: k.pool_pages,
+                    lazy: k.lazy,
+                })
+                .collect(),
+        }
+    }
+
+    /// Pages of `kind` a slot needs to be backed for, at position `pos`.
+    pub fn pages_needed(&self, kind: &PageKind, pos: i32) -> usize {
+        if kind.lazy {
+            let covered = pos.max(0) as usize / self.page_size + 1;
+            covered.min(kind.pages_per_slot)
+        } else {
+            kind.pages_per_slot
+        }
+    }
+
+    /// Worst-case pages one slot can hold across every kind.
+    pub fn pages_per_slot_max(&self) -> usize {
+        self.kinds.iter().map(|k| k.pages_per_slot).sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// table
+// ---------------------------------------------------------------------------
+
+/// Pool pressure: `ensure` could not back a page of `kind` for `slot`.
+/// The caller (the serving loop) parks a victim slot and retries —
+/// already-mapped pages stay mapped, so the retry is incremental.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PagePressure {
+    pub slot: usize,
+    pub kind: String,
+}
+
+impl std::fmt::Display for PagePressure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "page pool of kind '{}' exhausted mapping slot {}", self.kind, self.slot)
+    }
+}
+
+impl std::error::Error for PagePressure {}
+
+/// Per-slot logical→physical page map + the allocators behind it.
+///
+/// The flat `table()` slice is uploaded as the `page_index` input before
+/// every dispatch — O(slots × pages_per_slot) i32, the only per-step
+/// host→device traffic the paged layout adds.
+#[derive(Debug)]
+pub struct PageTable {
+    layout: PageLayout,
+    slots: usize,
+    table: Vec<i32>,
+    allocs: Vec<PageAllocator>,
+}
+
+impl PageTable {
+    pub fn new(layout: PageLayout, slots: usize) -> PageTable {
+        let allocs = layout.kinds.iter().map(|k| PageAllocator::new(k.pool_pages)).collect();
+        PageTable {
+            slots,
+            table: vec![PAGE_SENTINEL; slots * layout.pages_per_slot],
+            layout,
+            allocs,
+        }
+    }
+
+    pub fn layout(&self) -> &PageLayout {
+        &self.layout
+    }
+
+    pub fn slots(&self) -> usize {
+        self.slots
+    }
+
+    /// The flat [slots, pages_per_slot] i32 map, upload-ready.
+    pub fn table(&self) -> &[i32] {
+        &self.table
+    }
+
+    fn row(&self, slot: usize) -> &[i32] {
+        let w = self.layout.pages_per_slot;
+        &self.table[slot * w..(slot + 1) * w]
+    }
+
+    fn seg_range(&self, slot: usize, ki: usize) -> std::ops::Range<usize> {
+        let w = self.layout.pages_per_slot;
+        let k = &self.layout.kinds[ki];
+        slot * w + k.row_offset..slot * w + k.row_offset + k.pages_per_slot
+    }
+
+    /// Pages currently mapped for `slot` (all kinds).
+    pub fn mapped_pages(&self, slot: usize) -> usize {
+        self.row(slot).iter().filter(|&&p| p != PAGE_SENTINEL).count()
+    }
+
+    /// Total pages in use / free across every kind pool.
+    pub fn pages_in_use(&self) -> usize {
+        self.allocs.iter().map(|a| a.in_use()).sum()
+    }
+
+    pub fn pages_free(&self) -> usize {
+        self.allocs.iter().map(|a| a.free_pages()).sum()
+    }
+
+    pub fn pool_pages_total(&self) -> usize {
+        self.allocs.iter().map(|a| a.n_pages()).sum()
+    }
+
+    /// Whether a fresh admission can be backed right now: every bounded
+    /// kind fully, plus the first page of every lazy kind. Optimistic by
+    /// design — later growth is what parking handles. For gating a whole
+    /// wave of admissions use [`PageTable::admission_budget`], which
+    /// debits demand per admission instead of re-reading this static
+    /// snapshot.
+    pub fn admission_headroom(&self) -> bool {
+        self.layout.kinds.iter().zip(&self.allocs).all(|(k, a)| {
+            let need = if k.lazy { 1 } else { k.pages_per_slot };
+            a.free_pages() >= need
+        })
+    }
+
+    /// Snapshot the pools' free pages for gating one admission wave.
+    pub fn admission_budget(&self) -> AdmissionBudget {
+        AdmissionBudget {
+            page_size: self.layout.page_size,
+            kinds: self
+                .layout
+                .kinds
+                .iter()
+                .zip(&self.allocs)
+                .map(|(k, a)| BudgetKind {
+                    free: a.free_pages(),
+                    slots: k.slots,
+                    pages_per_slot: k.pages_per_slot,
+                    lazy: k.lazy,
+                })
+                .collect(),
+        }
+    }
+
+    /// Back `slot` for a dispatch at position `pos`: bounded kinds map
+    /// fully, lazy kinds up to the page covering `pos`. Pages already
+    /// mapped are kept (idempotent; the lazy set only grows). On
+    /// pressure, everything mapped so far stays mapped and the caller
+    /// parks a victim before retrying.
+    pub fn ensure(&mut self, slot: usize, pos: i32) -> Result<(), PagePressure> {
+        assert!(slot < self.slots, "slot {slot} out of range");
+        for ki in 0..self.layout.kinds.len() {
+            let need = self.layout.pages_needed(&self.layout.kinds[ki], pos);
+            let range = self.seg_range(slot, ki);
+            for j in 0..need {
+                let idx = range.start + j;
+                if self.table[idx] != PAGE_SENTINEL {
+                    continue;
+                }
+                match self.allocs[ki].alloc() {
+                    Some(p) => self.table[idx] = p as i32,
+                    None => {
+                        return Err(PagePressure {
+                            slot,
+                            kind: self.layout.kinds[ki].kind.clone(),
+                        })
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Return every page `slot` holds to its pool (retirement or park);
+    /// the row goes back to all-sentinel. Returns how many pages freed.
+    pub fn release_slot(&mut self, slot: usize) -> usize {
+        let mut freed = 0;
+        for ki in 0..self.layout.kinds.len() {
+            let range = self.seg_range(slot, ki);
+            for idx in range {
+                let p = self.table[idx];
+                if p != PAGE_SENTINEL {
+                    self.allocs[ki].release(p as u32);
+                    self.table[idx] = PAGE_SENTINEL;
+                    freed += 1;
+                }
+            }
+        }
+        freed
+    }
+
+    /// Conservation check (debug/test): per kind, live + free == pool,
+    /// and the table maps no physical page twice.
+    pub fn check_conservation(&self) -> bool {
+        for (ki, (k, a)) in self.layout.kinds.iter().zip(&self.allocs).enumerate() {
+            if a.in_use() + a.free_pages() != a.n_pages() {
+                return false;
+            }
+            let mut seen = vec![false; k.pool_pages];
+            let mut mapped = 0;
+            for slot in 0..self.slots {
+                for &p in &self.table[self.seg_range(slot, ki)] {
+                    if p == PAGE_SENTINEL {
+                        continue;
+                    }
+                    let p = p as usize;
+                    if p >= k.pool_pages || seen[p] {
+                        return false; // out of range or double-mapped
+                    }
+                    seen[p] = true;
+                    mapped += 1;
+                }
+            }
+            // every mapped page is live (refcount 1 from this table)
+            if mapped != a.in_use() {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+#[derive(Debug, Clone)]
+struct BudgetKind {
+    free: usize,
+    slots: usize,
+    pages_per_slot: usize,
+    lazy: bool,
+}
+
+/// A debited snapshot of the pools' free pages, gating one wave of
+/// admissions: each accepted `admit(history_len)` subtracts the pages
+/// that sequence will eventually need to teacher-force `history_len`
+/// tokens (bounded kinds fully, lazy kinds by final position). Without
+/// the debit, a single free page would approve a whole wave, and
+/// `prepare_pages` would immediately park an established sequence to
+/// make room — replay thrash, not incorrectness, but wasted dispatches.
+/// Generation beyond the history is still optimistic; parking covers it.
+#[derive(Debug, Clone)]
+pub struct AdmissionBudget {
+    page_size: usize,
+    kinds: Vec<BudgetKind>,
+}
+
+impl AdmissionBudget {
+    /// Gate one admission that will teacher-force `history_len` tokens;
+    /// debits the budget on acceptance, leaves it untouched on refusal.
+    pub fn admit(&mut self, history_len: usize) -> bool {
+        let needs: Vec<usize> = self
+            .kinds
+            .iter()
+            .map(|k| {
+                if k.lazy {
+                    let last = history_len.clamp(1, k.slots) - 1;
+                    (last / self.page_size + 1).min(k.pages_per_slot)
+                } else {
+                    k.pages_per_slot
+                }
+            })
+            .collect();
+        if self.kinds.iter().zip(&needs).any(|(k, &n)| k.free < n) {
+            return false;
+        }
+        for (k, n) in self.kinds.iter_mut().zip(&needs) {
+            k.free -= n;
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn layout(pool_dense: usize, pool_bounded: usize) -> PageLayout {
+        PageLayout {
+            page_size: 4,
+            pages_per_slot: 8 + 1,
+            kinds: vec![
+                PageKind {
+                    kind: "dense".into(),
+                    slots: 32,
+                    pages_per_slot: 8,
+                    row_offset: 0,
+                    pool_pages: pool_dense,
+                    lazy: true,
+                },
+                PageKind {
+                    kind: "mosa".into(),
+                    slots: 4,
+                    pages_per_slot: 1,
+                    row_offset: 8,
+                    pool_pages: pool_bounded,
+                    lazy: false,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn allocator_alloc_release_roundtrip() {
+        let mut a = PageAllocator::new(4);
+        assert_eq!(a.free_pages(), 4);
+        let p0 = a.alloc().unwrap();
+        let p1 = a.alloc().unwrap();
+        assert_ne!(p0, p1);
+        assert_eq!(a.in_use(), 2);
+        assert!(a.release(p0));
+        assert_eq!(a.free_pages(), 3);
+        // refcounts: retained pages survive one release
+        a.retain(p1);
+        assert!(!a.release(p1));
+        assert!(a.release(p1));
+        assert_eq!(a.free_pages(), 4);
+        assert_eq!(a.in_use(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn allocator_rejects_double_free() {
+        let mut a = PageAllocator::new(2);
+        let p = a.alloc().unwrap();
+        a.release(p);
+        a.release(p);
+    }
+
+    #[test]
+    fn prop_allocator_fuzz_conserves_pool() {
+        // seeded fuzz of alloc/retain/release interleavings: never a
+        // double allocation, allocated + free == pool after every op
+        let mut rng = Pcg::seeded(0x9a6e);
+        for _ in 0..50 {
+            let n = 1 + rng.usize_below(24);
+            let mut a = PageAllocator::new(n);
+            let mut live: Vec<u32> = Vec::new(); // one entry per owner
+            for _ in 0..400 {
+                match rng.below(4) {
+                    0 | 1 => {
+                        if let Some(p) = a.alloc() {
+                            assert!(
+                                !live.contains(&p),
+                                "double allocation of page {p}"
+                            );
+                            live.push(p);
+                        } else {
+                            // pressure must mean a genuinely full pool
+                            let distinct =
+                                live.iter().collect::<std::collections::HashSet<_>>().len();
+                            assert_eq!(distinct, n);
+                        }
+                    }
+                    2 => {
+                        if !live.is_empty() {
+                            let p = live[rng.usize_below(live.len())];
+                            a.retain(p);
+                            live.push(p);
+                        }
+                    }
+                    _ => {
+                        if !live.is_empty() {
+                            let i = rng.usize_below(live.len());
+                            let p = live.swap_remove(i);
+                            let freed = a.release(p);
+                            assert_eq!(freed, !live.contains(&p));
+                        }
+                    }
+                }
+                let distinct = live.iter().collect::<std::collections::HashSet<_>>().len();
+                assert_eq!(a.in_use(), distinct);
+                assert_eq!(a.in_use() + a.free_pages(), n, "conservation violated");
+            }
+        }
+    }
+
+    #[test]
+    fn table_ensure_maps_bounded_fully_and_lazy_by_pos() {
+        let mut t = PageTable::new(layout(16, 2), 2);
+        t.ensure(0, 0).unwrap();
+        // pos 0: one dense page + the whole bounded kind
+        assert_eq!(t.mapped_pages(0), 1 + 1);
+        t.ensure(0, 7).unwrap(); // still page 1 (page_size 4 -> pos 7 in page 1)
+        assert_eq!(t.mapped_pages(0), 2 + 1);
+        t.ensure(0, 31).unwrap();
+        assert_eq!(t.mapped_pages(0), 8 + 1);
+        // idempotent
+        t.ensure(0, 31).unwrap();
+        assert_eq!(t.mapped_pages(0), 9);
+        assert!(t.check_conservation());
+        // positions past capacity clamp to the last page
+        t.ensure(0, 1000).unwrap();
+        assert_eq!(t.mapped_pages(0), 9);
+    }
+
+    #[test]
+    fn table_pressure_reports_kind_and_keeps_partial_mapping() {
+        // dense pool of 8: slot 0 takes it all, slot 1 hits pressure
+        let mut t = PageTable::new(layout(8, 2), 2);
+        t.ensure(0, 31).unwrap();
+        let err = t.ensure(1, 31).unwrap_err();
+        assert_eq!(err, PagePressure { slot: 1, kind: "dense".into() });
+        // partial mapping survives (bounded kind + zero dense pages)
+        assert_eq!(t.mapped_pages(1), 1);
+        assert!(t.check_conservation());
+        // parking the hog frees its pages; the retry now succeeds
+        let freed = t.release_slot(0);
+        assert_eq!(freed, 9);
+        t.ensure(1, 31).unwrap();
+        assert_eq!(t.mapped_pages(1), 9);
+        assert!(t.check_conservation());
+    }
+
+    #[test]
+    fn table_release_returns_every_page() {
+        let mut t = PageTable::new(layout(16, 2), 2);
+        t.ensure(0, 31).unwrap();
+        t.ensure(1, 13).unwrap();
+        let before = t.pages_in_use();
+        assert_eq!(before, 9 + (4 + 1));
+        assert_eq!(t.release_slot(0), 9);
+        assert_eq!(t.pages_in_use(), 5);
+        assert_eq!(t.release_slot(1), 5);
+        assert_eq!(t.pages_in_use(), 0);
+        assert_eq!(t.pages_free(), t.pool_pages_total());
+        assert!(t.table().iter().all(|&p| p == PAGE_SENTINEL));
+        assert!(t.check_conservation());
+    }
+
+    #[test]
+    fn prop_table_fuzz_alloc_free_evict() {
+        // the ISSUE satellite: seeded fuzz of ensure/release (admission,
+        // growth, parking) interleavings across random layouts
+        let mut rng = Pcg::seeded(0x7ab1e);
+        for _ in 0..30 {
+            let pool_dense = 4 + rng.usize_below(16);
+            let pool_bounded = 1 + rng.usize_below(6);
+            let slots = 1 + rng.usize_below(4);
+            let mut t = PageTable::new(layout(pool_dense, pool_bounded.max(slots)), slots);
+            let mut pos = vec![-1i32; slots];
+            for _ in 0..300 {
+                let s = rng.usize_below(slots);
+                match rng.below(3) {
+                    0 | 1 => {
+                        // admit or grow: advance the slot's position
+                        pos[s] = (pos[s] + 1 + rng.below(6) as i32).min(31);
+                        if t.ensure(s, pos[s]).is_err() {
+                            // park a victim (possibly s itself), retry once
+                            let victim = (0..slots)
+                                .max_by_key(|&v| t.mapped_pages(v))
+                                .unwrap();
+                            t.release_slot(victim);
+                            pos[victim] = -1;
+                            if pos[s] >= 0 {
+                                // a lone slot must always map (pool >= ppk)
+                                t.ensure(s, pos[s]).ok();
+                            }
+                        }
+                    }
+                    _ => {
+                        // retire
+                        t.release_slot(s);
+                        pos[s] = -1;
+                    }
+                }
+                assert!(t.check_conservation(), "conservation after op");
+            }
+            // drain: every slot releases every page
+            for s in 0..slots {
+                t.release_slot(s);
+            }
+            assert_eq!(t.pages_in_use(), 0);
+            assert_eq!(t.pages_free(), t.pool_pages_total());
+        }
+    }
+
+    #[test]
+    fn admission_headroom_tracks_free_pages() {
+        let mut t = PageTable::new(layout(8, 2), 2);
+        assert!(t.admission_headroom());
+        t.ensure(0, 31).unwrap(); // dense pool exhausted
+        assert!(!t.admission_headroom());
+        t.release_slot(0);
+        assert!(t.admission_headroom());
+    }
+
+    #[test]
+    fn admission_budget_debits_per_admission() {
+        // dense pool 8 (lazy, ppk 8, ps 4), bounded pool 4
+        let t = PageTable::new(layout(8, 4), 4);
+        let mut b = t.admission_budget();
+        // a 9-token history needs ceil(9/4)=3 dense pages + the bounded 1
+        assert!(b.admit(9));
+        assert!(b.admit(9)); // 6/8 dense used
+        // a third would need 3 more dense pages; only 2 remain
+        assert!(!b.admit(9));
+        // a shorter history still fits (1 dense page)
+        assert!(b.admit(2));
+        // refusals leave the budget untouched: 1 dense page remains
+        assert!(!b.admit(9));
+        assert!(b.admit(1));
+        // histories clamp to the kind capacity (ppk, never more)
+        let mut b2 = t.admission_budget();
+        assert!(b2.admit(10_000)); // 8 dense pages, not 2500
+        assert!(!b2.admit(1));
+    }
+
+    #[test]
+    fn sentinel_matches_python_side() {
+        assert_eq!(PAGE_SENTINEL, 1 << 30);
+    }
+}

@@ -62,12 +62,26 @@
 //!   runs in-graph (`step_sample`, O(batch) host bytes per token both
 //!   ways) or on the host over fetched logits (`sample_row_u`, the exact
 //!   mirror — identical tokens given the same uniforms).
+//! - **Paged KV-cache serving** (`kvcache::paged` + the `*_paged`
+//!   program twins): the cache lives in fixed-size pages of one shared
+//!   pool per leaf, addressed through a host-side page table uploaded
+//!   per step (`page_index`, the manifest's validated `pages` section).
+//!   MoSA/fixed k-slot caches and local rings stay fully resident (they
+//!   are tiny — the Table 2 point); the capacity-sized dense/routing
+//!   pools are lowered overcommitted (`pool_frac`), admission
+//!   oversubscribes device memory, and the serving loop parks + replays
+//!   sequences under pool pressure (`ContinuousBatcher::park`,
+//!   `PageTable::ensure`). Bit-identical to the contiguous layout on
+//!   any fully-backed table — the contiguous programs survive as the
+//!   `--no-paged` A/B twin and differential-test reference.
 //! - **Decode harness** (`perf::decode`, part of `mosa perf`): emits
 //!   `BENCH_decode.json` — prefill ms, per-token ms vs context capacity,
 //!   tokens/sec at batch 1/8/32, measured cache bytes dense-vs-MoSA
-//!   matching `kvcache::kv_bytes_total` exactly, and the donate ×
+//!   matching `kvcache::kv_bytes_total` exactly, the donate ×
 //!   sampling 2×2 with measured `host_bytes_per_token` (gated in
-//!   `verify.sh` at 16 × batch on the device-sampling path).
+//!   `verify.sh` at 16 × batch on the device-sampling path), and the
+//!   paged-vs-contiguous arm (resident pool bytes ≤ 0.5× contiguous,
+//!   gated in `verify.sh`; live page occupancy; table upload bytes).
 
 pub mod util;
 pub mod config;

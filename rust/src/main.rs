@@ -75,7 +75,7 @@ fn print_help() {
          \x20 perf       [--smoke] [--corpus-bytes N] [--threads N] [--out path] [--decode-out path]\n\
          \x20 generate   --variant <name> [--ckpt path] [--prompt text] [--n-seqs N]\n\
          \x20            [--max-new N] [--top-k K] [--temp T] [--seed S] [--no-device-resident]\n\
-         \x20            [--host-sample] [--no-donate]\n\
+         \x20            [--host-sample] [--no-donate] [--no-paged]\n\
          \x20 downstream --variant <name> --ckpt <path> [--n 50]\n\
          \x20 list       [--artifacts dir]\n"
     );
@@ -230,6 +230,10 @@ fn cmd_generate(args: &Args) -> Result<()> {
         // in-graph sampling keeps per-token host traffic O(batch);
         // --host-sample selects the logits-download twin for A/B runs
         device_sample: !args.has("host-sample"),
+        // paged cache serving (pool + page table) when the artifact
+        // carries the paged programs; --no-paged selects the contiguous
+        // fixed-slot twin for A/B runs
+        use_paged: !args.has("no-paged"),
     };
     let requests: Vec<SeqRequest> = (0..n_seqs)
         .map(|i| SeqRequest { id: i as u64, prompt: prompt_ids.clone(), max_new: opts.max_new })

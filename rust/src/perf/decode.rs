@@ -19,6 +19,11 @@
 //!   reduction at a serving vocab of 8192. The same two donate arms run
 //!   on the `decode_step_b32` family (`zero_copy_b32`) for the
 //!   batch-32 latency acceptance;
+//! - **paged vs contiguous** (`paged`): the paged-pool serving arm
+//!   against the fixed-slot twin at short sequences under the
+//!   long-capacity config — resident pool bytes (the overcommit win;
+//!   `resident_ratio` must stay ≤ 0.5), live page occupancy, per-token
+//!   ms, and the page-table upload bytes per step;
 //! - **batch scaling**: tokens/sec at batch 1 / native / 32 via the
 //!   `decode_step_b*` program family;
 //! - **context scaling**: per-token ms at capacities 128..1024 via
@@ -420,6 +425,74 @@ fn bench_variant(
             ]));
         }
         row.push(("zero_copy_b32", Json::Arr(arms)));
+    }
+
+    // --- paged vs contiguous: resident pool bytes + per-token ms ----------
+    // the paged acceptance arm: at short sequences (positions <= 128)
+    // under the long-capacity config, the paged pools must hold >= 2x
+    // fewer resident cache bytes than the contiguous layout, at
+    // comparable per-token latency. `pool_bytes` is static (lowered
+    // pool size); `pages_in_use` is the live occupancy after the probe.
+    if v.programs.contains_key("decode_step_paged") {
+        let short_steps = steps.min(96);
+        let mut arms = Vec::new();
+        let mut resident = [0u64; 2];
+        for (idx, (label, prog)) in
+            [("paged", "decode_step_paged"), ("contiguous", "decode_step")].iter().enumerate()
+        {
+            let mut s = session_for(manifest, v, prog, true)?;
+            let (_, compile) =
+                crate::util::stats::time_once(|| engine.load_program(manifest, v, prog));
+            time_steps(engine, &mut s, &mut rng, vocab, 0, 1)?; // warmup
+            let ms = time_steps(engine, &mut s, &mut rng, vocab, 1, short_steps)?;
+            resident[idx] = s.cache_resident_payload_bytes;
+            let (pages_used, pages_total) = s.page_occupancy();
+            println!(
+                "decode[{}] {label}: {:.2} ms/token at seq<={}, resident {} bytes{}",
+                v.name,
+                ms,
+                short_steps + 1,
+                s.cache_resident_payload_bytes,
+                if *label == "paged" {
+                    format!(" ({pages_used}/{pages_total} pages live)")
+                } else {
+                    String::new()
+                }
+            );
+            let mut arm = vec![
+                ("mode", Json::str(*label)),
+                ("steps", Json::num(short_steps as f64)),
+                ("ms_per_token", Json::num(ms)),
+                ("resident_payload_bytes", Json::num(s.cache_resident_payload_bytes as f64)),
+                ("total_bytes", Json::num(s.cache_total_bytes as f64)),
+                ("compile_s", Json::num(compile.as_secs_f64())),
+            ];
+            if *label == "paged" {
+                let pg = v.program(prog)?.pages.as_ref().expect("paged program has pages");
+                arm.push(("page_size", Json::num(pg.page_size as f64)));
+                arm.push(("pages_per_slot", Json::num(pg.pages_per_slot as f64)));
+                arm.push(("pages_in_use", Json::num(pages_used as f64)));
+                arm.push(("pool_pages_total", Json::num(pages_total as f64)));
+                // the only per-step host->device growth the layout adds
+                arm.push((
+                    "table_bytes_per_step",
+                    Json::num((batch * pg.pages_per_slot * 4) as f64),
+                ));
+            }
+            arms.push(Json::obj(arm));
+        }
+        let ratio = resident[0] as f64 / resident[1].max(1) as f64;
+        println!(
+            "decode[{}] paged/contiguous resident bytes = {}/{} = {:.3} (target <= 0.5)",
+            v.name, resident[0], resident[1], ratio
+        );
+        row.push((
+            "paged",
+            Json::obj(vec![
+                ("arms", Json::Arr(arms)),
+                ("resident_ratio_paged_vs_contiguous", Json::num(ratio)),
+            ]),
+        ));
     }
 
     // --- batch + context scaling families (full mode only) ---------------

@@ -22,6 +22,12 @@
 //! copying buffer semantics. If the pinned XLA rejects an aliased
 //! module, the engine demotes that program to the stripped form and
 //! reports donation inactive.
+//!
+//! Donation composes with the paged cache layout: the pool leaves of a
+//! `decode_step_paged*` program are donated (stepped in place) exactly
+//! like contiguous cache leaves, while the `page_index` table rides with
+//! the per-step extras — uploaded fresh each dispatch via `to_device`,
+//! never aliased, O(slots × pages_per_slot) i32 of host→device traffic.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};

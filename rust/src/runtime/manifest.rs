@@ -43,6 +43,35 @@ pub struct CacheLeaf {
     pub kind: String,
 }
 
+/// One head kind's slice of a paged program's paging geometry
+/// (`pages.kinds[]`). `row_offset` locates the kind's segment in every
+/// `page_index` row; `lazy` kinds page on demand with position while
+/// bounded kinds (MoSA/fixed k-slots, local rings) map fully at
+/// admission and are never overcommitted.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PageKindSpec {
+    pub kind: String,
+    pub slots: usize,
+    pub pages_per_slot: usize,
+    pub row_offset: usize,
+    pub pool_pages: usize,
+    pub lazy: bool,
+}
+
+/// The `pages` section of a paged decode program: fixed-size pages in
+/// one shared pool per cache leaf, addressed through the trailing
+/// `page_index [batch, pages_per_slot] i32` extra input. Validated at
+/// parse time (`validate_pages`) so the runtime can trust the geometry
+/// blindly — a bad section would make the page table address outside
+/// the pools or under-provision a bounded kind.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PagesSpec {
+    pub page_size: usize,
+    /// total page_index row width (sum of the kind segments)
+    pub pages_per_slot: usize,
+    pub kinds: Vec<PageKindSpec>,
+}
+
 #[derive(Debug, Clone)]
 pub struct ProgramSpec {
     pub name: String,
@@ -56,8 +85,12 @@ pub struct ProgramSpec {
     pub capacity: Option<usize>,
     pub prompt_len: Option<usize>,
     /// KV-cache leaf layout (decode programs; input order appends these
-    /// after the extra inputs, output order after the extra outputs)
+    /// after the extra inputs, output order after the extra outputs).
+    /// For paged programs the leaves are the shared pools
+    /// ([pool_pages, n, page_size(, d)]).
     pub cache: Vec<CacheLeaf>,
+    /// paging geometry (paged decode programs only)
+    pub pages: Option<PagesSpec>,
     /// lowered with return_tuple=False: PJRT hands back one buffer per
     /// output leaf instead of a single tuple buffer (device residency)
     pub untupled: bool,
@@ -78,6 +111,11 @@ impl ProgramSpec {
     /// Whether this program was lowered with buffer donation.
     pub fn donates(&self) -> bool {
         self.donated.as_ref().map(|a| !a.is_empty()).unwrap_or(false)
+    }
+
+    /// Whether this program uses the paged cache layout.
+    pub fn is_paged(&self) -> bool {
+        self.pages.is_some()
     }
 }
 
@@ -170,6 +208,94 @@ impl Variant {
         } else {
             p.extra_outputs.iter().chain(p.cache.iter().map(|c| &c.spec)).collect()
         }
+    }
+
+    /// Parse-time validation of every paged program's `pages` section:
+    /// the geometry must describe exactly the pool leaves the program
+    /// carries, partition the page-table row, keep every kind's pool
+    /// able to back one full-capacity slot, and never overcommit a
+    /// bounded kind — the invariants `kvcache::PageTable` then trusts
+    /// blindly (a bad section would address outside the pools or park
+    /// forever).
+    fn validate_pages(&self) -> Result<()> {
+        for p in self.programs.values() {
+            let Some(pg) = &p.pages else { continue };
+            let err = |what: String| -> anyhow::Error {
+                anyhow!("{}.{}: pages section invalid: {what}", self.name, p.name)
+            };
+            if pg.page_size == 0 {
+                bail!(err("page_size 0".into()));
+            }
+            if pg.kinds.is_empty() {
+                bail!(err("no kinds".into()));
+            }
+            let batch = p.batch.unwrap_or(1);
+            let mut off = 0;
+            for k in &pg.kinds {
+                if k.row_offset != off {
+                    bail!(err(format!(
+                        "kind {} row_offset {} != running offset {off} (row not partitioned)",
+                        k.kind, k.row_offset
+                    )));
+                }
+                off += k.pages_per_slot;
+                if k.slots % pg.page_size != 0 || k.pages_per_slot != k.slots / pg.page_size {
+                    bail!(err(format!(
+                        "kind {}: page_size {} must divide capacity {} into {} pages",
+                        k.kind, pg.page_size, k.slots, k.pages_per_slot
+                    )));
+                }
+                if k.pool_pages < k.pages_per_slot {
+                    bail!(err(format!(
+                        "kind {}: pool {} pages cannot back one full slot ({})",
+                        k.kind, k.pool_pages, k.pages_per_slot
+                    )));
+                }
+                if !k.lazy && k.pool_pages != batch * k.pages_per_slot {
+                    bail!(err(format!(
+                        "bounded kind {}: pool {} != batch {} x {} (worst-case \
+                         admission not covered)",
+                        k.kind, k.pool_pages, batch, k.pages_per_slot
+                    )));
+                }
+            }
+            if off != pg.pages_per_slot {
+                bail!(err(format!(
+                    "kind segments cover {off} pages, row width is {}",
+                    pg.pages_per_slot
+                )));
+            }
+            // the page_index upload contract: last extra input, i32,
+            // [batch, pages_per_slot]
+            match p.extra_inputs.last() {
+                Some(pi)
+                    if pi.path == "page_index"
+                        && pi.dtype == "i32"
+                        && pi.shape[..] == [batch, pg.pages_per_slot] => {}
+                other => bail!(err(format!(
+                    "last extra input must be page_index [batch, {}] i32, got {:?}",
+                    pg.pages_per_slot,
+                    other.map(|l| (&l.path, &l.shape, &l.dtype))
+                ))),
+            }
+            // every pool leaf matches its kind's geometry
+            for c in &p.cache {
+                let leaf = c.spec.path.rsplit('.').next().unwrap_or(&c.spec.path);
+                let prefix = leaf.split('_').next().unwrap_or(leaf);
+                let Some(k) = pg.kinds.iter().find(|k| k.kind == prefix) else {
+                    bail!(err(format!("cache leaf {} has no pages kind", c.spec.path)));
+                };
+                if c.spec.shape.first() != Some(&k.pool_pages)
+                    || c.spec.shape.get(2) != Some(&pg.page_size)
+                {
+                    bail!(err(format!(
+                        "pool leaf {} shape {:?} != [{}, n, {}, ...]",
+                        c.spec.path, c.spec.shape, k.pool_pages, pg.page_size
+                    )));
+                }
+            }
+        }
+        Ok(())
     }
 
     /// Parse-time validation of every program's donated alias map: each
@@ -316,6 +442,42 @@ impl Manifest {
                         cache.push(CacheLeaf { spec, kind });
                     }
                 }
+                let pages = match pj.get("pages") {
+                    None => None,
+                    Some(pgj) => {
+                        let gu = |j: &Json, k: &str| -> Result<usize> {
+                            j.get(k).and_then(Json::as_usize).ok_or_else(|| {
+                                anyhow!("{name}.{pname}: pages section missing {k}")
+                            })
+                        };
+                        let mut kinds = Vec::new();
+                        for kj in pgj
+                            .get("kinds")
+                            .and_then(Json::as_arr)
+                            .ok_or_else(|| anyhow!("{name}.{pname}: pages missing 'kinds'"))?
+                        {
+                            kinds.push(PageKindSpec {
+                                kind: kj
+                                    .get("kind")
+                                    .and_then(Json::as_str)
+                                    .ok_or_else(|| {
+                                        anyhow!("{name}.{pname}: pages kind missing 'kind'")
+                                    })?
+                                    .to_string(),
+                                slots: gu(kj, "slots")?,
+                                pages_per_slot: gu(kj, "pages_per_slot")?,
+                                row_offset: gu(kj, "row_offset")?,
+                                pool_pages: gu(kj, "pool_pages")?,
+                                lazy: kj.get("lazy").and_then(Json::as_bool).unwrap_or(false),
+                            });
+                        }
+                        Some(PagesSpec {
+                            page_size: gu(pgj, "page_size")?,
+                            pages_per_slot: gu(pgj, "pages_per_slot")?,
+                            kinds,
+                        })
+                    }
+                };
                 let donated = match pj.get("donated") {
                     None => None,
                     Some(d) => {
@@ -350,6 +512,7 @@ impl Manifest {
                         capacity: pj.get("capacity").and_then(Json::as_usize),
                         prompt_len: pj.get("prompt_len").and_then(Json::as_usize),
                         cache,
+                        pages,
                         untupled: pj.get("untupled").and_then(Json::as_bool).unwrap_or(false),
                         donated,
                         sample_k: pj.get("sample_k").and_then(Json::as_usize),
@@ -379,6 +542,7 @@ impl Manifest {
             programs,
         };
         variant.validate_donations()?;
+        variant.validate_pages()?;
         Ok(variant)
     }
 
@@ -578,6 +742,134 @@ mod tests {
         assert!(msg.contains("available: decode_step, prefill, train"), "{msg}");
         let msg = format!("{:#}", m.hlo_path(v, "nope").unwrap_err());
         assert!(msg.contains("available:"), "{msg}");
+    }
+
+    fn paged_manifest_json() -> &'static str {
+        r#"{"variants": [{
+            "name": "tp", "group": "g", "batch": 2, "base_heads": 2, "rho": 2,
+            "flops_fwd": 1000, "n_params": 10,
+            "n_params_leaves": 1, "n_state_leaves": 0, "n_train_leaves": 4,
+            "config": {"vocab": 16, "d_model": 8, "d_head": 4, "d_ff": 16,
+                       "n_layers": 1, "seq_len": 8, "n_dense": 1, "window": 0,
+                       "n_sparse": 1, "sparse_kind": "mosa", "k_sel": 4},
+            "sections": {
+              "params": [{"path": "emb", "shape": [16, 8], "dtype": "f32"}],
+              "state": [],
+              "m": [{"path": "emb", "shape": [16, 8], "dtype": "f32"}],
+              "v": [{"path": "emb", "shape": [16, 8], "dtype": "f32"}],
+              "t": [{"path": "t", "shape": [], "dtype": "f32"}]
+            },
+            "programs": {"decode_step_paged": {"file": "tp.decode_step_paged.hlo.txt",
+              "untupled": true, "batch": 2, "capacity": 8,
+              "extra_inputs": [{"name": "token", "shape": [2], "dtype": "i32"},
+                                {"name": "pos", "shape": [2], "dtype": "i32"},
+                                {"name": "reset", "shape": [2], "dtype": "i32"},
+                                {"name": "page_index", "shape": [2, 3], "dtype": "i32"}],
+              "extra_outputs": [{"name": "logits", "shape": [2, 16], "dtype": "f32"}],
+              "pages": {"page_size": 4, "pages_per_slot": 3, "sentinel": 1073741824,
+                "kinds": [
+                  {"kind": "dense", "slots": 8, "pages_per_slot": 2,
+                   "row_offset": 0, "pool_pages": 3, "lazy": true},
+                  {"kind": "mosa", "slots": 4, "pages_per_slot": 1,
+                   "row_offset": 2, "pool_pages": 2, "lazy": false}]},
+              "donated": {"aliases": []},
+              "cache": [
+                {"path": "layers[0].dense_k", "shape": [3, 1, 4, 4], "dtype": "f32",
+                 "kind": "kv", "init": "zeros"},
+                {"path": "layers[0].dense_pos", "shape": [3, 1, 4], "dtype": "i32",
+                 "kind": "meta", "init": "sentinel"},
+                {"path": "layers[0].dense_v", "shape": [3, 1, 4, 4], "dtype": "f32",
+                 "kind": "kv", "init": "zeros"},
+                {"path": "layers[0].mosa_k", "shape": [2, 1, 4, 4], "dtype": "f32",
+                 "kind": "kv", "init": "zeros"},
+                {"path": "layers[0].mosa_pos", "shape": [2, 1, 4], "dtype": "i32",
+                 "kind": "meta", "init": "sentinel"},
+                {"path": "layers[0].mosa_pri", "shape": [2, 1, 4], "dtype": "f32",
+                 "kind": "meta", "init": "neg"},
+                {"path": "layers[0].mosa_v", "shape": [2, 1, 4, 4], "dtype": "f32",
+                 "kind": "kv", "init": "zeros"}]}}
+        }]}"#
+    }
+
+    #[test]
+    fn parses_pages_section() {
+        let dir = std::env::temp_dir().join("mosa_manifest_pages_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), paged_manifest_json()).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let v = m.variant("tp").unwrap();
+        let p = v.program("decode_step_paged").unwrap();
+        assert!(p.is_paged());
+        let pg = p.pages.as_ref().unwrap();
+        assert_eq!(pg.page_size, 4);
+        assert_eq!(pg.pages_per_slot, 3);
+        assert_eq!(pg.kinds.len(), 2);
+        assert_eq!(pg.kinds[0].kind, "dense");
+        assert!(pg.kinds[0].lazy);
+        assert_eq!(pg.kinds[0].pool_pages, 3); // overcommitted: < 2 slots x 2
+        assert_eq!(pg.kinds[1].kind, "mosa");
+        assert!(!pg.kinds[1].lazy);
+        assert_eq!(pg.kinds[1].pool_pages, 2); // bounded: batch x ppk exactly
+    }
+
+    #[test]
+    fn pages_validation_rejects_bad_geometry() {
+        let base = paged_manifest_json();
+        let cases = [
+            // row segments must partition the table row
+            (r#""row_offset": 2, "pool_pages": 2, "lazy": false"#,
+             r#""row_offset": 1, "pool_pages": 2, "lazy": false"#, "row not partitioned"),
+            // one full-capacity slot must always fit the pool
+            (r#""row_offset": 0, "pool_pages": 3, "lazy": true"#,
+             r#""row_offset": 0, "pool_pages": 1, "lazy": true"#, "cannot back one full slot"),
+            // bounded kinds are never overcommitted: batch x ppk exactly
+            (r#""row_offset": 2, "pool_pages": 2, "lazy": false"#,
+             r#""row_offset": 2, "pool_pages": 4, "lazy": false"#, "worst-case"),
+            // page_size must divide every kind's capacity
+            (r#""pages": {"page_size": 4"#,
+             r#""pages": {"page_size": 3"#, "must divide"),
+            // the page_index upload contract: trailing extra input
+            (r#"{"name": "page_index", "shape": [2, 3], "dtype": "i32"}"#,
+             r#"{"name": "page_index", "shape": [2, 5], "dtype": "i32"}"#, "page_index"),
+            // pool leaves must match the kind geometry
+            (r#"{"path": "layers[0].dense_k", "shape": [3, 1, 4, 4], "dtype": "f32",
+                 "kind": "kv", "init": "zeros"}"#,
+             r#"{"path": "layers[0].dense_k", "shape": [2, 1, 4, 4], "dtype": "f32",
+                 "kind": "kv", "init": "zeros"}"#, "pool leaf"),
+        ];
+        for (i, (from, to, needle)) in cases.iter().enumerate() {
+            let bad = base.replace(from, to);
+            assert_ne!(bad, base, "case {i}: pattern not found");
+            let dir = std::env::temp_dir().join(format!("mosa_manifest_badpages_{i}"));
+            std::fs::create_dir_all(&dir).unwrap();
+            std::fs::write(dir.join("manifest.json"), bad).unwrap();
+            let err = format!("{:#}", Manifest::load(&dir).unwrap_err());
+            assert!(err.contains(needle), "case {i}: {err}");
+        }
+    }
+
+    #[test]
+    fn pages_layout_converts_for_the_page_table() {
+        let dir = std::env::temp_dir().join("mosa_manifest_pages_conv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), paged_manifest_json()).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let v = m.variant("tp").unwrap();
+        let pg = v.program("decode_step_paged").unwrap().pages.as_ref().unwrap();
+        let layout = crate::kvcache::PageLayout::from_spec(pg);
+        assert_eq!(layout.page_size, 4);
+        assert_eq!(layout.pages_per_slot, 3);
+        // a table built on it conserves its pools
+        let mut t = crate::kvcache::PageTable::new(layout, 2);
+        t.ensure(0, 7).unwrap();
+        assert_eq!(t.mapped_pages(0), 2 + 1);
+        assert!(t.check_conservation());
+        // slot 1 can map its first page but not full capacity (pool 3)
+        t.ensure(1, 0).unwrap();
+        assert!(t.ensure(1, 7).is_err());
+        assert_eq!(t.release_slot(0), 3);
+        t.ensure(1, 7).unwrap();
+        assert!(t.check_conservation());
     }
 
     #[test]

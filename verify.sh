@@ -3,27 +3,52 @@
 # smoke run of the host-side perf harness (tiny sizes; emits
 # /tmp/BENCH_pipeline.smoke.json so perf regressions surface in review).
 #
-# Degrades gracefully when the Rust toolchain is not installed (some CI
-# containers carry only the artifact toolchain): prints SKIP and exits 0,
-# matching the tier-1 driver which runs cargo itself where available.
+# Publication contract (the perf trajectory must never be silently empty):
+# BENCH_pipeline.json and BENCH_decode.json exist at the repo root after
+# every verify run. Real measured numbers are published whenever the perf
+# smoke produced them; when a stage cannot run (no cargo, no artifacts),
+# the guard says exactly WHY and publishes an `available: false` stub
+# carrying the reason + a Python lowering smoke — so regressions can be
+# argued from BENCH diffs per ROADMAP, and a missing toolchain is an
+# explained data point instead of an empty trajectory. Stubs never
+# overwrite reports holding real measured numbers.
 set -u
 cd "$(dirname "$0")"
+root=$(pwd)
+
+# ---------------------------------------------------------------------------
+# fallback publisher: explain the skip AND still publish BENCH stubs
+# ---------------------------------------------------------------------------
+publish_fallback() {
+    reason=$1
+    echo "verify: SKIP — $reason"
+    if ! command -v python3 >/dev/null 2>&1; then
+        echo "verify: python3 also unavailable; BENCH files left as-is (nothing can publish)"
+        exit 0
+    fi
+    if ! python3 -c "import jax" >/dev/null 2>&1; then
+        echo "verify: python3 lacks jax; BENCH files left as-is (nothing can publish)"
+        exit 0
+    fi
+    (cd python && python3 -m compile.verify_smoke \
+        --pipeline-out "$root/BENCH_pipeline.json" \
+        --decode-out "$root/BENCH_decode.json" \
+        --reason "$reason")
+    exit $?
+}
 
 if ! command -v cargo >/dev/null 2>&1; then
-    echo "verify: SKIP — cargo not on PATH in this container"
-    exit 0
+    publish_fallback "cargo not on PATH in this container"
 fi
 
 # The repo ships no Cargo.toml: the manifest (and the baked xla crate)
 # live in the external build harness. With a toolchain but no manifest,
-# cargo can only fail on mechanics — skip honestly instead.
+# cargo can only fail on mechanics — fall back honestly instead.
 dir=.
 if [ -f rust/Cargo.toml ]; then
     dir=rust
 elif [ ! -f Cargo.toml ]; then
-    echo "verify: SKIP — cargo is present but no Cargo.toml exists in the repo"
-    echo "        (run from the build harness that supplies the manifest + xla crate)"
-    exit 0
+    publish_fallback "cargo is present but no Cargo.toml exists in the repo (run from the build harness that supplies the manifest + xla crate)"
 fi
 cd "$dir" || exit 1
 
@@ -48,35 +73,40 @@ run cargo run --release --bin mosa -- perf --smoke \
     --out /tmp/BENCH_pipeline.smoke.json \
     --decode-out /tmp/BENCH_decode.smoke.json
 
-# keep the smoke reports in-repo so the perf trajectory accumulates as
-# reviewable BENCH_*.json diffs per PR — only when this run produced them,
-# and never clobber real measured decode numbers with an artifact-less
-# `available: false` stub
-root=$(pwd)
-case "$dir" in rust) root=$(dirname "$root");; esac
-if [ -f /tmp/BENCH_pipeline.smoke.json ]; then
-    run cp /tmp/BENCH_pipeline.smoke.json "$root/BENCH_pipeline.json"
-else
-    echo "verify: perf smoke produced no pipeline report; BENCH_pipeline.json left untouched"
-fi
-if [ -f /tmp/BENCH_decode.smoke.json ] \
-    && grep -q '"available": true' /tmp/BENCH_decode.smoke.json; then
-    run cp /tmp/BENCH_decode.smoke.json "$root/BENCH_decode.json"
-else
-    echo "verify: decode smoke unavailable (no artifacts?); BENCH_decode.json left untouched"
-fi
+# ---------------------------------------------------------------------------
+# publication: keep the smoke reports in-repo so the perf trajectory
+# accumulates as reviewable BENCH_*.json diffs per PR. Reports are
+# published unconditionally when the smoke produced them — including
+# artifact-less `available: false` runs, which carry their reason — with
+# one exception: an unavailable stub never clobbers a root report that
+# holds real measured numbers (explanations lose to data).
+# ---------------------------------------------------------------------------
+publish_smoke() {
+    src=$1; dst=$2
+    if ! [ -f "$src" ]; then
+        echo "verify: $dst NOT published — perf smoke produced no report at $src (run failed above?)"
+        return
+    fi
+    if grep -q '"available": *false' "$src" \
+        && [ -f "$dst" ] && grep -q '"available": *true' "$dst"; then
+        echo "verify: $dst kept — new smoke is 'available: false' ($(grep -o '"reason": *"[^"]*"' "$src" | head -1)); existing report holds real measured numbers"
+        return
+    fi
+    run cp "$src" "$dst"
+}
+publish_smoke /tmp/BENCH_pipeline.smoke.json "$root/BENCH_pipeline.json"
+publish_smoke /tmp/BENCH_decode.smoke.json "$root/BENCH_decode.json"
 
-# zero-copy gate: with artifacts present, the device-sampling decode path
-# must keep device->host traffic at O(batch) bytes per token (the ids
-# download; fetching full logits would trip this at batch*vocab*4)
+# zero-copy + paged gates over the decode smoke (only meaningful when the
+# decode bench had artifacts to measure)
 if ! [ -f /tmp/BENCH_decode.smoke.json ]; then
-    echo "zero-copy gate: SKIP - no decode smoke report (perf run failed above)"
+    echo "decode gates: SKIP - no decode smoke report (perf run failed above)"
 elif command -v python3 >/dev/null 2>&1; then
     run python3 - <<'PYEOF'
 import json, sys
 r = json.load(open("/tmp/BENCH_decode.smoke.json"))
 if not r.get("available"):
-    print("zero-copy gate: skipped (decode bench unavailable: no artifacts)")
+    print(f"decode gates: skipped (decode bench unavailable: {r.get('reason', 'no artifacts')})")
     sys.exit(0)
 checked, bad = 0, []
 for v in r.get("variants", []):
@@ -91,9 +121,27 @@ if bad:
     print(f"zero-copy gate: FAILED {bad} (host_bytes_per_token > 16 x batch)")
     sys.exit(1)
 print(f"zero-copy gate: OK ({checked} device-sampling arms within 16 x batch)")
+# paged gate: the overcommitted pools must keep resident cache bytes at
+# <= 0.5x the contiguous layout (the ISSUE acceptance ratio)
+pchecked, pbad = 0, []
+for v in r.get("variants", []):
+    paged = v.get("paged")
+    if not paged:
+        continue
+    pchecked += 1
+    ratio = paged.get("resident_ratio_paged_vs_contiguous")
+    if ratio is None or ratio > 0.5:
+        pbad.append((v.get("variant"), ratio))
+if pbad:
+    print(f"paged gate: FAILED {pbad} (resident paged/contiguous > 0.5)")
+    sys.exit(1)
+if pchecked:
+    print(f"paged gate: OK ({pchecked} variants with resident ratio <= 0.5)")
+else:
+    print("paged gate: no paged arms in the report (pre-paging artifacts?)")
 PYEOF
 else
-    echo "zero-copy gate: SKIP - python3 not on PATH"
+    echo "decode gates: SKIP - python3 not on PATH"
 fi
 
 if [ "$fail" -eq 0 ]; then
