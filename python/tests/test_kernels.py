@@ -9,6 +9,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property-testing dep not in this container")
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import attention, ref

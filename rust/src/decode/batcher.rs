@@ -32,6 +32,8 @@
 
 use std::collections::VecDeque;
 
+use crate::kvcache::SharedPageTable;
+
 #[derive(Debug, Clone)]
 pub struct SeqRequest {
     pub id: u64,
@@ -124,6 +126,10 @@ pub struct ContinuousBatcher {
     inflight: Vec<Inflight>,
     eos: Option<i32>,
     parked: usize,
+    /// paged serving: when attached, the batcher returns a slot's pages
+    /// to the pools itself whenever the slot empties (park, retirement,
+    /// cancellation, Drop) — the page-leak backstop for aborted loops
+    pages: Option<SharedPageTable>,
 }
 
 impl ContinuousBatcher {
@@ -134,7 +140,18 @@ impl ContinuousBatcher {
             inflight: vec![Inflight::Idle; batch],
             eos,
             parked: 0,
+            pages: None,
         }
+    }
+
+    /// Attach the session's shared page table: from here on every verb
+    /// that empties a slot (park, retire, cancel) — and Drop — releases
+    /// that slot's pages, so an aborted `generate` (panic or early `?`
+    /// return) cannot strand pool pages. Releasing is idempotent: a row
+    /// already returned frees nothing.
+    pub fn attach_pages(&mut self, table: SharedPageTable) {
+        assert_eq!(table.slots(), self.slots.len(), "page table arity != batch");
+        self.pages = Some(table);
     }
 
     pub fn submit(&mut self, mut req: SeqRequest) {
@@ -251,7 +268,11 @@ impl ContinuousBatcher {
             matches!(self.inflight[i], Inflight::Idle),
             "park of slot {i} with a dispatch in flight"
         );
+        // idempotent: parking an already-empty slot is a no-op
         let mut s = self.slots[i].take()?;
+        if let Some(t) = &self.pages {
+            t.release_slot(i);
+        }
         s.fed = 0;
         s.pos = 0;
         s.replay = s.generated.len();
@@ -261,6 +282,79 @@ impl ContinuousBatcher {
         let id = s.id;
         self.pending.push_back(Pending::Resume(s));
         Some(id)
+    }
+
+    /// Drop a sequence mid-flight (deadline expiry, client disconnect):
+    /// the slot empties, its pages return to the pool, and the partial
+    /// output comes back as the request's record. Idempotent like
+    /// `park`; only valid between `advance` and the next `next_inputs`.
+    pub fn cancel_slot(&mut self, i: usize) -> Option<FinishedSeq> {
+        assert!(
+            matches!(self.inflight[i], Inflight::Idle),
+            "cancel of slot {i} with a dispatch in flight"
+        );
+        let s = self.slots[i].take()?;
+        if let Some(t) = &self.pages {
+            t.release_slot(i);
+        }
+        Some(FinishedSeq { id: s.id, prompt: s.prompt, generated: s.generated })
+    }
+
+    /// Drop a queued (fresh or parked) request by id before it occupies
+    /// a slot. Parked entries hold no pages, so nothing to release.
+    pub fn cancel_pending(&mut self, id: u64) -> Option<FinishedSeq> {
+        let at = self.pending.iter().position(|e| match e {
+            Pending::Fresh(r) => r.id == id,
+            Pending::Resume(s) => s.id == id,
+        })?;
+        Some(match self.pending.remove(at)? {
+            Pending::Fresh(r) => FinishedSeq { id: r.id, prompt: r.prompt, generated: Vec::new() },
+            Pending::Resume(s) => {
+                FinishedSeq { id: s.id, prompt: s.prompt, generated: s.generated }
+            }
+        })
+    }
+
+    /// The request occupying slot `i`, if any.
+    pub fn slot_id(&self, i: usize) -> Option<u64> {
+        self.slots[i].as_ref().map(|s| s.id)
+    }
+
+    /// Queued (not yet admitted) request ids, head first.
+    pub fn pending_ids(&self) -> Vec<u64> {
+        self.pending
+            .iter()
+            .map(|e| match e {
+                Pending::Fresh(r) => r.id,
+                Pending::Resume(s) => s.id,
+            })
+            .collect()
+    }
+
+    /// Rewind the effects of an un-advanced `next_inputs`: every slot
+    /// takes back the token it dispatched, so the exact same dispatch
+    /// can be retried (or the slot parked) after a transient engine
+    /// failure. Valid only between `next_inputs` and `advance`; a no-op
+    /// for slots that were idle in the dispatch.
+    pub fn abort_dispatch(&mut self) {
+        for (i, slot) in self.slots.iter_mut().enumerate() {
+            let kind = self.inflight[i];
+            self.inflight[i] = Inflight::Idle;
+            let Some(s) = slot else { continue };
+            match kind {
+                Inflight::Idle => {}
+                Inflight::Prompt | Inflight::LastPrompt => {
+                    s.fed -= 1;
+                    s.pos -= 1;
+                    // the first token after admit/resume carried the
+                    // in-graph reset; re-raise it for the retry
+                    s.needs_reset = s.fed == 0;
+                }
+                Inflight::Gen => {
+                    s.pos -= 1;
+                }
+            }
+        }
     }
 
     /// Sequences parked so far (cumulative).
@@ -344,9 +438,12 @@ impl ContinuousBatcher {
     }
 
     /// Apply one dispatch's sampled tokens; returns retired sequences.
+    /// With a page table attached, a retiring slot's pages go straight
+    /// back to the pool.
     pub fn advance(&mut self, sampled: &[i32]) -> Vec<FinishedSeq> {
         assert_eq!(sampled.len(), self.slots.len());
         let mut done = Vec::new();
+        let pages = self.pages.as_ref();
         for (i, slot) in self.slots.iter_mut().enumerate() {
             let kind = self.inflight[i];
             self.inflight[i] = Inflight::Idle;
@@ -360,10 +457,28 @@ impl ContinuousBatcher {
             let hit_eos = self.eos == Some(tok);
             if s.generated.len() >= s.max_new || hit_eos {
                 let s = slot.take().unwrap();
+                if let Some(t) = pages {
+                    t.release_slot(i);
+                }
                 done.push(FinishedSeq { id: s.id, prompt: s.prompt, generated: s.generated });
             }
         }
         done
+    }
+}
+
+impl Drop for ContinuousBatcher {
+    /// Page-leak backstop: whatever path abandoned this batcher (panic
+    /// unwinding through `generate`, an early `?` return, a cancelled
+    /// serve loop), every occupied slot's pages go back to the pools.
+    fn drop(&mut self) {
+        if let Some(t) = &self.pages {
+            for i in 0..self.slots.len() {
+                if self.slots[i].is_some() {
+                    t.release_slot(i);
+                }
+            }
+        }
     }
 }
 
@@ -538,6 +653,133 @@ mod tests {
         assert_eq!(b.admit_one(), 1);
         assert_eq!(b.active(), 3);
         assert_eq!(b.admit_one(), 0); // no free slot
+    }
+
+    fn small_table(slots: usize) -> SharedPageTable {
+        use crate::kvcache::{PageKind, PageLayout, PageTable};
+        let layout = PageLayout {
+            page_size: 4,
+            pages_per_slot: 4,
+            kinds: vec![PageKind {
+                kind: "dense".into(),
+                slots: 16,
+                pages_per_slot: 4,
+                row_offset: 0,
+                pool_pages: 4 * slots,
+                lazy: true,
+            }],
+        };
+        SharedPageTable::new(PageTable::new(layout, slots))
+    }
+
+    #[test]
+    fn park_and_cancel_are_idempotent_and_release_pages() {
+        let table = small_table(2);
+        let mut b = ContinuousBatcher::new(2, None);
+        b.attach_pages(table.clone());
+        b.submit(req(1, &[5, 6], 4));
+        b.submit(req(2, &[7], 4));
+        b.admit();
+        table.ensure(0, 0).unwrap();
+        table.ensure(1, 0).unwrap();
+        step(&mut b, &[9, 9]);
+        // park returns the id once; parking the emptied slot again no-ops
+        assert_eq!(b.park(0), Some(1));
+        assert_eq!(table.mapped_pages(0), 0);
+        assert_eq!(b.park(0), None);
+        assert_eq!(b.parked_total(), 1);
+        // cancel drops the other sequence, pages and all
+        let rec = b.cancel_slot(1).unwrap();
+        assert_eq!(rec.id, 2);
+        assert_eq!(rec.generated, vec![9]);
+        assert_eq!(table.mapped_pages(1), 0);
+        assert!(b.cancel_slot(1).is_none());
+        assert!(table.check_conservation());
+        // the parked sequence is still queued for replay
+        assert_eq!(b.pending_ids(), vec![1]);
+    }
+
+    #[test]
+    fn cancel_pending_removes_fresh_and_parked_entries() {
+        let mut b = ContinuousBatcher::new(1, None);
+        b.submit(req(1, &[5], 4));
+        b.submit(req(2, &[6], 4));
+        b.admit();
+        step(&mut b, &[8]); // seq 1 generates token 8
+        assert_eq!(b.park(0), Some(1));
+        // queue now: [fresh 2, parked 1]
+        let rec = b.cancel_pending(1).unwrap();
+        assert_eq!((rec.id, rec.generated.clone()), (1, vec![8]));
+        let rec = b.cancel_pending(2).unwrap();
+        assert_eq!((rec.id, rec.generated.len()), (2, 0));
+        assert!(b.cancel_pending(2).is_none());
+        assert!(b.is_done());
+    }
+
+    #[test]
+    fn abort_dispatch_rewinds_for_an_exact_retry() {
+        let mut b = ContinuousBatcher::new(2, None);
+        b.submit(req(1, &[10, 11], 3));
+        b.admit();
+        let (mut t, mut p, mut r) = (Vec::new(), Vec::new(), Vec::new());
+        // first dispatch fails: the retry must re-emit token 10 at pos 0
+        // WITH the reset flag re-raised
+        b.next_inputs(&mut t, &mut p, &mut r);
+        assert_eq!((t[0], p[0], r[0]), (10, 0, 1));
+        b.abort_dispatch();
+        b.next_inputs(&mut t, &mut p, &mut r);
+        assert_eq!((t[0], p[0], r[0]), (10, 0, 1));
+        b.advance(&[0, 0]);
+        // mid-prompt failure: no reset on retry
+        b.next_inputs(&mut t, &mut p, &mut r);
+        assert_eq!((t[0], p[0], r[0]), (11, 1, 0));
+        b.abort_dispatch();
+        b.next_inputs(&mut t, &mut p, &mut r);
+        assert_eq!((t[0], p[0], r[0]), (11, 1, 0));
+        b.advance(&[42, 0]);
+        // generation-phase failure: the sampled token re-dispatches
+        b.next_inputs(&mut t, &mut p, &mut r);
+        assert_eq!((t[0], p[0], r[0]), (42, 2, 0));
+        b.abort_dispatch();
+        b.next_inputs(&mut t, &mut p, &mut r);
+        assert_eq!((t[0], p[0], r[0]), (42, 2, 0));
+        let done = b.advance(&[43, 0]);
+        assert!(done.is_empty());
+        // the slot's stream is unperturbed by the three aborts
+        assert_eq!(b.slot_id(0), Some(1));
+        let plan = b.plan();
+        assert_eq!(plan[0], SlotPlan { active: true, pos: 3, reset: false });
+    }
+
+    #[test]
+    fn drop_releases_pages_of_occupied_slots() {
+        let table = small_table(1);
+        {
+            let mut b = ContinuousBatcher::new(1, None);
+            b.attach_pages(table.clone());
+            b.submit(req(1, &[5, 6], 4));
+            b.admit();
+            table.ensure(0, 4).unwrap();
+            assert_eq!(table.mapped_pages(0), 2);
+            // simulate an aborted generate: the batcher drops mid-flight
+        }
+        assert_eq!(table.mapped_pages(0), 0);
+        assert_eq!(table.pages_free(), table.pool_pages_total());
+        assert!(table.check_conservation());
+    }
+
+    #[test]
+    fn retirement_releases_pages() {
+        let table = small_table(1);
+        let mut b = ContinuousBatcher::new(1, None);
+        b.attach_pages(table.clone());
+        b.submit(req(1, &[5], 1));
+        b.admit();
+        table.ensure(0, 0).unwrap();
+        let (_, _, _, done) = step(&mut b, &[9]);
+        assert_eq!(done.len(), 1);
+        assert_eq!(table.mapped_pages(0), 0);
+        assert!(table.check_conservation());
     }
 
     #[test]

@@ -49,12 +49,13 @@ pub mod sample;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::kvcache::{PageLayout, PagePressure, PageTable};
+use crate::kvcache::{PageLayout, PagePressure, PageTable, SharedPageTable};
 use crate::runtime::engine::{
     fill_vec_f32, lit_f32, lit_i32, lit_scalar_f32, lit_scalar_i32, to_vec_f32, to_vec_i32, Engine,
 };
 use crate::runtime::manifest::{CacheLeaf, LeafSpec, Manifest, ModelCfg, ProgramSpec, Variant};
 use crate::runtime::state::TrainState;
+use crate::serve::ServeError;
 
 pub use batcher::{ContinuousBatcher, FinishedSeq, SeqRequest, SlotPlan};
 pub use sample::{sample_row, sample_row_u, SamplePolicy, SampleScratch};
@@ -207,11 +208,11 @@ pub trait KvCacheStore {
     fn logical_payload_bytes_per_seq(&self) -> u64;
     /// All allocated cache bytes (payload + metadata, all slots/pools).
     fn total_bytes(&self) -> u64;
-    /// The page table, when this store is paged.
-    fn page_table_mut(&mut self) -> Option<&mut PageTable> {
-        None
-    }
-    fn page_table(&self) -> Option<&PageTable> {
+    /// A cloneable handle to the page table, when this store is paged.
+    /// Shared so the session (uploads + prepare), the batcher (park /
+    /// retire / Drop release) and `serve/`'s RAII `SlotGuard`s all
+    /// account against the same pools.
+    fn shared_table(&self) -> Option<SharedPageTable> {
         None
     }
 }
@@ -249,18 +250,20 @@ impl KvCacheStore for ContiguousKvCache {
 /// The paged layout: shared pools + the host page table.
 pub struct PagedKvCache {
     layout: Vec<CacheLeaf>,
-    table: PageTable,
+    pages: PageLayout,
+    table: SharedPageTable,
 }
 
 impl PagedKvCache {
     pub fn new(layout: Vec<CacheLeaf>, batch: usize, pages: PageLayout) -> PagedKvCache {
-        PagedKvCache { layout, table: PageTable::new(pages, batch) }
+        let table = SharedPageTable::new(PageTable::new(pages.clone(), batch));
+        PagedKvCache { layout, pages, table }
     }
 
     fn kind_of(&self, path: &str) -> Option<&crate::kvcache::PageKind> {
         let leaf = path.rsplit('.').next().unwrap_or(path);
         let prefix = leaf.split('_').next().unwrap_or(leaf);
-        self.table.layout().kinds.iter().find(|k| k.kind == prefix)
+        self.pages.kinds.iter().find(|k| k.kind == prefix)
     }
 }
 
@@ -292,12 +295,8 @@ impl KvCacheStore for PagedKvCache {
         layout_total_bytes(&self.layout)
     }
 
-    fn page_table_mut(&mut self) -> Option<&mut PageTable> {
-        Some(&mut self.table)
-    }
-
-    fn page_table(&self) -> Option<&PageTable> {
-        Some(&self.table)
+    fn shared_table(&self) -> Option<SharedPageTable> {
+        Some(self.table.clone())
     }
 }
 
@@ -348,6 +347,9 @@ pub struct DecodeSession<'m> {
     /// whether this session steps a paged program (`decode_step_paged*`)
     pub paged: bool,
     store: Box<dyn KvCacheStore>,
+    /// paged only: the shared page-table handle (cloned to the batcher
+    /// and to `serve/`'s per-request `SlotGuard`s)
+    pages: Option<SharedPageTable>,
     /// paged only: an explicit `prepare_pages` already ran for the next
     /// dispatch (the batcher-aware path); cleared after every step
     pages_prepared: bool,
@@ -393,6 +395,7 @@ impl<'m> DecodeSession<'m> {
             None => Box::new(ContiguousKvCache::new(spec.cache.clone(), batch)),
         };
         let paged = spec.pages.is_some();
+        let pages = store.shared_table();
         let leaves = store.alloc_leaves()?;
         let sname = step_name.replacen("decode_step", "decode_step_sample", 1);
         let (sample_name, sample_k) = match variant.programs.get(&sname) {
@@ -412,6 +415,7 @@ impl<'m> DecodeSession<'m> {
             cache_resident_payload_bytes: store.resident_payload_bytes(),
             paged,
             store,
+            pages,
             pages_prepared: false,
             model_lits: model,
             model_bufs: None,
@@ -420,6 +424,15 @@ impl<'m> DecodeSession<'m> {
             up_bytes: 0,
             down_bytes: 0,
         })
+    }
+
+    /// Tear the session down to its model literals, so a new session
+    /// (e.g. the serve ladder's paged→contiguous demotion) can be built
+    /// over the same weights without re-draining a `TrainState`. The
+    /// KV-cache and any device residency are dropped with `self`; the
+    /// caller replays histories into the replacement session.
+    pub fn into_model_lits(self) -> Vec<xla::Literal> {
+        self.model_lits
     }
 
     /// Host↔device traffic (bytes up, bytes down) accumulated since the
@@ -449,7 +462,7 @@ impl<'m> DecodeSession<'m> {
     /// sessions also return every page to its pool).
     pub fn reset_cache(&mut self) -> Result<()> {
         self.cache = CacheState::Host(self.store.alloc_leaves()?);
-        if let Some(table) = self.store.page_table_mut() {
+        if let Some(table) = &self.pages {
             for slot in 0..table.slots() {
                 table.release_slot(slot);
             }
@@ -467,53 +480,62 @@ impl<'m> DecodeSession<'m> {
     /// so the retry is incremental. Marks the dispatch prepared; `step`
     /// then skips its own all-lanes-active fallback.
     pub fn prepare_pages(&mut self, plan: &[SlotPlan]) -> std::result::Result<(), PagePressure> {
-        let table = self
-            .store
-            .page_table_mut()
-            .expect("prepare_pages on a contiguous session");
-        assert_eq!(plan.len(), table.slots(), "plan arity != slots");
-        for (i, sp) in plan.iter().enumerate() {
-            if !sp.active || sp.reset {
-                table.release_slot(i);
+        let table = self.pages.as_ref().expect("prepare_pages on a contiguous session");
+        let res = table.with(|t| {
+            assert_eq!(plan.len(), t.slots(), "plan arity != slots");
+            for (i, sp) in plan.iter().enumerate() {
+                if !sp.active || sp.reset {
+                    t.release_slot(i);
+                }
             }
-        }
-        for (i, sp) in plan.iter().enumerate() {
-            if sp.active {
-                table.ensure(i, sp.pos)?;
+            for (i, sp) in plan.iter().enumerate() {
+                if sp.active {
+                    t.ensure(i, sp.pos)?;
+                }
             }
+            Ok(())
+        });
+        if res.is_ok() {
+            self.pages_prepared = true;
         }
-        self.pages_prepared = true;
-        Ok(())
+        res
     }
 
     /// Pages currently mapped for one slot (paged sessions; 0 otherwise).
     pub fn mapped_pages(&self, slot: usize) -> usize {
-        self.store.page_table().map(|t| t.mapped_pages(slot)).unwrap_or(0)
+        self.pages.as_ref().map(|t| t.mapped_pages(slot)).unwrap_or(0)
     }
 
     /// Return a parked/retired slot's pages to the pools.
     pub fn release_slot_pages(&mut self, slot: usize) -> usize {
-        self.store.page_table_mut().map(|t| t.release_slot(slot)).unwrap_or(0)
+        self.pages.as_ref().map(|t| t.release_slot(slot)).unwrap_or(0)
     }
 
     /// Whether a fresh admission can be backed right now (paged: pool
     /// headroom; contiguous: always).
     pub fn admission_headroom(&self) -> bool {
-        self.store.page_table().map(|t| t.admission_headroom()).unwrap_or(true)
+        self.pages.as_ref().map(|t| t.admission_headroom()).unwrap_or(true)
     }
 
     /// Demand-debiting admission gate for one wave (paged sessions
     /// only): each accepted admission subtracts the pages its history
     /// will need, so one free page cannot approve a whole wave.
     pub fn admission_budget(&self) -> Option<crate::kvcache::AdmissionBudget> {
-        self.store.page_table().map(|t| t.admission_budget())
+        self.pages.as_ref().map(|t| t.admission_budget())
+    }
+
+    /// The shared page-table handle (paged sessions): clone it into the
+    /// `ContinuousBatcher` (`attach_pages`) and `serve/`'s `SlotGuard`s
+    /// so every owner accounts against the same pools.
+    pub fn shared_pages(&self) -> Option<SharedPageTable> {
+        self.pages.clone()
     }
 
     /// (pages in use, pool pages total) — the paged BENCH arm's live
     /// occupancy numbers; (0, 0) for contiguous sessions.
     pub fn page_occupancy(&self) -> (usize, usize) {
-        self.store
-            .page_table()
+        self.pages
+            .as_ref()
             .map(|t| (t.pages_in_use(), t.pool_pages_total()))
             .unwrap_or((0, 0))
     }
@@ -523,10 +545,11 @@ impl<'m> DecodeSession<'m> {
     /// paged layout adds on top of token/pos/reset.
     fn page_index_literal(&self) -> Result<xla::Literal> {
         let table = self
-            .store
-            .page_table()
+            .pages
+            .as_ref()
             .ok_or_else(|| anyhow!("[{}] not a paged session", self.variant.name))?;
-        lit_i32(table.table(), &[table.slots(), table.layout().pages_per_slot])
+        let (flat, slots, width) = table.snapshot();
+        lit_i32(&flat, &[slots, width])
     }
 
     /// The implicit prepare for batcher-less callers (tests, the perf
@@ -544,12 +567,12 @@ impl<'m> DecodeSession<'m> {
             .map(|(&p, &r)| SlotPlan { active: true, pos: p, reset: r != 0 })
             .collect();
         self.prepare_pages(&plan).map_err(|p| {
-            anyhow!(
-                "[{}] {p}: the pool is overcommitted — drive this session through \
+            anyhow::Error::new(ServeError::from(p)).context(format!(
+                "[{}] the pool is overcommitted — drive this session through \
                  a ContinuousBatcher (which parks victims) or rebuild artifacts \
                  with a larger pool_frac",
                 self.variant.name
-            )
+            ))
         })
     }
 
@@ -611,8 +634,9 @@ impl<'m> DecodeSession<'m> {
         }
         self.up_bytes += inputs.iter().map(|l| l.size_bytes() as u64).sum::<u64>();
         let exe = engine.load_program(self.manifest, variant, pname)?;
-        let bufs = Engine::run_buffers(exe, &inputs)?;
-        let mut outs = Engine::first_device_outputs(bufs, pname)?;
+        let mut outs = Engine::run_buffers(exe, &inputs)
+            .and_then(|bufs| Engine::first_device_outputs(bufs, pname))
+            .map_err(|e| e.context(ServeError::Dispatch { program: pname.to_string() }))?;
         if self.device_resident && outs.len() == expected {
             let cache = outs.split_off(spec.extra_outputs.len());
             let logprobs = outs[0].to_literal_sync().context("prefill logprobs")?;
@@ -749,11 +773,11 @@ impl<'m> DecodeSession<'m> {
         // re-prepare (positions advance, slots churn)
         self.pages_prepared = false;
         if matches!(self.cache, CacheState::Consumed) {
-            bail!(
+            return Err(anyhow::Error::new(ServeError::CacheConsumed).context(format!(
                 "[{}] cache was consumed by a failed donated dispatch — reset_cache() or \
                  re-prefill before stepping",
                 variant.name
-            );
+            )));
         }
 
         if self.device_resident {
@@ -808,7 +832,11 @@ impl<'m> DecodeSession<'m> {
                     if !donated {
                         self.cache = CacheState::Device(cache_bufs);
                     }
-                    return Err(e);
+                    // typed + classified: a failed dispatch is transient
+                    // (retryable); whether the cache survived it is what
+                    // CacheState tracks — donated failures additionally
+                    // read Consumed on the next step
+                    return Err(e.context(ServeError::Dispatch { program: name.to_string() }));
                 }
             };
             if outs.len() == expected {
@@ -857,7 +885,8 @@ impl<'m> DecodeSession<'m> {
         inputs.extend(cache_lits.iter());
         let up = inputs.iter().map(|l| l.size_bytes() as u64).sum::<u64>();
         let exe = engine.load_program(self.manifest, variant, name)?;
-        let mut lits = Engine::run(exe, &inputs, expected, spec.untupled)?;
+        let mut lits = Engine::run(exe, &inputs, expected, spec.untupled)
+            .map_err(|e| e.context(ServeError::Dispatch { program: name.to_string() }))?;
         drop(inputs);
         self.up_bytes += up;
         self.down_bytes += lits.iter().map(|l| l.size_bytes() as u64).sum::<u64>();
@@ -974,6 +1003,12 @@ pub fn generate_with_stats(
             (None, _) => false,
         };
     let mut batcher = ContinuousBatcher::new(b, opts.eos);
+    // paged: the batcher releases a slot's pages itself on park / retire /
+    // Drop, so an aborted generate (panic, early `?` return) can never
+    // strand pool pages
+    if let Some(table) = session.shared_pages() {
+        batcher.attach_pages(table);
+    }
     for mut r in requests {
         // the cache holds `cap` positions; writes beyond it are dropped by
         // design (static shapes), which would silently condition later
@@ -1051,6 +1086,8 @@ pub fn generate_with_stats(
         let id = batcher
             .park(victim)
             .ok_or_else(|| anyhow!("[{}] park victim {victim} was empty", session.variant.name))?;
+        // pages released by the batcher's attached table handle; this
+        // explicit release is an idempotent no-op kept as belt-and-braces
         session.release_slot_pages(victim);
         *parked += 1;
         log::debug!(
@@ -1374,8 +1411,10 @@ mod tests {
             assert_eq!(lit.element_count(), leaf.spec.elems(), "{}", leaf.spec.path);
         }
         // page table starts empty: all sentinel, full pool free
-        let t = store.page_table().unwrap();
-        assert!(t.table().iter().all(|&p| p == crate::kvcache::PAGE_SENTINEL));
+        let t = store.shared_table().unwrap();
+        let (flat, slots, width) = t.snapshot();
+        assert_eq!(flat.len(), slots * width);
+        assert!(flat.iter().all(|&p| p == crate::kvcache::PAGE_SENTINEL));
         assert_eq!(t.pages_free(), t.pool_pages_total());
     }
 }

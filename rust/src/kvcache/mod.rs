@@ -23,7 +23,8 @@
 pub mod paged;
 
 pub use paged::{
-    AdmissionBudget, PageAllocator, PageKind, PageLayout, PagePressure, PageTable, PAGE_SENTINEL,
+    AdmissionBudget, PageAllocator, PageKind, PageLayout, PagePressure, PageTable,
+    SharedPageTable, PAGE_SENTINEL,
 };
 
 use crate::runtime::manifest::ModelCfg;

@@ -31,6 +31,7 @@
 //! slot can always reach full capacity, so parking makes progress.
 
 use crate::runtime::manifest::{PageKindSpec, PagesSpec};
+use std::sync::{Arc, Mutex, MutexGuard};
 
 /// Unbacked page-table entry: far above any physical page id, so the
 /// lowered gather masks it and the scatter drops it. Must match
@@ -201,16 +202,22 @@ pub struct PageTable {
     slots: usize,
     table: Vec<i32>,
     allocs: Vec<PageAllocator>,
+    /// Pages seized out of the free lists by fault injection (never
+    /// mapped into the table); one stash per kind pool.
+    held: Vec<Vec<u32>>,
 }
 
 impl PageTable {
     pub fn new(layout: PageLayout, slots: usize) -> PageTable {
-        let allocs = layout.kinds.iter().map(|k| PageAllocator::new(k.pool_pages)).collect();
+        let allocs: Vec<PageAllocator> =
+            layout.kinds.iter().map(|k| PageAllocator::new(k.pool_pages)).collect();
+        let held = vec![Vec::new(); allocs.len()];
         PageTable {
             slots,
             table: vec![PAGE_SENTINEL; slots * layout.pages_per_slot],
             layout,
             allocs,
+            held,
         }
     }
 
@@ -335,8 +342,51 @@ impl PageTable {
         freed
     }
 
+    /// Fault injection: seize up to `n` free pages out of the pools
+    /// (preferring the lazy, overcommitted kinds — the ones real pressure
+    /// hits first) without mapping them anywhere. Returns how many were
+    /// actually taken. The serving path sees genuine `PagePressure`.
+    pub fn hold_free_pages(&mut self, n: usize) -> usize {
+        let mut taken = 0;
+        // two passes: lazy kinds first, then bounded
+        for lazy_pass in [true, false] {
+            for (ki, k) in self.layout.kinds.iter().enumerate() {
+                if k.lazy != lazy_pass {
+                    continue;
+                }
+                while taken < n {
+                    match self.allocs[ki].alloc() {
+                        Some(p) => {
+                            self.held[ki].push(p);
+                            taken += 1;
+                        }
+                        None => break,
+                    }
+                }
+            }
+        }
+        taken
+    }
+
+    /// Return every fault-held page to its pool. Returns how many.
+    pub fn release_held(&mut self) -> usize {
+        let mut freed = 0;
+        for (ki, stash) in self.held.iter_mut().enumerate() {
+            for p in stash.drain(..) {
+                self.allocs[ki].release(p);
+                freed += 1;
+            }
+        }
+        freed
+    }
+
+    pub fn held_pages(&self) -> usize {
+        self.held.iter().map(|h| h.len()).sum()
+    }
+
     /// Conservation check (debug/test): per kind, live + free == pool,
-    /// and the table maps no physical page twice.
+    /// and the table maps no physical page twice. Fault-held pages count
+    /// as live-but-unmapped.
     pub fn check_conservation(&self) -> bool {
         for (ki, (k, a)) in self.layout.kinds.iter().zip(&self.allocs).enumerate() {
             if a.in_use() + a.free_pages() != a.n_pages() {
@@ -357,12 +407,116 @@ impl PageTable {
                     mapped += 1;
                 }
             }
-            // every mapped page is live (refcount 1 from this table)
-            if mapped != a.in_use() {
+            // held pages must be live and must not also be mapped
+            for &p in &self.held[ki] {
+                let p = p as usize;
+                if p >= k.pool_pages || seen[p] {
+                    return false;
+                }
+                seen[p] = true;
+            }
+            // every live page is either table-mapped or fault-held
+            if mapped + self.held[ki].len() != a.in_use() {
                 return false;
             }
         }
         true
+    }
+}
+
+// ---------------------------------------------------------------------------
+// shared handle
+// ---------------------------------------------------------------------------
+
+/// Cloneable, lock-guarded handle to one [`PageTable`].
+///
+/// The serving path needs page accounting reachable from several owners
+/// at once — the `DecodeSession` (uploads + prepare), the
+/// `ContinuousBatcher` (park/retire/Drop release), and the per-request
+/// RAII `SlotGuard`s in `serve/` (cancel/disconnect release) — so the
+/// table lives behind `Arc<Mutex>`. Lock poisoning is deliberately
+/// forgiven (`into_inner` on a poisoned guard): guards release pages
+/// during unwinding, and a page release must never double-panic.
+#[derive(Debug, Clone)]
+pub struct SharedPageTable {
+    inner: Arc<Mutex<PageTable>>,
+}
+
+impl SharedPageTable {
+    pub fn new(table: PageTable) -> SharedPageTable {
+        SharedPageTable { inner: Arc::new(Mutex::new(table)) }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, PageTable> {
+        self.inner.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    /// Run `f` under the table lock (escape hatch for compound ops).
+    pub fn with<R>(&self, f: impl FnOnce(&mut PageTable) -> R) -> R {
+        f(&mut self.lock())
+    }
+
+    pub fn ensure(&self, slot: usize, pos: i32) -> Result<(), PagePressure> {
+        self.lock().ensure(slot, pos)
+    }
+
+    pub fn release_slot(&self, slot: usize) -> usize {
+        self.lock().release_slot(slot)
+    }
+
+    pub fn mapped_pages(&self, slot: usize) -> usize {
+        self.lock().mapped_pages(slot)
+    }
+
+    pub fn slots(&self) -> usize {
+        self.lock().slots()
+    }
+
+    /// Copy of the flat upload-ready map plus its [slots, pages_per_slot]
+    /// shape (a snapshot: the lock is not held across the upload).
+    pub fn snapshot(&self) -> (Vec<i32>, usize, usize) {
+        let t = self.lock();
+        (t.table().to_vec(), t.slots(), t.layout().pages_per_slot)
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.lock().layout().page_size
+    }
+
+    pub fn pages_in_use(&self) -> usize {
+        self.lock().pages_in_use()
+    }
+
+    pub fn pages_free(&self) -> usize {
+        self.lock().pages_free()
+    }
+
+    pub fn pool_pages_total(&self) -> usize {
+        self.lock().pool_pages_total()
+    }
+
+    pub fn admission_headroom(&self) -> bool {
+        self.lock().admission_headroom()
+    }
+
+    pub fn admission_budget(&self) -> AdmissionBudget {
+        self.lock().admission_budget()
+    }
+
+    pub fn hold_free_pages(&self, n: usize) -> usize {
+        self.lock().hold_free_pages(n)
+    }
+
+    pub fn release_held(&self) -> usize {
+        self.lock().release_held()
+    }
+
+    pub fn held_pages(&self) -> usize {
+        self.lock().held_pages()
+    }
+
+    pub fn check_conservation(&self) -> bool {
+        self.lock().check_conservation()
     }
 }
 
@@ -653,5 +807,53 @@ mod tests {
     #[test]
     fn sentinel_matches_python_side() {
         assert_eq!(PAGE_SENTINEL, 1 << 30);
+    }
+
+    #[test]
+    fn hold_free_pages_induces_pressure_and_conserves() {
+        let mut t = PageTable::new(layout(8, 2), 2);
+        // seize the whole dense pool; bounded pools stay intact
+        let taken = t.hold_free_pages(8);
+        assert_eq!(taken, 8);
+        assert!(t.check_conservation());
+        // admission now sees genuine pressure on the lazy kind
+        let err = t.ensure(0, 0).unwrap_err();
+        assert_eq!(err.kind, "dense");
+        assert!(t.check_conservation());
+        // releasing the holds restores full capacity
+        assert_eq!(t.release_held(), 8);
+        assert_eq!(t.held_pages(), 0);
+        t.ensure(0, 31).unwrap();
+        assert_eq!(t.mapped_pages(0), 9);
+        assert!(t.check_conservation());
+    }
+
+    #[test]
+    fn hold_free_pages_caps_at_free_pool() {
+        let mut t = PageTable::new(layout(8, 2), 2);
+        t.ensure(0, 31).unwrap(); // dense exhausted, bounded 1/2 used
+        // only the remaining bounded page is free
+        assert_eq!(t.hold_free_pages(100), 1);
+        assert_eq!(t.pages_free(), 0);
+        assert!(t.check_conservation());
+        t.release_held();
+        t.release_slot(0);
+        assert_eq!(t.pages_free(), t.pool_pages_total());
+    }
+
+    #[test]
+    fn shared_table_clones_see_one_pool() {
+        let shared = SharedPageTable::new(PageTable::new(layout(16, 2), 2));
+        let other = shared.clone();
+        shared.ensure(0, 7).unwrap();
+        assert_eq!(other.mapped_pages(0), 2 + 1);
+        assert_eq!(other.release_slot(0), 3);
+        assert_eq!(shared.mapped_pages(0), 0);
+        // release of an empty row is an idempotent no-op
+        assert_eq!(shared.release_slot(0), 0);
+        let (flat, slots, width) = shared.snapshot();
+        assert_eq!(flat.len(), slots * width);
+        assert!(flat.iter().all(|&p| p == PAGE_SENTINEL));
+        assert!(shared.check_conservation());
     }
 }

@@ -74,6 +74,19 @@
 //!   `PageTable::ensure`). Bit-identical to the contiguous layout on
 //!   any fully-backed table — the contiguous programs survive as the
 //!   `--no-paged` A/B twin and differential-test reference.
+//! - **Request lifecycle + robustness** (`serve`): a serving layer over
+//!   the batcher — bounded admission queue with deadline-aware (EDF)
+//!   scheduling, per-request deadlines and cancellation tokens, RAII
+//!   `SlotGuard`s so a disconnect can never leak pool pages, a typed
+//!   error taxonomy (`ServeError`, transient vs fatal) threaded through
+//!   the engine and decode layers, and a degradation ladder (seeded
+//!   backoff retries → donated→copied demotion → paged→contiguous
+//!   demotion → shed-and-replay → fail). A deterministic fault-injection
+//!   layer (`serve::fault`) and chaos harness (`serve::chaos`,
+//!   `mosa chaos`) drive the whole loop through dispatch failures, pool
+//!   exhaustion, watchdog overruns, and corrupt artifacts, asserting
+//!   page conservation and bit-identical survivor streams after every
+//!   event (see PERF.md §Request lifecycle).
 //! - **Decode harness** (`perf::decode`, part of `mosa perf`): emits
 //!   `BENCH_decode.json` — prefill ms, per-token ms vs context capacity,
 //!   tokens/sec at batch 1/8/32, measured cache bytes dense-vs-MoSA
@@ -91,6 +104,7 @@ pub mod runtime;
 pub mod coordinator;
 pub mod kvcache;
 pub mod decode;
+pub mod serve;
 pub mod evalharness;
 pub mod experiments;
 pub mod perf;

@@ -8,6 +8,7 @@
 //!   data         inspect the data pipeline (corpus/BPE/batches)
 //!   perf         perf harnesses -> BENCH_pipeline.json + BENCH_decode.json
 //!   generate     batched autoregressive decoding from a checkpoint
+//!   chaos        fault-injection chaos run over the serving loop
 //!   downstream   run the synthetic zero-shot suite on a checkpoint
 //!   list         list manifest variants
 //!
@@ -50,6 +51,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         "data" => cmd_data(args),
         "perf" => cmd_perf(args),
         "generate" => cmd_generate(args),
+        "chaos" => cmd_chaos(args),
         "downstream" => cmd_downstream(args),
         "list" => cmd_list(args),
         "report" => cmd_report(args),
@@ -76,6 +78,8 @@ fn print_help() {
          \x20 generate   --variant <name> [--ckpt path] [--prompt text] [--n-seqs N]\n\
          \x20            [--max-new N] [--top-k K] [--temp T] [--seed S] [--no-device-resident]\n\
          \x20            [--host-sample] [--no-donate] [--no-paged]\n\
+         \x20 chaos      [--seed S] [--requests N] [--pool-pages P] [--cancel-frac F]\n\
+         \x20            [--deadline-frac F] [--plan 'fail@2;slow@5:900;hold@1:4x120'] [--out path]\n\
          \x20 downstream --variant <name> --ckpt <path> [--n 50]\n\
          \x20 list       [--artifacts dir]\n"
     );
@@ -252,6 +256,53 @@ fn cmd_generate(args: &Args) -> Result<()> {
         finished.len(),
         wall,
         total_tokens as f64 / wall.max(1e-9)
+    );
+    Ok(())
+}
+
+/// Chaos harness over the serving loop (mock dispatcher — no artifacts
+/// needed): seeded faults + cancellations + deadlines, page-conservation
+/// invariants checked every tick, survivor streams diffed against an
+/// unfaulted baseline. Exits nonzero if any invariant broke.
+fn cmd_chaos(args: &Args) -> Result<()> {
+    use anyhow::Context;
+    use mosa::serve::chaos::{run_mock, ChaosConfig};
+    use mosa::serve::{FaultPlan, ServeError};
+
+    let mut cfg = ChaosConfig::default();
+    cfg.seed = args.get_u64("seed", cfg.seed);
+    cfg.requests = args.get_usize("requests", cfg.requests);
+    cfg.pool_pages = args.get_usize("pool-pages", cfg.pool_pages);
+    cfg.cancel_frac = args.get_f64("cancel-frac", cfg.cancel_frac);
+    cfg.deadline_frac = args.get_f64("deadline-frac", cfg.deadline_frac);
+    if let Some(spec) = args.get("plan") {
+        let plan = FaultPlan::parse(spec)
+            .context(ServeError::InvalidRequest { why: format!("bad --plan '{spec}'") })?;
+        cfg.plan = Some(plan);
+    }
+    let report = run_mock(&cfg);
+    let json = report.to_json().to_string_pretty();
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, &json)?;
+        println!("chaos report -> {out}");
+    }
+    println!("{json}");
+    for v in &report.violations {
+        eprintln!("invariant violation: {v}");
+    }
+    if !report.ok() {
+        bail!(
+            "chaos run failed: leaked={} held={} violations={} mismatches={} fatal={:?}",
+            report.leaked_pages,
+            report.held_pages_end,
+            report.invariant_violations,
+            report.stream_mismatches,
+            report.fatal
+        );
+    }
+    println!(
+        "chaos ok: {} completed, {} recovered, {} retries, {} parked, 0 pages leaked",
+        report.stats.completed, report.stats.recovered, report.stats.retries, report.stats.parked
     );
     Ok(())
 }

@@ -28,10 +28,17 @@
 //!   `decode_step_b*` program family;
 //! - **context scaling**: per-token ms at capacities 128..1024 via
 //!   `decode_step_c*` (static-shape bucketing, decode-only).
+//! - **faults** (`faults`): the chaos harness (`serve::chaos`) run on
+//!   the mock dispatcher with a seeded `FaultPlan` — recovery latency
+//!   (mean/p99 on the harness's logical clock), dispatches recovered,
+//!   retries/demotions/sheds taken, and the leak/invariant counters
+//!   `verify.sh` gates at zero. Mock-backed, so this arm reports even
+//!   when artifacts are absent.
 //!
 //! Artifact-gated like the train probe: without `make artifacts` (or with
-//! pre-decode artifacts) every probe reports `available: false` and the
-//! harness still succeeds, so CI diffs stay meaningful.
+//! pre-decode artifacts) every probe except `faults` reports
+//! `available: false` and the harness still succeeds, so CI diffs stay
+//! meaningful.
 
 use std::time::Instant;
 
@@ -78,7 +85,52 @@ fn unavailable(cfg: &PerfConfig, reason: &str) -> Json {
         ("smoke", Json::Bool(cfg.smoke)),
         ("available", Json::Bool(false)),
         ("reason", Json::str(reason)),
+        // mock-backed: measurable even without artifacts
+        ("faults", bench_faults(cfg)),
     ])
+}
+
+/// The faults arm: recovery latency and robustness counters from a
+/// seeded chaos run on the mock dispatcher (engine-free, so this arm is
+/// identical whether or not artifacts exist). Latencies are on the
+/// serving loop's deterministic logical clock — stable run to run, which
+/// is the point: this arm gates *behaviour* (recovered > 0, zero leaks),
+/// not host speed.
+fn bench_faults(cfg: &PerfConfig) -> Json {
+    use crate::serve::chaos::{run_mock, ChaosConfig};
+    let chaos_cfg = ChaosConfig {
+        seed: 17,
+        requests: if cfg.smoke { 12 } else { 24 },
+        ..ChaosConfig::default()
+    };
+    let report = run_mock(&chaos_cfg);
+    let mut rec = report.stats.recovery_ms.clone();
+    rec.sort_unstable();
+    let mean = if rec.is_empty() {
+        0.0
+    } else {
+        rec.iter().sum::<u64>() as f64 / rec.len() as f64
+    };
+    let p99 = if rec.is_empty() {
+        0.0
+    } else {
+        rec[((rec.len() as f64 * 0.99).ceil() as usize).clamp(1, rec.len()) - 1] as f64
+    };
+    println!(
+        "decode[faults]: {} injected failures, {} recovered (mean {:.0}ms, p99 {:.0}ms logical), \
+         {} leaked pages, {} invariant violations",
+        report.injected.failed_dispatches,
+        report.stats.recovered,
+        mean,
+        p99,
+        report.leaked_pages,
+        report.invariant_violations
+    );
+    let mut obj = report.to_json();
+    if let Json::Obj(ref mut m) = obj {
+        m.insert("recovery_ms_p99".into(), Json::num(p99));
+    }
+    obj
 }
 
 fn bench_with(manifest: &Manifest, cfg: &PerfConfig) -> Result<Json> {
@@ -107,6 +159,7 @@ fn bench_with(manifest: &Manifest, cfg: &PerfConfig) -> Result<Json> {
         ("smoke", Json::Bool(cfg.smoke)),
         ("available", Json::Bool(true)),
         ("variants", Json::Arr(rows)),
+        ("faults", bench_faults(cfg)),
     ];
     // the Table 2 headline: MoSA cache bytes as a fraction of dense
     let dense = bytes_by_name.iter().find(|(n, _)| n == "micro_dense").map(|x| x.1);

@@ -35,6 +35,8 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::serve::ServeError;
+
 use super::manifest::{Manifest, Variant};
 
 pub struct Engine {
@@ -48,6 +50,10 @@ pub struct Engine {
     pub donate: bool,
     /// cumulative compile time, exposed for the perf logs
     pub compile_seconds: f64,
+    /// fault-injection seam: every artifact read passes its text through
+    /// this hook before compiling, so `serve::fault` can truncate or
+    /// garble an artifact deterministically without touching the file
+    artifact_hook: Option<Box<dyn FnMut(&Path, String) -> String + Send>>,
 }
 
 impl Engine {
@@ -59,7 +65,19 @@ impl Engine {
             alias_active: HashMap::new(),
             donate: true,
             compile_seconds: 0.0,
+            artifact_hook: None,
         })
+    }
+
+    /// Install (or clear) the artifact-read hook. The hook sees every
+    /// HLO text exactly once per cache miss; compilation then runs on
+    /// whatever it returns. Used by the fault-injection layer to model
+    /// corrupt/truncated artifacts; `None` restores direct reads.
+    pub fn set_artifact_hook(
+        &mut self,
+        hook: Option<Box<dyn FnMut(&Path, String) -> String + Send>>,
+    ) {
+        self.artifact_hook = hook;
     }
 
     pub fn platform(&self) -> String {
@@ -78,9 +96,13 @@ impl Engine {
     /// Compile an HLO-text artifact file as-is.
     fn compile_file(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
         let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| ServeError::Compile { path: path.display().to_string() })
             .with_context(|| format!("parsing HLO text {}", path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        client.compile(&comp).with_context(|| format!("XLA-compiling {}", path.display()))
+        client
+            .compile(&comp)
+            .with_context(|| ServeError::Compile { path: path.display().to_string() })
+            .with_context(|| format!("XLA-compiling {}", path.display()))
     }
 
     /// Compile modified (alias-stripped) HLO text: the xla crate parses
@@ -99,10 +121,14 @@ impl Engine {
         std::fs::write(&tmp, text)
             .with_context(|| format!("staging HLO text for {}", path.display()))?;
         let parsed = xla::HloModuleProto::from_text_file(&tmp)
+            .with_context(|| ServeError::Compile { path: path.display().to_string() })
             .with_context(|| format!("parsing HLO text {}", path.display()));
         let _ = std::fs::remove_file(&tmp);
         let comp = xla::XlaComputation::from_proto(&parsed?);
-        client.compile(&comp).with_context(|| format!("XLA-compiling {}", path.display()))
+        client
+            .compile(&comp)
+            .with_context(|| ServeError::Compile { path: path.display().to_string() })
+            .with_context(|| format!("XLA-compiling {}", path.display()))
     }
 
     /// Load + compile an HLO-text artifact (cached per donation mode).
@@ -111,11 +137,27 @@ impl Engine {
         let key = (path.clone(), self.donate);
         if !self.cache.contains_key(&key) {
             let t0 = Instant::now();
-            let text = std::fs::read_to_string(&path)
+            let mut text = std::fs::read_to_string(&path)
+                .with_context(|| ServeError::Artifact { path: path.display().to_string() })
                 .with_context(|| format!("reading HLO text {}", path.display()))?;
+            // with a hook installed, the file on disk is no longer the
+            // source of truth: every compile path must go through the
+            // (possibly corrupted) text
+            let hooked = match self.artifact_hook.as_mut() {
+                Some(hook) => {
+                    text = hook(&path, text);
+                    true
+                }
+                None => false,
+            };
             let has_alias = text.contains("input_output_alias=");
             let (exe, aliased) = if has_alias && self.donate {
-                match Self::compile_file(&self.client, &path) {
+                let aliased_try = if hooked {
+                    Self::compile_text(&self.client, &text, &path)
+                } else {
+                    Self::compile_file(&self.client, &path)
+                };
+                match aliased_try {
                     Ok(exe) => (exe, true),
                     Err(e) => {
                         // graceful demotion: the copying twin is the same
@@ -131,6 +173,8 @@ impl Engine {
             } else if has_alias {
                 let stripped = strip_input_output_alias(&text);
                 (Self::compile_text(&self.client, &stripped, &path)?, false)
+            } else if hooked {
+                (Self::compile_text(&self.client, &text, &path)?, false)
             } else {
                 (Self::compile_file(&self.client, &path)?, false)
             };
@@ -174,12 +218,13 @@ impl Engine {
         bufs: Vec<Vec<xla::PjRtBuffer>>,
         what: &str,
     ) -> Result<Vec<xla::PjRtBuffer>> {
-        let dev = bufs
-            .into_iter()
-            .next()
-            .ok_or_else(|| anyhow!("{what}: PJRT execute returned no per-device output list"))?;
+        let dev = bufs.into_iter().next().ok_or_else(|| {
+            anyhow!("{what}: PJRT execute returned no per-device output list")
+                .context(ServeError::Dispatch { program: what.to_string() })
+        })?;
         if dev.is_empty() {
-            bail!("{what}: PJRT execute returned an empty output list for device 0");
+            return Err(anyhow!("{what}: PJRT execute returned an empty output list for device 0")
+                .context(ServeError::Dispatch { program: what.to_string() }));
         }
         Ok(dev)
     }

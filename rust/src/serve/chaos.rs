@@ -1,0 +1,338 @@
+//! The chaos harness: a seeded storm of faults, cancellations, and
+//! deadlines against the serving loop, with invariants checked between
+//! every tick and a differential stream comparison at the end.
+//!
+//! One run drives two servers over the SAME deterministic workload on
+//! the engine-free [`MockDispatcher`] (token = hash of the slot's
+//! history, so streams are park/replay/demotion-invariant):
+//!
+//! - the **baseline**: no faults, no cancellations, no deadlines;
+//! - the **chaos run**: a [`FaultPlan`] (seeded or explicit), a slice of
+//!   requests cancelled mid-flight, a slice with deadlines tight enough
+//!   to expire.
+//!
+//! After every tick the harness asserts the pool invariants
+//! (`in_use + free == pool`, conservation, zero pages mapped under
+//! empty slots); at the end it asserts zero leaked pages, zero held
+//! pages, and that every request that COMPLETED in the chaos run
+//! produced a bit-identical token stream to the baseline — faults may
+//! slow requests down or kill them, but they may never corrupt a
+//! survivor. `mosa chaos` runs this from the CLI; `verify.sh` publishes
+//! the counters into `BENCH_decode.json`.
+
+use crate::util::json::Json;
+use crate::util::rng::Pcg;
+
+use super::{
+    serve, Dispatcher, FaultCounters, FaultPlan, MockDispatcher, Outcome, ServeConfig,
+    ServeRequest, ServeStats, Server, Tick,
+};
+
+#[derive(Debug, Clone)]
+pub struct ChaosConfig {
+    pub seed: u64,
+    pub requests: usize,
+    pub batch: usize,
+    pub capacity: usize,
+    pub page_size: usize,
+    /// pool pages (fewer than `batch × capacity/page_size` overcommits)
+    pub pool_pages: usize,
+    pub vocab: i32,
+    /// fraction of requests cancelled at a random mid-run tick
+    pub cancel_frac: f64,
+    /// fraction of requests given a deadline tight enough to expire
+    pub deadline_frac: f64,
+    /// explicit fault schedule; `None` seeds one from `seed`
+    pub plan: Option<FaultPlan>,
+    pub max_ticks: usize,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        ChaosConfig {
+            seed: 0,
+            requests: 24,
+            batch: 4,
+            capacity: 32,
+            page_size: 4,
+            pool_pages: 26, // 26 of 32: overcommitted, parks occur
+            vocab: 251,
+            cancel_frac: 0.15,
+            deadline_frac: 0.15,
+            plan: None,
+            max_ticks: 50_000,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct ChaosReport {
+    pub ticks: usize,
+    pub stats: ServeStats,
+    pub injected: FaultCounters,
+    /// pool pages not back on the free list after the run
+    pub leaked_pages: usize,
+    /// fault-held pages not released at the end (must be 0)
+    pub held_pages_end: usize,
+    pub invariant_violations: usize,
+    /// first few violation messages, for diagnosis
+    pub violations: Vec<String>,
+    /// completed-in-both requests whose streams differ from baseline
+    pub stream_mismatches: usize,
+    /// completed requests compared against the baseline
+    pub compared: usize,
+    pub fatal: Option<String>,
+}
+
+impl ChaosReport {
+    /// The chaos gate: no leaks, no invariant violations, no stream
+    /// drift, no fatal abort, and the run actually did something.
+    pub fn ok(&self) -> bool {
+        self.leaked_pages == 0
+            && self.held_pages_end == 0
+            && self.invariant_violations == 0
+            && self.stream_mismatches == 0
+            && self.fatal.is_none()
+            && self.stats.completed > 0
+    }
+
+    pub fn to_json(&self) -> Json {
+        let rec = &self.stats.recovery_ms;
+        let mean_rec = if rec.is_empty() {
+            0.0
+        } else {
+            rec.iter().sum::<u64>() as f64 / rec.len() as f64
+        };
+        Json::obj(vec![
+            ("ok", Json::Bool(self.ok())),
+            ("ticks", Json::num(self.ticks as f64)),
+            ("dispatches", Json::num(self.stats.dispatches as f64)),
+            ("dispatch_failures", Json::num(self.stats.dispatch_failures as f64)),
+            ("retries", Json::num(self.stats.retries as f64)),
+            ("recovered", Json::num(self.stats.recovered as f64)),
+            ("recovery_ms_mean", Json::num(mean_rec)),
+            ("recovery_ms_max", Json::num(rec.iter().max().copied().unwrap_or(0) as f64)),
+            ("restarts", Json::num(self.stats.restarts as f64)),
+            ("demotions_copy", Json::num(self.stats.demotions_copy as f64)),
+            ("demotions_contiguous", Json::num(self.stats.demotions_contiguous as f64)),
+            ("parked", Json::num(self.stats.parked as f64)),
+            ("load_sheds", Json::num(self.stats.load_sheds as f64)),
+            ("watchdog_trips", Json::num(self.stats.watchdog_trips as f64)),
+            ("stalls", Json::num(self.stats.stalls as f64)),
+            ("completed", Json::num(self.stats.completed as f64)),
+            ("cancelled", Json::num(self.stats.cancelled as f64)),
+            ("expired", Json::num(self.stats.expired as f64)),
+            ("failed", Json::num(self.stats.failed as f64)),
+            ("rejected", Json::num(self.stats.rejected as f64)),
+            ("injected_failures", Json::num(self.injected.failed_dispatches as f64)),
+            ("injected_slow", Json::num(self.injected.slowed_dispatches as f64)),
+            ("injected_holds", Json::num(self.injected.holds_applied as f64)),
+            ("pages_held", Json::num(self.injected.pages_held as f64)),
+            ("leaked_pages", Json::num(self.leaked_pages as f64)),
+            ("held_pages_end", Json::num(self.held_pages_end as f64)),
+            ("invariant_violations", Json::num(self.invariant_violations as f64)),
+            ("stream_mismatches", Json::num(self.stream_mismatches as f64)),
+            ("compared", Json::num(self.compared as f64)),
+            (
+                "fatal",
+                self.fatal.as_ref().map(|f| Json::str(f.as_str())).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+}
+
+fn workload(cfg: &ChaosConfig) -> Vec<ServeRequest> {
+    let mut rng = Pcg::seeded(cfg.seed ^ 0xc4a05);
+    (0..cfg.requests as u64)
+        .map(|id| {
+            let plen = 1 + rng.usize_below(8);
+            let prompt: Vec<i32> = (0..plen).map(|_| rng.below(cfg.vocab as u32) as i32).collect();
+            let max_new = 1 + rng.usize_below(10usize.min(cfg.capacity - plen));
+            ServeRequest::new(id, prompt, max_new)
+        })
+        .collect()
+}
+
+fn mock(cfg: &ChaosConfig) -> MockDispatcher {
+    MockDispatcher::paged(cfg.batch, cfg.capacity, cfg.vocab, cfg.page_size, cfg.pool_pages)
+        .with_donation()
+}
+
+/// Run the chaos scenario on the mock dispatcher.
+pub fn run_mock(cfg: &ChaosConfig) -> ChaosReport {
+    // -- baseline: same workload, untouched --------------------------------
+    let baseline = serve(mock(cfg), ServeConfig::default(), FaultPlan::none(), workload(cfg));
+    let baseline_streams: std::collections::HashMap<u64, Vec<i32>> =
+        baseline.results.iter().map(|r| (r.id, r.generated.clone())).collect();
+
+    // -- chaos run ---------------------------------------------------------
+    let mut rng = Pcg::seeded(cfg.seed ^ 0x57_0a11);
+    let mut requests = workload(cfg);
+    let total_hist: usize = requests.iter().map(|r| r.prompt.len() + r.max_new).sum();
+    let horizon = ((total_hist / cfg.batch.max(1)).max(16)) as u64;
+    let plan = cfg.plan.clone().unwrap_or_else(|| FaultPlan::seeded(cfg.seed, horizon));
+
+    // schedule cancellations at deterministic tick numbers and assign
+    // expirable deadlines to a slice of the workload
+    let mut cancels: Vec<(usize, super::CancelToken)> = Vec::new();
+    for req in requests.iter_mut() {
+        if rng.f64() < cfg.cancel_frac {
+            cancels.push((1 + rng.usize_below(40), req.cancel_token()));
+        } else if rng.f64() < cfg.deadline_frac {
+            // dispatch_ms is 10: 20..220ms dies after 2..22 dispatches
+            *req = req.clone().with_deadline(20 + rng.below(200) as u64);
+        }
+    }
+
+    let dispatcher = mock(cfg);
+    let table = dispatcher.shared_pages().expect("chaos mock is paged");
+    let mut server = Server::new(dispatcher, ServeConfig::default());
+    server.inject(plan);
+    for r in requests {
+        let _ = server.submit(r); // rejections count in stats
+    }
+
+    let mut ticks = 0usize;
+    let mut violations: Vec<String> = Vec::new();
+    loop {
+        for (at, token) in &cancels {
+            if *at == ticks {
+                token.cancel();
+            }
+        }
+        if matches!(server.tick(), Tick::Done) {
+            break;
+        }
+        for v in server.check_invariants() {
+            violations.push(format!("tick {ticks}: {v}"));
+        }
+        ticks += 1;
+        if ticks > cfg.max_ticks {
+            server.abort("chaos tick budget exhausted");
+            break;
+        }
+    }
+    let report = server.finish();
+    let injected = report.injected.unwrap_or_default();
+
+    // -- end-state checks --------------------------------------------------
+    let leaked_pages = table.pool_pages_total().saturating_sub(table.pages_free());
+    let held_pages_end = table.held_pages();
+    if !table.check_conservation() {
+        violations.push("end state: conservation violated".into());
+    }
+
+    let mut compared = 0usize;
+    let mut stream_mismatches = 0usize;
+    for r in &report.results {
+        if r.outcome != Outcome::Completed {
+            continue;
+        }
+        compared += 1;
+        match baseline_streams.get(&r.id) {
+            Some(b) if *b == r.generated => {}
+            _ => {
+                stream_mismatches += 1;
+                log::error!("chaos: request {} stream diverged from baseline", r.id);
+            }
+        }
+    }
+
+    let invariant_violations = violations.len();
+    violations.truncate(8);
+    ChaosReport {
+        ticks,
+        stats: report.stats,
+        injected,
+        leaked_pages,
+        held_pages_end,
+        invariant_violations,
+        violations,
+        stream_mismatches,
+        compared,
+        fatal: report.fatal,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chaos_default_run_is_clean() {
+        let report = run_mock(&ChaosConfig::default());
+        assert!(
+            report.ok(),
+            "leaked={} held={} violations={:?} mismatches={} fatal={:?}",
+            report.leaked_pages,
+            report.held_pages_end,
+            report.violations,
+            report.stream_mismatches,
+            report.fatal
+        );
+        // the default seeded plan actually exercised the recovery path
+        assert!(report.injected.failed_dispatches > 0, "no fault fired: {report:?}");
+        assert!(report.stats.recovered > 0, "nothing recovered: {report:?}");
+        assert!(report.compared > 0);
+    }
+
+    #[test]
+    fn chaos_is_deterministic_per_seed() {
+        let a = run_mock(&ChaosConfig::default());
+        let b = run_mock(&ChaosConfig::default());
+        assert_eq!(a.ticks, b.ticks);
+        assert_eq!(a.stats.dispatches, b.stats.dispatches);
+        assert_eq!(a.stats.completed, b.stats.completed);
+        assert_eq!(a.stats.recovery_ms, b.stats.recovery_ms);
+        assert_eq!(a.injected, b.injected);
+        let c = run_mock(&ChaosConfig { seed: 7, ..ChaosConfig::default() });
+        assert!(c.ok(), "seed 7: {c:?}");
+    }
+
+    #[test]
+    fn chaos_survives_a_heavy_storm() {
+        // every fault class at once, plus cancels and deadlines
+        let cfg = ChaosConfig {
+            seed: 3,
+            requests: 32,
+            plan: Some(
+                FaultPlan::parse(
+                    "fail@2;fail@3;fail@9;slow@5:900;slow@12:700;hold@1:12x150;hold@7:6x100",
+                )
+                .unwrap(),
+            ),
+            cancel_frac: 0.25,
+            deadline_frac: 0.25,
+            ..ChaosConfig::default()
+        };
+        let report = run_mock(&cfg);
+        assert!(
+            report.ok(),
+            "leaked={} violations={:?} mismatches={} fatal={:?}",
+            report.leaked_pages,
+            report.violations,
+            report.stream_mismatches,
+            report.fatal
+        );
+        assert!(report.stats.watchdog_trips >= 2);
+        assert!(report.injected.holds_applied == 2);
+        assert_eq!(report.injected.pages_released, report.injected.pages_held);
+    }
+
+    #[test]
+    fn report_json_shape_is_stable() {
+        let report = run_mock(&ChaosConfig { requests: 8, ..ChaosConfig::default() });
+        let j = report.to_json();
+        for key in [
+            "ok",
+            "recovered",
+            "leaked_pages",
+            "invariant_violations",
+            "stream_mismatches",
+            "completed",
+        ] {
+            assert!(j.get(key).is_some(), "missing key {key}");
+        }
+        assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(true));
+    }
+}

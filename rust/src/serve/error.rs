@@ -1,0 +1,171 @@
+//! The serving error taxonomy.
+//!
+//! The serving path distinguishes *transient* failures — a dispatch the
+//! retry/degradation ladder can recover (PJRT hiccup, pool pressure,
+//! watchdog overrun, a donated cache consumed by a failed dispatch) —
+//! from *fatal* ones (corrupt artifacts, bad requests), which no retry
+//! fixes. Everything still travels as `anyhow::Error` (the crate-wide
+//! convention; the trainer and CLI layers stay untouched), with one
+//! `ServeError` attached as typed context at the error site:
+//! `ServeError::of(&err)` digs it back out of the chain and
+//! `transient()`/`fatal()` drive the ladder in `serve::Server`.
+
+use crate::kvcache::PagePressure;
+
+/// Typed serving errors. `Display` carries the operator-facing message;
+/// the variant carries the classification.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// An engine dispatch failed (PJRT execute / output adoption).
+    Dispatch { program: String },
+    /// A dispatch overran the per-dispatch watchdog budget.
+    Watchdog { program: String, elapsed_ms: u64, budget_ms: u64 },
+    /// A page pool could not back a slot (see `kvcache::PagePressure`).
+    PoolExhausted { slot: usize, kind: String },
+    /// A donated dispatch consumed the cache buffers and then failed;
+    /// the session must reset + replay before stepping again.
+    CacheConsumed,
+    /// The bounded admission queue refused a request.
+    QueueFull { cap: usize },
+    /// The request's deadline passed before it finished.
+    DeadlineExceeded { id: u64 },
+    /// The client cancelled the request.
+    Cancelled { id: u64 },
+    /// An artifact file could not be read (or was corrupt on disk).
+    Artifact { path: String },
+    /// An artifact parsed/compiled to nothing usable.
+    Compile { path: String },
+    /// The manifest itself is unusable.
+    Manifest { why: String },
+    /// The request can never be served (empty prompt budget, bad arity).
+    InvalidRequest { why: String },
+}
+
+impl ServeError {
+    /// Whether the retry/degradation ladder may recover this error.
+    pub fn transient(&self) -> bool {
+        matches!(
+            self,
+            ServeError::Dispatch { .. }
+                | ServeError::Watchdog { .. }
+                | ServeError::PoolExhausted { .. }
+                | ServeError::CacheConsumed
+                | ServeError::QueueFull { .. }
+        )
+    }
+
+    pub fn fatal(&self) -> bool {
+        !self.transient()
+    }
+
+    /// Dig the typed error out of an `anyhow` chain (context layers
+    /// included), if one was attached at the error site.
+    pub fn of(err: &anyhow::Error) -> Option<&ServeError> {
+        err.chain().find_map(|c| c.downcast_ref::<ServeError>())
+    }
+
+    /// Conservative classification of an arbitrary error: transient only
+    /// when a typed `ServeError` in the chain says so — an unknown error
+    /// is never retried blindly.
+    pub fn is_transient(err: &anyhow::Error) -> bool {
+        Self::of(err).map(|e| e.transient()).unwrap_or(false)
+    }
+}
+
+impl From<PagePressure> for ServeError {
+    fn from(p: PagePressure) -> ServeError {
+        ServeError::PoolExhausted { slot: p.slot, kind: p.kind }
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Dispatch { program } => {
+                write!(f, "dispatch of '{program}' failed")
+            }
+            ServeError::Watchdog { program, elapsed_ms, budget_ms } => write!(
+                f,
+                "dispatch of '{program}' overran the watchdog: {elapsed_ms}ms > {budget_ms}ms"
+            ),
+            ServeError::PoolExhausted { slot, kind } => {
+                write!(f, "page pool of kind '{kind}' exhausted mapping slot {slot}")
+            }
+            ServeError::CacheConsumed => {
+                write!(f, "KV-cache consumed by a failed donated dispatch")
+            }
+            ServeError::QueueFull { cap } => {
+                write!(f, "admission queue full ({cap} requests)")
+            }
+            ServeError::DeadlineExceeded { id } => {
+                write!(f, "request {id} missed its deadline")
+            }
+            ServeError::Cancelled { id } => write!(f, "request {id} cancelled"),
+            ServeError::Artifact { path } => write!(f, "artifact unreadable: {path}"),
+            ServeError::Compile { path } => write!(f, "artifact failed to compile: {path}"),
+            ServeError::Manifest { why } => write!(f, "manifest unusable: {why}"),
+            ServeError::InvalidRequest { why } => write!(f, "invalid request: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use anyhow::Context;
+
+    #[test]
+    fn classification_splits_transient_from_fatal() {
+        let transient = [
+            ServeError::Dispatch { program: "decode_step".into() },
+            ServeError::Watchdog { program: "decode_step".into(), elapsed_ms: 900, budget_ms: 500 },
+            ServeError::PoolExhausted { slot: 3, kind: "dense".into() },
+            ServeError::CacheConsumed,
+            ServeError::QueueFull { cap: 8 },
+        ];
+        let fatal = [
+            ServeError::DeadlineExceeded { id: 1 },
+            ServeError::Cancelled { id: 2 },
+            ServeError::Artifact { path: "a.hlo".into() },
+            ServeError::Compile { path: "a.hlo".into() },
+            ServeError::Manifest { why: "no programs".into() },
+            ServeError::InvalidRequest { why: "empty budget".into() },
+        ];
+        for e in &transient {
+            assert!(e.transient() && !e.fatal(), "{e}");
+        }
+        for e in &fatal {
+            assert!(e.fatal() && !e.transient(), "{e}");
+        }
+    }
+
+    #[test]
+    fn of_survives_anyhow_context_layers() {
+        let base = anyhow::Error::new(ServeError::Dispatch { program: "decode_step".into() });
+        let wrapped = base.context("retry 2 of 3").context("[micro_mosa] serving request 7");
+        let found = ServeError::of(&wrapped).expect("typed error in the chain");
+        assert_eq!(*found, ServeError::Dispatch { program: "decode_step".into() });
+        assert!(ServeError::is_transient(&wrapped));
+        // a ServeError attached AS context (not as the root) is found too
+        let res: anyhow::Result<()> = Err(anyhow::anyhow!("pjrt: device lost"))
+            .context(ServeError::Dispatch { program: "prefill".into() });
+        assert!(ServeError::is_transient(&res.unwrap_err()));
+    }
+
+    #[test]
+    fn unknown_errors_are_never_transient() {
+        let plain = anyhow::anyhow!("some stringly error");
+        assert!(ServeError::of(&plain).is_none());
+        assert!(!ServeError::is_transient(&plain));
+    }
+
+    #[test]
+    fn page_pressure_converts_to_pool_exhausted() {
+        let p = PagePressure { slot: 5, kind: "dense".into() };
+        let e: ServeError = p.into();
+        assert_eq!(e, ServeError::PoolExhausted { slot: 5, kind: "dense".into() });
+        assert!(e.transient());
+    }
+}

@@ -1,0 +1,395 @@
+//! Deterministic fault injection for the serving path.
+//!
+//! A [`FaultPlan`] is a *schedule*, not a probability: it names the
+//! exact dispatch sequence numbers to fail, slow down (against the
+//! server's per-dispatch watchdog), or starve of pool pages, and the
+//! exact artifact reads to corrupt. Schedules come from a seed
+//! ([`FaultPlan::seeded`]) or a compact spec string
+//! ([`FaultPlan::parse`], the `mosa chaos --plan` format):
+//!
+//! ```text
+//! fail@3;fail@7;slow@5:800;hold@2:6x300;corrupt@0:truncate
+//! ```
+//!
+//! - `fail@N` — dispatch N returns a transient engine error;
+//! - `slow@N:MS` — dispatch N takes MS extra milliseconds (tripping the
+//!   watchdog when MS exceeds its budget);
+//! - `hold@N:PxMS` — at dispatch N, seize P free pages from the pools
+//!   for MS milliseconds (the serving loop sees genuine `PagePressure`);
+//! - `corrupt@N:truncate|garble` — the Nth artifact read through the
+//!   engine's fault hook comes back truncated / byte-garbled.
+//!
+//! The [`FaultInjector`] executes a plan against the server's clock and
+//! counts what it did, so the chaos harness can assert "every scheduled
+//! fault actually fired" next to the recovery invariants.
+
+use crate::kvcache::SharedPageTable;
+use crate::util::rng::Pcg;
+use anyhow::{bail, Result};
+
+/// What the injector does to one dispatch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchFault {
+    /// the dispatch fails with a transient engine error
+    Fail,
+    /// the dispatch takes this many extra milliseconds
+    Slow(u64),
+}
+
+/// One scheduled pool-starvation window.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PoolHold {
+    pub at_dispatch: u64,
+    pub pages: usize,
+    pub hold_ms: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CorruptMode {
+    /// drop the second half of the file
+    Truncate,
+    /// overwrite a byte span mid-file with garbage
+    Garble,
+}
+
+/// One scheduled artifact-read corruption (counted per read through the
+/// engine's fault hook, 0-based).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactFault {
+    pub nth_read: u64,
+    pub mode: CorruptMode,
+}
+
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub fail_dispatches: Vec<u64>,
+    pub slow_dispatches: Vec<(u64, u64)>,
+    pub pool_holds: Vec<PoolHold>,
+    pub artifact_faults: Vec<ArtifactFault>,
+}
+
+impl FaultPlan {
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.fail_dispatches.is_empty()
+            && self.slow_dispatches.is_empty()
+            && self.pool_holds.is_empty()
+            && self.artifact_faults.is_empty()
+    }
+
+    /// A seeded random schedule over a `horizon` of dispatches with
+    /// explicit fault counts — the chaos harness's workload generator.
+    /// `slow_ms` should exceed the server's watchdog budget when the
+    /// schedule is meant to trip it.
+    #[allow(clippy::too_many_arguments)]
+    pub fn seeded_with(
+        seed: u64,
+        horizon: u64,
+        n_fail: usize,
+        n_slow: usize,
+        n_hold: usize,
+        slow_ms: u64,
+        hold_pages: usize,
+        hold_ms: u64,
+    ) -> FaultPlan {
+        let mut rng = Pcg::new(seed ^ 0xfa01_7ab1e, 0x5eed);
+        let h = horizon.max(1) as u32;
+        let mut pick = |n: usize| -> Vec<u64> {
+            let mut v: Vec<u64> = (0..n).map(|_| rng.below(h) as u64).collect();
+            v.sort_unstable();
+            v.dedup();
+            v
+        };
+        let fail_dispatches = pick(n_fail);
+        let slow_at = pick(n_slow);
+        let hold_at = pick(n_hold);
+        FaultPlan {
+            fail_dispatches,
+            slow_dispatches: slow_at.into_iter().map(|s| (s, slow_ms)).collect(),
+            pool_holds: hold_at
+                .into_iter()
+                .map(|s| PoolHold { at_dispatch: s, pages: hold_pages, hold_ms })
+                .collect(),
+            artifact_faults: Vec::new(),
+        }
+    }
+
+    /// Default chaos intensity: a handful of each dispatch-level fault
+    /// across the horizon.
+    pub fn seeded(seed: u64, horizon: u64) -> FaultPlan {
+        let n = (horizon / 16).clamp(1, 8) as usize;
+        Self::seeded_with(seed, horizon, n, n, n.min(2), 900, 4, 120)
+    }
+
+    /// Parse the compact spec format (see the module docs).
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for part in spec.split(';').map(str::trim).filter(|p| !p.is_empty()) {
+            let (verb, rest) = part
+                .split_once('@')
+                .ok_or_else(|| anyhow::anyhow!("fault '{part}': expected verb@N[...]"))?;
+            match verb {
+                "fail" => plan.fail_dispatches.push(rest.parse()?),
+                "slow" => {
+                    let (n, ms) = rest
+                        .split_once(':')
+                        .ok_or_else(|| anyhow::anyhow!("slow '{part}': expected slow@N:MS"))?;
+                    plan.slow_dispatches.push((n.parse()?, ms.parse()?));
+                }
+                "hold" => {
+                    let (n, pm) = rest
+                        .split_once(':')
+                        .ok_or_else(|| anyhow::anyhow!("hold '{part}': expected hold@N:PxMS"))?;
+                    let (p, ms) = pm
+                        .split_once('x')
+                        .ok_or_else(|| anyhow::anyhow!("hold '{part}': expected hold@N:PxMS"))?;
+                    plan.pool_holds.push(PoolHold {
+                        at_dispatch: n.parse()?,
+                        pages: p.parse()?,
+                        hold_ms: ms.parse()?,
+                    });
+                }
+                "corrupt" => {
+                    let (n, mode) = rest.split_once(':').unwrap_or((rest, "truncate"));
+                    let mode = match mode {
+                        "truncate" => CorruptMode::Truncate,
+                        "garble" => CorruptMode::Garble,
+                        m => bail!("corrupt '{part}': unknown mode '{m}'"),
+                    };
+                    plan.artifact_faults.push(ArtifactFault { nth_read: n.parse()?, mode });
+                }
+                v => bail!("unknown fault verb '{v}' in '{part}'"),
+            }
+        }
+        plan.fail_dispatches.sort_unstable();
+        plan.slow_dispatches.sort_unstable();
+        Ok(plan)
+    }
+}
+
+/// What the injector actually did (asserted by the chaos harness).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultCounters {
+    pub failed_dispatches: usize,
+    pub slowed_dispatches: usize,
+    pub holds_applied: usize,
+    pub pages_held: usize,
+    pub pages_released: usize,
+    pub artifacts_corrupted: usize,
+}
+
+/// Executes a [`FaultPlan`] against the serving loop.
+#[derive(Debug)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    hold_applied: Vec<bool>,
+    /// expiry times (server clock, ms) of the active holds; the pages
+    /// return when the LAST active hold expires (`PageTable` stashes
+    /// held pages in one bin)
+    active_holds: Vec<u64>,
+    pub counters: FaultCounters,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> FaultInjector {
+        let hold_applied = vec![false; plan.pool_holds.len()];
+        FaultInjector { plan, hold_applied, active_holds: Vec::new(), counters: FaultCounters::default() }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// The fault (if any) scheduled for dispatch `seq`.
+    pub fn on_dispatch(&mut self, seq: u64) -> Option<DispatchFault> {
+        if self.plan.fail_dispatches.contains(&seq) {
+            self.counters.failed_dispatches += 1;
+            return Some(DispatchFault::Fail);
+        }
+        if let Some(&(_, ms)) = self.plan.slow_dispatches.iter().find(|&&(s, _)| s == seq) {
+            self.counters.slowed_dispatches += 1;
+            return Some(DispatchFault::Slow(ms));
+        }
+        None
+    }
+
+    /// Apply due pool holds / release expired ones. Call before every
+    /// page preparation with the server clock and dispatch counter.
+    pub fn tick_pool(&mut self, now_ms: u64, dispatch_seq: u64, table: &SharedPageTable) {
+        for (i, h) in self.plan.pool_holds.iter().enumerate() {
+            if !self.hold_applied[i] && dispatch_seq >= h.at_dispatch {
+                self.hold_applied[i] = true;
+                let took = table.hold_free_pages(h.pages);
+                self.counters.holds_applied += 1;
+                self.counters.pages_held += took;
+                self.active_holds.push(now_ms.saturating_add(h.hold_ms));
+            }
+        }
+        if !self.active_holds.is_empty() {
+            self.active_holds.retain(|&until| until > now_ms);
+            if self.active_holds.is_empty() {
+                self.counters.pages_released += table.release_held();
+            }
+        }
+    }
+
+    /// Force-release any still-active holds (end of run): the harness
+    /// must not count injected holds as leaks.
+    pub fn release_all_holds(&mut self, table: &SharedPageTable) {
+        self.active_holds.clear();
+        self.counters.pages_released += table.release_held();
+    }
+}
+
+/// Corrupt `text` according to `mode` — deterministic, content-derived.
+pub fn corrupt_text(text: &str, mode: CorruptMode) -> String {
+    match mode {
+        CorruptMode::Truncate => text[..text.len() / 2].to_string(),
+        CorruptMode::Garble => {
+            let mut bytes = text.as_bytes().to_vec();
+            let start = bytes.len() / 3;
+            let end = (start + 64).min(bytes.len());
+            for b in &mut bytes[start..end] {
+                *b = b'#';
+            }
+            String::from_utf8_lossy(&bytes).into_owned()
+        }
+    }
+}
+
+/// An artifact-read fault hook for `Engine::set_artifact_hook`: corrupts
+/// the scheduled reads, passes the rest through untouched. Owns its own
+/// read counter (0-based, counted per hooked read).
+pub fn artifact_hook(
+    faults: Vec<ArtifactFault>,
+) -> impl FnMut(&std::path::Path, String) -> String + Send {
+    let mut reads: u64 = 0;
+    move |path, text| {
+        let n = reads;
+        reads += 1;
+        match faults.iter().find(|f| f.nth_read == n) {
+            Some(f) => {
+                log::warn!("fault injection: corrupting artifact read #{n} ({})", path.display());
+                corrupt_text(&text, f.mode)
+            }
+            None => text,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::{PageKind, PageLayout, PageTable};
+
+    fn table(pool: usize) -> SharedPageTable {
+        SharedPageTable::new(PageTable::new(
+            PageLayout {
+                page_size: 4,
+                pages_per_slot: 4,
+                kinds: vec![PageKind {
+                    kind: "dense".into(),
+                    slots: 16,
+                    pages_per_slot: 4,
+                    row_offset: 0,
+                    pool_pages: pool,
+                    lazy: true,
+                }],
+            },
+            2,
+        ))
+    }
+
+    #[test]
+    fn parse_roundtrips_the_spec_format() {
+        let plan = FaultPlan::parse("fail@3; fail@7;slow@5:800;hold@2:6x300;corrupt@0:truncate")
+            .unwrap();
+        assert_eq!(plan.fail_dispatches, vec![3, 7]);
+        assert_eq!(plan.slow_dispatches, vec![(5, 800)]);
+        assert_eq!(
+            plan.pool_holds,
+            vec![PoolHold { at_dispatch: 2, pages: 6, hold_ms: 300 }]
+        );
+        assert_eq!(
+            plan.artifact_faults,
+            vec![ArtifactFault { nth_read: 0, mode: CorruptMode::Truncate }]
+        );
+        assert!(FaultPlan::parse("explode@2").is_err());
+        assert!(FaultPlan::parse("slow@2").is_err());
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn seeded_plans_are_reproducible() {
+        let a = FaultPlan::seeded(9, 64);
+        let b = FaultPlan::seeded(9, 64);
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+        let c = FaultPlan::seeded(10, 64);
+        assert_ne!(a, c);
+        // every scheduled dispatch sits inside the horizon
+        assert!(a.fail_dispatches.iter().all(|&s| s < 64));
+        assert!(a.slow_dispatches.iter().all(|&(s, _)| s < 64));
+    }
+
+    #[test]
+    fn injector_fires_each_fault_once_and_counts() {
+        let plan = FaultPlan::parse("fail@1;slow@2:700").unwrap();
+        let mut inj = FaultInjector::new(plan);
+        assert_eq!(inj.on_dispatch(0), None);
+        assert_eq!(inj.on_dispatch(1), Some(DispatchFault::Fail));
+        assert_eq!(inj.on_dispatch(2), Some(DispatchFault::Slow(700)));
+        assert_eq!(inj.on_dispatch(3), None);
+        assert_eq!(inj.counters.failed_dispatches, 1);
+        assert_eq!(inj.counters.slowed_dispatches, 1);
+    }
+
+    #[test]
+    fn pool_holds_apply_and_expire_on_the_clock() {
+        let t = table(8);
+        let plan = FaultPlan::parse("hold@2:6x100").unwrap();
+        let mut inj = FaultInjector::new(plan);
+        inj.tick_pool(0, 0, &t);
+        assert_eq!(t.held_pages(), 0);
+        // dispatch 2 arrives: 6 of 8 pages seized
+        inj.tick_pool(10, 2, &t);
+        assert_eq!(t.held_pages(), 6);
+        assert_eq!(t.pages_free(), 2);
+        assert!(t.check_conservation());
+        // before expiry the hold stays
+        inj.tick_pool(100, 3, &t);
+        assert_eq!(t.held_pages(), 6);
+        // past expiry (10 + 100) the pages return
+        inj.tick_pool(111, 4, &t);
+        assert_eq!(t.held_pages(), 0);
+        assert_eq!(t.pages_free(), 8);
+        assert_eq!(inj.counters.holds_applied, 1);
+        assert_eq!(inj.counters.pages_held, 6);
+        assert_eq!(inj.counters.pages_released, 6);
+        assert!(t.check_conservation());
+    }
+
+    #[test]
+    fn corrupt_text_modes_are_deterministic() {
+        let src = "HloModule decode_step\nENTRY main { ... }\n".repeat(8);
+        let t1 = corrupt_text(&src, CorruptMode::Truncate);
+        assert_eq!(t1.len(), src.len() / 2);
+        let g1 = corrupt_text(&src, CorruptMode::Garble);
+        assert_eq!(g1, corrupt_text(&src, CorruptMode::Garble));
+        assert_eq!(g1.len(), src.len());
+        assert_ne!(g1, src);
+    }
+
+    #[test]
+    fn artifact_hook_corrupts_only_scheduled_reads() {
+        let mut hook =
+            artifact_hook(vec![ArtifactFault { nth_read: 1, mode: CorruptMode::Truncate }]);
+        let p = std::path::Path::new("x.hlo");
+        assert_eq!(hook(p, "abcd".into()), "abcd"); // read 0: untouched
+        assert_eq!(hook(p, "abcd".into()), "ab"); // read 1: truncated
+        assert_eq!(hook(p, "abcd".into()), "abcd"); // read 2: untouched
+    }
+}

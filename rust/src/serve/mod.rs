@@ -1,0 +1,1742 @@
+//! Request-lifecycle serving: deadlines, cancellation, retries, and a
+//! degradation ladder over the continuous batcher.
+//!
+//! `decode::generate` answers "given these requests, stream them to
+//! completion"; this module answers the serving questions around it:
+//! what if the client disconnects, the deadline passes, the queue is
+//! full, a dispatch fails, the pool is starved? The pieces:
+//!
+//! - [`ServeRequest`] / [`CancelToken`] — a prompt plus a relative
+//!   deadline and a shareable cancellation flag;
+//! - [`AdmissionQueue`] — bounded; refuses with
+//!   [`ServeError::QueueFull`] and pops earliest-deadline-first with
+//!   FIFO tie-break, reaping cancelled/expired entries before they ever
+//!   occupy a slot;
+//! - [`SlotGuard`] — RAII page release for an occupied slot: dropping
+//!   the guard (scope exit, panic unwind, an abandoned server) returns
+//!   the slot's pages; releases are idempotent so the guard composes
+//!   with the batcher's own park/retire/Drop releases;
+//! - [`Dispatcher`] — the device boundary. [`SessionDispatcher`] wraps
+//!   a real `DecodeSession` + `Engine`; [`MockDispatcher`] is an
+//!   engine-free twin whose sampled token is a pure hash of the slot's
+//!   dispatched history — deterministic, park/replay-invariant, and
+//!   able to emulate donation (a failed dispatch consumes the cache)
+//!   so the whole ladder runs without artifacts;
+//! - [`Server`] — the stepwise loop. Each [`Server::tick`] reaps
+//!   cancellations and deadlines, admits from the queue (demand-debited
+//!   against the page pools), backs pages (parking victims under
+//!   pressure), and runs exactly one dispatch attempt — so a chaos
+//!   harness can check invariants between every event;
+//! - the ladder, on a failed dispatch: bounded seeded-jitter retries
+//!   ([`RetryPolicy`]) → restart after a consumed donated cache (reset
+//!   + park-all + deterministic replay) → demote donated→copied →
+//!   demote paged→contiguous → shed one victim → fail the run. Every
+//!   error travels as `anyhow` with a typed [`ServeError`] attached at
+//!   the site; `ServeError::of` classifies it from anywhere up-stack.
+//!
+//! Time is a logical clock: every dispatch attempt costs
+//! `ServeConfig::dispatch_ms` (plus injected slowdowns and backoff
+//! sleeps), deadlines and fault windows are measured against it, and a
+//! dispatch whose cost exceeds `watchdog_ms` is treated as a failed
+//! attempt (the rewind + re-dispatch is idempotent: same token at the
+//! same position rewrites the same cache rows). Under greedy sampling
+//! the generated streams are bit-identical with and without faults for
+//! every request that completes in both runs — the chaos harness's
+//! central assertion.
+
+pub mod chaos;
+pub mod error;
+pub mod fault;
+pub mod retry;
+
+pub use error::ServeError;
+pub use fault::{
+    artifact_hook, corrupt_text, ArtifactFault, CorruptMode, DispatchFault, FaultCounters,
+    FaultInjector, FaultPlan, PoolHold,
+};
+pub use retry::{Backoff, RetryPolicy};
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::decode::{
+    sample_row_u, ContinuousBatcher, DecodeSession, SamplePolicy, SampleScratch, SeqRequest,
+    SlotPlan,
+};
+use crate::kvcache::{PagePressure, SharedPageTable};
+use crate::runtime::engine::{fill_vec_f32, Engine};
+use crate::util::rng::Pcg;
+
+// ---------------------------------------------------------------------------
+// requests, cancellation, results
+// ---------------------------------------------------------------------------
+
+/// A shareable cancellation flag: the client keeps one clone, the
+/// server polls it between dispatches. Cancelling is a relaxed store —
+/// the server observes it at the next tick boundary.
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken {
+    flag: Arc<AtomicBool>,
+}
+
+impl CancelToken {
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::Relaxed);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.flag.load(Ordering::Relaxed)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ServeRequest {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+    /// deadline relative to submission, in server-clock ms
+    pub deadline_ms: Option<u64>,
+    pub cancel: CancelToken,
+}
+
+impl ServeRequest {
+    pub fn new(id: u64, prompt: Vec<i32>, max_new: usize) -> ServeRequest {
+        ServeRequest { id, prompt, max_new, deadline_ms: None, cancel: CancelToken::new() }
+    }
+
+    pub fn with_deadline(mut self, ms: u64) -> ServeRequest {
+        self.deadline_ms = Some(ms);
+        self
+    }
+
+    /// The client's handle for cancelling this request later.
+    pub fn cancel_token(&self) -> CancelToken {
+        self.cancel.clone()
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    Completed,
+    Cancelled,
+    Expired,
+    Failed,
+}
+
+/// Per-request terminal record. Cancelled/expired requests keep the
+/// tokens generated before the cut; failed ones carry the error.
+#[derive(Debug, Clone)]
+pub struct RequestResult {
+    pub id: u64,
+    pub outcome: Outcome,
+    pub generated: Vec<i32>,
+    pub error: Option<String>,
+    /// server-clock time the request left the system
+    pub finished_ms: u64,
+}
+
+// ---------------------------------------------------------------------------
+// bounded deadline-aware admission queue
+// ---------------------------------------------------------------------------
+
+/// One queued request with its admission metadata.
+#[derive(Debug)]
+pub struct Queued {
+    pub req: ServeRequest,
+    pub submitted_ms: u64,
+    /// absolute deadline on the server clock
+    pub deadline_abs: Option<u64>,
+    seq: u64,
+}
+
+#[derive(Debug)]
+pub enum Popped {
+    Empty,
+    /// a queued request died (cancelled/expired) before admission
+    Dropped(RequestResult),
+    Ready(Queued),
+}
+
+/// Bounded admission: `push` refuses beyond `cap` with
+/// [`ServeError::QueueFull`] (transient — the client may retry); `pop`
+/// yields earliest-deadline-first, FIFO among equal (or absent)
+/// deadlines, so a tight deadline can overtake the line but never
+/// starve it.
+#[derive(Debug)]
+pub struct AdmissionQueue {
+    cap: usize,
+    entries: Vec<Queued>,
+    seq: u64,
+}
+
+impl AdmissionQueue {
+    pub fn new(cap: usize) -> AdmissionQueue {
+        AdmissionQueue { cap: cap.max(1), entries: Vec::new(), seq: 0 }
+    }
+
+    pub fn push(&mut self, req: ServeRequest, now_ms: u64) -> Result<(), ServeError> {
+        if self.entries.len() >= self.cap {
+            return Err(ServeError::QueueFull { cap: self.cap });
+        }
+        let deadline_abs = req.deadline_ms.map(|d| now_ms.saturating_add(d));
+        self.entries.push(Queued { req, submitted_ms: now_ms, deadline_abs, seq: self.seq });
+        self.seq += 1;
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Pop the next admissible request; cancelled/expired entries come
+    /// back as `Dropped` terminal records instead.
+    pub fn pop(&mut self, now_ms: u64) -> Popped {
+        let at = self
+            .entries
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, q)| (q.deadline_abs.unwrap_or(u64::MAX), q.seq))
+            .map(|(i, _)| i);
+        let Some(at) = at else { return Popped::Empty };
+        let q = self.entries.swap_remove(at);
+        if q.req.cancel.is_cancelled() {
+            return Popped::Dropped(RequestResult {
+                id: q.req.id,
+                outcome: Outcome::Cancelled,
+                generated: Vec::new(),
+                error: None,
+                finished_ms: now_ms,
+            });
+        }
+        if q.deadline_abs.map_or(false, |d| d <= now_ms) {
+            return Popped::Dropped(RequestResult {
+                id: q.req.id,
+                outcome: Outcome::Expired,
+                generated: Vec::new(),
+                error: None,
+                finished_ms: now_ms,
+            });
+        }
+        Popped::Ready(q)
+    }
+
+    /// Remove every cancelled/expired entry without admitting anything.
+    pub fn reap(&mut self, now_ms: u64) -> Vec<RequestResult> {
+        let mut dead = Vec::new();
+        self.entries.retain(|q| {
+            let outcome = if q.req.cancel.is_cancelled() {
+                Some(Outcome::Cancelled)
+            } else if q.deadline_abs.map_or(false, |d| d <= now_ms) {
+                Some(Outcome::Expired)
+            } else {
+                None
+            };
+            match outcome {
+                None => true,
+                Some(o) => {
+                    dead.push(RequestResult {
+                        id: q.req.id,
+                        outcome: o,
+                        generated: Vec::new(),
+                        error: None,
+                        finished_ms: now_ms,
+                    });
+                    false
+                }
+            }
+        });
+        dead
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RAII slot guard
+// ---------------------------------------------------------------------------
+
+/// RAII page release for one batcher slot. Armed while a request
+/// occupies the slot; dropping the guard returns the slot's pages to
+/// the pools. Because `release_slot` is idempotent (a slot with nothing
+/// mapped frees nothing), the guard safely overlaps the batcher's own
+/// releases — it exists so that *no* exit path (panic unwind through
+/// `tick`, an abandoned `Server`, a cancellation race) can strand pool
+/// pages behind a dead request.
+#[derive(Debug)]
+pub struct SlotGuard {
+    table: Option<SharedPageTable>,
+    slot: usize,
+    armed: bool,
+}
+
+impl SlotGuard {
+    pub fn new(table: Option<SharedPageTable>, slot: usize) -> SlotGuard {
+        SlotGuard { table, slot, armed: true }
+    }
+
+    /// Disarm without releasing (ownership handed off cleanly).
+    pub fn disarm(&mut self) {
+        self.armed = false;
+    }
+
+    /// Release now and disarm; returns pages freed.
+    pub fn release_now(&mut self) -> usize {
+        self.armed = false;
+        self.table.as_ref().map(|t| t.release_slot(self.slot)).unwrap_or(0)
+    }
+}
+
+impl Drop for SlotGuard {
+    fn drop(&mut self) {
+        if self.armed {
+            if let Some(t) = &self.table {
+                t.release_slot(self.slot);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the device boundary
+// ---------------------------------------------------------------------------
+
+/// What the server needs from the device side. One dispatch = one
+/// decode step over every slot; errors should carry a typed
+/// [`ServeError`] in their `anyhow` chain so the ladder can classify.
+pub trait Dispatcher {
+    fn batch(&self) -> usize;
+    fn capacity(&self) -> usize;
+    fn program_name(&self) -> &str;
+    /// The shared page table (paged dispatchers); `None` = contiguous.
+    fn shared_pages(&self) -> Option<SharedPageTable>;
+    /// Back the next dispatch's pages from the batcher plan.
+    fn prepare(&mut self, _plan: &[SlotPlan]) -> std::result::Result<(), PagePressure> {
+        Ok(())
+    }
+    /// Run one decode dispatch; returns one sampled token per slot.
+    fn dispatch(
+        &mut self,
+        tokens: &[i32],
+        pos: &[i32],
+        reset: &[i32],
+        uniforms: &[f32],
+    ) -> Result<Vec<i32>>;
+    /// Rebuild an empty cache (every slot's pages released) — the
+    /// restart rung. The server replays evicted sequences afterwards.
+    fn reset(&mut self) -> Result<()>;
+    /// Called after any failed dispatch attempt (injected or real), so
+    /// an implementation can mirror device-side consequences (the mock
+    /// emulates donation consuming the cache).
+    fn on_dispatch_failed(&mut self) {}
+    /// Ladder rung: donated → copied stepping. `false` = unsupported
+    /// or already applied.
+    fn demote_copy(&mut self) -> bool {
+        false
+    }
+    /// Ladder rung: paged → contiguous cache. `Ok(false)` = unsupported
+    /// or already applied.
+    fn demote_contiguous(&mut self) -> Result<bool> {
+        Ok(false)
+    }
+    /// Real elapsed ms of the last dispatch (0 for logical-time mocks);
+    /// added to the logical cost for the watchdog.
+    fn elapsed_ms_hint(&self) -> u64 {
+        0
+    }
+}
+
+/// Engine-free deterministic dispatcher: the sampled token for a slot
+/// is a hash of the slot's dispatched history, so it depends only on
+/// the token stream — not the slot index, not the dispatch count —
+/// making streams invariant under park/replay, retries, and slot
+/// reassignment. In paged mode it verifies, like a real device would,
+/// that every active slot's pages were prepared through its position.
+/// With donation emulation on, a failed dispatch consumes the cache:
+/// the next dispatch errors `CacheConsumed` until `reset`.
+pub struct MockDispatcher {
+    batch: usize,
+    capacity: usize,
+    vocab: i32,
+    page_size: usize,
+    table: Option<SharedPageTable>,
+    hist: Vec<Vec<i32>>,
+    last_plan: Vec<SlotPlan>,
+    donated: bool,
+    consumed: bool,
+}
+
+impl MockDispatcher {
+    pub fn contiguous(batch: usize, capacity: usize, vocab: i32) -> MockDispatcher {
+        MockDispatcher {
+            batch,
+            capacity,
+            vocab: vocab.max(2),
+            page_size: 0,
+            table: None,
+            hist: vec![Vec::new(); batch],
+            last_plan: Vec::new(),
+            donated: false,
+            consumed: false,
+        }
+    }
+
+    /// A paged mock over one lazy pool of `pool_pages` pages of
+    /// `page_size` positions each (overcommit by passing fewer pages
+    /// than `batch × ceil(capacity / page_size)`).
+    pub fn paged(
+        batch: usize,
+        capacity: usize,
+        vocab: i32,
+        page_size: usize,
+        pool_pages: usize,
+    ) -> MockDispatcher {
+        use crate::kvcache::{PageKind, PageLayout, PageTable};
+        let pps = capacity.div_ceil(page_size);
+        assert!(pool_pages >= pps, "pool must fit one full-capacity sequence");
+        let layout = PageLayout {
+            page_size,
+            pages_per_slot: pps,
+            kinds: vec![PageKind {
+                kind: "dense".into(),
+                slots: 16,
+                pages_per_slot: pps,
+                row_offset: 0,
+                pool_pages,
+                lazy: true,
+            }],
+        };
+        let table = SharedPageTable::new(PageTable::new(layout, batch));
+        MockDispatcher { table: Some(table), page_size, ..Self::contiguous(batch, capacity, vocab) }
+    }
+
+    /// Emulate buffer donation: a failed dispatch consumes the cache.
+    pub fn with_donation(mut self) -> MockDispatcher {
+        self.donated = true;
+        self
+    }
+
+    fn token_for(hist: &[i32], vocab: i32) -> i32 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for &t in hist {
+            for b in t.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        }
+        (h % vocab as u64) as i32
+    }
+}
+
+impl Dispatcher for MockDispatcher {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn program_name(&self) -> &str {
+        "mock_decode_step"
+    }
+
+    fn shared_pages(&self) -> Option<SharedPageTable> {
+        self.table.clone()
+    }
+
+    fn prepare(&mut self, plan: &[SlotPlan]) -> std::result::Result<(), PagePressure> {
+        let Some(t) = &self.table else { return Ok(()) };
+        self.last_plan = plan.to_vec();
+        t.with(|pt| {
+            for (i, sp) in plan.iter().enumerate() {
+                if !sp.active || sp.reset {
+                    pt.release_slot(i);
+                }
+            }
+            for (i, sp) in plan.iter().enumerate() {
+                if sp.active {
+                    pt.ensure(i, sp.pos)?;
+                }
+            }
+            Ok(())
+        })
+    }
+
+    fn dispatch(
+        &mut self,
+        tokens: &[i32],
+        pos: &[i32],
+        reset: &[i32],
+        _uniforms: &[f32],
+    ) -> Result<Vec<i32>> {
+        if self.consumed {
+            return Err(anyhow::Error::new(ServeError::CacheConsumed)
+                .context("mock: donated cache consumed by the failed dispatch"));
+        }
+        assert_eq!(tokens.len(), self.batch);
+        let mut out = Vec::with_capacity(self.batch);
+        for i in 0..self.batch {
+            let h = &mut self.hist[i];
+            if reset[i] != 0 {
+                h.clear();
+            }
+            let p = pos[i] as usize;
+            // idempotent re-dispatch (watchdog abort): the same token at
+            // the same position rewrites the same row
+            if h.len() == p + 1 && h[p] == tokens[i] {
+                h.truncate(p);
+            }
+            assert_eq!(h.len(), p, "mock: slot {i} position desync");
+            // a real paged program faults on unmapped pages: check the
+            // prepared plan covered this position
+            if let (Some(t), Some(sp)) = (&self.table, self.last_plan.get(i)) {
+                if sp.active {
+                    let needed = p / self.page_size + 1;
+                    assert!(
+                        t.mapped_pages(i) >= needed,
+                        "mock: slot {i} pos {p} needs {needed} pages, {} mapped",
+                        t.mapped_pages(i)
+                    );
+                }
+            }
+            h.push(tokens[i]);
+            out.push(Self::token_for(h, self.vocab));
+        }
+        Ok(out)
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        self.consumed = false;
+        self.hist.iter_mut().for_each(Vec::clear);
+        self.last_plan.clear();
+        if let Some(t) = &self.table {
+            for i in 0..self.batch {
+                t.release_slot(i);
+            }
+        }
+        Ok(())
+    }
+
+    fn on_dispatch_failed(&mut self) {
+        if self.donated {
+            self.consumed = true;
+        }
+    }
+
+    fn demote_copy(&mut self) -> bool {
+        std::mem::replace(&mut self.donated, false)
+    }
+
+    fn demote_contiguous(&mut self) -> Result<bool> {
+        if self.table.is_none() {
+            return Ok(false);
+        }
+        // pages were released by the restart's park-all; drop the pool
+        self.table = None;
+        self.last_plan.clear();
+        self.page_size = 0;
+        Ok(true)
+    }
+}
+
+/// The real device boundary: a `DecodeSession` stepped through an
+/// `Engine`. Sampling follows `SamplePolicy` — in-graph when the
+/// artifact carries the sampling twin and its static top-k width admits
+/// the policy, on the host otherwise (same uniforms, same streams).
+pub struct SessionDispatcher<'m, 'e> {
+    session: Option<DecodeSession<'m>>,
+    engine: &'e mut Engine,
+    policy: SamplePolicy,
+    temp: f32,
+    k: usize,
+    device_sample_pref: bool,
+    device_sample: bool,
+    scratch: SampleScratch,
+    logits_buf: Vec<f32>,
+    last_ms: u64,
+}
+
+impl<'m, 'e> SessionDispatcher<'m, 'e> {
+    pub fn new(
+        session: DecodeSession<'m>,
+        engine: &'e mut Engine,
+        policy: SamplePolicy,
+        device_sample: bool,
+    ) -> SessionDispatcher<'m, 'e> {
+        let (temp, k) = policy.temp_k();
+        let mut d = SessionDispatcher {
+            session: Some(session),
+            engine,
+            policy,
+            temp,
+            k,
+            device_sample_pref: device_sample,
+            device_sample: false,
+            scratch: SampleScratch::default(),
+            logits_buf: Vec::new(),
+            last_ms: 0,
+        };
+        d.resolve_sampler();
+        d
+    }
+
+    fn sess(&self) -> &DecodeSession<'m> {
+        self.session.as_ref().expect("session present")
+    }
+
+    fn resolve_sampler(&mut self) {
+        let s = self.sess();
+        self.device_sample = self.device_sample_pref
+            && matches!((&s.sample_name, s.sample_k), (Some(_), Some(km)) if self.k <= *km);
+    }
+}
+
+impl<'m, 'e> Dispatcher for SessionDispatcher<'m, 'e> {
+    fn batch(&self) -> usize {
+        self.sess().batch
+    }
+
+    fn capacity(&self) -> usize {
+        self.sess().capacity
+    }
+
+    fn program_name(&self) -> &str {
+        &self.sess().step_name
+    }
+
+    fn shared_pages(&self) -> Option<SharedPageTable> {
+        self.sess().shared_pages()
+    }
+
+    fn prepare(&mut self, plan: &[SlotPlan]) -> std::result::Result<(), PagePressure> {
+        let s = self.session.as_mut().expect("session present");
+        if !s.paged {
+            return Ok(());
+        }
+        s.prepare_pages(plan)
+    }
+
+    fn dispatch(
+        &mut self,
+        tokens: &[i32],
+        pos: &[i32],
+        reset: &[i32],
+        uniforms: &[f32],
+    ) -> Result<Vec<i32>> {
+        let t0 = std::time::Instant::now();
+        let s = self.session.as_mut().expect("session present");
+        let ids = if self.device_sample {
+            s.step_sample(self.engine, tokens, pos, reset, uniforms, self.temp, self.k, false)?
+                .ids
+        } else {
+            let vocab = s.variant.config.vocab;
+            let logits = s.step(self.engine, tokens, pos, reset)?;
+            fill_vec_f32(&logits, &mut self.logits_buf)?;
+            (0..s.batch)
+                .map(|i| {
+                    sample_row_u(
+                        &self.logits_buf[i * vocab..(i + 1) * vocab],
+                        &self.policy,
+                        uniforms[i],
+                        &mut self.scratch,
+                    )
+                })
+                .collect()
+        };
+        self.last_ms = t0.elapsed().as_millis() as u64;
+        Ok(ids)
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        self.session.as_mut().expect("session present").reset_cache()
+    }
+
+    fn demote_copy(&mut self) -> bool {
+        let s = self.session.as_mut().expect("session present");
+        if s.device_resident {
+            log::warn!("[serve] demoting donated → copied stepping");
+            s.device_resident = false;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn demote_contiguous(&mut self) -> Result<bool> {
+        {
+            let cur = self.sess();
+            if !cur.paged || !cur.variant.programs.contains_key("decode_step") {
+                return Ok(false);
+            }
+            let spec = cur.variant.program("decode_step")?;
+            if spec.batch.unwrap_or(cur.variant.batch) != cur.batch {
+                return Ok(false); // twin has a different batch: can't swap mid-run
+            }
+        }
+        log::warn!("[serve] demoting paged → contiguous cache");
+        let old = self.session.take().expect("session present");
+        let (manifest, variant, dres) = (old.manifest, old.variant, old.device_resident);
+        let model = old.into_model_lits();
+        let s = DecodeSession::new(manifest, variant, "decode_step", model, dres)?;
+        self.session = Some(s);
+        self.resolve_sampler();
+        Ok(true)
+    }
+
+    fn elapsed_ms_hint(&self) -> u64 {
+        self.last_ms
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the server
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// admission queue bound
+    pub queue_cap: usize,
+    /// logical cost of one dispatch attempt (ms)
+    pub dispatch_ms: u64,
+    /// per-dispatch watchdog budget: a costlier attempt is failed and
+    /// retried (the rewind + re-dispatch is idempotent)
+    pub watchdog_ms: u64,
+    pub retry: RetryPolicy,
+    /// longest the prepare loop may wait on a starved pool before the
+    /// run is declared dead
+    pub max_stall_ms: u64,
+    /// cache-consumed restarts tolerated per outage before the ladder
+    /// escalates past restarting
+    pub max_restarts: u32,
+    /// `serve()` tick budget (runaway backstop)
+    pub max_ticks: usize,
+    /// sampling-uniform seed (greedy ignores it)
+    pub seed: u64,
+    pub eos: Option<i32>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            queue_cap: 256,
+            dispatch_ms: 10,
+            watchdog_ms: 500,
+            retry: RetryPolicy::default(),
+            max_stall_ms: 10_000,
+            max_restarts: 4,
+            max_ticks: 200_000,
+            seed: 0,
+            eos: None,
+        }
+    }
+}
+
+/// Serving-loop counters; the chaos harness and the faults BENCH arm
+/// publish these.
+#[derive(Debug, Clone, Default)]
+pub struct ServeStats {
+    pub dispatches: usize,
+    pub dispatch_failures: usize,
+    pub retries: usize,
+    /// outages (one or more consecutive failed attempts) that ended in
+    /// a successful dispatch
+    pub recovered: usize,
+    /// per-outage recovery latency (first failure → next success), ms
+    pub recovery_ms: Vec<u64>,
+    /// cache resets with park-all + replay (consumed cache or a ladder
+    /// rung's restart)
+    pub restarts: usize,
+    pub demotions_copy: usize,
+    pub demotions_contiguous: usize,
+    /// ladder rung 4: victims parked to shed load
+    pub load_sheds: usize,
+    /// pressure parks in the prepare loop
+    pub parked: usize,
+    pub watchdog_trips: usize,
+    /// prepare-loop waits on a starved pool
+    pub stalls: usize,
+    pub rejected: usize,
+    pub completed: usize,
+    pub cancelled: usize,
+    pub expired: usize,
+    pub failed: usize,
+}
+
+/// What one `tick` did.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tick {
+    /// nothing left to serve
+    Done,
+    /// one dispatch succeeded, retiring this many sequences
+    Dispatched { retired: usize },
+    /// a failure was absorbed (retry scheduled, restart, demotion,
+    /// shed) — the next tick continues the run
+    Recovering,
+    /// the run aborted; results carry the failures
+    Fatal,
+}
+
+#[derive(Debug)]
+struct ReqMeta {
+    deadline_abs: Option<u64>,
+    cancel: CancelToken,
+}
+
+/// Terminal report of one serving run.
+#[derive(Debug)]
+pub struct ServeReport {
+    pub results: Vec<RequestResult>,
+    pub stats: ServeStats,
+    /// fault-injection counters, if a plan was armed (snapshotted after
+    /// the final hold release, so `pages_released` is settled)
+    pub injected: Option<FaultCounters>,
+    pub fatal: Option<String>,
+}
+
+impl ServeReport {
+    pub fn result_for(&self, id: u64) -> Option<&RequestResult> {
+        self.results.iter().find(|r| r.id == id)
+    }
+
+    pub fn count(&self, o: Outcome) -> usize {
+        self.results.iter().filter(|r| r.outcome == o).count()
+    }
+}
+
+pub struct Server<D: Dispatcher> {
+    dispatcher: D,
+    cfg: ServeConfig,
+    batcher: ContinuousBatcher,
+    queue: AdmissionQueue,
+    injector: Option<FaultInjector>,
+    meta: HashMap<u64, ReqMeta>,
+    guards: Vec<Option<SlotGuard>>,
+    results: Vec<RequestResult>,
+    stats: ServeStats,
+    rng: Pcg,
+    uniforms: Vec<f32>,
+    toks: Vec<i32>,
+    pos: Vec<i32>,
+    rst: Vec<i32>,
+    now_ms: u64,
+    dispatch_seq: u64,
+    /// first-failure time of the outage in progress
+    fail_t0: Option<u64>,
+    backoff: Option<Backoff>,
+    /// highest ladder rung tried this outage (0 = none)
+    outage_rung: u8,
+    restarts_this_outage: u32,
+    fatal: Option<String>,
+    done: bool,
+}
+
+impl<D: Dispatcher> Server<D> {
+    pub fn new(dispatcher: D, cfg: ServeConfig) -> Server<D> {
+        let batch = dispatcher.batch();
+        let mut batcher = ContinuousBatcher::new(batch, cfg.eos);
+        if let Some(table) = dispatcher.shared_pages() {
+            batcher.attach_pages(table);
+        }
+        let rng = Pcg::seeded(cfg.seed ^ 0x5e7e);
+        Server {
+            batcher,
+            queue: AdmissionQueue::new(cfg.queue_cap),
+            injector: None,
+            meta: HashMap::new(),
+            guards: (0..batch).map(|_| None).collect(),
+            results: Vec::new(),
+            stats: ServeStats::default(),
+            rng,
+            uniforms: vec![0.0; batch],
+            toks: Vec::new(),
+            pos: Vec::new(),
+            rst: Vec::new(),
+            now_ms: 0,
+            dispatch_seq: 0,
+            fail_t0: None,
+            backoff: None,
+            outage_rung: 0,
+            restarts_this_outage: 0,
+            fatal: None,
+            done: false,
+            dispatcher,
+            cfg,
+        }
+    }
+
+    /// Arm a deterministic fault schedule for this run.
+    pub fn inject(&mut self, plan: FaultPlan) {
+        self.injector = Some(FaultInjector::new(plan));
+    }
+
+    pub fn now_ms(&self) -> u64 {
+        self.now_ms
+    }
+
+    pub fn stats(&self) -> &ServeStats {
+        &self.stats
+    }
+
+    pub fn fault_counters(&self) -> Option<FaultCounters> {
+        self.injector.as_ref().map(|i| i.counters)
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.done
+    }
+
+    /// Submit one request (clamped to capacity like `generate`). A full
+    /// queue refuses with the typed transient error.
+    pub fn submit(&mut self, mut req: ServeRequest) -> Result<(), ServeError> {
+        let cap = self.dispatcher.capacity();
+        if req.prompt.len() > cap {
+            log::warn!("serve: request {} prompt truncated to capacity {cap}", req.id);
+            req.prompt.truncate(cap);
+        }
+        if req.prompt.is_empty() {
+            req.prompt.push(0);
+        }
+        let budget = cap - req.prompt.len();
+        if req.max_new > budget {
+            req.max_new = budget;
+        }
+        self.queue.push(req, self.now_ms).map_err(|e| {
+            self.stats.rejected += 1;
+            e
+        })
+    }
+
+    /// One serving step: reap cancellations/deadlines, admit, back
+    /// pages, run exactly one dispatch attempt. Invariant-checkable
+    /// between any two calls.
+    pub fn tick(&mut self) -> Tick {
+        if self.done {
+            return Tick::Done;
+        }
+        self.reap();
+        self.pump_admissions();
+        if self.batcher.is_done() && self.queue.is_empty() {
+            self.done = true;
+            return Tick::Done;
+        }
+        if self.batcher.active() == 0 {
+            // everything runnable is gated or mid-replay; force progress
+            self.batcher.admit_one();
+            self.sync_guards();
+            if self.batcher.active() == 0 {
+                self.abort("scheduler stalled with work queued but nothing admissible");
+                return Tick::Fatal;
+            }
+        }
+        if let Err(why) = self.prepare_loop() {
+            self.abort(&why);
+            return Tick::Fatal;
+        }
+        if self.batcher.active() == 0 {
+            // the prepare loop parked everything; re-admit next tick
+            return Tick::Recovering;
+        }
+        // -- one dispatch attempt --------------------------------------
+        self.batcher.next_inputs(&mut self.toks, &mut self.pos, &mut self.rst);
+        for u in self.uniforms.iter_mut() {
+            *u = self.rng.f32();
+        }
+        let seq = self.dispatch_seq;
+        self.dispatch_seq += 1;
+        let fault = self.injector.as_mut().and_then(|inj| inj.on_dispatch(seq));
+        let slow_ms = match fault {
+            Some(DispatchFault::Slow(ms)) => ms,
+            _ => 0,
+        };
+        let res = if matches!(fault, Some(DispatchFault::Fail)) {
+            Err(anyhow::Error::new(ServeError::Dispatch {
+                program: self.dispatcher.program_name().to_string(),
+            })
+            .context(format!("fault injection: dispatch attempt {seq} failed")))
+        } else {
+            self.dispatcher.dispatch(&self.toks, &self.pos, &self.rst, &self.uniforms)
+        };
+        let elapsed = self.cfg.dispatch_ms + slow_ms + self.dispatcher.elapsed_ms_hint();
+        self.now_ms += elapsed;
+        let res = res.and_then(|ids| {
+            if elapsed > self.cfg.watchdog_ms {
+                self.stats.watchdog_trips += 1;
+                Err(anyhow::Error::new(ServeError::Watchdog {
+                    program: self.dispatcher.program_name().to_string(),
+                    elapsed_ms: elapsed,
+                    budget_ms: self.cfg.watchdog_ms,
+                })
+                .context(format!("dispatch attempt {seq} overran the watchdog")))
+            } else {
+                Ok(ids)
+            }
+        });
+        match res {
+            Ok(ids) => {
+                self.stats.dispatches += 1;
+                if let Some(t0) = self.fail_t0.take() {
+                    self.stats.recovered += 1;
+                    self.stats.recovery_ms.push(self.now_ms.saturating_sub(t0));
+                }
+                self.backoff = None;
+                self.outage_rung = 0;
+                self.restarts_this_outage = 0;
+                let done = self.batcher.advance(&ids);
+                let retired = done.len();
+                for f in done {
+                    self.finish_req(f.id, Outcome::Completed, f.generated, None);
+                }
+                self.sync_guards();
+                Tick::Dispatched { retired }
+            }
+            Err(e) => self.on_failure(e),
+        }
+    }
+
+    /// Page/pool invariants, checkable between any two ticks. Empty =
+    /// all hold; entries describe the violations.
+    pub fn check_invariants(&self) -> Vec<String> {
+        let mut v = Vec::new();
+        if let Some(t) = self.dispatcher.shared_pages() {
+            if !t.check_conservation() {
+                v.push("page conservation (free list / refcount / held) violated".into());
+            }
+            if t.pages_in_use() + t.pages_free() != t.pool_pages_total() {
+                v.push(format!(
+                    "in_use {} + free {} != pool {}",
+                    t.pages_in_use(),
+                    t.pages_free(),
+                    t.pool_pages_total()
+                ));
+            }
+            for i in 0..self.dispatcher.batch() {
+                if self.batcher.slot_id(i).is_none() && t.mapped_pages(i) != 0 {
+                    v.push(format!("slot {i} is empty but has {} pages mapped", t.mapped_pages(i)));
+                }
+            }
+        }
+        v
+    }
+
+    /// Abort the run: everything in flight and queued fails.
+    pub fn abort(&mut self, why: &str) {
+        log::error!("serve: aborting: {why}");
+        for i in 0..self.dispatcher.batch() {
+            if let Some(rec) = self.batcher.cancel_slot(i) {
+                self.guards[i] = None;
+                self.finish_req(rec.id, Outcome::Failed, rec.generated, Some(why.to_string()));
+            }
+        }
+        for id in self.batcher.pending_ids() {
+            if let Some(rec) = self.batcher.cancel_pending(id) {
+                self.finish_req(rec.id, Outcome::Failed, rec.generated, Some(why.to_string()));
+            }
+        }
+        loop {
+            match self.queue.pop(self.now_ms) {
+                Popped::Empty => break,
+                Popped::Dropped(r) => self.push_result(r),
+                Popped::Ready(q) => {
+                    self.meta.remove(&q.req.id);
+                    self.results.push(RequestResult {
+                        id: q.req.id,
+                        outcome: Outcome::Failed,
+                        generated: Vec::new(),
+                        error: Some(why.to_string()),
+                        finished_ms: self.now_ms,
+                    });
+                    self.stats.failed += 1;
+                }
+            }
+        }
+        self.fatal = Some(why.to_string());
+        self.done = true;
+    }
+
+    /// Finish the run: release injected holds, drain stragglers (only
+    /// present if the caller stopped early) as cancelled, and report.
+    pub fn finish(mut self) -> ServeReport {
+        if let Some(inj) = &mut self.injector {
+            if let Some(t) = self.dispatcher.shared_pages() {
+                inj.release_all_holds(&t);
+            }
+        }
+        if !self.done {
+            for i in 0..self.dispatcher.batch() {
+                if let Some(rec) = self.batcher.cancel_slot(i) {
+                    self.guards[i] = None;
+                    self.finish_req(rec.id, Outcome::Cancelled, rec.generated, None);
+                }
+            }
+            for id in self.batcher.pending_ids() {
+                if let Some(rec) = self.batcher.cancel_pending(id) {
+                    self.finish_req(rec.id, Outcome::Cancelled, rec.generated, None);
+                }
+            }
+            for r in self.queue.reap(u64::MAX) {
+                self.push_result(r);
+            }
+        }
+        ServeReport {
+            results: std::mem::take(&mut self.results),
+            stats: std::mem::replace(&mut self.stats, ServeStats::default()),
+            injected: self.injector.as_ref().map(|i| i.counters),
+            fatal: self.fatal.take(),
+        }
+    }
+
+    // -- internals ---------------------------------------------------------
+
+    fn finish_req(&mut self, id: u64, outcome: Outcome, generated: Vec<i32>, error: Option<String>) {
+        self.meta.remove(&id);
+        self.push_result(RequestResult { id, outcome, generated, error, finished_ms: self.now_ms });
+    }
+
+    fn push_result(&mut self, r: RequestResult) {
+        match r.outcome {
+            Outcome::Completed => self.stats.completed += 1,
+            Outcome::Cancelled => self.stats.cancelled += 1,
+            Outcome::Expired => self.stats.expired += 1,
+            Outcome::Failed => self.stats.failed += 1,
+        }
+        self.results.push(r);
+    }
+
+    /// Reap cancellations and deadline expiries everywhere a request
+    /// can live: occupied slots, the batcher's replay queue, and the
+    /// admission queue.
+    fn reap(&mut self) {
+        let now = self.now_ms;
+        for i in 0..self.dispatcher.batch() {
+            let Some(id) = self.batcher.slot_id(i) else { continue };
+            let outcome = self.meta.get(&id).and_then(|m| {
+                if m.cancel.is_cancelled() {
+                    Some(Outcome::Cancelled)
+                } else if m.deadline_abs.map_or(false, |d| d <= now) {
+                    Some(Outcome::Expired)
+                } else {
+                    None
+                }
+            });
+            if let Some(o) = outcome {
+                let rec = self.batcher.cancel_slot(i).expect("slot occupied");
+                self.guards[i] = None; // idempotent second release
+                self.finish_req(rec.id, o, rec.generated, None);
+            }
+        }
+        for id in self.batcher.pending_ids() {
+            let outcome = self.meta.get(&id).and_then(|m| {
+                if m.cancel.is_cancelled() {
+                    Some(Outcome::Cancelled)
+                } else if m.deadline_abs.map_or(false, |d| d <= now) {
+                    Some(Outcome::Expired)
+                } else {
+                    None
+                }
+            });
+            if let Some(o) = outcome {
+                let rec = self.batcher.cancel_pending(id).expect("pending entry");
+                self.finish_req(rec.id, o, rec.generated, None);
+            }
+        }
+        for r in self.queue.reap(now) {
+            self.meta.remove(&r.id);
+            self.push_result(r);
+        }
+    }
+
+    /// Move deadline-ordered queue entries behind the batcher's replay
+    /// queue (at most enough to fill the free slots), then admit under
+    /// the demand-debiting page budget.
+    fn pump_admissions(&mut self) {
+        let free = self.dispatcher.batch() - self.batcher.active();
+        while self.batcher.pending_ids().len() < free {
+            match self.queue.pop(self.now_ms) {
+                Popped::Empty => break,
+                Popped::Dropped(r) => {
+                    self.meta.remove(&r.id);
+                    self.push_result(r);
+                }
+                Popped::Ready(q) => {
+                    self.meta.insert(
+                        q.req.id,
+                        ReqMeta { deadline_abs: q.deadline_abs, cancel: q.req.cancel.clone() },
+                    );
+                    self.batcher.submit(SeqRequest {
+                        id: q.req.id,
+                        prompt: q.req.prompt,
+                        max_new: q.req.max_new,
+                    });
+                }
+            }
+        }
+        let admitted = match self.dispatcher.shared_pages().map(|t| t.admission_budget()) {
+            Some(mut budget) => self.batcher.admit_if(|h| budget.admit(h)),
+            None => self.batcher.admit(),
+        };
+        if admitted == 0 && self.batcher.active() == 0 {
+            // a lone sequence can always be served (pool >= one slot)
+            self.batcher.admit_one();
+        }
+        self.sync_guards();
+    }
+
+    /// Keep one armed `SlotGuard` per occupied slot; a guard drop on an
+    /// emptied slot is an idempotent second release.
+    fn sync_guards(&mut self) {
+        let table = self.dispatcher.shared_pages();
+        for i in 0..self.guards.len() {
+            let occupied = self.batcher.slot_id(i).is_some();
+            match (&self.guards[i], occupied) {
+                (None, true) => self.guards[i] = Some(SlotGuard::new(table.clone(), i)),
+                (Some(_), false) => self.guards[i] = None,
+                _ => {}
+            }
+        }
+    }
+
+    /// Back the next dispatch's pages: apply fault holds on the clock,
+    /// park the most-mapped victim under pressure, and when nothing is
+    /// left to evict (the pool is starved by held pages), wait on the
+    /// logical clock for the holds to expire — bounded by
+    /// `max_stall_ms`.
+    fn prepare_loop(&mut self) -> Result<(), String> {
+        let Some(table) = self.dispatcher.shared_pages() else { return Ok(()) };
+        let stall_start = self.now_ms;
+        loop {
+            if let Some(inj) = &mut self.injector {
+                inj.tick_pool(self.now_ms, self.dispatch_seq, &table);
+            }
+            let plan = self.batcher.plan();
+            match self.dispatcher.prepare(&plan) {
+                Ok(()) => return Ok(()),
+                Err(pressure) => {
+                    let victim = plan
+                        .iter()
+                        .enumerate()
+                        .filter(|&(i, sp)| sp.active && table.mapped_pages(i) > 0)
+                        .max_by_key(|&(i, _)| table.mapped_pages(i))
+                        .map(|(i, _)| i);
+                    match victim {
+                        Some(v) => {
+                            self.batcher.park(v);
+                            self.guards[v] = None;
+                            self.stats.parked += 1;
+                        }
+                        None => {
+                            self.now_ms += self.cfg.dispatch_ms.max(1);
+                            self.stats.stalls += 1;
+                            if self.now_ms.saturating_sub(stall_start) > self.cfg.max_stall_ms {
+                                return Err(format!(
+                                    "pool starved beyond {}ms: {}",
+                                    self.cfg.max_stall_ms,
+                                    ServeError::from(pressure)
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Cache reset + park-all: every occupied slot re-queues for a
+    /// deterministic teacher-forced replay.
+    fn restart(&mut self) -> Result<()> {
+        for i in 0..self.dispatcher.batch() {
+            let _ = self.batcher.park(i);
+            self.guards[i] = None;
+        }
+        self.stats.restarts += 1;
+        self.dispatcher.reset()
+    }
+
+    /// The degradation ladder for one failed dispatch attempt.
+    fn on_failure(&mut self, err: anyhow::Error) -> Tick {
+        self.batcher.abort_dispatch();
+        self.dispatcher.on_dispatch_failed();
+        self.stats.dispatch_failures += 1;
+        if self.fail_t0.is_none() {
+            self.fail_t0 = Some(self.now_ms);
+        }
+        let typed = ServeError::of(&err).cloned();
+        let transient = typed.as_ref().map(|e| e.transient()).unwrap_or(false);
+        if !transient {
+            self.abort(&format!("fatal dispatch error: {err:#}"));
+            return Tick::Fatal;
+        }
+        if matches!(typed, Some(ServeError::CacheConsumed))
+            && self.restarts_this_outage < self.cfg.max_restarts
+        {
+            // retrying can't help — the donated buffers are gone; reset
+            // and replay (bounded per outage, then the ladder takes over)
+            self.restarts_this_outage += 1;
+            self.backoff = None;
+            return match self.restart() {
+                Ok(()) => Tick::Recovering,
+                Err(e) => {
+                    self.abort(&format!("restart after consumed cache failed: {e:#}"));
+                    Tick::Fatal
+                }
+            };
+        }
+        // rung 1: bounded exponential backoff, seeded jitter
+        let seq = self.dispatch_seq;
+        let retry = &self.cfg.retry;
+        let backoff = self.backoff.get_or_insert_with(|| retry.schedule(seq));
+        if let Some(delay) = backoff.next() {
+            self.stats.retries += 1;
+            self.now_ms += delay;
+            log::debug!("serve: transient failure, retrying in {delay}ms: {err:#}");
+            return Tick::Recovering;
+        }
+        self.backoff = None;
+        // rung 2: donated → copied stepping (failures stop consuming)
+        if self.outage_rung < 1 {
+            self.outage_rung = 1;
+            if self.dispatcher.demote_copy() {
+                self.stats.demotions_copy += 1;
+                return match self.restart() {
+                    Ok(()) => Tick::Recovering,
+                    Err(e) => {
+                        self.abort(&format!("restart after copy demotion failed: {e:#}"));
+                        Tick::Fatal
+                    }
+                };
+            }
+        }
+        // rung 3: paged → contiguous cache
+        if self.outage_rung < 2 {
+            self.outage_rung = 2;
+            match self.dispatcher.demote_contiguous() {
+                Ok(true) => {
+                    self.stats.demotions_contiguous += 1;
+                    return match self.restart() {
+                        Ok(()) => Tick::Recovering,
+                        Err(e) => {
+                            self.abort(&format!("restart after contiguous demotion failed: {e:#}"));
+                            Tick::Fatal
+                        }
+                    };
+                }
+                Ok(false) => {}
+                Err(e) => {
+                    self.abort(&format!("contiguous demotion failed: {e:#}"));
+                    return Tick::Fatal;
+                }
+            }
+        }
+        // rung 4: shed one victim (smaller active set, replay later)
+        if self.outage_rung < 3 {
+            self.outage_rung = 3;
+            let victim = (0..self.dispatcher.batch()).find(|&i| self.batcher.slot_id(i).is_some());
+            if let Some(v) = victim {
+                self.batcher.park(v);
+                self.guards[v] = None;
+                self.stats.load_sheds += 1;
+                return Tick::Recovering;
+            }
+        }
+        self.abort(&format!("degradation ladder exhausted: {err:#}"));
+        Tick::Fatal
+    }
+}
+
+/// Run a whole workload to completion: submit, tick until done (bounded
+/// by `cfg.max_ticks`), report. Rejected submissions count in
+/// `stats.rejected` and get `Failed` results with the queue error.
+pub fn serve<D: Dispatcher>(
+    dispatcher: D,
+    cfg: ServeConfig,
+    plan: FaultPlan,
+    requests: Vec<ServeRequest>,
+) -> ServeReport {
+    let max_ticks = cfg.max_ticks;
+    let mut server = Server::new(dispatcher, cfg);
+    if !plan.is_empty() {
+        server.inject(plan);
+    }
+    let mut rejected = Vec::new();
+    for r in requests {
+        let id = r.id;
+        if let Err(e) = server.submit(r) {
+            rejected.push((id, e.to_string()));
+        }
+    }
+    let mut ticks = 0usize;
+    loop {
+        if matches!(server.tick(), Tick::Done) {
+            break;
+        }
+        ticks += 1;
+        if ticks > max_ticks {
+            server.abort("tick budget exhausted");
+            break;
+        }
+    }
+    let mut report = server.finish();
+    for (id, why) in rejected {
+        report.results.push(RequestResult {
+            id,
+            outcome: Outcome::Failed,
+            generated: Vec::new(),
+            error: Some(why),
+            finished_ms: 0,
+        });
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reqs(n: usize, seed: u64, capacity: usize) -> Vec<ServeRequest> {
+        let mut rng = Pcg::seeded(seed ^ 0x5e9);
+        (0..n as u64)
+            .map(|id| {
+                let plen = 1 + rng.usize_below(6);
+                let prompt: Vec<i32> = (0..plen).map(|_| rng.below(97) as i32).collect();
+                let max_new = 1 + rng.usize_below((capacity - plen).min(8));
+                ServeRequest::new(id, prompt, max_new)
+            })
+            .collect()
+    }
+
+    fn generated_by_id(report: &ServeReport) -> std::collections::HashMap<u64, Vec<i32>> {
+        report.results.iter().map(|r| (r.id, r.generated.clone())).collect()
+    }
+
+    /// batch 2, capacity 16, page_size 4 (4 pages/slot), pool 6 of 8:
+    /// overcommitted so parks occur organically.
+    fn mock() -> MockDispatcher {
+        MockDispatcher::paged(2, 16, 97, 4, 6)
+    }
+
+    #[test]
+    fn serve_completes_all_requests_without_faults() {
+        let table = mock().shared_pages().unwrap();
+        let report = serve(mock(), ServeConfig::default(), FaultPlan::none(), reqs(8, 1, 16));
+        assert_eq!(report.count(Outcome::Completed), 8);
+        assert!(report.fatal.is_none());
+        assert_eq!(report.stats.dispatch_failures, 0);
+        assert_eq!(report.stats.recovered, 0);
+        assert!(report.results.iter().all(|r| !r.generated.is_empty()));
+        // the throwaway table above proves pool sizing; the served one
+        // died with its server — conservation checked per-tick below
+        assert!(table.check_conservation());
+    }
+
+    #[test]
+    fn per_tick_invariants_hold_through_an_overcommitted_run() {
+        let mut server = Server::new(mock(), ServeConfig::default());
+        for r in reqs(10, 2, 16) {
+            server.submit(r).unwrap();
+        }
+        let mut ticks = 0;
+        while !matches!(server.tick(), Tick::Done) {
+            let v = server.check_invariants();
+            assert!(v.is_empty(), "tick {ticks}: {v:?}");
+            ticks += 1;
+            assert!(ticks < 10_000, "run did not converge");
+        }
+        let report = server.finish();
+        assert_eq!(report.count(Outcome::Completed), 10);
+        // overcommit actually exercised the park path
+        assert!(report.stats.parked > 0, "pool was never pressured");
+    }
+
+    #[test]
+    fn injected_failures_recover_with_identical_streams() {
+        let baseline = generated_by_id(&serve(
+            mock(),
+            ServeConfig::default(),
+            FaultPlan::none(),
+            reqs(8, 3, 16),
+        ));
+        let plan = FaultPlan::parse("fail@1;fail@4;slow@6:900").unwrap();
+        let report = serve(mock(), ServeConfig::default(), plan, reqs(8, 3, 16));
+        assert_eq!(report.count(Outcome::Completed), 8);
+        assert!(report.stats.recovered >= 1, "stats: {:?}", report.stats);
+        assert!(report.stats.retries >= 1);
+        assert_eq!(report.stats.watchdog_trips, 1, "slow@6:900 > 500ms budget");
+        assert!(!report.stats.recovery_ms.is_empty());
+        for r in &report.results {
+            assert_eq!(r.generated, baseline[&r.id], "request {} stream shifted", r.id);
+        }
+    }
+
+    #[test]
+    fn consumed_donated_cache_restarts_and_replays() {
+        let baseline = generated_by_id(&serve(
+            mock(),
+            ServeConfig::default(),
+            FaultPlan::none(),
+            reqs(6, 4, 16),
+        ));
+        let plan = FaultPlan::parse("fail@2").unwrap();
+        let report =
+            serve(mock().with_donation(), ServeConfig::default(), plan, reqs(6, 4, 16));
+        // the injected failure consumes the donated cache; the next
+        // attempt reads CacheConsumed and the server restarts + replays
+        assert!(report.stats.restarts >= 1, "stats: {:?}", report.stats);
+        assert_eq!(report.count(Outcome::Completed), 6);
+        for r in &report.results {
+            assert_eq!(r.generated, baseline[&r.id], "request {} stream shifted", r.id);
+        }
+    }
+
+    #[test]
+    fn ladder_demotes_copy_then_contiguous_in_order() {
+        let baseline = generated_by_id(&serve(
+            mock(),
+            ServeConfig::default(),
+            FaultPlan::none(),
+            reqs(6, 5, 16),
+        ));
+        // retry budget 1: attempts 0,1 exhaust retries -> demote copy;
+        // 2,3 -> demote contiguous; 4 retries once and attempt 5 is clean
+        let cfg = ServeConfig {
+            retry: RetryPolicy { max_retries: 1, base_ms: 1, cap_ms: 4, seed: 0 },
+            ..ServeConfig::default()
+        };
+        let plan = FaultPlan::parse("fail@0;fail@1;fail@2;fail@3;fail@4").unwrap();
+        let report = serve(mock().with_donation(), cfg, plan, reqs(6, 5, 16));
+        assert_eq!(report.stats.demotions_copy, 1, "stats: {:?}", report.stats);
+        assert_eq!(report.stats.demotions_contiguous, 1);
+        assert_eq!(report.stats.load_sheds, 0);
+        assert_eq!(report.count(Outcome::Completed), 6);
+        assert!(report.fatal.is_none());
+        // demotions preserve the streams: the mock token is a pure
+        // function of history, layout-independent — like the real twins
+        for r in &report.results {
+            assert_eq!(r.generated, baseline[&r.id], "request {} stream shifted", r.id);
+        }
+    }
+
+    #[test]
+    fn unrelenting_failures_exhaust_the_ladder_and_fail() {
+        let spec: Vec<String> = (0..64).map(|i| format!("fail@{i}")).collect();
+        let plan = FaultPlan::parse(&spec.join(";")).unwrap();
+        let cfg = ServeConfig {
+            retry: RetryPolicy { max_retries: 1, base_ms: 1, cap_ms: 2, seed: 0 },
+            ..ServeConfig::default()
+        };
+        let report = serve(mock(), cfg, plan, reqs(4, 6, 16));
+        assert!(report.fatal.is_some());
+        assert_eq!(report.count(Outcome::Completed), 0);
+        assert_eq!(report.count(Outcome::Failed), 4);
+        assert!(report.results.iter().all(|r| r.outcome != Outcome::Failed
+            || r.error.is_some()));
+    }
+
+    #[test]
+    fn cancellation_mid_run_returns_partial_output_and_frees_pages() {
+        let mut server = Server::new(mock(), ServeConfig::default());
+        let victim = ServeRequest::new(1, vec![3, 4], 12);
+        let token = victim.cancel_token();
+        server.submit(victim).unwrap();
+        server.submit(ServeRequest::new(2, vec![5], 12)).unwrap();
+        for _ in 0..6 {
+            server.tick();
+        }
+        token.cancel();
+        while !matches!(server.tick(), Tick::Done) {
+            assert!(server.check_invariants().is_empty());
+        }
+        let report = server.finish();
+        let r1 = report.result_for(1).unwrap();
+        assert_eq!(r1.outcome, Outcome::Cancelled);
+        assert!(!r1.generated.is_empty(), "cancelled mid-generation keeps partial output");
+        assert!(r1.generated.len() < 12);
+        assert_eq!(report.result_for(2).unwrap().outcome, Outcome::Completed);
+    }
+
+    #[test]
+    fn deadlines_expire_queued_and_running_requests() {
+        // dispatch_ms = 10: a 35ms deadline dies mid-run, a 0ms deadline
+        // dies in the queue
+        let mut server = Server::new(mock(), ServeConfig::default());
+        server.submit(ServeRequest::new(1, vec![7], 30).with_deadline(35)).unwrap();
+        server.submit(ServeRequest::new(2, vec![8], 4)).unwrap();
+        server.submit(ServeRequest::new(3, vec![9], 4).with_deadline(0)).unwrap();
+        while !matches!(server.tick(), Tick::Done) {
+            assert!(server.check_invariants().is_empty());
+        }
+        let report = server.finish();
+        let r1 = report.result_for(1).unwrap();
+        assert_eq!(r1.outcome, Outcome::Expired);
+        assert!(r1.generated.len() < 30, "deadline cut the run short");
+        assert_eq!(report.result_for(2).unwrap().outcome, Outcome::Completed);
+        assert_eq!(report.result_for(3).unwrap().outcome, Outcome::Expired);
+        assert!(report.result_for(3).unwrap().generated.is_empty());
+    }
+
+    #[test]
+    fn queue_bounds_and_deadline_ordering() {
+        let mut q = AdmissionQueue::new(2);
+        assert!(q.push(ServeRequest::new(1, vec![1], 1), 0).is_ok());
+        assert!(q.push(ServeRequest::new(2, vec![2], 1).with_deadline(50), 0).is_ok());
+        let err = q.push(ServeRequest::new(3, vec![3], 1), 0).unwrap_err();
+        assert_eq!(err, ServeError::QueueFull { cap: 2 });
+        assert!(err.transient());
+        // earliest deadline overtakes FIFO; deadline-less drains after
+        match q.pop(10) {
+            Popped::Ready(got) => assert_eq!(got.req.id, 2),
+            other => panic!("expected ready, got {other:?}"),
+        }
+        match q.pop(10) {
+            Popped::Ready(got) => assert_eq!(got.req.id, 1),
+            other => panic!("expected ready, got {other:?}"),
+        }
+        assert!(matches!(q.pop(10), Popped::Empty));
+        // queue-full surfaces in server stats as a rejection
+        let cfg = ServeConfig { queue_cap: 2, ..ServeConfig::default() };
+        let report = serve(mock(), cfg, FaultPlan::none(), reqs(4, 7, 16));
+        assert_eq!(report.stats.rejected, 2);
+        assert_eq!(report.count(Outcome::Completed), 2);
+        assert_eq!(report.count(Outcome::Failed), 2);
+    }
+
+    #[test]
+    fn pool_hold_starves_then_recovers_on_the_clock() {
+        // seize 5 of 6 pages at dispatch 0 for 120ms: the server must
+        // stall (nothing evictable frees enough), wait out the hold on
+        // the logical clock, then finish cleanly
+        let plan = FaultPlan::parse("hold@0:5x120").unwrap();
+        let report = serve(mock(), ServeConfig::default(), plan, reqs(4, 8, 16));
+        assert_eq!(report.count(Outcome::Completed), 4);
+        assert!(report.stats.stalls > 0, "stats: {:?}", report.stats);
+        assert!(report.fatal.is_none());
+    }
+
+    #[test]
+    fn slot_guard_releases_on_drop_and_disarm_does_not() {
+        let d = mock();
+        let table = d.shared_pages().unwrap();
+        table.ensure(0, 7).unwrap();
+        assert_eq!(table.mapped_pages(0), 2);
+        {
+            let mut g = SlotGuard::new(Some(table.clone()), 0);
+            g.disarm();
+        }
+        assert_eq!(table.mapped_pages(0), 2, "disarmed guard must not release");
+        {
+            let _g = SlotGuard::new(Some(table.clone()), 0);
+        }
+        assert_eq!(table.mapped_pages(0), 0, "dropped guard releases the slot");
+        // releasing an already-released slot is a no-op
+        let mut g = SlotGuard::new(Some(table.clone()), 0);
+        assert_eq!(g.release_now(), 0);
+        assert!(table.check_conservation());
+    }
+
+    #[test]
+    fn prop_random_interleavings_never_leak_pages() {
+        // the page-leak invariant across random admit -> step -> park ->
+        // cancel -> readmit interleavings, against an overcommitted pool
+        let mut rng = Pcg::seeded(0x1eaf);
+        for trial in 0..40u64 {
+            let slots = 1 + rng.usize_below(3);
+            let pps = 4usize; // capacity 16 / page_size 4
+            let pool = pps + rng.usize_below(pps * slots);
+            let d = MockDispatcher::paged(slots, 16, 97, 4, pool);
+            let table = d.shared_pages().unwrap();
+            let mut b = ContinuousBatcher::new(slots, None);
+            b.attach_pages(table.clone());
+            let mut next_id = 0u64;
+            let (mut t, mut p, mut r) = (Vec::new(), Vec::new(), Vec::new());
+            for op in 0..80 {
+                match rng.below(6) {
+                    0 => {
+                        let plen = 1 + rng.usize_below(5);
+                        let prompt = (0..plen).map(|_| rng.below(97) as i32).collect();
+                        b.submit(SeqRequest { id: next_id, prompt, max_new: 1 + rng.usize_below(6) });
+                        next_id += 1;
+                    }
+                    1 => {
+                        let mut budget = table.admission_budget();
+                        if b.admit_if(|h| budget.admit(h)) == 0 && b.active() == 0 {
+                            b.admit_one();
+                        }
+                    }
+                    2 => {
+                        b.park(rng.usize_below(slots));
+                    }
+                    3 => {
+                        b.cancel_slot(rng.usize_below(slots));
+                    }
+                    4 => {
+                        if next_id > 0 {
+                            b.cancel_pending(rng.below(next_id as u32) as u64);
+                        }
+                    }
+                    _ => {
+                        if b.active() > 0 {
+                            // one full dispatch: back pages (parking the
+                            // fattest victim under pressure), step, advance
+                            loop {
+                                let plan = b.plan();
+                                let res = table.with(|pt| {
+                                    for (i, sp) in plan.iter().enumerate() {
+                                        if !sp.active || sp.reset {
+                                            pt.release_slot(i);
+                                        }
+                                    }
+                                    for (i, sp) in plan.iter().enumerate() {
+                                        if sp.active {
+                                            pt.ensure(i, sp.pos)?;
+                                        }
+                                    }
+                                    Ok(())
+                                });
+                                match res {
+                                    Ok(()) => break,
+                                    Err(_) => {
+                                        let v = plan
+                                            .iter()
+                                            .enumerate()
+                                            .filter(|&(i, sp)| sp.active && table.mapped_pages(i) > 0)
+                                            .max_by_key(|&(i, _)| table.mapped_pages(i))
+                                            .map(|(i, _)| i)
+                                            .expect("an active slot holds pages");
+                                        b.park(v);
+                                    }
+                                }
+                            }
+                            b.next_inputs(&mut t, &mut p, &mut r);
+                            let sampled: Vec<i32> =
+                                (0..slots).map(|_| rng.below(97) as i32).collect();
+                            b.advance(&sampled);
+                        }
+                    }
+                }
+                assert!(
+                    table.check_conservation(),
+                    "trial {trial} op {op}: conservation violated"
+                );
+                for i in 0..slots {
+                    if b.slot_id(i).is_none() {
+                        assert_eq!(
+                            table.mapped_pages(i),
+                            0,
+                            "trial {trial} op {op}: empty slot {i} leaks pages"
+                        );
+                    }
+                }
+            }
+            drop(b); // Drop releases whatever was still occupied
+            assert_eq!(table.pages_free(), table.pool_pages_total(), "trial {trial} leaked");
+            assert!(table.check_conservation());
+        }
+    }
+}

@@ -1,0 +1,109 @@
+//! Bounded exponential backoff with seeded jitter.
+//!
+//! The first rung of the degradation ladder: a transient dispatch
+//! failure is retried up to `max_retries` times, sleeping (or, on the
+//! chaos harness's logical clock, *advancing*) an exponentially growing,
+//! jittered delay between attempts. Jitter is drawn from the crate's
+//! seeded `Pcg` — `rand` is unavailable offline, and determinism is a
+//! feature here: the chaos harness replays identical schedules from a
+//! seed, so recovery latency is reproducible run to run. The jitter
+//! follows the "equal jitter" rule (half fixed, half uniform), which
+//! keeps a floor under the delay while decorrelating retry storms.
+
+use crate::util::rng::Pcg;
+
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// retries after the first attempt (0 = fail fast)
+    pub max_retries: u32,
+    /// delay before retry #1; doubles each retry
+    pub base_ms: u64,
+    /// exponential growth cap
+    pub cap_ms: u64,
+    /// jitter seed; combined with a per-schedule key so concurrent
+    /// schedules decorrelate while staying reproducible
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_retries: 3, base_ms: 10, cap_ms: 500, seed: 0 }
+    }
+}
+
+impl RetryPolicy {
+    /// The backoff schedule for one logical operation. `key` should
+    /// identify the operation (e.g. the dispatch sequence number): same
+    /// policy + same key => bit-identical delays.
+    pub fn schedule(&self, key: u64) -> Backoff {
+        Backoff {
+            policy: self.clone(),
+            attempt: 0,
+            rng: Pcg::new(self.seed ^ 0xbac0_ff5e, key.wrapping_mul(2) | 1),
+        }
+    }
+}
+
+/// Iterator over retry delays (ms); `None` once retries are exhausted.
+#[derive(Debug, Clone)]
+pub struct Backoff {
+    policy: RetryPolicy,
+    attempt: u32,
+    rng: Pcg,
+}
+
+impl Iterator for Backoff {
+    type Item = u64;
+
+    fn next(&mut self) -> Option<u64> {
+        if self.attempt >= self.policy.max_retries {
+            return None;
+        }
+        let exp = self
+            .policy
+            .base_ms
+            .saturating_mul(1u64 << self.attempt.min(32))
+            .min(self.policy.cap_ms.max(1));
+        self.attempt += 1;
+        // equal jitter: delay in [exp/2, exp]
+        let half = exp / 2;
+        Some(half + self.rng.next_u64() % (exp - half + 1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_is_deterministic_per_key() {
+        let p = RetryPolicy { max_retries: 5, base_ms: 10, cap_ms: 400, seed: 42 };
+        let a: Vec<u64> = p.schedule(7).collect();
+        let b: Vec<u64> = p.schedule(7).collect();
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 5);
+        let c: Vec<u64> = p.schedule(8).collect();
+        assert_ne!(a, c, "different keys must decorrelate");
+    }
+
+    #[test]
+    fn delays_grow_exponentially_within_bounds() {
+        let p = RetryPolicy { max_retries: 8, base_ms: 10, cap_ms: 200, seed: 1 };
+        let delays: Vec<u64> = p.schedule(0).collect();
+        // equal jitter: each delay sits in [exp/2, exp], exp capped
+        let mut exp = 10u64;
+        for d in &delays {
+            let e = exp.min(200);
+            assert!(*d >= e / 2 && *d <= e, "delay {d} outside [{}, {e}]", e / 2);
+            exp = exp.saturating_mul(2);
+        }
+        // the tail is capped: the last delays never exceed cap_ms
+        assert!(delays.iter().all(|&d| d <= 200));
+    }
+
+    #[test]
+    fn zero_retries_fails_fast() {
+        let p = RetryPolicy { max_retries: 0, ..RetryPolicy::default() };
+        assert_eq!(p.schedule(0).next(), None);
+    }
+}

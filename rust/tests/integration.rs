@@ -707,3 +707,150 @@ fn manifest_flops_match_rust_flops_module() {
         assert_eq!(f, v.flops_fwd, "{} (python/rust FLOP mirror drift)", v.name);
     }
 }
+
+// -- request lifecycle: the serve layer over the real PJRT session --------
+
+/// Serve a workload through `serve::Server` + `SessionDispatcher` and
+/// return the per-request greedy streams, keyed by id.
+fn serve_streams(
+    m: &Manifest,
+    v: &mosa::runtime::Variant,
+    step_name: &str,
+    plan: mosa::serve::FaultPlan,
+    n_req: usize,
+) -> (mosa::serve::ServeReport, Vec<(u64, Vec<i32>)>) {
+    let mut engine = Engine::cpu().unwrap();
+    let state = TrainState::init_host(v, 11).unwrap();
+    let session = mosa::decode::DecodeSession::from_state(m, v, step_name, state, true).unwrap();
+    let dispatcher = mosa::serve::SessionDispatcher::new(
+        session,
+        &mut engine,
+        mosa::decode::SamplePolicy::Greedy,
+        true,
+    );
+    let requests: Vec<mosa::serve::ServeRequest> = (0..n_req as u64)
+        .map(|id| mosa::serve::ServeRequest::new(id, vec![1, 2, 3, (id % 7) as i32], 3))
+        .collect();
+    let report = mosa::serve::serve(dispatcher, mosa::serve::ServeConfig::default(), plan, requests);
+    let mut streams: Vec<(u64, Vec<i32>)> =
+        report.results.iter().map(|r| (r.id, r.generated.clone())).collect();
+    streams.sort_unstable_by_key(|(id, _)| *id);
+    (report, streams)
+}
+
+#[test]
+fn serve_layer_matches_generate_streams() {
+    // the lifecycle layer adds queueing/guards/retries around the same
+    // batcher `generate` drives — on a fault-free greedy run the streams
+    // must be bit-identical to stepwise generate (no prefill either side)
+    let m = manifest();
+    let v = m.variant("micro_mosa_r8").unwrap();
+    if !v.programs.contains_key("decode_step") {
+        return; // pre-decode artifacts
+    }
+    let slots = v.program("decode_step").unwrap().batch.unwrap_or(v.batch);
+    let n_req = slots + 2; // at least one admission wave after retirement
+    let (report, served) =
+        serve_streams(&m, v, "decode_step", mosa::serve::FaultPlan::none(), n_req);
+    assert!(report.fatal.is_none(), "fatal: {:?}", report.fatal);
+    assert_eq!(report.count(mosa::serve::Outcome::Completed), n_req);
+
+    let mut engine = Engine::cpu().unwrap();
+    let state = TrainState::init_host(v, 11).unwrap();
+    let requests: Vec<mosa::decode::SeqRequest> = (0..n_req as u64)
+        .map(|id| mosa::decode::SeqRequest {
+            id,
+            prompt: vec![1, 2, 3, (id % 7) as i32],
+            max_new: 3,
+        })
+        .collect();
+    let opts = mosa::decode::GenerateOptions {
+        max_new: 3,
+        policy: mosa::decode::SamplePolicy::Greedy,
+        seed: 9,
+        eos: None,
+        use_prefill: false, // the serve layer steps prompts token-wise
+        device_resident: true,
+        device_sample: true,
+        use_paged: false,
+    };
+    let finished = mosa::decode::generate(&mut engine, &m, v, state, requests, &opts).unwrap();
+    let mut expect: Vec<(u64, Vec<i32>)> =
+        finished.iter().map(|f| (f.id, f.generated.clone())).collect();
+    expect.sort_unstable_by_key(|(id, _)| *id);
+    assert_eq!(served, expect, "serve layer drifted from generate");
+}
+
+#[test]
+fn faulted_serve_recovers_and_leaks_no_pages() {
+    // inject dispatch failures into the real paged session: the run must
+    // recover (not fail), release every pool page, and the surviving
+    // greedy streams must match the unfaulted run bit-for-bit
+    let m = manifest();
+    let v = m.variant("micro_mosa_r8").unwrap();
+    if !v.programs.contains_key("decode_step_paged") {
+        return; // pre-paging artifacts
+    }
+    let slots = v.program("decode_step_paged").unwrap().batch.unwrap_or(v.batch);
+    let n_req = slots + 2;
+    let (clean, clean_streams) =
+        serve_streams(&m, v, "decode_step_paged", mosa::serve::FaultPlan::none(), n_req);
+    assert!(clean.fatal.is_none());
+
+    let plan = mosa::serve::FaultPlan::parse("fail@1;fail@3").unwrap();
+    let mut engine = Engine::cpu().unwrap();
+    let state = TrainState::init_host(v, 11).unwrap();
+    let session =
+        mosa::decode::DecodeSession::from_state(&m, v, "decode_step_paged", state, true).unwrap();
+    let table = session.shared_pages().expect("paged session has a pool");
+    let dispatcher = mosa::serve::SessionDispatcher::new(
+        session,
+        &mut engine,
+        mosa::decode::SamplePolicy::Greedy,
+        true,
+    );
+    let requests: Vec<mosa::serve::ServeRequest> = (0..n_req as u64)
+        .map(|id| mosa::serve::ServeRequest::new(id, vec![1, 2, 3, (id % 7) as i32], 3))
+        .collect();
+    let report =
+        mosa::serve::serve(dispatcher, mosa::serve::ServeConfig::default(), plan, requests);
+    assert!(report.fatal.is_none(), "fatal: {:?}", report.fatal);
+    assert_eq!(report.count(mosa::serve::Outcome::Completed), n_req);
+    assert!(report.stats.dispatch_failures >= 2, "{:?}", report.stats);
+    assert!(report.stats.recovered > 0, "{:?}", report.stats);
+    assert_eq!(table.pages_free(), table.pool_pages_total(), "pool pages leaked");
+    assert!(table.check_conservation());
+    let mut streams: Vec<(u64, Vec<i32>)> =
+        report.results.iter().map(|r| (r.id, r.generated.clone())).collect();
+    streams.sort_unstable_by_key(|(id, _)| *id);
+    assert_eq!(streams, clean_streams, "fault recovery corrupted a stream");
+}
+
+#[test]
+fn corrupt_artifact_classifies_as_fatal() {
+    // a garbled HLO text must surface as a typed, fatal ServeError
+    // (Compile), not as a retryable dispatch error — and the artifact
+    // hook must be the only thing standing between the two runs
+    use mosa::serve::fault::{artifact_hook, ArtifactFault, CorruptMode};
+    use mosa::serve::ServeError;
+    let m = manifest();
+    let v = m.variant("micro_dense").unwrap();
+    if !v.programs.contains_key("decode_step") {
+        return;
+    }
+    let mut engine = Engine::cpu().unwrap();
+    engine.set_artifact_hook(Some(Box::new(artifact_hook(vec![ArtifactFault {
+        nth_read: 0,
+        mode: CorruptMode::Garble,
+    }]))));
+    let err = engine
+        .load_program(&m, v, "decode_step")
+        .err()
+        .expect("garbled artifact must not compile");
+    let typed = ServeError::of(&err).expect("typed error in the chain");
+    assert!(typed.fatal(), "corrupt artifact classified transient: {typed}");
+    assert!(!ServeError::is_transient(&err));
+    // same engine, hook cleared: the untouched artifact compiles fine
+    engine.set_artifact_hook(None);
+    engine.load_program(&m, v, "decode_step").unwrap();
+}

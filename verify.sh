@@ -72,6 +72,12 @@ rm -f /tmp/BENCH_pipeline.smoke.json /tmp/BENCH_decode.smoke.json
 run cargo run --release --bin mosa -- perf --smoke \
     --out /tmp/BENCH_pipeline.smoke.json \
     --decode-out /tmp/BENCH_decode.smoke.json
+# chaos smoke: seeded fault plan against the serving loop (mock-backed,
+# so it needs no artifacts). `mosa chaos` exits nonzero on any leaked
+# page, invariant violation, or survivor-stream divergence.
+run cargo run --release --bin mosa -- chaos --seed 17 \
+    --plan 'fail@2;fail@5;slow@7:900;hold@3:4x120' \
+    --out /tmp/chaos.smoke.json
 
 # ---------------------------------------------------------------------------
 # publication: keep the smoke reports in-repo so the perf trajectory
@@ -105,6 +111,31 @@ elif command -v python3 >/dev/null 2>&1; then
     run python3 - <<'PYEOF'
 import json, sys
 r = json.load(open("/tmp/BENCH_decode.smoke.json"))
+# faults gate: the chaos counters are mock-backed, so they are real
+# whenever the rust bench ran at all (artifacts or not) — gate them
+# before the artifact-gated early exit below
+faults = r.get("faults")
+if faults and faults.get("available") is not False:
+    fbad = []
+    if faults.get("leaked_pages", 1) != 0:
+        fbad.append(f"leaked_pages={faults.get('leaked_pages')}")
+    if faults.get("invariant_violations", 1) != 0:
+        fbad.append(f"invariant_violations={faults.get('invariant_violations')}")
+    if faults.get("stream_mismatches", 1) != 0:
+        fbad.append(f"stream_mismatches={faults.get('stream_mismatches')}")
+    if not faults.get("recovered", 0) > 0:
+        fbad.append(f"recovered={faults.get('recovered')} (fault recovery never exercised)")
+    if fbad:
+        print(f"faults gate: FAILED {fbad}")
+        sys.exit(1)
+    print(
+        f"faults gate: OK (recovered={faults.get('recovered'):.0f}, "
+        f"p99={faults.get('recovery_ms_p99', 0):.0f}ms logical, 0 pages leaked)"
+    )
+elif faults:
+    print(f"faults gate: skipped (stub: {faults.get('reason', 'rust bench did not run')})")
+else:
+    print("faults gate: no faults key in the report (pre-serve bench?)")
 if not r.get("available"):
     print(f"decode gates: skipped (decode bench unavailable: {r.get('reason', 'no artifacts')})")
     sys.exit(0)
