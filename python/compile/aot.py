@@ -33,6 +33,14 @@ with the paging geometry (page size, per-kind row segments, pool sizes,
 overcommit) recorded in a per-program ``pages`` manifest section. The
 contiguous programs survive unchanged as the ``--no-paged`` A/B twin.
 
+On top of that, a *quantized* paged twin (``prefill_qpaged`` /
+``decode_step_qpaged*`` / ``decode_step_sample_qpaged*``) stores KV
+payload pools as i8 with one f32 scale per (page, head) in sibling
+``<leaf>_scale`` leaves — dequant prologue, same step math, quantise
+epilogue — cutting resident payload bytes another ~4x. Its ``pages``
+section carries ``dtype`` and ``scale_leaf`` columns; the f32 paged
+programs survive as the ``--no-quantized`` A/B twin.
+
 Usage:  cd python && python -m compile.aot --set core --out ../artifacts
 """
 
@@ -111,7 +119,7 @@ def _check_aliases(pname, aliases, n_donated, in_offset, out_offset):
 
 
 def _dt(x) -> str:
-    return {"float32": "f32", "int32": "i32", "uint32": "u32"}.get(
+    return {"float32": "f32", "int32": "i32", "uint32": "u32", "int8": "i8"}.get(
         str(x.dtype), str(x.dtype)
     )
 
@@ -175,6 +183,22 @@ def _paged_cache_entries(cfg: ModelConfig, batch: int, capacity: int, pspec: dic
     section)."""
     flat, _ = jax.tree_util.tree_flatten_with_path(
         dec.paged_cache_struct(cfg, batch, capacity, pspec)
+    )
+    out = []
+    for path, leaf in flat:
+        name = _path_name(path)
+        e = {"path": name, "shape": list(leaf.shape), "dtype": _dt(leaf)}
+        e.update(dec.leaf_meta(name))
+        out.append(e)
+    return out
+
+
+def _qpaged_cache_entries(cfg: ModelConfig, batch: int, capacity: int, pspec: dict):
+    """``cache`` section of a quantized paged program: i8 payload pools
+    with their f32 ``<leaf>_scale`` siblings (kind ``scale``), meta
+    leaves as in the f32 paged twin."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        dec.qpaged_cache_struct(cfg, batch, capacity, pspec)
     )
     out = []
     for path, leaf in flat:
@@ -448,6 +472,83 @@ def lower_variant(v: variants.Variant, outdir: str) -> dict:
                 "donated": {"aliases": aliases},
             }
 
+        def qpages_of(bb, cc):
+            return dec.qpage_spec(
+                cfg, bb, cc, page_size=v.decode.page_size, pool_frac=v.decode.pool_frac
+            )
+
+        def emit_step_qpaged(pname, bb, cc):
+            """The quantized twin of `emit_step_paged`: i8 payload pools
+            + f32 per-page scales, dequant/quantise around the SAME step;
+            the `pages` section grows `dtype` and `scale_leaf` columns."""
+            pspec = qpages_of(bb, cc)
+            step = dec.make_decode_step_qpaged(cfg, cc, bb, pspec)
+            pstruct = dec.qpaged_cache_struct(cfg, bb, cc, pspec)
+            cache_entries = _qpaged_cache_entries(cfg, bb, cc, pspec)
+            row = pspec["pages_per_slot"]
+            fname, aliases = emit(
+                pname, step,
+                [params_s, state_s, _spec((bb,), jnp.int32), _spec((bb,), jnp.int32),
+                 _spec((bb,), jnp.int32), _spec((bb, row), jnp.int32), pstruct],
+                donate=(6,),
+            )
+            _check_aliases(pname, aliases, len(cache_entries), n_model + 4, 1)
+            progs[pname] = {
+                "file": fname,
+                "batch": bb,
+                "capacity": cc,
+                "extra_inputs": [
+                    {"name": "token", "shape": [bb], "dtype": "i32"},
+                    {"name": "pos", "shape": [bb], "dtype": "i32"},
+                    {"name": "reset", "shape": [bb], "dtype": "i32"},
+                    {"name": "page_index", "shape": [bb, row], "dtype": "i32"},
+                ],
+                "extra_outputs": [{"name": "logits", "shape": [bb, vocab], "dtype": "f32"}],
+                "cache": cache_entries,
+                "pages": pspec,
+                "donated": {"aliases": aliases},
+            }
+
+        def emit_sample_qpaged(pname, bb, cc):
+            pspec = qpages_of(bb, cc)
+            kmx = dec.sample_k_max(cfg)
+            step = dec.make_decode_sample_qpaged(cfg, cc, bb, pspec)
+            pstruct = dec.qpaged_cache_struct(cfg, bb, cc, pspec)
+            cache_entries = _qpaged_cache_entries(cfg, bb, cc, pspec)
+            row = pspec["pages_per_slot"]
+            fname, aliases = emit(
+                pname, step,
+                [params_s, state_s, _spec((bb,), jnp.int32), _spec((bb,), jnp.int32),
+                 _spec((bb,), jnp.int32), _spec((bb,), jnp.float32),
+                 _spec((), jnp.float32), _spec((), jnp.int32),
+                 _spec((bb, row), jnp.int32), pstruct],
+                donate=(9,),
+            )
+            _check_aliases(pname, aliases, len(cache_entries), n_model + 7, 3)
+            progs[pname] = {
+                "file": fname,
+                "batch": bb,
+                "capacity": cc,
+                "sample_k": kmx,
+                "extra_inputs": [
+                    {"name": "token", "shape": [bb], "dtype": "i32"},
+                    {"name": "pos", "shape": [bb], "dtype": "i32"},
+                    {"name": "reset", "shape": [bb], "dtype": "i32"},
+                    {"name": "uniform", "shape": [bb], "dtype": "f32"},
+                    {"name": "temp", "shape": [], "dtype": "f32"},
+                    {"name": "k", "shape": [], "dtype": "i32"},
+                    {"name": "page_index", "shape": [bb, row], "dtype": "i32"},
+                ],
+                "extra_outputs": [
+                    {"name": "ids", "shape": [bb], "dtype": "i32"},
+                    {"name": "topk_vals", "shape": [bb, kmx], "dtype": "f32"},
+                    {"name": "topk_ids", "shape": [bb, kmx], "dtype": "i32"},
+                ],
+                "cache": cache_entries,
+                "pages": pspec,
+                "donated": {"aliases": aliases},
+            }
+
         prefill = dec.make_prefill(cfg, dcap, b)
         # prefill builds the cache from scratch (cache leaves are outputs
         # only), so there is nothing aliasable to donate; the empty
@@ -500,18 +601,50 @@ def lower_variant(v: variants.Variant, outdir: str) -> dict:
             "pages": ppf_spec,
             "donated": {"aliases": []},
         }
+        # the quantized prefill twin: i8 pools + per-page scales
+        qpf_spec = qpages_of(b, dcap)
+        prefill_qpaged = dec.make_prefill_qpaged(cfg, dcap, b, qpf_spec)
+        qpf_row = qpf_spec["pages_per_slot"]
+        fname, _ = emit(
+            "prefill_qpaged", prefill_qpaged,
+            [params_s, state_s, _spec((b, t), jnp.int32), _spec((b,), jnp.int32),
+             _spec((b, qpf_row), jnp.int32)],
+        )
+        progs["prefill_qpaged"] = {
+            "file": fname,
+            "batch": b,
+            "capacity": dcap,
+            "prompt_len": t,
+            "extra_inputs": [
+                {"name": "tokens", "shape": [b, t], "dtype": "i32"},
+                {"name": "plen", "shape": [b], "dtype": "i32"},
+                {"name": "page_index", "shape": [b, qpf_row], "dtype": "i32"},
+            ],
+            "extra_outputs": [
+                {"name": "logprobs", "shape": [b, t - 1], "dtype": "f32"},
+                {"name": "last_logits", "shape": [b, vocab], "dtype": "f32"},
+            ],
+            "cache": _qpaged_cache_entries(cfg, b, dcap, qpf_spec),
+            "pages": qpf_spec,
+            "donated": {"aliases": []},
+        }
         emit_step("decode_step", b, dcap)
         emit_sample("decode_step_sample", b, dcap)
         emit_step_paged("decode_step_paged", b, dcap)
         emit_sample_paged("decode_step_sample_paged", b, dcap)
+        emit_step_qpaged("decode_step_qpaged", b, dcap)
+        emit_sample_qpaged("decode_step_sample_qpaged", b, dcap)
         for bb in v.decode.extra_batches:
             emit_step(f"decode_step_b{bb}", bb, dcap)
             emit_sample(f"decode_step_sample_b{bb}", bb, dcap)
             emit_step_paged(f"decode_step_paged_b{bb}", bb, dcap)
             emit_sample_paged(f"decode_step_sample_paged_b{bb}", bb, dcap)
+            emit_step_qpaged(f"decode_step_qpaged_b{bb}", bb, dcap)
+            emit_sample_qpaged(f"decode_step_sample_qpaged_b{bb}", bb, dcap)
         for cc in v.decode.extra_capacities:
             emit_step(f"decode_step_c{cc}", b, cc)
             emit_step_paged(f"decode_step_paged_c{cc}", b, cc)
+            emit_step_qpaged(f"decode_step_qpaged_c{cc}", b, cc)
 
     for prog in progs.values():
         # everything in this generation is lowered with return_tuple=False

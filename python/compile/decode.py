@@ -72,6 +72,14 @@ POS_SENTINEL = 1 << 30
 # explicitly masked. Mirrored in Rust (kvcache::paged::PAGE_SENTINEL).
 PAGE_SENTINEL = 1 << 30
 
+# Quantized-paged pools: KV payload pages are stored i8 with one f32
+# scale per (page, head), held in a sibling `<leaf>_scale` meta leaf.
+# Symmetric absmax/QMAX quantisation; round-to-nearest bounds the
+# per-element round-trip error by scale/2 = absmax/254.
+SCALE_SUFFIX = "_scale"
+QUANT_DTYPE = "i8"
+QMAX = 127.0
+
 
 # ---------------------------------------------------------------------------
 # cache layout
@@ -114,6 +122,8 @@ def leaf_meta(name: str) -> dict:
         return {"kind": "meta", "init": "sentinel"}
     if name.endswith("_pri"):
         return {"kind": "meta", "init": "neg"}
+    if name.endswith(SCALE_SUFFIX):
+        return {"kind": "scale", "init": "zeros"}
     return {"kind": "kv", "init": "zeros"}
 
 
@@ -805,3 +815,222 @@ def make_prefill_paged(cfg: ModelConfig, capacity: int, batch: int, spec: dict):
         return logprobs, last, pools
 
     return prefill_paged
+
+
+# ---------------------------------------------------------------------------
+# quantized paged KV-cache: i8 payload pages + one f32 scale per (page, head)
+# ---------------------------------------------------------------------------
+#
+# The paged layout gives quantisation its natural granule for free: a
+# page is a small contiguous run of token slots per head, so one
+# symmetric absmax scale per (page, head) pair costs 1 f32 per
+# page_size × d payload elements and keeps the error local to the page.
+# KV payload pools (`*_k` / `*_v` / `*_qk`) become
+#
+#     payload [pool_pages, n, page_size, d]  i8
+#     scale   [pool_pages, n]                f32   (leaf name + "_scale")
+#
+# while bookkeeping metadata (`*_pos` / `*_pri`) stays exact — the
+# selection machinery (causal masks, MoSA priorities, fixed grids)
+# therefore behaves bit-identically to the f32 paged twin; only the
+# attended K/V values are perturbed, by at most absmax/254 per element.
+#
+# The step is gather(dequant) → the SAME contiguous step functions →
+# scatter(quantise): `scatter_qpools` computes each written page's
+# absmax over its (page_size, d) payload, stores absmax/127 as the
+# scale, and rounds payload/scale to the nearest i8; `gather_qpools`
+# multiplies back. Re-quantising an untouched page is exact (its values
+# are multiples of its scale and the absmax is preserved), so error
+# does NOT accumulate across steps — only pages whose content changed
+# re-quantise against a new absmax. Unbacked table entries behave as in
+# the f32 paged twin: scatters drop, gathered scales are masked to 0 so
+# recycled payload garbage dequantises to empty (zeros).
+
+
+def qpage_spec(cfg: ModelConfig, batch: int, capacity: int,
+               page_size=None, pool_frac: float = 1.0) -> dict:
+    """`page_spec` plus the quantisation columns the manifest records:
+    ``dtype`` (payload pool dtype) and ``scale_leaf`` (the suffix naming
+    each payload leaf's f32 scale sibling)."""
+    spec = page_spec(cfg, batch, capacity, page_size=page_size, pool_frac=pool_frac)
+    spec["dtype"] = QUANT_DTYPE
+    spec["scale_leaf"] = SCALE_SUFFIX
+    return spec
+
+
+def qpaged_cache_shapes(cfg: ModelConfig, batch: int, capacity: int, spec: dict) -> dict:
+    """One layer's quantized pool pytree: payload leaves go i8 and gain a
+    f32 [pool_pages, n] scale sibling; meta leaves match the f32 twin."""
+    ps = spec["page_size"]
+    out = {}
+    for name, leaf in cache_shapes(cfg, batch, capacity).items():
+        e = _kind_entry(spec, name)
+        n = leaf.shape[1]
+        shape = (e["pool_pages"], n, ps) + tuple(leaf.shape[3:])
+        if leaf_meta(name)["kind"] == "kv":
+            out[name] = jax.ShapeDtypeStruct(shape, jnp.int8)
+            out[name + SCALE_SUFFIX] = jax.ShapeDtypeStruct((e["pool_pages"], n), jnp.float32)
+        else:
+            out[name] = jax.ShapeDtypeStruct(shape, leaf.dtype)
+    return out
+
+
+def qpaged_cache_struct(cfg: ModelConfig, batch: int, capacity: int, spec: dict) -> dict:
+    return {
+        "layers": [qpaged_cache_shapes(cfg, batch, capacity, spec) for _ in range(cfg.n_layers)]
+    }
+
+
+def init_qpools(cfg: ModelConfig, batch: int, capacity: int, spec: dict) -> dict:
+    """Empty quantized pools: i8 payload zeros, f32 scale zeros (an
+    all-zero page dequantises to zeros under any scale; zero is the
+    canonical empty), positions POS_SENTINEL, priorities -1."""
+    def fill(name, leaf):
+        meta = leaf_meta(name)
+        if meta["init"] == "sentinel":
+            return jnp.full(leaf.shape, POS_SENTINEL, leaf.dtype)
+        if meta["init"] == "neg":
+            return jnp.full(leaf.shape, -1.0, leaf.dtype)
+        return jnp.zeros(leaf.shape, leaf.dtype)
+
+    struct = qpaged_cache_struct(cfg, batch, capacity, spec)
+    return {
+        "layers": [
+            {name: fill(name, leaf) for name, leaf in layer.items()}
+            for layer in struct["layers"]
+        ]
+    }
+
+
+def quantise_pages(pages):
+    """[N, n, ps, d] f32 -> (i8 payload, [N, n] f32 scales): symmetric
+    per-(page, head) absmax/QMAX, round-to-nearest. All-zero pages get
+    scale 0 and quantise to zeros (round-trips exactly)."""
+    a = jnp.max(jnp.abs(pages), axis=(2, 3))  # [N, n]
+    scale = a / QMAX
+    div = jnp.where(scale > 0.0, scale, 1.0)
+    q = jnp.clip(jnp.round(pages / div[:, :, None, None]), -QMAX, QMAX)
+    return q.astype(jnp.int8), scale
+
+
+def dequantise_pages(q, scale):
+    """Inverse of `quantise_pages` up to the half-step rounding error."""
+    return q.astype(jnp.float32) * scale[:, :, None, None]
+
+
+def _gather_scales(spec: dict, name: str, scale_pool, page_index):
+    """scale pool [P, n] -> per-slot page scales [B, ppk, n], masked to 0
+    on unbacked entries so their payload garbage dequantises to empty."""
+    e = _kind_entry(spec, name)
+    ppk, off = e["pages_per_slot"], e["row_offset"]
+    pi = page_index[:, off:off + ppk]  # [B, ppk]
+    valid = jnp.logical_and(pi >= 0, pi < e["pool_pages"])
+    idx = jnp.where(valid, pi, 0)
+    s = jnp.take(scale_pool, idx, axis=0)  # [B, ppk, n]
+    return jnp.where(valid[..., None], s, 0.0)
+
+
+def gather_qpools(spec: dict, pools: dict, page_index) -> dict:
+    """Quantized pools + page table -> the f32 logical cache pytree the
+    contiguous step functions consume (dequant prologue)."""
+    ps = spec["page_size"]
+    layers = []
+    for layer in pools["layers"]:
+        out = {}
+        for name, pool in layer.items():
+            if name.endswith(SCALE_SUFFIX):
+                continue
+            if leaf_meta(name)["kind"] == "kv":
+                raw = _gather_leaf(spec, name, pool, page_index)  # i8 [B,n,S,d]
+                sc = _gather_scales(spec, name, layer[name + SCALE_SUFFIX], page_index)
+                sc = jnp.repeat(sc.transpose(0, 2, 1), ps, axis=2)  # [B,n,S]
+                out[name] = raw.astype(jnp.float32) * sc[..., None]
+            else:
+                out[name] = _gather_leaf(spec, name, pool, page_index)
+        layers.append(out)
+    return {"layers": layers}
+
+
+def _scatter_leaf_q(spec: dict, name: str, pool, scale_pool, page_index, logical):
+    """Quantise epilogue of one payload leaf: logical [B, n, S, d] f32 ->
+    (i8 pool, scale pool), written through the raw table row (unbacked
+    PAGE_SENTINEL entries drop both writes)."""
+    e = _kind_entry(spec, name)
+    ps = spec["page_size"]
+    ppk, off = e["pages_per_slot"], e["row_offset"]
+    idx = page_index[:, off:off + ppk].reshape(-1)  # [B*ppk]
+    b, n, s, d = logical.shape
+    pages = logical.reshape(b, n, ppk, ps, d).transpose(0, 2, 1, 3, 4)
+    pages = pages.reshape(b * ppk, n, ps, d)
+    q, scale = quantise_pages(pages)
+    return (
+        pool.at[idx].set(q, mode="drop"),
+        scale_pool.at[idx].set(scale, mode="drop"),
+    )
+
+
+def scatter_qpools(spec: dict, pools: dict, page_index, caches: dict) -> dict:
+    """Write an updated f32 logical cache back into the quantized pools
+    (quantise epilogue on payload leaves, raw scatter on meta leaves)."""
+    layers = []
+    for layer, lc in zip(pools["layers"], caches["layers"]):
+        out = {}
+        for name, pool in layer.items():
+            if name.endswith(SCALE_SUFFIX):
+                continue
+            if leaf_meta(name)["kind"] == "kv":
+                qp, sp = _scatter_leaf_q(
+                    spec, name, pool, layer[name + SCALE_SUFFIX], page_index, lc[name]
+                )
+                out[name] = qp
+                out[name + SCALE_SUFFIX] = sp
+            else:
+                out[name] = _scatter_leaf(spec, name, pool, page_index, lc[name])
+        layers.append(out)
+    return {"layers": layers}
+
+
+def make_decode_step_qpaged(cfg: ModelConfig, capacity: int, batch: int, spec: dict):
+    """The quantized twin of `make_decode_step_paged`: dequant gather →
+    the SAME contiguous step → quantise scatter. Same signature as the
+    f32 paged step; logits deviate by at most the attention-weighted
+    absmax/254 payload error (metadata and routing are exact)."""
+    step = make_decode_step(cfg, capacity, batch)
+
+    def step_qpaged(params, state, token, pos, reset, page_index, pools):
+        caches = gather_qpools(spec, pools, page_index)
+        logits, new_caches = step(params, state, token, pos, reset, caches)
+        new_pools = scatter_qpools(spec, pools, page_index, new_caches)
+        return logits, new_pools
+
+    return step_qpaged
+
+
+def make_decode_sample_qpaged(cfg: ModelConfig, capacity: int, batch: int, spec: dict):
+    """In-graph sampling over the quantized paged step (the
+    `decode_step_sample_qpaged*` family)."""
+    step = make_decode_step_qpaged(cfg, capacity, batch, spec)
+    kmx = sample_k_max(cfg)
+
+    def sample_step(params, state, token, pos, reset, uniform, temp, k,
+                    page_index, pools):
+        logits, new_pools = step(params, state, token, pos, reset, page_index, pools)
+        ids, tvals, tids = sample_from_logits(logits, uniform, temp, k, kmx)
+        return ids, tvals, tids, new_pools
+
+    return sample_step
+
+
+def make_prefill_qpaged(cfg: ModelConfig, capacity: int, batch: int, spec: dict):
+    """The quantized prefill twin: contiguous prefill, cache quantised
+    into freshly-initialised i8 pools through the page table."""
+    prefill = make_prefill(cfg, capacity, batch)
+
+    def prefill_qpaged(params, state, tokens, plen, page_index):
+        logprobs, last, caches = prefill(params, state, tokens, plen)
+        pools = scatter_qpools(
+            spec, init_qpools(cfg, batch, capacity, spec), page_index, caches
+        )
+        return logprobs, last, pools
+
+    return prefill_qpaged

@@ -67,6 +67,21 @@ def lowering_smoke() -> dict:
     assert off == pages["pages_per_slot"]
     n_cache = len(progs["decode_step_paged"]["cache"])
     assert len(progs["decode_step_paged"]["donated"]["aliases"]) == n_cache
+    # quantized family: i8 pools + f32 scale siblings, same alias identity
+    assert "decode_step_qpaged" in progs and "prefill_qpaged" in progs, sorted(progs)
+    qp = progs["decode_step_qpaged"]
+    qpages = qp["pages"]
+    assert qpages["dtype"] == "i8" and qpages["scale_leaf"], qpages
+    suffix = qpages["scale_leaf"]
+    kv = {c["path"]: c for c in qp["cache"]}
+    payloads = [c for c in qp["cache"] if c.get("kind") == "kv"]
+    scales = [c for c in qp["cache"] if c.get("kind") == "scale"]
+    assert payloads and len(scales) == len(payloads), sorted(kv)
+    for c in payloads:
+        assert c["dtype"] == "i8", c
+        s = kv[c["path"] + suffix]
+        assert s["dtype"] == "f32" and s["shape"] == c["shape"][:2], (c, s)
+    assert len(qp["donated"]["aliases"]) == len(qp["cache"])
     return {
         "variant": v.name,
         "programs": len(progs),
@@ -74,6 +89,7 @@ def lowering_smoke() -> dict:
         "lowering_seconds": round(seconds, 3),
         "page_size": pages["page_size"],
         "pages_per_slot": pages["pages_per_slot"],
+        "quantized_scale_leaves": len(scales),
     }
 
 

@@ -389,6 +389,8 @@ def test_lowered_decode_programs_and_manifest(tmp_path):
         "decode_step_sample", "decode_step_sample_b1",
         "prefill_paged", "decode_step_paged", "decode_step_paged_b1",
         "decode_step_sample_paged", "decode_step_sample_paged_b1",
+        "prefill_qpaged", "decode_step_qpaged", "decode_step_qpaged_b1",
+        "decode_step_sample_qpaged", "decode_step_sample_qpaged_b1",
     }
     for pname, prog in progs.items():
         assert prog["untupled"] is True

@@ -1,0 +1,525 @@
+"""Quantized paged KV-cache tests: the qpaged-vs-paged differential gate.
+
+The quantized programs (compile/decode.py §quantized) store KV payload
+pages as i8 with one f32 scale per (page, head). They cannot be
+bit-identical to the f32 paged twin at the logit level — the contract
+is instead:
+
+- numerics: per-element round-trip error is bounded by scale/2 =
+  page absmax / 254; degenerate pages (all-zero, single-token,
+  sentinel-initialized) survive quantise→dequant exactly;
+- behaviour: metadata (positions, priorities) is exact, so greedy
+  teacher-forced token streams match the f32 paged twin bit-for-bit at
+  micro scale (small logit perturbation never flips the argmax here —
+  asserted, with the max deviation recorded);
+- safety: the PAGE_SENTINEL isolation story survives the quantise
+  epilogue — unbacked writes drop both payload and scale, unbacked
+  reads dequantise to the empty page.
+
+Schema tests mirror test_paged.py: the manifest ``pages`` section grows
+``dtype`` + ``scale_leaf`` columns and every i8 payload leaf carries an
+f32 ``<leaf>_scale`` sibling shaped [pool_pages, n].
+"""
+
+import jax
+import jax.numpy as jnp
+import jax.tree_util as jtu
+import numpy as np
+import pytest
+
+from compile import decode as dec
+from compile.model import ModelConfig, init_params
+
+jax.config.update("jax_platform_name", "cpu")
+
+B = 2
+CAP = 32
+
+
+def make_cfg(**kw):
+    base = dict(
+        vocab=48, d_model=16, d_head=8, d_ff=32, n_layers=2, seq_len=16,
+        n_dense=2, window=0, n_sparse=0, sparse_kind="none", k_sel=0,
+        use_kernel=False,
+    )
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+CFGS = {
+    "dense": make_cfg(),
+    "local": make_cfg(window=4),
+    "mosa": make_cfg(n_dense=1, n_sparse=2, sparse_kind="mosa", k_sel=4),
+    "fixed": make_cfg(n_dense=1, n_sparse=2, sparse_kind="fixed", k_sel=4),
+    "routing": make_cfg(n_dense=1, n_sparse=2, sparse_kind="routing", k_sel=4),
+}
+
+
+def setup(cfg, seed=0):
+    params, state = init_params(jax.random.PRNGKey(seed), cfg)
+    tokens = jax.random.randint(
+        jax.random.PRNGKey(seed + 1), (B, cfg.seq_len), 0, cfg.vocab
+    )
+    return params, state, tokens.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# quantisation numerics
+# ---------------------------------------------------------------------------
+
+
+def test_roundtrip_error_bounded_by_page_absmax():
+    """Seeded property sweep: |dequant(quant(x)) - x| <= absmax/254 per
+    element, absmax taken over that (page, head) block — across scales
+    spanning 12 orders of magnitude and several distributions."""
+    rng = np.random.default_rng(42)
+    for trial in range(20):
+        scale = 10.0 ** rng.uniform(-6, 6)
+        shape = (int(rng.integers(1, 9)), int(rng.integers(1, 5)), 4, 8)
+        if trial % 3 == 0:
+            pages = rng.normal(0, scale, size=shape)
+        elif trial % 3 == 1:
+            pages = rng.uniform(-scale, scale, size=shape)
+        else:  # heavy-tailed: one dominant element per page
+            pages = rng.normal(0, scale, size=shape)
+            pages[:, :, 0, 0] *= 100.0
+        pages = jnp.asarray(pages.astype(np.float32))
+        q, s = dec.quantise_pages(pages)
+        assert q.dtype == jnp.int8
+        back = np.asarray(dec.dequantise_pages(q, s))
+        absmax = np.asarray(jnp.max(jnp.abs(pages), axis=(2, 3)))
+        bound = absmax[:, :, None, None] / 254.0
+        err = np.abs(back - np.asarray(pages))
+        # tiny epsilon: the bound itself is computed in f32
+        assert (err <= bound + 1e-6 * absmax[:, :, None, None] + 1e-30).all(), trial
+
+
+def test_degenerate_pages_survive_roundtrip_exactly():
+    """All-zero pages, single-token pages, and the init images (zero
+    payload under zero scale) quantise→dequantise exactly."""
+    zero = jnp.zeros((3, 2, 4, 8), jnp.float32)
+    q, s = dec.quantise_pages(zero)
+    np.testing.assert_array_equal(np.asarray(s), 0.0)
+    np.testing.assert_array_equal(np.asarray(dec.dequantise_pages(q, s)), 0.0)
+
+    # single-token page: one written row, rest empty — the absmax element
+    # itself always round-trips exactly (it maps to ±127)
+    single = zero.at[:, :, 1, :].set(jnp.asarray(np.linspace(-3, 3, 8), jnp.float32))
+    q, s = dec.quantise_pages(single)
+    back = np.asarray(dec.dequantise_pages(q, s))
+    np.testing.assert_array_equal(back[:, :, 0], 0.0)  # empty rows stay zero
+    np.testing.assert_array_equal(back[:, :, 2:], 0.0)
+    absmax = np.abs(np.asarray(single)).max(axis=(2, 3))
+    assert np.abs(back[:, :, 1] - np.asarray(single)[:, :, 1]).max() <= absmax.max() / 254.0
+    # the extreme element is exact
+    np.testing.assert_allclose(
+        np.abs(back).max(axis=(2, 3)), absmax, rtol=0, atol=0
+    )
+
+
+def test_init_qpools_image_matches_contiguous_init_rules():
+    """Sentinel-initialized pools: payload 0 (i8), scale 0, positions
+    POS_SENTINEL, priorities -1 — and a gather of the untouched pools
+    reproduces the empty contiguous cache exactly."""
+    cfg = CFGS["mosa"]
+    spec = dec.qpage_spec(cfg, B, CAP, page_size=4)
+    pools = dec.init_qpools(cfg, B, CAP, spec)
+    for layer in pools["layers"]:
+        for name, leaf in layer.items():
+            meta = dec.leaf_meta(name)
+            if meta["kind"] == "kv":
+                assert leaf.dtype == jnp.int8
+                np.testing.assert_array_equal(np.asarray(leaf), 0)
+            elif meta["kind"] == "scale":
+                assert leaf.dtype == jnp.float32
+                np.testing.assert_array_equal(np.asarray(leaf), 0.0)
+            elif meta["init"] == "sentinel":
+                np.testing.assert_array_equal(np.asarray(leaf), dec.POS_SENTINEL)
+            else:
+                np.testing.assert_array_equal(np.asarray(leaf), -1.0)
+    table = dec.identity_page_table(spec, B)
+    gathered = dec.gather_qpools(spec, pools, table)
+    for name, leaf in gathered["layers"][0].items():
+        meta = dec.leaf_meta(name)
+        if meta["kind"] == "kv":
+            assert leaf.dtype == jnp.float32
+            np.testing.assert_array_equal(np.asarray(leaf), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# the differential contract: qpaged greedy streams == paged greedy streams
+# ---------------------------------------------------------------------------
+
+
+def run_twin(cfg, spec_fn, table_fn, p0=4, seed=0, steps=10):
+    """Drive prefill + teacher-forced greedy decode through the f32 paged
+    and quantized paged twins; returns (paged tokens, qpaged tokens,
+    max |logit| deviation, per-step logits)."""
+    params, state, tokens = setup(cfg, seed)
+    spec = dec.page_spec(cfg, B, CAP, **spec_fn)
+    qspec = dec.qpage_spec(cfg, B, CAP, **spec_fn)
+    table = table_fn(spec)
+    prefill_p = dec.make_prefill_paged(cfg, CAP, B, spec)
+    prefill_q = dec.make_prefill_qpaged(cfg, CAP, B, qspec)
+    step_p = dec.make_decode_step_paged(cfg, CAP, B, spec)
+    step_q = dec.make_decode_step_qpaged(cfg, CAP, B, qspec)
+    plen = jnp.full((B,), p0, jnp.int32)
+    lps_p, last_p, pools_p = prefill_p(params, state, tokens, plen, table)
+    lps_q, last_q, pools_q = prefill_q(params, state, tokens, plen, table)
+    # prefill outputs come from the pre-quantisation forward: exact
+    np.testing.assert_array_equal(np.asarray(lps_p), np.asarray(lps_q))
+    np.testing.assert_array_equal(np.asarray(last_p), np.asarray(last_q))
+    zero = jnp.zeros((B,), jnp.int32)
+    tok_p = jnp.argmax(last_p, -1).astype(jnp.int32)
+    tok_q = jnp.argmax(last_q, -1).astype(jnp.int32)
+    toks_p, toks_q, dev = [np.asarray(tok_p)], [np.asarray(tok_q)], 0.0
+    for t in range(p0, p0 + steps):
+        pos = jnp.full((B,), t, jnp.int32)
+        lp, pools_p = step_p(params, state, tok_p, pos, zero, table, pools_p)
+        lq, pools_q = step_q(params, state, tok_q, pos, zero, table, pools_q)
+        dev = max(dev, float(jnp.max(jnp.abs(lp - lq))))
+        tok_p = jnp.argmax(lp, -1).astype(jnp.int32)
+        tok_q = jnp.argmax(lq, -1).astype(jnp.int32)
+        toks_p.append(np.asarray(tok_p))
+        toks_q.append(np.asarray(tok_q))
+    return toks_p, toks_q, dev
+
+
+@pytest.mark.parametrize("name", list(CFGS))
+def test_qpaged_greedy_stream_matches_paged(name):
+    """>= 6 greedy steps on a fully-backed identity table: token streams
+    bit-identical, max logit deviation recorded (and sane)."""
+    cfg = CFGS[name]
+    ps = 4 if name != "local" else 2
+    toks_p, toks_q, dev = run_twin(
+        cfg, dict(page_size=ps), lambda s: dec.identity_page_table(s, B), steps=10
+    )
+    for t, (a, b) in enumerate(zip(toks_p, toks_q)):
+        np.testing.assert_array_equal(a, b, err_msg=f"{name} step {t}")
+    assert np.isfinite(dev)
+    print(f"\n[{name}] max |logit| deviation qpaged vs paged: {dev:.3e}")
+    # the deviation must actually be a quantisation effect, not a broken
+    # (e.g. all-zero) cache: bounded well below the logit scale
+    assert dev < 0.1, dev
+
+
+def test_qpaged_greedy_stream_matches_paged_overcommitted():
+    """The acceptance scenario: an overcommitted lazy pool (pool_frac
+    0.5) with one slot's dense pages left unbacked — the backed slot's
+    greedy stream still matches the f32 paged twin token-for-token."""
+    cfg = CFGS["mosa"]
+    params, state, tokens = setup(cfg, seed=3)
+    kw = dict(page_size=4, pool_frac=0.5)
+    spec = dec.page_spec(cfg, B, CAP, **kw)
+    qspec = dec.qpage_spec(cfg, B, CAP, **kw)
+    dense = [e for e in spec["kinds"] if e["kind"] == "dense"][0]
+    mosa = [e for e in spec["kinds"] if e["kind"] == "mosa"][0]
+    assert dense["pool_pages"] < B * dense["pages_per_slot"]  # overcommitted
+    table = np.full((B, spec["pages_per_slot"]), dec.PAGE_SENTINEL, np.int32)
+    table[0, dense["row_offset"]:dense["row_offset"] + dense["pages_per_slot"]] = (
+        np.arange(dense["pages_per_slot"], dtype=np.int32)
+    )
+    for b in range(B):
+        o = mosa["row_offset"]
+        table[b, o:o + mosa["pages_per_slot"]] = np.arange(
+            b * mosa["pages_per_slot"], (b + 1) * mosa["pages_per_slot"], dtype=np.int32
+        )
+    table = jnp.asarray(table)
+    step_p = dec.make_decode_step_paged(cfg, CAP, B, spec)
+    step_q = dec.make_decode_step_qpaged(cfg, CAP, B, qspec)
+    pools_p = dec.init_pools(cfg, B, CAP, spec)
+    pools_q = dec.init_qpools(cfg, B, CAP, qspec)
+    reset = jnp.asarray([1, 1], jnp.int32)
+    tok_p = tok_q = tokens[:, 0]
+    dev, n_steps = 0.0, 8
+    for t in range(n_steps):
+        pos = jnp.full((B,), t, jnp.int32)
+        lp, pools_p = step_p(params, state, tok_p, pos, reset, table, pools_p)
+        lq, pools_q = step_q(params, state, tok_q, pos, reset, table, pools_q)
+        dev = max(dev, float(jnp.max(jnp.abs(lp[0] - lq[0]))))
+        assert bool(jnp.all(jnp.isfinite(lq)))
+        tok_p = jnp.argmax(lp, -1).astype(jnp.int32)
+        tok_q = jnp.argmax(lq, -1).astype(jnp.int32)
+        np.testing.assert_array_equal(
+            np.asarray(tok_p[0]), np.asarray(tok_q[0]), err_msg=f"step {t}"
+        )
+        reset = jnp.zeros((B,), jnp.int32)
+    print(f"\n[overcommit] max |logit| deviation (backed slot): {dev:.3e}")
+    assert dev < 0.1
+
+
+def test_qpaged_permuted_table_invisible():
+    """Physical page placement must be invisible to the quantized twin
+    too: identity vs permuted tables give bit-identical logits (same
+    pages, same scales, different physical rows)."""
+    cfg = CFGS["mosa"]
+    params, state, tokens = setup(cfg, seed=7)
+    qspec = dec.qpage_spec(cfg, B, CAP, page_size=4)
+    rng = np.random.default_rng(5)
+    table_i = np.array(dec.identity_page_table(qspec, B))
+    table_p = table_i.copy()
+    for e in qspec["kinds"]:
+        perm = rng.permutation(e["pool_pages"]).astype(np.int32)
+        seg = table_p[:, e["row_offset"]:e["row_offset"] + e["pages_per_slot"]]
+        table_p[:, e["row_offset"]:e["row_offset"] + e["pages_per_slot"]] = perm[seg]
+    assert not np.array_equal(table_i, table_p)
+    step_q = dec.make_decode_step_qpaged(cfg, CAP, B, qspec)
+    outs = []
+    for table in (jnp.asarray(table_i), jnp.asarray(table_p)):
+        pools = dec.init_qpools(cfg, B, CAP, qspec)
+        reset = jnp.asarray([1, 1], jnp.int32)
+        o = []
+        for t in range(6):
+            pos = jnp.full((B,), t, jnp.int32)
+            lq, pools = step_q(params, state, tokens[:, t], pos, reset, table, pools)
+            o.append(np.asarray(lq))
+            reset = jnp.zeros((B,), jnp.int32)
+        outs.append(o)
+    for t, (a, b) in enumerate(zip(*outs)):
+        np.testing.assert_array_equal(a, b, err_msg=f"step {t}")
+
+
+def test_qpaged_sample_step_matches_paged_greedy_ids():
+    """decode_step_sample_qpaged with k=1 (exact greedy): sampled ids
+    match the f32 paged sampling twin given the same uniforms."""
+    cfg = CFGS["mosa"]
+    params, state, tokens = setup(cfg, seed=9)
+    spec = dec.page_spec(cfg, B, CAP, page_size=4)
+    qspec = dec.qpage_spec(cfg, B, CAP, page_size=4)
+    table = dec.identity_page_table(spec, B)
+    samp_p = dec.make_decode_sample_paged(cfg, CAP, B, spec)
+    samp_q = dec.make_decode_sample_qpaged(cfg, CAP, B, qspec)
+    prefill_p = dec.make_prefill_paged(cfg, CAP, B, spec)
+    prefill_q = dec.make_prefill_qpaged(cfg, CAP, B, qspec)
+    plen = jnp.full((B,), 4, jnp.int32)
+    _, _, pools_p = prefill_p(params, state, tokens, plen, table)
+    _, _, pools_q = prefill_q(params, state, tokens, plen, table)
+    rng = np.random.default_rng(11)
+    zero = jnp.zeros((B,), jnp.int32)
+    tok_p = tok_q = tokens[:, 4]
+    for t in range(4, 11):
+        pos = jnp.full((B,), t, jnp.int32)
+        u = jnp.asarray(rng.random(B), jnp.float32)
+        ids_p, _, _, pools_p = samp_p(
+            params, state, tok_p, pos, zero, u, jnp.float32(1.0), jnp.int32(1),
+            table, pools_p
+        )
+        ids_q, _, _, pools_q = samp_q(
+            params, state, tok_q, pos, zero, u, jnp.float32(1.0), jnp.int32(1),
+            table, pools_q
+        )
+        np.testing.assert_array_equal(np.asarray(ids_p), np.asarray(ids_q), err_msg=str(t))
+        tok_p, tok_q = ids_p, ids_q
+
+
+# ---------------------------------------------------------------------------
+# PAGE_SENTINEL isolation under the quantise epilogue
+# ---------------------------------------------------------------------------
+
+
+def test_unbacked_qpaged_writes_drop_payload_and_scale():
+    """A slot with unbacked dense pages drops BOTH the i8 payload write
+    and the scale write; the backed slot stays exact vs a contiguous f32
+    run dequantised through the same table, and unmapped pool rows keep
+    their init image."""
+    cfg = CFGS["mosa"]
+    params, state, tokens = setup(cfg, seed=3)
+    qspec = dec.qpage_spec(cfg, B, CAP, page_size=4, pool_frac=0.5)
+    dense = [e for e in qspec["kinds"] if e["kind"] == "dense"][0]
+    mosa = [e for e in qspec["kinds"] if e["kind"] == "mosa"][0]
+    half = dense["pages_per_slot"] // 2
+    table = np.full((B, qspec["pages_per_slot"]), dec.PAGE_SENTINEL, np.int32)
+    # slot 0 backed on dense pages [0, half); slot 1 dense fully unbacked;
+    # pool rows [half, pool_pages) mapped by nobody
+    table[0, dense["row_offset"]:dense["row_offset"] + half] = np.arange(half, dtype=np.int32)
+    for b in range(B):
+        o = mosa["row_offset"]
+        table[b, o:o + mosa["pages_per_slot"]] = np.arange(
+            b * mosa["pages_per_slot"], (b + 1) * mosa["pages_per_slot"], dtype=np.int32
+        )
+    table = jnp.asarray(table)
+    step_q = dec.make_decode_step_qpaged(cfg, CAP, B, qspec)
+    pools = dec.init_qpools(cfg, B, CAP, qspec)
+    reset = jnp.asarray([1, 1], jnp.int32)
+    for t in range(6):
+        pos = jnp.full((B,), t, jnp.int32)
+        lq, pools = step_q(params, state, tokens[:, t], pos, reset, table, pools)
+        assert bool(jnp.all(jnp.isfinite(lq)))
+        reset = jnp.zeros((B,), jnp.int32)
+    for layer in pools["layers"]:
+        # unmapped dense pool rows untouched: payload 0, scale 0
+        np.testing.assert_array_equal(np.asarray(layer["dense_k"][half:]), 0)
+        np.testing.assert_array_equal(np.asarray(layer["dense_k_scale"][half:]), 0.0)
+        np.testing.assert_array_equal(np.asarray(layer["dense_v_scale"][half:]), 0.0)
+        np.testing.assert_array_equal(
+            np.asarray(layer["dense_pos"][half:]), dec.POS_SENTINEL
+        )
+        # the backed slot DID write through (positions 0..5 live in page 0/1)
+        assert np.asarray(layer["dense_pos"][0]).min() < dec.POS_SENTINEL
+        assert np.asarray(layer["dense_k_scale"][:2]).max() > 0.0
+
+
+def test_unbacked_qpaged_reads_dequantise_to_empty():
+    """Gathering through an unbacked table entry yields the empty page:
+    payload 0.0 (scale masked to 0 kills recycled garbage), positions
+    POS_SENTINEL, priorities -1 — even when the pool rows hold data."""
+    cfg = CFGS["mosa"]
+    qspec = dec.qpage_spec(cfg, B, CAP, page_size=4)
+    pools = dec.init_qpools(cfg, B, CAP, qspec)
+    # poison every pool row with nonzero payload + scales + fake meta
+    for layer in pools["layers"]:
+        for name in list(layer):
+            meta = dec.leaf_meta(name)
+            if meta["kind"] == "kv":
+                layer[name] = jnp.full_like(layer[name], 55)
+            elif meta["kind"] == "scale":
+                layer[name] = jnp.full_like(layer[name], 3.0)
+            elif meta["init"] == "sentinel":
+                layer[name] = jnp.zeros_like(layer[name])  # fake "position 0"
+            else:
+                layer[name] = jnp.full_like(layer[name], 0.9)
+    table = jnp.full((B, qspec["pages_per_slot"]), dec.PAGE_SENTINEL, jnp.int32)
+    gathered = dec.gather_qpools(qspec, pools, table)
+    for layer in gathered["layers"]:
+        for name, leaf in layer.items():
+            meta = dec.leaf_meta(name)
+            if meta["kind"] == "kv":
+                np.testing.assert_array_equal(np.asarray(leaf), 0.0, err_msg=name)
+            elif meta["init"] == "sentinel":
+                np.testing.assert_array_equal(
+                    np.asarray(leaf), dec.POS_SENTINEL, err_msg=name
+                )
+            else:
+                np.testing.assert_array_equal(np.asarray(leaf), -1.0, err_msg=name)
+
+
+def test_requantise_untouched_page_is_idempotent():
+    """Scatter→gather→scatter of the same logical content leaves the
+    pools bit-identical: dequantised values re-quantise to the same i8
+    image (no drift on untouched pages across steps)."""
+    cfg = CFGS["mosa"]
+    qspec = dec.qpage_spec(cfg, B, CAP, page_size=4)
+    table = dec.identity_page_table(qspec, B)
+    rng = np.random.default_rng(17)
+    caches = {"layers": []}
+    for _ in range(cfg.n_layers):
+        layer = {}
+        for name, leaf in dec.cache_shapes(cfg, B, CAP).items():
+            meta = dec.leaf_meta(name)
+            if meta["kind"] == "kv":
+                layer[name] = jnp.asarray(
+                    rng.normal(size=leaf.shape).astype(np.float32)
+                )
+            elif meta["init"] == "sentinel":
+                layer[name] = jnp.zeros(leaf.shape, leaf.dtype)
+            else:
+                layer[name] = jnp.full(leaf.shape, 0.5, leaf.dtype)
+        caches["layers"].append(layer)
+    pools1 = dec.scatter_qpools(
+        qspec, dec.init_qpools(cfg, B, CAP, qspec), table, caches
+    )
+    gathered = dec.gather_qpools(qspec, pools1, table)
+    pools2 = dec.scatter_qpools(qspec, pools1, table, gathered)
+    for a, b in zip(jtu.tree_leaves(pools1), jtu.tree_leaves(pools2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# AOT lowering + manifest schema for the qpaged family
+# ---------------------------------------------------------------------------
+
+
+def test_lowered_qpaged_programs_and_manifest_schema(tmp_path):
+    """lower_variant emits the quantized twins: `pages` carries dtype +
+    scale_leaf, every i8 payload leaf has its f32 [pool_pages, n] scale
+    sibling, donation is leaf-for-leaf identity, and the HLO reparses
+    through the pinned converter."""
+    from jax._src.lib import xla_client as xc
+
+    from compile import aot, variants
+
+    cfg = CFGS["mosa"]
+    v = variants.Variant(
+        name="t_qpaged", cfg=cfg, batch=B, programs=["decode"],
+        group="test", base_heads=2,
+        decode=variants.DecodeSpec(
+            capacity=CAP, extra_batches=(1,), extra_capacities=(),
+            page_size=4, pool_frac=0.5,
+        ),
+    )
+    entry = aot.lower_variant(v, str(tmp_path))
+    progs = entry["programs"]
+    assert {
+        "prefill_qpaged", "decode_step_qpaged", "decode_step_sample_qpaged",
+        "decode_step_qpaged_b1", "decode_step_sample_qpaged_b1",
+    } <= set(progs)
+    n_model = entry["n_params_leaves"] + entry["n_state_leaves"]
+    step = progs["decode_step_qpaged"]
+    pages = step["pages"]
+    assert pages["dtype"] == "i8"
+    assert pages["scale_leaf"] == "_scale"
+    # geometry matches the f32 twin exactly (same pools, different bytes)
+    fpages = progs["decode_step_paged"]["pages"]
+    assert {k: v for k, v in pages.items() if k not in ("dtype", "scale_leaf")} == fpages
+    by = {e["path"]: e for e in step["cache"]}
+    for path, e in by.items():
+        if e["kind"] == "kv":
+            assert e["dtype"] == "i8", path
+            sib = by[path + "_scale"]
+            assert sib["kind"] == "scale" and sib["dtype"] == "f32"
+            assert sib["shape"] == e["shape"][:2], path
+            assert sib["init"] == "zeros"
+        elif e["kind"] == "scale":
+            assert by[path[: -len("_scale")]]["dtype"] == "i8"
+    # donated aliases: identity over the whole pool tree (scales included)
+    n_cache = len(step["cache"])
+    assert step["donated"]["aliases"] == [
+        [n_model + 4 + j, 1 + j] for j in range(n_cache)
+    ]
+    samp = progs["decode_step_sample_qpaged"]
+    assert samp["donated"]["aliases"] == [
+        [n_model + 7 + j, 3 + j] for j in range(n_cache)
+    ]
+    assert samp["pages"] == pages
+    ppf = progs["prefill_qpaged"]
+    assert ppf["pages"] == pages
+    assert ppf["donated"] == {"aliases": []}
+    assert [e["name"] for e in ppf["extra_inputs"]] == ["tokens", "plen", "page_index"]
+    # the f32 paged twin's pages section carries no quantisation columns
+    assert "dtype" not in fpages and "scale_leaf" not in fpages
+    for name in ["prefill_qpaged", "decode_step_qpaged", "decode_step_sample_qpaged"]:
+        text = open(tmp_path / progs[name]["file"]).read()
+        assert text.startswith("HloModule")
+        assert xc._xla.hlo_module_from_text(text) is not None
+        if name != "prefill_qpaged":
+            assert aot.parse_alias_map(text) == progs[name]["donated"]["aliases"]
+
+
+def test_quantized_resident_bytes_under_acceptance_ratio():
+    """The BENCH headline, computed from the manifest-side geometry: on
+    the bench micro specs (pool_frac 0.25), quantized resident payload
+    bytes <= 0.30x the contiguous f32 worst case."""
+    from compile import variants
+
+    core = {v.name: v for v in variants.core_variants()}
+    for name in ("micro_dense", "micro_mosa_r8"):
+        v = core[name]
+        cfg, b, cap = v.cfg, v.batch, v.decode.capacity
+        qspec = dec.qpage_spec(cfg, b, cap, page_size=v.decode.page_size,
+                               pool_frac=v.decode.pool_frac)
+        contiguous = qpaged = 0
+        for leafname, leaf in dec.cache_shapes(cfg, b, cap).items():
+            if dec.leaf_meta(leafname)["kind"] != "kv":
+                continue
+            contiguous += int(np.prod(leaf.shape)) * 4
+        for leafname, leaf in dec.qpaged_cache_shapes(cfg, b, cap, qspec).items():
+            kind = dec.leaf_meta(leafname)["kind"]
+            if kind == "kv":
+                qpaged += int(np.prod(leaf.shape)) * 1 * cfg.n_layers
+            elif kind == "scale":
+                qpaged += int(np.prod(leaf.shape)) * 4 * cfg.n_layers
+        contiguous *= 1  # cache_shapes is per-layer; count layers on both sides
+        contiguous_total = contiguous * cfg.n_layers
+        ratio = qpaged / contiguous_total
+        print(f"\n[{name}] quantized/contiguous payload ratio: {ratio:.3f}")
+        assert ratio <= 0.30, (name, ratio)

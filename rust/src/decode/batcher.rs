@@ -668,6 +668,7 @@ mod tests {
                 pool_pages: 4 * slots,
                 lazy: true,
             }],
+            payload_dtype_bytes: 4,
         };
         SharedPageTable::new(PageTable::new(layout, slots))
     }

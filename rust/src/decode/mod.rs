@@ -43,6 +43,20 @@
 //! `ContinuousBatcher::park`) — greedy output is bit-identical with or
 //! without evictions, and always bit-identical to the `--no-paged`
 //! contiguous twin.
+//!
+//! # Quantized paging
+//!
+//! Artifacts additionally carry a quantized twin of the paged family
+//! (`prefill_qpaged` / `decode_step_qpaged*`): the same pools store i8
+//! payloads with one f32 scale per (page, head) in `<leaf>_scale`
+//! sibling leaves (manifest `pages.dtype = "i8"`, `pages.scale_leaf`).
+//! The lowered graphs dequantise on gather and re-quantise on scatter
+//! around the *same* head step math; positions/priorities stay exact, so
+//! routing and slot selection are bit-identical, only attended K/V
+//! values carry the (≤ absmax/254 per page) rounding. Resident payload
+//! drops another 4x on top of overcommit. `--no-quantized` selects the
+//! f32 paged twin — the differential reference the perf harness and
+//! verify.sh gate greedy streams against.
 
 pub mod batcher;
 pub mod sample;
@@ -123,6 +137,34 @@ pub fn cache_layout(cfg: &ModelCfg, batch: usize, capacity: usize) -> Vec<CacheL
     out
 }
 
+/// Map a pool-leaf layout to its quantized twin: every `kv` leaf
+/// `[pool_pages, n, ps, d] f32` becomes i8 with a f32
+/// `<leaf>_scale [pool_pages, n]` sibling right after it — the Rust
+/// mirror of `compile.decode.qpaged_cache_shapes` (the `_scale` suffix
+/// sorts between `X_k` and `X_pos`, so in-place insertion keeps the
+/// jax.tree_util alphabetical order). Metadata leaves are unchanged.
+pub fn quantize_pool_layout(pools: &[CacheLeaf]) -> Vec<CacheLeaf> {
+    let mut out = Vec::with_capacity(pools.len() * 2);
+    for l in pools {
+        if l.kind == "kv" {
+            let mut q = l.clone();
+            q.spec.dtype = "i8".into();
+            let scale_shape = vec![l.spec.shape[0], l.spec.shape[1]];
+            out.push(q);
+            out.push(leaf(
+                format!("{}_scale", l.spec.path),
+                scale_shape,
+                "f32",
+                "scale",
+                "zeros",
+            ));
+        } else {
+            out.push(l.clone());
+        }
+    }
+    out
+}
+
 /// Host-side image of one decode-program family's KV-cache: the literal
 /// per leaf in its empty state, plus byte accounting split into payload
 /// (K/V vectors — the Table 2 number) and bookkeeping metadata.
@@ -143,6 +185,9 @@ impl KvCacheBuffers {
                 ("i32", _) => xla::Literal::vec1(&vec![0i32; n]).reshape(&dims)?,
                 ("f32", "neg") => xla::Literal::vec1(&vec![-1.0f32; n]).reshape(&dims)?,
                 ("f32", _) => xla::Literal::vec1(&vec![0.0f32; n]).reshape(&dims)?,
+                // quantized pool payloads; zero i8 dequantises to 0.0
+                // against the zero scales, matching the f32 empty state
+                ("i8", _) => xla::Literal::vec1(&vec![0i8; n]).reshape(&dims)?,
                 (d, _) => bail!("cache leaf {}: unsupported dtype {d}", l.spec.path),
             };
             leaves.push(lit);
@@ -173,15 +218,20 @@ impl KvCacheBuffers {
 }
 
 /// KV payload bytes of a cache-leaf layout as allocated — the one
-/// accounting shared by `KvCacheBuffers` and both cache stores (all
-/// leaves are 4-byte f32/i32).
+/// accounting shared by `KvCacheBuffers` and the cache stores,
+/// dtype-aware (i8 quantized pools count 1 byte/elem; their f32 scale
+/// siblings are `scale`-kind metadata, not payload).
 fn layout_payload_bytes(layout: &[CacheLeaf]) -> u64 {
-    layout.iter().filter(|l| l.kind == "kv").map(|l| l.spec.elems() as u64 * 4).sum()
+    layout
+        .iter()
+        .filter(|l| l.kind == "kv")
+        .map(|l| l.spec.elems() as u64 * l.spec.dtype_bytes() as u64)
+        .sum()
 }
 
-/// All cache bytes (payload + metadata) of a layout as allocated.
+/// All cache bytes (payload + positions/priorities/scales) as allocated.
 fn layout_total_bytes(layout: &[CacheLeaf]) -> u64 {
-    layout.iter().map(|l| l.spec.elems() as u64 * 4).sum()
+    layout.iter().map(|l| l.spec.elems() as u64 * l.spec.dtype_bytes() as u64).sum()
 }
 
 // ---------------------------------------------------------------------------
@@ -280,13 +330,16 @@ impl KvCacheStore for PagedKvCache {
 
     fn logical_payload_bytes_per_seq(&self) -> u64 {
         // per payload pool leaf [pool_pages, n, ps, d]: one sequence can
-        // address pages_per_slot of those pages => n * S * d floats
+        // address pages_per_slot of those pages => n * S * d elements
+        // (4 bytes each f32, 1 byte quantized)
         self.layout
             .iter()
             .filter(|l| l.kind == "kv")
             .map(|l| {
                 let Some(k) = self.kind_of(&l.spec.path) else { return 0 };
-                (l.spec.elems() / k.pool_pages.max(1)) as u64 * k.pages_per_slot as u64 * 4
+                (l.spec.elems() / k.pool_pages.max(1)) as u64
+                    * k.pages_per_slot as u64
+                    * l.spec.dtype_bytes() as u64
             })
             .sum()
     }
@@ -344,8 +397,12 @@ pub struct DecodeSession<'m> {
     /// device-resident payload bytes: equals `batch × per_seq` for the
     /// contiguous layout, the (overcommittable) pool size when paged
     pub cache_resident_payload_bytes: u64,
-    /// whether this session steps a paged program (`decode_step_paged*`)
+    /// whether this session steps a paged program (`decode_step_paged*`
+    /// or its quantized twin)
     pub paged: bool,
+    /// whether the paged pools store quantized i8 payloads + per-page
+    /// scales (`decode_step_qpaged*`; implies `paged`)
+    pub quantized: bool,
     store: Box<dyn KvCacheStore>,
     /// paged only: the shared page-table handle (cloned to the batcher
     /// and to `serve/`'s per-request `SlotGuard`s)
@@ -395,6 +452,7 @@ impl<'m> DecodeSession<'m> {
             None => Box::new(ContiguousKvCache::new(spec.cache.clone(), batch)),
         };
         let paged = spec.pages.is_some();
+        let quantized = spec.pages.as_ref().is_some_and(|pg| pg.is_quantized());
         let pages = store.shared_table();
         let leaves = store.alloc_leaves()?;
         let sname = step_name.replacen("decode_step", "decode_step_sample", 1);
@@ -414,6 +472,7 @@ impl<'m> DecodeSession<'m> {
             cache_total_bytes: store.total_bytes(),
             cache_resident_payload_bytes: store.resident_payload_bytes(),
             paged,
+            quantized,
             store,
             pages,
             pages_prepared: false,
@@ -600,7 +659,13 @@ impl<'m> DecodeSession<'m> {
         plen: &[i32],
     ) -> Result<(xla::Literal, xla::Literal)> {
         let variant = self.variant;
-        let pname = if self.paged { "prefill_paged" } else { "prefill" };
+        let pname = if self.quantized {
+            "prefill_qpaged"
+        } else if self.paged {
+            "prefill_paged"
+        } else {
+            "prefill"
+        };
         let spec = variant.program(pname)?;
         let p = spec.prompt_len.ok_or_else(|| anyhow!("prefill spec missing prompt_len"))?;
         if tokens.len() != self.batch * p || plen.len() != self.batch {
@@ -922,6 +987,12 @@ pub struct GenerateOptions {
     /// `--no-paged` selects the contiguous twin — same math, fixed
     /// full-capacity slots (the differential-test reference).
     pub use_paged: bool,
+    /// prefer the quantized paged family (`decode_step_qpaged*`: i8
+    /// pool payloads + per-page f32 scales, ~4x lower resident payload)
+    /// when the artifact carries it. `--no-quantized` selects the f32
+    /// paged twin — the differential reference for the dequant math;
+    /// greedy streams are identical at micro scale (gated in verify.sh).
+    pub use_quantized: bool,
 }
 
 impl Default for GenerateOptions {
@@ -935,6 +1006,7 @@ impl Default for GenerateOptions {
             device_resident: true,
             device_sample: true,
             use_paged: true,
+            use_quantized: true,
         }
     }
 }
@@ -950,6 +1022,8 @@ pub struct GenStats {
     pub parked: usize,
     /// whether the paged program family actually served the run
     pub paged: bool,
+    /// whether the quantized (i8 + scales) paged family served the run
+    pub quantized: bool,
 }
 
 /// Serve `requests` to completion through a continuous batcher; returns
@@ -975,14 +1049,20 @@ pub fn generate_with_stats(
     requests: Vec<SeqRequest>,
     opts: &GenerateOptions,
 ) -> Result<(Vec<FinishedSeq>, GenStats)> {
-    let step_name = if opts.use_paged && variant.programs.contains_key("decode_step_paged") {
+    let step_name = if opts.use_paged
+        && opts.use_quantized
+        && variant.programs.contains_key("decode_step_qpaged")
+    {
+        "decode_step_qpaged"
+    } else if opts.use_paged && variant.programs.contains_key("decode_step_paged") {
         "decode_step_paged"
     } else {
         "decode_step"
     };
     let mut session =
         DecodeSession::from_state(manifest, variant, step_name, state, opts.device_resident)?;
-    let mut stats = GenStats { paged: session.paged, ..GenStats::default() };
+    let mut stats =
+        GenStats { paged: session.paged, quantized: session.quantized, ..GenStats::default() };
     let mut rng = crate::util::rng::Pcg::seeded(opts.seed ^ 0xdec0de);
     let b = session.batch;
     let vocab = variant.config.vocab;
@@ -1098,7 +1178,13 @@ pub fn generate_with_stats(
     };
 
     // fast path: batch-prefill the first wave
-    let prefill_prog = if session.paged { "prefill_paged" } else { "prefill" };
+    let prefill_prog = if session.quantized {
+        "prefill_qpaged"
+    } else if session.paged {
+        "prefill_paged"
+    } else {
+        "prefill"
+    };
     if opts.use_prefill && variant.programs.contains_key(prefill_prog) {
         let p = variant.program(prefill_prog)?.prompt_len.unwrap_or(variant.config.seq_len);
         if admit(&mut batcher, &session) > 0 {
@@ -1326,7 +1412,8 @@ mod tests {
             "routing" if c.n_sparse > 0 => push("routing", capacity, true),
             _ => {}
         }
-        let layout = PageLayout { page_size, pages_per_slot: off, kinds };
+        let layout =
+            PageLayout { page_size, pages_per_slot: off, kinds, payload_dtype_bytes: 4 };
         // pool leaves: regroup each contiguous leaf [B, n, S(, d)] as
         // [pool_pages, n, page_size(, d)]
         let pools = cache_layout(c, batch, capacity)
@@ -1397,6 +1484,119 @@ mod tests {
             let ratio =
                 paged.resident_payload_bytes() as f64 / contiguous.resident_payload_bytes() as f64;
             assert!(ratio <= 0.5, "{kind}: resident ratio {ratio}");
+        }
+    }
+
+    /// The quantized twin of `paged_fixture`: i8 pools + scale siblings,
+    /// layout marked 1 byte/elem (mirror of the `_qpaged` manifest).
+    fn qpaged_fixture(
+        c: &ModelCfg,
+        batch: usize,
+        capacity: usize,
+        page_size: usize,
+        pool_frac: f64,
+    ) -> (Vec<CacheLeaf>, crate::kvcache::PageLayout) {
+        let (pools, mut layout) = paged_fixture(c, batch, capacity, page_size, pool_frac);
+        layout.payload_dtype_bytes = 1;
+        (quantize_pool_layout(&pools), layout)
+    }
+
+    #[test]
+    fn quantized_pool_layout_mirrors_python_shapes() {
+        let c = cfg(2, 0, 3, "mosa", 16, 1);
+        let (pools, _) = paged_fixture(&c, 4, 256, 16, 0.5);
+        let q = quantize_pool_layout(&pools);
+        // every kv leaf became i8 and gained a f32 [pool_pages, n] scale
+        // sibling right after it; metadata untouched; order still the
+        // jax.tree_util alphabetical one (X_k < X_k_scale < X_pos)
+        let names: Vec<&str> = q.iter().map(|l| l.spec.path.as_str()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "layers[0].dense_k",
+                "layers[0].dense_k_scale",
+                "layers[0].dense_pos",
+                "layers[0].dense_v",
+                "layers[0].dense_v_scale",
+                "layers[0].mosa_k",
+                "layers[0].mosa_k_scale",
+                "layers[0].mosa_pos",
+                "layers[0].mosa_pri",
+                "layers[0].mosa_v",
+                "layers[0].mosa_v_scale",
+            ]
+        );
+        let mut sorted = names.clone();
+        sorted.sort();
+        assert_eq!(names, sorted);
+        for l in &q {
+            match l.kind.as_str() {
+                "kv" => assert_eq!(l.spec.dtype, "i8", "{}", l.spec.path),
+                "scale" => {
+                    assert_eq!(l.spec.dtype, "f32");
+                    assert_eq!(l.spec.shape.len(), 2, "{}", l.spec.path);
+                    let payload = l.spec.path.strip_suffix("_scale").unwrap();
+                    let p = q.iter().find(|x| x.spec.path == payload).unwrap();
+                    assert_eq!(l.spec.shape[..], p.spec.shape[..2]);
+                }
+                _ => {}
+            }
+        }
+        // the buffers allocate: i8 zeros dequantise to the empty state
+        let kv = KvCacheBuffers::alloc(&q, 4).unwrap();
+        assert_eq!(kv.leaves.len(), q.len());
+    }
+
+    #[test]
+    fn quantized_store_accounting_quarters_the_payload() {
+        let mut rng = crate::util::rng::Pcg::seeded(59);
+        for _ in 0..50 {
+            let kind = ["none", "mosa", "fixed", "routing"][rng.usize_below(4)];
+            let c = cfg(
+                1 + rng.usize_below(4),
+                0,
+                if kind == "none" { 0 } else { 1 + rng.usize_below(8) },
+                kind,
+                16 << rng.below(2),
+                1 + rng.usize_below(3),
+            );
+            let capacity = 256;
+            let batch = 2 + rng.usize_below(6);
+            let frac = [0.25, 0.5, 1.0][rng.usize_below(3)];
+            let (pools, layout) = paged_fixture(&c, batch, capacity, 16, frac);
+            let (qpools, qlayout) = qpaged_fixture(&c, batch, capacity, 16, frac);
+            let paged = PagedKvCache::new(pools, batch, layout);
+            let qpaged = PagedKvCache::new(qpools, batch, qlayout);
+            // resident + logical payload both drop exactly 4x vs f32 paged
+            assert_eq!(
+                paged.resident_payload_bytes(),
+                4 * qpaged.resident_payload_bytes(),
+                "cfg {c:?}"
+            );
+            assert_eq!(
+                qpaged.logical_payload_bytes_per_seq(),
+                crate::kvcache::kv_bytes_total_dtype(&c, capacity, 1)
+            );
+            // total bytes keep the scale + metadata overhead: strictly
+            // more than the payload, strictly less than the f32 twin
+            assert!(qpaged.total_bytes() > qpaged.resident_payload_bytes());
+            assert!(qpaged.total_bytes() < paged.total_bytes());
+        }
+    }
+
+    #[test]
+    fn quantized_store_hits_the_acceptance_ratio() {
+        // the verify.sh gate shape: quantized resident payload <= 0.30x
+        // the CONTIGUOUS f32 baseline on both bench variants (overcommit
+        // ~0.25-0.35 composes with the 4x dtype factor)
+        for (nd, ns, kind, k) in [(4usize, 0usize, "none", 0usize), (2, 20, "mosa", 16)] {
+            let c = cfg(nd, 0, ns, kind, k, 2);
+            let (qpools, qlayout) = qpaged_fixture(&c, 8, 1024, 16, 0.25);
+            let qpaged = PagedKvCache::new(qpools, 8, qlayout);
+            let contiguous = ContiguousKvCache::new(cache_layout(&c, 8, 1024), 8);
+            let ratio = qpaged.resident_payload_bytes() as f64
+                / contiguous.resident_payload_bytes() as f64;
+            assert!(ratio <= 0.30, "{kind}: quantized resident ratio {ratio}");
         }
     }
 

@@ -19,6 +19,8 @@
 //! `kv_bytes_total` stays the *logical* per-sequence accounting, while
 //! the paged pools bound the *resident* bytes independently of how many
 //! slots are admitted — the overcommit the paged serving path exploits.
+//! Quantized pools (`pages.dtype = "i8"`) shrink the payload a further
+//! 4x (`kv_bytes_total_dtype`), paying one f32 scale per (page, head).
 
 pub mod paged;
 
@@ -49,7 +51,17 @@ pub fn kv_pairs_total(cfg: &ModelCfg, t: usize) -> u64 {
 
 /// KV-cache bytes (2 vectors of h' f32 per pair).
 pub fn kv_bytes_total(cfg: &ModelCfg, t: usize) -> u64 {
-    kv_pairs_total(cfg, t) * 2 * cfg.d_head as u64 * 4
+    kv_bytes_total_dtype(cfg, t, 4)
+}
+
+/// KV-cache bytes at an arbitrary payload width — the quantized paged
+/// pools store i8 payloads (`payload_bytes = 1`), cutting the logical
+/// KV bytes 4x on top of MoSA's pair-count reduction. Scale metadata
+/// (one f32 per page x head) is not part of this *logical* per-pair
+/// accounting; the resident scale bytes are modelled where the pools
+/// are (`decode::KvCacheBuffers` / `perf`'s quantized arm).
+pub fn kv_bytes_total_dtype(cfg: &ModelCfg, t: usize, payload_bytes: u64) -> u64 {
+    kv_pairs_total(cfg, t) * 2 * cfg.d_head as u64 * payload_bytes
 }
 
 /// Training-time activation memory model (bytes, f32, per batch element):
@@ -183,6 +195,21 @@ mod tests {
     fn bytes_scale_with_head_dim() {
         let c = cfg(1, 0, "none", 0, 1, 16);
         assert_eq!(kv_bytes_total(&c, 16), 16 * 2 * 64 * 4);
+    }
+
+    #[test]
+    fn quantized_payload_bytes_are_a_quarter_of_f32() {
+        let c = cfg(4, 17, "mosa", 32, 6, 1024);
+        let f32b = kv_bytes_total(&c, 1024);
+        let i8b = kv_bytes_total_dtype(&c, 1024, 1);
+        assert_eq!(f32b, 4 * i8b);
+        assert_eq!(kv_bytes_total_dtype(&c, 1024, 4), f32b);
+        // the highwater model inherits the factor through state_bytes:
+        // a dtype-aware manifest layout feeds a 4x smaller donated term
+        assert_eq!(
+            step_state_highwater_bytes(i8b, true) * 4,
+            step_state_highwater_bytes(f32b, true)
+        );
     }
 
     #[test]

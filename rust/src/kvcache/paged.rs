@@ -132,6 +132,10 @@ pub struct PageLayout {
     /// total page_index row width (sum of the kind segments)
     pub pages_per_slot: usize,
     pub kinds: Vec<PageKind>,
+    /// bytes per payload pool element: 4 (f32 paged) or 1 (i8 quantized).
+    /// The geometry is dtype-agnostic — this only feeds the resident-byte
+    /// accounting (`decode::KvCacheBuffers`, `perf`'s quantized arm)
+    pub payload_dtype_bytes: usize,
 }
 
 impl PageLayout {
@@ -151,6 +155,7 @@ impl PageLayout {
                     lazy: k.lazy,
                 })
                 .collect(),
+            payload_dtype_bytes: spec.payload_dtype_bytes(),
         }
     }
 
@@ -595,6 +600,7 @@ mod tests {
                     lazy: false,
                 },
             ],
+            payload_dtype_bytes: 4,
         }
     }
 

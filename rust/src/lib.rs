@@ -74,14 +74,26 @@
 //!   `PageTable::ensure`). Bit-identical to the contiguous layout on
 //!   any fully-backed table — the contiguous programs survive as the
 //!   `--no-paged` A/B twin and differential-test reference.
+//! - **Quantized paged KV-cache** (the `*_qpaged` program twins): pool
+//!   payloads drop to `i8` with one `f32` scale per (page, head)
+//!   (`<leaf>_scale` siblings, kind `scale` in the manifest's `cache`
+//!   section; the `pages` section's `dtype`/`scale_leaf` columns are
+//!   validated both ways at load). In-graph the step dequantises the
+//!   gathered view, runs the *same* head step functions, and re-quantises
+//!   touched pages on scatter (symmetric absmax/127, idempotent on
+//!   untouched pages); metadata stays exact, so MoSA/routing selection
+//!   cannot drift. `mosa generate` auto-selects `_qpaged`; the
+//!   `--no-quantized` f32 paged twin is the A/B baseline and the
+//!   teacher-forced greedy differential reference, and the serve ladder
+//!   demotes quantized→f32-paged before paged→contiguous.
 //! - **Request lifecycle + robustness** (`serve`): a serving layer over
 //!   the batcher — bounded admission queue with deadline-aware (EDF)
 //!   scheduling, per-request deadlines and cancellation tokens, RAII
 //!   `SlotGuard`s so a disconnect can never leak pool pages, a typed
 //!   error taxonomy (`ServeError`, transient vs fatal) threaded through
 //!   the engine and decode layers, and a degradation ladder (seeded
-//!   backoff retries → donated→copied demotion → paged→contiguous
-//!   demotion → shed-and-replay → fail). A deterministic fault-injection
+//!   backoff retries → donated→copied demotion → quantized→f32-paged
+//!   demotion → paged→contiguous demotion → shed-and-replay → fail). A deterministic fault-injection
 //!   layer (`serve::fault`) and chaos harness (`serve::chaos`,
 //!   `mosa chaos`) drive the whole loop through dispatch failures, pool
 //!   exhaustion, watchdog overruns, and corrupt artifacts, asserting
@@ -94,7 +106,11 @@
 //!   sampling 2×2 with measured `host_bytes_per_token` (gated in
 //!   `verify.sh` at 16 × batch on the device-sampling path), and the
 //!   paged-vs-contiguous arm (resident pool bytes ≤ 0.5× contiguous,
-//!   gated in `verify.sh`; live page occupancy; table upload bytes).
+//!   gated in `verify.sh`; live page occupancy; table upload bytes),
+//!   plus the quantized arm (i8 resident payload ≤ 0.30× contiguous f32
+//!   and a zero-greedy-mismatch teacher-forced differential vs the f32
+//!   paged twin, both gated in `verify.sh`; max-abs logit deviation
+//!   reported).
 
 pub mod util;
 pub mod config;

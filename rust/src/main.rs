@@ -77,7 +77,7 @@ fn print_help() {
          \x20 perf       [--smoke] [--corpus-bytes N] [--threads N] [--out path] [--decode-out path]\n\
          \x20 generate   --variant <name> [--ckpt path] [--prompt text] [--n-seqs N]\n\
          \x20            [--max-new N] [--top-k K] [--temp T] [--seed S] [--no-device-resident]\n\
-         \x20            [--host-sample] [--no-donate] [--no-paged]\n\
+         \x20            [--host-sample] [--no-donate] [--no-paged] [--no-quantized]\n\
          \x20 chaos      [--seed S] [--requests N] [--pool-pages P] [--cancel-frac F]\n\
          \x20            [--deadline-frac F] [--plan 'fail@2;slow@5:900;hold@1:4x120'] [--out path]\n\
          \x20 downstream --variant <name> --ckpt <path> [--n 50]\n\
@@ -238,6 +238,10 @@ fn cmd_generate(args: &Args) -> Result<()> {
         // carries the paged programs; --no-paged selects the contiguous
         // fixed-slot twin for A/B runs
         use_paged: !args.has("no-paged"),
+        // quantized pools (i8 + per-page scales) when the artifact
+        // carries the qpaged programs; --no-quantized selects the f32
+        // paged twin — the dequant-math differential reference
+        use_quantized: !args.has("no-quantized"),
     };
     let requests: Vec<SeqRequest> = (0..n_seqs)
         .map(|i| SeqRequest { id: i as u64, prompt: prompt_ids.clone(), max_new: opts.max_new })

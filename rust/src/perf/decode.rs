@@ -24,6 +24,13 @@
 //!   long-capacity config — resident pool bytes (the overcommit win;
 //!   `resident_ratio` must stay ≤ 0.5), live page occupancy, per-token
 //!   ms, and the page-table upload bytes per step;
+//! - **quantized vs paged** (`quantized`): the i8-pool `decode_step_qpaged`
+//!   family against the f32 paged twin — resident pool payload bytes
+//!   (`resident_ratio_quantized_vs_contiguous` must stay ≤ 0.30: the
+//!   overcommit win × the 4× dtype factor), per-token ms, and a
+//!   teacher-forced greedy differential (same token stream through both,
+//!   logits fetched each step) reporting `max_abs_logit_deviation` and
+//!   the `greedy_stream_mismatches` count `verify.sh` gates at zero;
 //! - **batch scaling**: tokens/sec at batch 1 / native / 32 via the
 //!   `decode_step_b*` program family;
 //! - **context scaling**: per-token ms at capacities 128..1024 via
@@ -544,6 +551,91 @@ fn bench_variant(
             Json::obj(vec![
                 ("arms", Json::Arr(arms)),
                 ("resident_ratio_paged_vs_contiguous", Json::num(ratio)),
+            ]),
+        ));
+    }
+
+    // --- quantized vs paged: i8 pool payload + the dequant differential --
+    // the quantized acceptance arm: resident pool *payload* bytes must
+    // fall to <= 0.30x the contiguous f32 baseline (overcommit x the 4x
+    // dtype factor), and a teacher-forced greedy stream through the
+    // qpaged family must match the f32 paged twin token for token —
+    // per-page absmax scaling bounds the logit deviation well below any
+    // greedy argmax margin at micro scale. Both gated in verify.sh.
+    if v.programs.contains_key("decode_step_qpaged")
+        && v.programs.contains_key("decode_step_paged")
+    {
+        let short_steps = steps.min(96);
+        let mut sq = session_for(manifest, v, "decode_step_qpaged", true)?;
+        let (_, compile) =
+            crate::util::stats::time_once(|| engine.load_program(manifest, v, "decode_step_qpaged"));
+        time_steps(engine, &mut sq, &mut rng, vocab, 0, 1)?; // warmup
+        let ms = time_steps(engine, &mut sq, &mut rng, vocab, 1, short_steps)?;
+        let q_resident = sq.cache_resident_payload_bytes;
+        let q_total = sq.cache_total_bytes;
+        let (pages_used, pages_total) = sq.page_occupancy();
+        let paged_resident =
+            session_for(manifest, v, "decode_step_paged", true)?.cache_resident_payload_bytes;
+        let contiguous_resident = session.cache_resident_payload_bytes;
+        let ratio_paged = q_resident as f64 / paged_resident.max(1) as f64;
+        let ratio_contiguous = q_resident as f64 / contiguous_resident.max(1) as f64;
+
+        // teacher-forced differential: the SAME token stream through the
+        // quantized and f32 paged twins, logits fetched every step
+        let diff_steps = if cfg.smoke { 8 } else { 16 };
+        let mut sa = session_for(manifest, v, "decode_step_qpaged", true)?;
+        let mut sb = session_for(manifest, v, "decode_step_paged", true)?;
+        let mut reset: Vec<i32> = vec![1; batch];
+        let (mut buf_a, mut buf_b): (Vec<f32>, Vec<f32>) = (Vec::new(), Vec::new());
+        let mut max_dev = 0f64;
+        let mut mismatches = 0usize;
+        for i in 0..diff_steps {
+            let toks = rand_tokens(&mut rng, batch, vocab);
+            let pos: Vec<i32> = vec![i as i32; batch];
+            let la = sa.step(engine, &toks, &pos, &reset)?;
+            let lb = sb.step(engine, &toks, &pos, &reset)?;
+            fill_vec_f32(&la, &mut buf_a)?;
+            fill_vec_f32(&lb, &mut buf_b)?;
+            for (x, y) in buf_a.iter().zip(&buf_b) {
+                max_dev = max_dev.max((x - y).abs() as f64);
+            }
+            let argmax = |row: &[f32]| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+                    .map(|(j, _)| j)
+                    .unwrap_or(0)
+            };
+            for s in 0..batch {
+                let (ra, rb) =
+                    (&buf_a[s * vocab..(s + 1) * vocab], &buf_b[s * vocab..(s + 1) * vocab]);
+                if argmax(ra) != argmax(rb) {
+                    mismatches += 1;
+                }
+            }
+            reset.iter_mut().for_each(|r| *r = 0);
+        }
+        println!(
+            "decode[{}] quantized: {:.2} ms/token, resident {} bytes = {:.3}x paged-f32, \
+             {:.3}x contiguous; {} teacher-forced steps: max |Δlogit| {:.2e}, {} greedy mismatches",
+            v.name, ms, q_resident, ratio_paged, ratio_contiguous, diff_steps, max_dev, mismatches
+        );
+        row.push((
+            "quantized",
+            Json::obj(vec![
+                ("program", Json::str("decode_step_qpaged")),
+                ("steps", Json::num(short_steps as f64)),
+                ("ms_per_token", Json::num(ms)),
+                ("compile_s", Json::num(compile.as_secs_f64())),
+                ("resident_payload_bytes", Json::num(q_resident as f64)),
+                ("total_bytes", Json::num(q_total as f64)),
+                ("pages_in_use", Json::num(pages_used as f64)),
+                ("pool_pages_total", Json::num(pages_total as f64)),
+                ("resident_ratio_quantized_vs_paged", Json::num(ratio_paged)),
+                ("resident_ratio_quantized_vs_contiguous", Json::num(ratio_contiguous)),
+                ("teacher_forced_steps", Json::num(diff_steps as f64)),
+                ("max_abs_logit_deviation", Json::num(max_dev)),
+                ("greedy_stream_mismatches", Json::num(mismatches as f64)),
             ]),
         ));
     }

@@ -27,13 +27,30 @@ impl LeafSpec {
     pub fn elems(&self) -> usize {
         self.shape.iter().product()
     }
+
+    /// Bytes per element of this leaf's dtype.
+    pub fn dtype_bytes(&self) -> usize {
+        dtype_bytes(&self.dtype)
+    }
+}
+
+/// Bytes per element of a manifest dtype string. Every dtype in the
+/// lowering is 4 bytes except the quantized-pool payload (`i8`).
+pub fn dtype_bytes(dtype: &str) -> usize {
+    match dtype {
+        "i8" | "u8" => 1,
+        "f16" | "bf16" | "i16" | "u16" => 2,
+        _ => 4,
+    }
 }
 
 /// One KV-cache leaf of a decode-program family (`cache` section).
 ///
 /// `kind` splits the layout into the KV payload (`"kv"`: the K/V/shared-QK
-/// vectors whose bytes are exactly `kvcache::kv_bytes_total`) and
-/// bookkeeping metadata (`"meta"`: slot positions / MoSA priorities).
+/// vectors whose bytes are exactly `kvcache::kv_bytes_total`),
+/// bookkeeping metadata (`"meta"`: slot positions / MoSA priorities) and,
+/// for quantized pools, per-(page, head) dequant scales (`"scale"`: f32
+/// `[pool_pages, n]` siblings of an i8 payload leaf).
 /// `init` is the empty-cache fill rule: "zeros" (payload), "sentinel"
 /// (positions — `decode::POS_SENTINEL` hides the slot from the causal
 /// mask) or "neg" (MoSA priorities -1, below every router score).
@@ -70,6 +87,24 @@ pub struct PagesSpec {
     /// total page_index row width (sum of the kind segments)
     pub pages_per_slot: usize,
     pub kinds: Vec<PageKindSpec>,
+    /// payload pool dtype: absent/"f32" = plain paged, "i8" = quantized
+    /// pools (each `kv` leaf carries a f32 `<leaf><scale_leaf>` sibling
+    /// holding one scale per (page, head))
+    pub dtype: Option<String>,
+    /// suffix naming each payload leaf's scale sibling (quantized only)
+    pub scale_leaf: Option<String>,
+}
+
+impl PagesSpec {
+    /// Whether the pools store quantized (i8 + per-page scale) payloads.
+    pub fn is_quantized(&self) -> bool {
+        self.dtype.as_deref() == Some("i8")
+    }
+
+    /// Bytes per payload pool element (1 for i8, 4 for f32).
+    pub fn payload_dtype_bytes(&self) -> usize {
+        dtype_bytes(self.dtype.as_deref().unwrap_or("f32"))
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -175,11 +210,15 @@ impl Variant {
         })
     }
 
-    /// Total train-state bytes from the manifest leaf layout (all leaves
-    /// are 4-byte f32/i32) — the number the donated-vs-copied high-water
-    /// accounting (`kvcache::step_state_highwater_bytes`) is fed with.
+    /// Total train-state bytes from the manifest leaf layout, dtype-aware
+    /// (i8 pool payloads count 1 byte/elem) — the number the
+    /// donated-vs-copied high-water accounting
+    /// (`kvcache::step_state_highwater_bytes`) is fed with.
     pub fn state_bytes(&self) -> u64 {
-        self.leaves.iter().map(|l| l.elems() as u64 * 4).sum()
+        self.leaves
+            .iter()
+            .map(|l| l.elems() as u64 * l.dtype_bytes() as u64)
+            .sum()
     }
 
     /// Flat input leaf layout of a state-consuming program: the state
@@ -278,6 +317,23 @@ impl Variant {
                     other.map(|l| (&l.path, &l.shape, &l.dtype))
                 ))),
             }
+            // quantisation columns: dtype whitelist + scale-leaf contract
+            let quantized = match pg.dtype.as_deref() {
+                None | Some("f32") => false,
+                Some("i8") => true,
+                Some(other) => bail!(err(format!(
+                    "unsupported pages dtype '{other}' (whitelist: f32, i8)"
+                ))),
+            };
+            if quantized && pg.scale_leaf.as_deref().map_or(true, str::is_empty) {
+                bail!(err("dtype i8 requires a scale_leaf suffix".into()));
+            }
+            if !quantized && pg.scale_leaf.is_some() {
+                bail!(err("scale_leaf given without a quantized dtype".into()));
+            }
+            let suffix = pg.scale_leaf.clone().unwrap_or_default();
+            let by_path: BTreeMap<&str, &CacheLeaf> =
+                p.cache.iter().map(|c| (c.spec.path.as_str(), c)).collect();
             // every pool leaf matches its kind's geometry
             for c in &p.cache {
                 let leaf = c.spec.path.rsplit('.').next().unwrap_or(&c.spec.path);
@@ -285,6 +341,36 @@ impl Variant {
                 let Some(k) = pg.kinds.iter().find(|k| k.kind == prefix) else {
                     bail!(err(format!("cache leaf {} has no pages kind", c.spec.path)));
                 };
+                if c.kind == "scale" {
+                    // scale leaves: f32 [pool_pages, n], sibling of an i8
+                    // payload leaf — cross-checked from the payload side;
+                    // here the leaf itself must be well-formed
+                    if !quantized {
+                        bail!(err(format!(
+                            "scale leaf {} in an unquantized pages section",
+                            c.spec.path
+                        )));
+                    }
+                    let payload = c.spec.path.strip_suffix(suffix.as_str());
+                    if payload.map_or(true, |pp| {
+                        by_path.get(pp).map(|b| b.kind.as_str()) != Some("kv")
+                    }) {
+                        bail!(err(format!(
+                            "scale leaf {} has no kv payload sibling",
+                            c.spec.path
+                        )));
+                    }
+                    if c.spec.dtype != "f32"
+                        || c.spec.shape.len() != 2
+                        || c.spec.shape.first() != Some(&k.pool_pages)
+                    {
+                        bail!(err(format!(
+                            "scale leaf {} must be f32 [{}, n], got {:?} {}",
+                            c.spec.path, k.pool_pages, c.spec.shape, c.spec.dtype
+                        )));
+                    }
+                    continue;
+                }
                 if c.spec.shape.first() != Some(&k.pool_pages)
                     || c.spec.shape.get(2) != Some(&pg.page_size)
                 {
@@ -292,6 +378,31 @@ impl Variant {
                         "pool leaf {} shape {:?} != [{}, n, {}, ...]",
                         c.spec.path, c.spec.shape, k.pool_pages, pg.page_size
                     )));
+                }
+                if c.kind == "kv" {
+                    let want_dtype = if quantized { "i8" } else { "f32" };
+                    if c.spec.dtype != want_dtype {
+                        bail!(err(format!(
+                            "payload leaf {} dtype {} != {} (pages dtype {:?})",
+                            c.spec.path, c.spec.dtype, want_dtype, pg.dtype
+                        )));
+                    }
+                    if quantized {
+                        let sib = format!("{}{}", c.spec.path, suffix);
+                        let Some(s) = by_path.get(sib.as_str()) else {
+                            bail!(err(format!(
+                                "payload leaf {} has no {} scale sibling",
+                                c.spec.path, sib
+                            )));
+                        };
+                        let n = c.spec.shape.get(1).copied().unwrap_or(0);
+                        if s.spec.shape[..] != [k.pool_pages, n] {
+                            bail!(err(format!(
+                                "scale leaf {} shape {:?} != [{}, {}] (payload {})",
+                                sib, s.spec.shape, k.pool_pages, n, c.spec.path
+                            )));
+                        }
+                    }
                 }
             }
         }
@@ -475,6 +586,11 @@ impl Manifest {
                             page_size: gu(pgj, "page_size")?,
                             pages_per_slot: gu(pgj, "pages_per_slot")?,
                             kinds,
+                            dtype: pgj.get("dtype").and_then(Json::as_str).map(str::to_string),
+                            scale_leaf: pgj
+                                .get("scale_leaf")
+                                .and_then(Json::as_str)
+                                .map(str::to_string),
                         })
                     }
                 };
@@ -845,6 +961,145 @@ mod tests {
             std::fs::write(dir.join("manifest.json"), bad).unwrap();
             let err = format!("{:#}", Manifest::load(&dir).unwrap_err());
             assert!(err.contains(needle), "case {i}: {err}");
+        }
+    }
+
+    fn qpaged_manifest_json() -> &'static str {
+        r#"{"variants": [{
+            "name": "tq", "group": "g", "batch": 2, "base_heads": 2, "rho": 2,
+            "flops_fwd": 1000, "n_params": 10,
+            "n_params_leaves": 1, "n_state_leaves": 0, "n_train_leaves": 4,
+            "config": {"vocab": 16, "d_model": 8, "d_head": 4, "d_ff": 16,
+                       "n_layers": 1, "seq_len": 8, "n_dense": 1, "window": 0,
+                       "n_sparse": 1, "sparse_kind": "mosa", "k_sel": 4},
+            "sections": {
+              "params": [{"path": "emb", "shape": [16, 8], "dtype": "f32"}],
+              "state": [],
+              "m": [{"path": "emb", "shape": [16, 8], "dtype": "f32"}],
+              "v": [{"path": "emb", "shape": [16, 8], "dtype": "f32"}],
+              "t": [{"path": "t", "shape": [], "dtype": "f32"}]
+            },
+            "programs": {"decode_step_qpaged": {"file": "tq.decode_step_qpaged.hlo.txt",
+              "untupled": true, "batch": 2, "capacity": 8,
+              "extra_inputs": [{"name": "token", "shape": [2], "dtype": "i32"},
+                                {"name": "pos", "shape": [2], "dtype": "i32"},
+                                {"name": "reset", "shape": [2], "dtype": "i32"},
+                                {"name": "page_index", "shape": [2, 3], "dtype": "i32"}],
+              "extra_outputs": [{"name": "logits", "shape": [2, 16], "dtype": "f32"}],
+              "pages": {"page_size": 4, "pages_per_slot": 3, "sentinel": 1073741824,
+                "dtype": "i8", "scale_leaf": "_scale",
+                "kinds": [
+                  {"kind": "dense", "slots": 8, "pages_per_slot": 2,
+                   "row_offset": 0, "pool_pages": 3, "lazy": true},
+                  {"kind": "mosa", "slots": 4, "pages_per_slot": 1,
+                   "row_offset": 2, "pool_pages": 2, "lazy": false}]},
+              "donated": {"aliases": []},
+              "cache": [
+                {"path": "layers[0].dense_k", "shape": [3, 1, 4, 4], "dtype": "i8",
+                 "kind": "kv", "init": "zeros"},
+                {"path": "layers[0].dense_k_scale", "shape": [3, 1], "dtype": "f32",
+                 "kind": "scale", "init": "zeros"},
+                {"path": "layers[0].dense_pos", "shape": [3, 1, 4], "dtype": "i32",
+                 "kind": "meta", "init": "sentinel"},
+                {"path": "layers[0].dense_v", "shape": [3, 1, 4, 4], "dtype": "i8",
+                 "kind": "kv", "init": "zeros"},
+                {"path": "layers[0].dense_v_scale", "shape": [3, 1], "dtype": "f32",
+                 "kind": "scale", "init": "zeros"},
+                {"path": "layers[0].mosa_k", "shape": [2, 1, 4, 4], "dtype": "i8",
+                 "kind": "kv", "init": "zeros"},
+                {"path": "layers[0].mosa_k_scale", "shape": [2, 1], "dtype": "f32",
+                 "kind": "scale", "init": "zeros"},
+                {"path": "layers[0].mosa_pos", "shape": [2, 1, 4], "dtype": "i32",
+                 "kind": "meta", "init": "sentinel"},
+                {"path": "layers[0].mosa_pri", "shape": [2, 1, 4], "dtype": "f32",
+                 "kind": "meta", "init": "neg"},
+                {"path": "layers[0].mosa_v", "shape": [2, 1, 4, 4], "dtype": "i8",
+                 "kind": "kv", "init": "zeros"},
+                {"path": "layers[0].mosa_v_scale", "shape": [2, 1], "dtype": "f32",
+                 "kind": "scale", "init": "zeros"}]}}
+        }]}"#
+    }
+
+    #[test]
+    fn parses_quantized_pages_section() {
+        let dir = std::env::temp_dir().join("mosa_manifest_qpages_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), qpaged_manifest_json()).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let v = m.variant("tq").unwrap();
+        let p = v.program("decode_step_qpaged").unwrap();
+        let pg = p.pages.as_ref().unwrap();
+        assert!(pg.is_quantized());
+        assert_eq!(pg.dtype.as_deref(), Some("i8"));
+        assert_eq!(pg.scale_leaf.as_deref(), Some("_scale"));
+        assert_eq!(pg.payload_dtype_bytes(), 1);
+        // the unquantized twin reports 4-byte payloads
+        let fp = {
+            let dir2 = std::env::temp_dir().join("mosa_manifest_qpages_twin");
+            std::fs::create_dir_all(&dir2).unwrap();
+            std::fs::write(dir2.join("manifest.json"), paged_manifest_json()).unwrap();
+            Manifest::load(&dir2).unwrap()
+        };
+        let tw = fp.variant("tp").unwrap();
+        let tpg = tw.program("decode_step_paged").unwrap().pages.as_ref().unwrap();
+        assert!(!tpg.is_quantized());
+        assert_eq!(tpg.payload_dtype_bytes(), 4);
+    }
+
+    #[test]
+    fn quantized_pages_validation_rejects_malformed_schema() {
+        let base = qpaged_manifest_json();
+        let cases = [
+            // dtype whitelist: only f32 / i8
+            (r#""dtype": "i8", "scale_leaf": "_scale","#,
+             r#""dtype": "f64", "scale_leaf": "_scale","#, "unsupported pages dtype"),
+            // i8 payloads need a scale-leaf suffix
+            (r#""dtype": "i8", "scale_leaf": "_scale","#,
+             r#""dtype": "i8","#, "requires a scale_leaf"),
+            // scale sibling must mirror [pool_pages, n] of its payload
+            (r#"{"path": "layers[0].dense_k_scale", "shape": [3, 1], "dtype": "f32","#,
+             r#"{"path": "layers[0].dense_k_scale", "shape": [2, 1], "dtype": "f32","#,
+             "scale leaf"),
+            // scale leaves carry f32 scales, nothing else
+            (r#"{"path": "layers[0].mosa_v_scale", "shape": [2, 1], "dtype": "f32","#,
+             r#"{"path": "layers[0].mosa_v_scale", "shape": [2, 1], "dtype": "i32","#,
+             "must be f32"),
+            // every i8 payload leaf needs its scale sibling present
+            (r#"{"path": "layers[0].mosa_k_scale", "shape": [2, 1], "dtype": "f32",
+                 "kind": "scale", "init": "zeros"},
+                "#, "", "scale sibling"),
+            // payload dtype must agree with the pages dtype column
+            (r#"{"path": "layers[0].dense_v", "shape": [3, 1, 4, 4], "dtype": "i8","#,
+             r#"{"path": "layers[0].dense_v", "shape": [3, 1, 4, 4], "dtype": "f32","#,
+             "payload leaf"),
+        ];
+        for (i, (from, to, needle)) in cases.iter().enumerate() {
+            let bad = base.replace(from, to);
+            assert_ne!(bad, base, "case {i}: pattern not found");
+            let dir = std::env::temp_dir().join(format!("mosa_manifest_badqpages_{i}"));
+            std::fs::create_dir_all(&dir).unwrap();
+            std::fs::write(dir.join("manifest.json"), bad).unwrap();
+            let err = format!("{:#}", Manifest::load(&dir).unwrap_err());
+            assert!(err.contains(needle), "case {i}: {err}");
+        }
+        // and on the f32 twin: scale_leaf / i8 leaves without a quantized dtype
+        let fbase = paged_manifest_json();
+        let fcases = [
+            (r#""sentinel": 1073741824,"#,
+             r#""sentinel": 1073741824, "scale_leaf": "_scale","#,
+             "without a quantized dtype"),
+            (r#"{"path": "layers[0].mosa_k", "shape": [2, 1, 4, 4], "dtype": "f32","#,
+             r#"{"path": "layers[0].mosa_k", "shape": [2, 1, 4, 4], "dtype": "i8","#,
+             "payload leaf"),
+        ];
+        for (i, (from, to, needle)) in fcases.iter().enumerate() {
+            let bad = fbase.replace(from, to);
+            assert_ne!(bad, fbase, "f32 case {i}: pattern not found");
+            let dir = std::env::temp_dir().join(format!("mosa_manifest_badfpages_{i}"));
+            std::fs::create_dir_all(&dir).unwrap();
+            std::fs::write(dir.join("manifest.json"), bad).unwrap();
+            let err = format!("{:#}", Manifest::load(&dir).unwrap_err());
+            assert!(err.contains(needle), "f32 case {i}: {err}");
         }
     }
 

@@ -298,6 +298,7 @@ mod tests {
                     pool_pages: pool,
                     lazy: true,
                 }],
+                payload_dtype_bytes: 4,
             },
             2,
         ))

@@ -342,6 +342,12 @@ pub trait Dispatcher {
     fn demote_copy(&mut self) -> bool {
         false
     }
+    /// Ladder rung: quantized paged → f32 paged cache (same pools
+    /// geometry, 4x the payload bytes, no dequant in the graph).
+    /// `Ok(false)` = unsupported or already applied.
+    fn demote_unquantized(&mut self) -> Result<bool> {
+        Ok(false)
+    }
     /// Ladder rung: paged → contiguous cache. `Ok(false)` = unsupported
     /// or already applied.
     fn demote_contiguous(&mut self) -> Result<bool> {
@@ -372,6 +378,7 @@ pub struct MockDispatcher {
     last_plan: Vec<SlotPlan>,
     donated: bool,
     consumed: bool,
+    quantized: bool,
 }
 
 impl MockDispatcher {
@@ -386,6 +393,7 @@ impl MockDispatcher {
             last_plan: Vec::new(),
             donated: false,
             consumed: false,
+            quantized: false,
         }
     }
 
@@ -413,6 +421,7 @@ impl MockDispatcher {
                 pool_pages,
                 lazy: true,
             }],
+            payload_dtype_bytes: 4,
         };
         let table = SharedPageTable::new(PageTable::new(layout, batch));
         MockDispatcher { table: Some(table), page_size, ..Self::contiguous(batch, capacity, vocab) }
@@ -421,6 +430,15 @@ impl MockDispatcher {
     /// Emulate buffer donation: a failed dispatch consumes the cache.
     pub fn with_donation(mut self) -> MockDispatcher {
         self.donated = true;
+        self
+    }
+
+    /// Emulate the quantized paged family: token streams are unchanged
+    /// (like the real greedy twins at micro scale), but the dispatcher
+    /// gains the qpaged → paged ladder rung.
+    pub fn with_quantized(mut self) -> MockDispatcher {
+        assert!(self.table.is_some(), "quantized mock needs a paged table");
+        self.quantized = true;
         self
     }
 
@@ -534,6 +552,11 @@ impl Dispatcher for MockDispatcher {
 
     fn demote_copy(&mut self) -> bool {
         std::mem::replace(&mut self.donated, false)
+    }
+
+    fn demote_unquantized(&mut self) -> Result<bool> {
+        // same pools, f32 payloads: the page table survives the swap
+        Ok(std::mem::replace(&mut self.quantized, false))
     }
 
     fn demote_contiguous(&mut self) -> Result<bool> {
@@ -671,6 +694,27 @@ impl<'m, 'e> Dispatcher for SessionDispatcher<'m, 'e> {
         }
     }
 
+    fn demote_unquantized(&mut self) -> Result<bool> {
+        {
+            let cur = self.sess();
+            if !cur.quantized || !cur.variant.programs.contains_key("decode_step_paged") {
+                return Ok(false);
+            }
+            let spec = cur.variant.program("decode_step_paged")?;
+            if spec.batch.unwrap_or(cur.variant.batch) != cur.batch {
+                return Ok(false); // twin has a different batch: can't swap mid-run
+            }
+        }
+        log::warn!("[serve] demoting quantized → f32 paged cache");
+        let old = self.session.take().expect("session present");
+        let (manifest, variant, dres) = (old.manifest, old.variant, old.device_resident);
+        let model = old.into_model_lits();
+        let s = DecodeSession::new(manifest, variant, "decode_step_paged", model, dres)?;
+        self.session = Some(s);
+        self.resolve_sampler();
+        Ok(true)
+    }
+
     fn demote_contiguous(&mut self) -> Result<bool> {
         {
             let cur = self.sess();
@@ -756,8 +800,10 @@ pub struct ServeStats {
     /// rung's restart)
     pub restarts: usize,
     pub demotions_copy: usize,
+    /// ladder: quantized paged → f32 paged swaps
+    pub demotions_unquantized: usize,
     pub demotions_contiguous: usize,
-    /// ladder rung 4: victims parked to shed load
+    /// ladder rung 5: victims parked to shed load
     pub load_sheds: usize,
     /// pressure parks in the prepare loop
     pub parked: usize,
@@ -1314,9 +1360,33 @@ impl<D: Dispatcher> Server<D> {
                 };
             }
         }
-        // rung 3: paged → contiguous cache
+        // rung 3: quantized paged → f32 paged cache (rules out the
+        // dequant/quantise epilogues while keeping the pool residency)
         if self.outage_rung < 2 {
             self.outage_rung = 2;
+            match self.dispatcher.demote_unquantized() {
+                Ok(true) => {
+                    self.stats.demotions_unquantized += 1;
+                    return match self.restart() {
+                        Ok(()) => Tick::Recovering,
+                        Err(e) => {
+                            self.abort(&format!(
+                                "restart after unquantized demotion failed: {e:#}"
+                            ));
+                            Tick::Fatal
+                        }
+                    };
+                }
+                Ok(false) => {}
+                Err(e) => {
+                    self.abort(&format!("unquantized demotion failed: {e:#}"));
+                    return Tick::Fatal;
+                }
+            }
+        }
+        // rung 4: paged → contiguous cache
+        if self.outage_rung < 3 {
+            self.outage_rung = 3;
             match self.dispatcher.demote_contiguous() {
                 Ok(true) => {
                     self.stats.demotions_contiguous += 1;
@@ -1335,9 +1405,9 @@ impl<D: Dispatcher> Server<D> {
                 }
             }
         }
-        // rung 4: shed one victim (smaller active set, replay later)
-        if self.outage_rung < 3 {
-            self.outage_rung = 3;
+        // rung 5: shed one victim (smaller active set, replay later)
+        if self.outage_rung < 4 {
+            self.outage_rung = 4;
             let victim = (0..self.dispatcher.batch()).find(|&i| self.batcher.slot_id(i).is_some());
             if let Some(v) = victim {
                 self.batcher.park(v);
@@ -1518,6 +1588,34 @@ mod tests {
         assert!(report.fatal.is_none());
         // demotions preserve the streams: the mock token is a pure
         // function of history, layout-independent — like the real twins
+        for r in &report.results {
+            assert_eq!(r.generated, baseline[&r.id], "request {} stream shifted", r.id);
+        }
+    }
+
+    #[test]
+    fn ladder_demotes_quantized_before_contiguous() {
+        let baseline = generated_by_id(&serve(
+            mock(),
+            ServeConfig::default(),
+            FaultPlan::none(),
+            reqs(6, 5, 16),
+        ));
+        // three outages: copy -> unquantized (pools survive) -> contiguous
+        let cfg = ServeConfig {
+            retry: RetryPolicy { max_retries: 1, base_ms: 1, cap_ms: 4, seed: 0 },
+            ..ServeConfig::default()
+        };
+        let plan = FaultPlan::parse("fail@0;fail@1;fail@2;fail@3;fail@4;fail@5").unwrap();
+        let report =
+            serve(mock().with_donation().with_quantized(), cfg, plan, reqs(6, 5, 16));
+        assert_eq!(report.stats.demotions_copy, 1, "stats: {:?}", report.stats);
+        assert_eq!(report.stats.demotions_unquantized, 1);
+        assert_eq!(report.stats.demotions_contiguous, 1);
+        assert!(report.fatal.is_none());
+        assert_eq!(report.count(Outcome::Completed), 6);
+        // every demotion preserves the streams — the quantized twin is
+        // greedy-identical by the differential gate, the mock models that
         for r in &report.results {
             assert_eq!(r.generated, baseline[&r.id], "request {} stream shifted", r.id);
         }

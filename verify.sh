@@ -170,6 +170,35 @@ if pchecked:
     print(f"paged gate: OK ({pchecked} variants with resident ratio <= 0.5)")
 else:
     print("paged gate: no paged arms in the report (pre-paging artifacts?)")
+# quantized gate: the i8 pools must keep resident payload bytes at
+# <= 0.30x the contiguous f32 layout (overcommit x the 4x dtype factor)
+# AND the teacher-forced greedy stream must match the f32 paged twin
+# exactly — per-page absmax scaling may perturb logits but never the
+# argmax at micro scale
+qchecked, qbad = 0, []
+for v in r.get("variants", []):
+    q = v.get("quantized")
+    if not q:
+        continue
+    qchecked += 1
+    ratio = q.get("resident_ratio_quantized_vs_contiguous")
+    if ratio is None or ratio > 0.30:
+        qbad.append((v.get("variant"), "resident_ratio", ratio))
+    mism = q.get("greedy_stream_mismatches")
+    if mism is None or mism != 0:
+        qbad.append((v.get("variant"), "greedy_stream_mismatches", mism))
+if qbad:
+    print(f"quantized gate: FAILED {qbad}")
+    sys.exit(1)
+if qchecked:
+    devs = [v["quantized"].get("max_abs_logit_deviation", 0.0)
+            for v in r.get("variants", []) if v.get("quantized")]
+    print(
+        f"quantized gate: OK ({qchecked} variants: resident <= 0.30x contiguous f32, "
+        f"0 greedy mismatches, max |dlogit| {max(devs):.2e})"
+    )
+else:
+    print("quantized gate: no quantized arms in the report (pre-quantization artifacts?)")
 PYEOF
 else
     echo "decode gates: SKIP - python3 not on PATH"
