@@ -135,14 +135,16 @@ def main() -> int:
         "lowering_smoke": {"ok": ok, **({"error": err} if err else {}), **(smoke or {})},
     }
     publish(args.pipeline_out, {"schema": "mosa-bench-pipeline-v1", **base})
-    # the faults arm (serve::chaos counters) is rust-only: stub it with the
-    # same reason so the key's trajectory is never silently empty
+    # the faults arm (serve::chaos counters) and the transport arm
+    # (serve::loadgen latency percentiles) are rust-only: stub them with
+    # the same reason so the keys' trajectories are never silently empty
     publish(
         args.decode_out,
         {
             "schema": "mosa-bench-decode-v1",
             **base,
             "faults": {"available": False, "reason": args.reason},
+            "transport": {"available": False, "reason": args.reason},
         },
     )
     return 0 if ok else 1

@@ -320,6 +320,15 @@ impl ContinuousBatcher {
         self.slots[i].as_ref().map(|s| s.id)
     }
 
+    /// The (request id, tokens generated so far) of slot `i`, if
+    /// occupied. The streaming tap: `generated` only ever grows while a
+    /// request lives (park/replay re-dispatches history but `advance`
+    /// ignores replay samples), so a per-request emitted-count cursor
+    /// over this slice yields each token exactly once, in order.
+    pub fn generated(&self, i: usize) -> Option<(u64, &[i32])> {
+        self.slots[i].as_ref().map(|s| (s.id, s.generated.as_slice()))
+    }
+
     /// Queued (not yet admitted) request ids, head first.
     pub fn pending_ids(&self) -> Vec<u64> {
         self.pending

@@ -99,6 +99,20 @@
 //!   exhaustion, watchdog overruns, and corrupt artifacts, asserting
 //!   page conservation and bit-identical survivor streams after every
 //!   event (see PERF.md §Request lifecycle).
+//! - **HTTP streaming front-end** (`serve::http` + `serve::transport`,
+//!   `mosa serve`): a std-only HTTP/1.1 server over `TcpListener` —
+//!   thread-per-connection feeding a single engine thread that owns
+//!   `Server::tick`, SSE per-token streaming, bounded request parsing
+//!   (slowloris read deadlines, header/body caps, fuzz-tested), overload
+//!   refusals (connection cap 503, queue-full 429, both with
+//!   Retry-After), client disconnects detected mid-stream and wired to
+//!   cancellation so the RAII guards free every pool page, and a
+//!   graceful drain (`POST /admin/drain`: stop accepting → finish
+//!   in-flight under a deadline → abort stragglers). `serve::loadgen`
+//!   (`mosa loadgen`) measures it from the client side — open-loop
+//!   Poisson arrivals over loopback, ttft/itl p50/p99 — and
+//!   `mosa chaos --transport` storms it with injected connection
+//!   drops/stalls and deliberate hangups (see PERF.md §Transport).
 //! - **Decode harness** (`perf::decode`, part of `mosa perf`): emits
 //!   `BENCH_decode.json` — prefill ms, per-token ms vs context capacity,
 //!   tokens/sec at batch 1/8/32, measured cache bytes dense-vs-MoSA

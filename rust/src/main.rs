@@ -8,7 +8,10 @@
 //!   data         inspect the data pipeline (corpus/BPE/batches)
 //!   perf         perf harnesses -> BENCH_pipeline.json + BENCH_decode.json
 //!   generate     batched autoregressive decoding from a checkpoint
+//!   serve        HTTP/1.1 streaming front-end over the serving loop
+//!   loadgen      open-loop Poisson load generator against the front-end
 //!   chaos        fault-injection chaos run over the serving loop
+//!                (`--transport` storms the HTTP front-end instead)
 //!   downstream   run the synthetic zero-shot suite on a checkpoint
 //!   list         list manifest variants
 //!
@@ -51,6 +54,8 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         "data" => cmd_data(args),
         "perf" => cmd_perf(args),
         "generate" => cmd_generate(args),
+        "serve" => cmd_serve(args),
+        "loadgen" => cmd_loadgen(args),
         "chaos" => cmd_chaos(args),
         "downstream" => cmd_downstream(args),
         "list" => cmd_list(args),
@@ -78,8 +83,14 @@ fn print_help() {
          \x20 generate   --variant <name> [--ckpt path] [--prompt text] [--n-seqs N]\n\
          \x20            [--max-new N] [--top-k K] [--temp T] [--seed S] [--no-device-resident]\n\
          \x20            [--host-sample] [--no-donate] [--no-paged] [--no-quantized]\n\
+         \x20 serve      [--addr host:port] [--max-conns N] [--queue-cap N] [--pool-pages P]\n\
+         \x20            [--tick-pace-us U] [--drain-deadline-ms D] [--plan 'drop@4;stall@9:50']\n\
+         \x20 loadgen    [--seed S] [--requests N] [--rate-rps R] [--max-new N] [--queue-cap Q]\n\
+         \x20            [--tick-pace-us U] [--drain-after-frac F] [--out path]\n\
          \x20 chaos      [--seed S] [--requests N] [--pool-pages P] [--cancel-frac F]\n\
          \x20            [--deadline-frac F] [--plan 'fail@2;slow@5:900;hold@1:4x120'] [--out path]\n\
+         \x20            [--transport [--n-drop N] [--n-stall N] [--stall-ms MS]\n\
+         \x20            [--disconnect-frac F] [--tick-pace-us U]]\n\
          \x20 downstream --variant <name> --ckpt <path> [--n 50]\n\
          \x20 list       [--artifacts dir]\n"
     );
@@ -264,14 +275,111 @@ fn cmd_generate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// HTTP/1.1 streaming front-end over the serving loop on the mock
+/// dispatcher (no artifacts needed): SSE token streams, overload
+/// refusals, graceful drain via `POST /admin/drain`. Blocks until the
+/// drain completes, then prints the terminal report.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use anyhow::Context;
+    use mosa::serve::http::{HttpConfig, HttpFrontend};
+    use mosa::serve::{FaultPlan, MockDispatcher, ServeConfig, ServeError};
+
+    let batch = args.get_usize("batch", 4);
+    let capacity = args.get_usize("capacity", 64);
+    let page_size = args.get_usize("page-size", 4);
+    let pool_pages = args.get_usize("pool-pages", batch * capacity / page_size.max(1));
+    let vocab = args.get_usize("vocab", 251) as i32;
+    let dispatcher = MockDispatcher::paged(batch, capacity, vocab, page_size, pool_pages);
+    let cfg = ServeConfig {
+        queue_cap: args.get_usize("queue-cap", 256),
+        ..ServeConfig::default()
+    };
+    let mut http = HttpConfig::default();
+    http.addr = args.get_or("addr", "127.0.0.1:8077");
+    http.max_conns = args.get_usize("max-conns", http.max_conns);
+    http.tick_pace_us = args.get_u64("tick-pace-us", 200);
+    http.drain_deadline_ms = args.get_u64("drain-deadline-ms", http.drain_deadline_ms);
+    let plan = match args.get("plan") {
+        Some(spec) => FaultPlan::parse(spec)
+            .context(ServeError::InvalidRequest { why: format!("bad --plan '{spec}'") })?,
+        None => FaultPlan::none(),
+    };
+    let fe = HttpFrontend::start(dispatcher, cfg, http, plan)?;
+    println!(
+        "mosa serve listening on http://{}\n\
+         \x20 POST /v1/generate   {{\"prompt\": [ints] | \"text\": str, \"max_new\": N}} -> SSE\n\
+         \x20 GET  /healthz       liveness\n\
+         \x20 GET  /readyz        admission headroom\n\
+         \x20 POST /admin/drain   graceful drain (this process exits when it completes)",
+        fe.addr()
+    );
+    let report = fe.wait()?;
+    println!(
+        "serve done: {} requests ({} bad, {} busy-rejected, {} disconnects), drain {}ms",
+        report.requests,
+        report.bad_requests,
+        report.rejected_busy,
+        report.disconnects,
+        report.drain_wall_ms
+    );
+    Ok(())
+}
+
+/// Open-loop Poisson load against a fresh front-end on an ephemeral
+/// loopback port: client-side ttft/itl percentiles, overload rejects,
+/// drain-under-load timing. Exits nonzero if anything leaked or went
+/// unaccounted. `verify.sh` publishes this as the BENCH `transport` arm.
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    use mosa::serve::loadgen::{run, LoadgenConfig};
+
+    let mut cfg = LoadgenConfig::default();
+    cfg.seed = args.get_u64("seed", cfg.seed);
+    cfg.requests = args.get_usize("requests", cfg.requests);
+    cfg.rate_rps = args.get_f64("rate-rps", cfg.rate_rps);
+    cfg.max_new = args.get_usize("max-new", cfg.max_new);
+    cfg.queue_cap = args.get_usize("queue-cap", cfg.queue_cap);
+    cfg.pool_pages = args.get_usize("pool-pages", cfg.pool_pages);
+    cfg.tick_pace_us = args.get_u64("tick-pace-us", cfg.tick_pace_us);
+    cfg.drain_after_frac = args.get_f64("drain-after-frac", cfg.drain_after_frac);
+    cfg.drain_deadline_ms = args.get_u64("drain-deadline-ms", cfg.drain_deadline_ms);
+    let report = run(&cfg)?;
+    let json = report.to_json().to_string_pretty();
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, &json)?;
+        println!("loadgen report -> {out}");
+    }
+    println!("{json}");
+    if !report.ok() {
+        bail!(
+            "loadgen failed: completed={} errored={} leaked={} conserved={}",
+            report.completed,
+            report.errored,
+            report.leaked_pages,
+            report.conserved
+        );
+    }
+    println!(
+        "loadgen ok: {}/{} completed, ttft p99 {:.1}ms, itl p99 {:.1}ms, drain {}ms",
+        report.completed, report.requests, report.ttft.p99_ms, report.itl.p99_ms, report.drain_wall_ms
+    );
+    Ok(())
+}
+
 /// Chaos harness over the serving loop (mock dispatcher — no artifacts
 /// needed): seeded faults + cancellations + deadlines, page-conservation
 /// invariants checked every tick, survivor streams diffed against an
-/// unfaulted baseline. Exits nonzero if any invariant broke.
+/// unfaulted baseline. `--transport` runs the storm at the HTTP layer
+/// instead: concurrent loopback streams under injected connection
+/// drops/stalls and deliberate client hangups. Exits nonzero if any
+/// invariant broke (leaked pages = leaked connections).
 fn cmd_chaos(args: &Args) -> Result<()> {
     use anyhow::Context;
     use mosa::serve::chaos::{run_mock, ChaosConfig};
     use mosa::serve::{FaultPlan, ServeError};
+
+    if args.has("transport") {
+        return cmd_chaos_transport(args);
+    }
 
     let mut cfg = ChaosConfig::default();
     cfg.seed = args.get_u64("seed", cfg.seed);
@@ -307,6 +415,54 @@ fn cmd_chaos(args: &Args) -> Result<()> {
     println!(
         "chaos ok: {} completed, {} recovered, {} retries, {} parked, 0 pages leaked",
         report.stats.completed, report.stats.recovered, report.stats.retries, report.stats.parked
+    );
+    Ok(())
+}
+
+fn cmd_chaos_transport(args: &Args) -> Result<()> {
+    use anyhow::Context;
+    use mosa::serve::chaos::{run_transport_storm, TransportChaosConfig};
+    use mosa::serve::{FaultPlan, ServeError};
+
+    let mut cfg = TransportChaosConfig::default();
+    cfg.seed = args.get_u64("seed", cfg.seed);
+    cfg.requests = args.get_usize("requests", cfg.requests);
+    cfg.pool_pages = args.get_usize("pool-pages", cfg.pool_pages);
+    cfg.max_new = args.get_usize("max-new", cfg.max_new);
+    cfg.n_drop = args.get_usize("n-drop", cfg.n_drop);
+    cfg.n_stall = args.get_usize("n-stall", cfg.n_stall);
+    cfg.stall_ms = args.get_u64("stall-ms", cfg.stall_ms);
+    cfg.disconnect_frac = args.get_f64("disconnect-frac", cfg.disconnect_frac);
+    cfg.tick_pace_us = args.get_u64("tick-pace-us", cfg.tick_pace_us);
+    cfg.drain_deadline_ms = args.get_u64("drain-deadline-ms", cfg.drain_deadline_ms);
+    if let Some(spec) = args.get("plan") {
+        let plan = FaultPlan::parse(spec)
+            .context(ServeError::InvalidRequest { why: format!("bad --plan '{spec}'") })?;
+        cfg.plan = Some(plan);
+    }
+    let report = run_transport_storm(&cfg);
+    let json = report.to_json().to_string_pretty();
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, &json)?;
+        println!("transport chaos report -> {out}");
+    }
+    println!("{json}");
+    if !report.ok() {
+        bail!(
+            "transport storm failed: leaked={} mismatches={} prefix_violations={} \
+             errored={} drain_clean={} fatal={:?}",
+            report.leaked_pages,
+            report.stream_mismatches,
+            report.prefix_violations,
+            report.errored,
+            report.drain_clean,
+            report.fatal
+        );
+    }
+    println!(
+        "transport storm ok: {} completed bit-identical, {} severed (all baseline prefixes), \
+         {} dropped by injection, 0 pages leaked, drain {}ms",
+        report.completed, report.severed, report.injected.connections_dropped, report.drain_wall_ms
     );
     Ok(())
 }

@@ -41,11 +41,16 @@
 //!   retries/demotions/sheds taken, and the leak/invariant counters
 //!   `verify.sh` gates at zero. Mock-backed, so this arm reports even
 //!   when artifacts are absent.
+//! - **transport** (`transport`): the open-loop Poisson load generator
+//!   (`serve::loadgen`) streaming over real loopback HTTP — client-side
+//!   ttft and inter-token latency p50/p99 (wall-clock), overload
+//!   rejects, drain-under-load timing, and the leaked-page counter
+//!   `verify.sh` gates at zero. Also mock-backed.
 //!
 //! Artifact-gated like the train probe: without `make artifacts` (or with
-//! pre-decode artifacts) every probe except `faults` reports
-//! `available: false` and the harness still succeeds, so CI diffs stay
-//! meaningful.
+//! pre-decode artifacts) every probe except `faults` and `transport`
+//! reports `available: false` and the harness still succeeds, so CI
+//! diffs stay meaningful.
 
 use std::time::Instant;
 
@@ -94,6 +99,7 @@ fn unavailable(cfg: &PerfConfig, reason: &str) -> Json {
         ("reason", Json::str(reason)),
         // mock-backed: measurable even without artifacts
         ("faults", bench_faults(cfg)),
+        ("transport", bench_transport(cfg)),
     ])
 }
 
@@ -140,6 +146,53 @@ fn bench_faults(cfg: &PerfConfig) -> Json {
     obj
 }
 
+/// The transport arm: client-side streaming latency through the HTTP
+/// front-end under open-loop Poisson load on the mock dispatcher
+/// (engine-free, so this arm too reports without artifacts). Unlike the
+/// faults arm these are WALL-CLOCK percentiles over loopback — ttft and
+/// inter-token latency as a client would see them — so absolute values
+/// vary with the host; `verify.sh` gates the behavioural keys
+/// (`ok`, completed counts, zero leaks), not the milliseconds.
+fn bench_transport(cfg: &PerfConfig) -> Json {
+    use crate::serve::loadgen::{run, LoadgenConfig};
+    let lg = LoadgenConfig {
+        seed: 17,
+        requests: if cfg.smoke { 16 } else { 48 },
+        rate_rps: if cfg.smoke { 400.0 } else { 300.0 },
+        ..LoadgenConfig::default()
+    };
+    match run(&lg) {
+        Ok(report) => {
+            println!(
+                "decode[transport]: {}/{} completed over HTTP, ttft p50/p99 {:.1}/{:.1}ms, \
+                 itl p50/p99 {:.1}/{:.1}ms, {} rejected, {} leaked pages, drain {}ms",
+                report.completed,
+                report.requests,
+                report.ttft.p50_ms,
+                report.ttft.p99_ms,
+                report.itl.p50_ms,
+                report.itl.p99_ms,
+                report.rejected,
+                report.leaked_pages,
+                report.drain_wall_ms
+            );
+            let mut obj = report.to_json();
+            if let Json::Obj(ref mut m) = obj {
+                m.insert("available".into(), Json::Bool(true));
+            }
+            obj
+        }
+        // a sandbox that forbids loopback sockets gets an honest stub
+        Err(e) => {
+            println!("decode[transport]: skipped ({e:#})");
+            Json::obj(vec![
+                ("available", Json::Bool(false)),
+                ("reason", Json::str(format!("{e:#}"))),
+            ])
+        }
+    }
+}
+
 fn bench_with(manifest: &Manifest, cfg: &PerfConfig) -> Result<Json> {
     let mut engine = Engine::cpu()?;
     let mut rows = Vec::new();
@@ -167,6 +220,7 @@ fn bench_with(manifest: &Manifest, cfg: &PerfConfig) -> Result<Json> {
         ("available", Json::Bool(true)),
         ("variants", Json::Arr(rows)),
         ("faults", bench_faults(cfg)),
+        ("transport", bench_transport(cfg)),
     ];
     // the Table 2 headline: MoSA cache bytes as a fraction of dense
     let dense = bytes_by_name.iter().find(|(n, _)| n == "micro_dense").map(|x| x.1);

@@ -23,6 +23,7 @@
 use crate::util::json::Json;
 use crate::util::rng::Pcg;
 
+use super::http::{Client, HttpConfig, HttpFrontend};
 use super::{
     serve, Dispatcher, FaultCounters, FaultPlan, MockDispatcher, Outcome, ServeConfig,
     ServeRequest, ServeStats, Server, Tick,
@@ -254,6 +255,363 @@ pub fn run_mock(cfg: &ChaosConfig) -> ChaosReport {
     }
 }
 
+// ---------------------------------------------------------------------------
+// the transport storm
+// ---------------------------------------------------------------------------
+
+/// Configuration for the HTTP-level storm: concurrent streaming clients
+/// over real loopback sockets while the [`TransportInjector`] severs and
+/// stalls connections and a slice of clients hang up mid-stream on
+/// purpose.
+#[derive(Debug, Clone)]
+pub struct TransportChaosConfig {
+    pub seed: u64,
+    pub requests: usize,
+    pub batch: usize,
+    pub capacity: usize,
+    pub page_size: usize,
+    pub pool_pages: usize,
+    pub vocab: i32,
+    /// tokens generated per request (uniform: keeps the event horizon
+    /// predictable for the seeded drop/stall schedule)
+    pub max_new: usize,
+    pub queue_cap: usize,
+    /// engine pacing, µs per working tick — widens the mid-stream
+    /// window so severs land during generation, not after it
+    pub tick_pace_us: u64,
+    /// connections severed server-side by the injector
+    pub n_drop: usize,
+    /// event emissions stalled server-side by the injector
+    pub n_stall: usize,
+    pub stall_ms: u64,
+    /// fraction of clients that deliberately hang up mid-stream
+    pub disconnect_frac: f64,
+    /// explicit fault schedule; `None` seeds one from `seed`
+    pub plan: Option<FaultPlan>,
+    pub drain_deadline_ms: u64,
+}
+
+impl Default for TransportChaosConfig {
+    fn default() -> Self {
+        TransportChaosConfig {
+            seed: 0,
+            requests: 16,
+            batch: 4,
+            capacity: 32,
+            page_size: 4,
+            pool_pages: 32,
+            vocab: 251,
+            max_new: 8,
+            queue_cap: 64,
+            tick_pace_us: 300,
+            n_drop: 2,
+            n_stall: 2,
+            stall_ms: 20,
+            disconnect_frac: 0.2,
+            plan: None,
+            drain_deadline_ms: 10_000,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct TransportChaosReport {
+    pub requests: usize,
+    /// streams that reached `outcome: completed` over HTTP
+    pub completed: usize,
+    /// streams cut short (injected drop, deliberate client hangup, or a
+    /// cancelled/expired terminal outcome)
+    pub severed: usize,
+    /// refused with 429/503
+    pub rejected: usize,
+    /// transport errors that are none of the above
+    pub errored: usize,
+    /// completed streams compared bit-for-bit against the direct-serve
+    /// baseline
+    pub compared: usize,
+    pub stream_mismatches: usize,
+    /// severed streams that were NOT a prefix of their baseline stream
+    pub prefix_violations: usize,
+    pub injected: FaultCounters,
+    /// conn threads that observed a dead client (hangups + drops)
+    pub disconnects: usize,
+    pub leaked_pages: usize,
+    pub conserved: bool,
+    /// the drain emptied the server without aborting stragglers
+    pub drain_clean: bool,
+    pub drain_wall_ms: u64,
+    pub fatal: Option<String>,
+}
+
+impl TransportChaosReport {
+    /// The storm gate: no leaked pages (connection-leak check), a clean
+    /// in-deadline drain, bit-identical survivors, prefix-only severs,
+    /// and the storm actually exercised both the happy and severed
+    /// paths.
+    pub fn ok(&self) -> bool {
+        self.leaked_pages == 0
+            && self.conserved
+            && self.stream_mismatches == 0
+            && self.prefix_violations == 0
+            && self.errored == 0
+            && self.completed > 0
+            && self.drain_clean
+            && self.fatal.is_none()
+            && self.completed + self.severed + self.rejected + self.errored == self.requests
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("ok", Json::Bool(self.ok())),
+            ("requests", Json::num(self.requests as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("severed", Json::num(self.severed as f64)),
+            ("rejected", Json::num(self.rejected as f64)),
+            ("errored", Json::num(self.errored as f64)),
+            ("compared", Json::num(self.compared as f64)),
+            ("stream_mismatches", Json::num(self.stream_mismatches as f64)),
+            ("prefix_violations", Json::num(self.prefix_violations as f64)),
+            ("connections_dropped", Json::num(self.injected.connections_dropped as f64)),
+            ("stream_stalls", Json::num(self.injected.stream_stalls as f64)),
+            ("disconnects", Json::num(self.disconnects as f64)),
+            ("leaked_pages", Json::num(self.leaked_pages as f64)),
+            ("conserved", Json::Bool(self.conserved)),
+            ("drain_clean", Json::Bool(self.drain_clean)),
+            ("drain_wall_ms", Json::num(self.drain_wall_ms as f64)),
+            (
+                "fatal",
+                self.fatal.as_ref().map(|f| Json::str(f.as_str())).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+}
+
+/// Deterministic storm workload: (prompt, max_new) pairs. The mock's
+/// tokens are a pure function of the slot history, so the prompt is the
+/// join key between the HTTP run and the direct-serve baseline — ids
+/// are assigned per-connection over there and race freely.
+fn storm_workload(cfg: &TransportChaosConfig) -> Vec<(Vec<i32>, usize)> {
+    let mut rng = Pcg::seeded(cfg.seed ^ 0x5702_a11);
+    (0..cfg.requests)
+        .map(|_| {
+            let plen = 1 + rng.usize_below(6);
+            let prompt: Vec<i32> = (0..plen).map(|_| rng.below(cfg.vocab as u32) as i32).collect();
+            (prompt, cfg.max_new.min(cfg.capacity - plen))
+        })
+        .collect()
+}
+
+/// What one storm client observed on the wire.
+enum StormSeen {
+    /// terminal outcome + the token values streamed before it
+    Finished { outcome: String, tokens: Vec<i32> },
+    /// stream ended without a done event (injected drop, or our own
+    /// deliberate hangup)
+    Severed { tokens: Vec<i32> },
+    Rejected,
+    Errored,
+}
+
+fn storm_client(client: &Client, body: &str, cut_after: Option<usize>) -> StormSeen {
+    let resp = match client.post_streaming(
+        "/v1/generate",
+        body,
+        cut_after.unwrap_or(usize::MAX),
+        &[],
+    ) {
+        Ok(r) => r,
+        Err(_) => return StormSeen::Errored,
+    };
+    match resp.status {
+        200 => {}
+        429 | 503 => return StormSeen::Rejected,
+        _ => return StormSeen::Errored,
+    }
+    let mut tokens = Vec::new();
+    let mut outcome = None;
+    for ev in &resp.events {
+        let Ok(j) = Json::parse(ev) else { return StormSeen::Errored };
+        if j.get("done").and_then(|d| d.as_bool()) == Some(true) {
+            outcome = j.get("outcome").and_then(|o| o.as_str()).map(|s| s.to_string());
+        } else if let Some(t) = j.get("token").and_then(|t| t.as_f64()) {
+            tokens.push(t as i32);
+        }
+    }
+    match outcome {
+        Some(o) => StormSeen::Finished { outcome: o, tokens },
+        None => StormSeen::Severed { tokens },
+    }
+}
+
+/// Run the transport-level chaos storm: baseline the workload through
+/// the in-process serving loop, then replay it as concurrent HTTP
+/// streams under injected drops/stalls and deliberate client hangups.
+pub fn run_transport_storm(cfg: &TransportChaosConfig) -> TransportChaosReport {
+    let workload = storm_workload(cfg);
+
+    // -- baseline: the same workload through the in-process loop -----------
+    let baseline_reqs: Vec<ServeRequest> = workload
+        .iter()
+        .enumerate()
+        .map(|(i, (p, m))| ServeRequest::new(i as u64, p.clone(), *m))
+        .collect();
+    let baseline = serve(
+        MockDispatcher::paged(cfg.batch, cfg.capacity, cfg.vocab, cfg.page_size, cfg.pool_pages),
+        ServeConfig::default(),
+        FaultPlan::none(),
+        baseline_reqs,
+    );
+    let baseline_streams: std::collections::HashMap<Vec<i32>, Vec<i32>> = baseline
+        .results
+        .iter()
+        .map(|r| (workload[r.id as usize].0.clone(), r.generated.clone()))
+        .collect();
+
+    // -- the storm ---------------------------------------------------------
+    let horizon = (cfg.requests * (cfg.max_new + 1)) as u64;
+    let plan = cfg.plan.clone().unwrap_or_else(|| {
+        FaultPlan::seeded_transport(cfg.seed, horizon, cfg.n_drop, cfg.n_stall, cfg.stall_ms)
+    });
+    let dispatcher =
+        MockDispatcher::paged(cfg.batch, cfg.capacity, cfg.vocab, cfg.page_size, cfg.pool_pages);
+    let table = dispatcher.shared_pages().expect("storm mock is paged");
+    let serve_cfg = ServeConfig { queue_cap: cfg.queue_cap, ..ServeConfig::default() };
+    let http = HttpConfig {
+        tick_pace_us: cfg.tick_pace_us,
+        drain_deadline_ms: cfg.drain_deadline_ms,
+        ..HttpConfig::default()
+    };
+    let fe = match HttpFrontend::start(dispatcher, serve_cfg, http, plan) {
+        Ok(fe) => fe,
+        Err(e) => {
+            return TransportChaosReport {
+                requests: cfg.requests,
+                completed: 0,
+                severed: 0,
+                rejected: 0,
+                errored: 0,
+                compared: 0,
+                stream_mismatches: 0,
+                prefix_violations: 0,
+                injected: FaultCounters::default(),
+                disconnects: 0,
+                leaked_pages: 0,
+                conserved: true,
+                drain_clean: false,
+                drain_wall_ms: 0,
+                fatal: Some(format!("front-end failed to start: {e}")),
+            }
+        }
+    };
+    let addr = fe.addr();
+
+    let mut rng = Pcg::seeded(cfg.seed ^ 0xd15c);
+    let workers: Vec<_> = workload
+        .iter()
+        .map(|(prompt, max_new)| {
+            let body = Json::obj(vec![
+                ("prompt", Json::Arr(prompt.iter().map(|t| Json::num(*t as f64)).collect())),
+                ("max_new", Json::num(*max_new as f64)),
+            ])
+            .to_string_compact();
+            // a slice of clients hang up mid-stream on purpose
+            let cut_after = if rng.f64() < cfg.disconnect_frac && *max_new > 1 {
+                Some(1 + rng.usize_below(*max_new - 1))
+            } else {
+                None
+            };
+            let prompt = prompt.clone();
+            std::thread::spawn(move || {
+                (prompt, storm_client(&Client::new(addr), &body, cut_after))
+            })
+        })
+        .collect();
+    let seen: Vec<(Vec<i32>, StormSeen)> = workers
+        .into_iter()
+        .map(|w| w.join().unwrap_or_else(|_| (Vec::new(), StormSeen::Errored)))
+        .collect();
+
+    let http_report = match fe.shutdown() {
+        Ok(r) => r,
+        Err(e) => {
+            return TransportChaosReport {
+                requests: cfg.requests,
+                completed: 0,
+                severed: 0,
+                rejected: 0,
+                errored: cfg.requests,
+                compared: 0,
+                stream_mismatches: 0,
+                prefix_violations: 0,
+                injected: FaultCounters::default(),
+                disconnects: 0,
+                leaked_pages: table.pool_pages_total().saturating_sub(table.pages_free()),
+                conserved: table.check_conservation(),
+                drain_clean: false,
+                drain_wall_ms: 0,
+                fatal: Some(format!("front-end shutdown failed: {e}")),
+            }
+        }
+    };
+
+    // -- differential + end-state checks -----------------------------------
+    let mut completed = 0;
+    let mut severed = 0;
+    let mut rejected = 0;
+    let mut errored = 0;
+    let mut compared = 0;
+    let mut stream_mismatches = 0;
+    let mut prefix_violations = 0;
+    for (prompt, s) in &seen {
+        match s {
+            StormSeen::Finished { outcome, tokens } if outcome == "completed" => {
+                completed += 1;
+                compared += 1;
+                match baseline_streams.get(prompt) {
+                    Some(b) if b == tokens => {}
+                    _ => {
+                        stream_mismatches += 1;
+                        log::error!("storm: completed stream diverged from baseline");
+                    }
+                }
+            }
+            // cancelled/expired terminals and doneless cuts are all
+            // severs: whatever DID arrive must be a baseline prefix
+            StormSeen::Finished { tokens, .. } | StormSeen::Severed { tokens } => {
+                severed += 1;
+                match baseline_streams.get(prompt) {
+                    Some(b) if b.len() >= tokens.len() && b[..tokens.len()] == tokens[..] => {}
+                    _ => {
+                        prefix_violations += 1;
+                        log::error!("storm: severed stream is not a baseline prefix");
+                    }
+                }
+            }
+            StormSeen::Rejected => rejected += 1,
+            StormSeen::Errored => errored += 1,
+        }
+    }
+
+    let drain = http_report.serve.drain.as_ref();
+    TransportChaosReport {
+        requests: cfg.requests,
+        completed,
+        severed,
+        rejected,
+        errored,
+        compared,
+        stream_mismatches,
+        prefix_violations,
+        injected: http_report.serve.injected.unwrap_or_default(),
+        disconnects: http_report.disconnects,
+        leaked_pages: table.pool_pages_total().saturating_sub(table.pages_free()),
+        conserved: table.check_conservation(),
+        drain_clean: drain.map_or(false, |d| d.completed_ms.is_some() && d.aborted == 0),
+        drain_wall_ms: http_report.drain_wall_ms,
+        fatal: http_report.serve.fatal.clone(),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -317,6 +675,69 @@ mod tests {
         assert!(report.stats.watchdog_trips >= 2);
         assert!(report.injected.holds_applied == 2);
         assert_eq!(report.injected.pages_released, report.injected.pages_held);
+    }
+
+    #[test]
+    fn transport_storm_default_run_is_clean() {
+        let report = run_transport_storm(&TransportChaosConfig::default());
+        assert!(
+            report.ok(),
+            "leaked={} mismatches={} prefix_violations={} errored={} drain_clean={} fatal={:?}",
+            report.leaked_pages,
+            report.stream_mismatches,
+            report.prefix_violations,
+            report.errored,
+            report.drain_clean,
+            report.fatal
+        );
+        // the storm actually severed something, and survivors compared
+        assert!(report.compared > 0, "nothing completed: {report:?}");
+        assert!(
+            report.injected.connections_dropped > 0 || report.severed > 0,
+            "storm was a no-op: {report:?}"
+        );
+    }
+
+    #[test]
+    fn transport_storm_with_explicit_plan_counts_faults() {
+        let cfg = TransportChaosConfig {
+            seed: 11,
+            requests: 12,
+            tick_pace_us: 500,
+            disconnect_frac: 0.0,
+            plan: Some(FaultPlan::parse("drop@5;drop@21;stall@9:15").unwrap()),
+            ..TransportChaosConfig::default()
+        };
+        let report = run_transport_storm(&cfg);
+        assert!(report.ok(), "{report:?}");
+        // both drops land inside the event horizon of 12×9 events
+        assert_eq!(report.injected.connections_dropped, 2, "{report:?}");
+        assert!(report.severed >= 2, "{report:?}");
+        assert!(report.injected.stream_stalls >= 1, "{report:?}");
+    }
+
+    #[test]
+    fn transport_storm_json_shape_is_stable() {
+        let report = run_transport_storm(&TransportChaosConfig {
+            requests: 6,
+            n_drop: 1,
+            n_stall: 1,
+            ..TransportChaosConfig::default()
+        });
+        let j = report.to_json();
+        for key in [
+            "ok",
+            "completed",
+            "severed",
+            "stream_mismatches",
+            "prefix_violations",
+            "connections_dropped",
+            "leaked_pages",
+            "drain_clean",
+        ] {
+            assert!(j.get(key).is_some(), "missing key {key}");
+        }
+        assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(true));
     }
 
     #[test]

@@ -27,6 +27,10 @@ pub enum ServeError {
     CacheConsumed,
     /// The bounded admission queue refused a request.
     QueueFull { cap: usize },
+    /// The server is draining for shutdown and accepts no new work.
+    /// Transient from the client's point of view: another replica (or
+    /// this one after restart) can serve the request.
+    Draining,
     /// The request's deadline passed before it finished.
     DeadlineExceeded { id: u64 },
     /// The client cancelled the request.
@@ -51,7 +55,23 @@ impl ServeError {
                 | ServeError::PoolExhausted { .. }
                 | ServeError::CacheConsumed
                 | ServeError::QueueFull { .. }
+                | ServeError::Draining
         )
+    }
+
+    /// The HTTP status the transport layer maps this error to. Overload
+    /// signals become retryable 429/503s (with Retry-After), client
+    /// mistakes 4xx, everything else a 500.
+    pub fn http_status(&self) -> u16 {
+        match self {
+            ServeError::QueueFull { .. } => 429,
+            ServeError::Draining => 503,
+            ServeError::InvalidRequest { .. } => 400,
+            ServeError::DeadlineExceeded { .. } => 504,
+            // client went away; 499 is the de-facto (nginx) code
+            ServeError::Cancelled { .. } => 499,
+            _ => 500,
+        }
     }
 
     pub fn fatal(&self) -> bool {
@@ -97,6 +117,7 @@ impl std::fmt::Display for ServeError {
             ServeError::QueueFull { cap } => {
                 write!(f, "admission queue full ({cap} requests)")
             }
+            ServeError::Draining => write!(f, "server is draining; not accepting new requests"),
             ServeError::DeadlineExceeded { id } => {
                 write!(f, "request {id} missed its deadline")
             }
@@ -124,6 +145,7 @@ mod tests {
             ServeError::PoolExhausted { slot: 3, kind: "dense".into() },
             ServeError::CacheConsumed,
             ServeError::QueueFull { cap: 8 },
+            ServeError::Draining,
         ];
         let fatal = [
             ServeError::DeadlineExceeded { id: 1 },
@@ -159,6 +181,16 @@ mod tests {
         let plain = anyhow::anyhow!("some stringly error");
         assert!(ServeError::of(&plain).is_none());
         assert!(!ServeError::is_transient(&plain));
+    }
+
+    #[test]
+    fn http_status_maps_overload_and_client_errors() {
+        assert_eq!(ServeError::QueueFull { cap: 8 }.http_status(), 429);
+        assert_eq!(ServeError::Draining.http_status(), 503);
+        assert_eq!(ServeError::InvalidRequest { why: "bad json".into() }.http_status(), 400);
+        assert_eq!(ServeError::DeadlineExceeded { id: 1 }.http_status(), 504);
+        assert_eq!(ServeError::Cancelled { id: 1 }.http_status(), 499);
+        assert_eq!(ServeError::Dispatch { program: "d".into() }.http_status(), 500);
     }
 
     #[test]

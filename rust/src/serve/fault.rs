@@ -17,7 +17,12 @@
 //! - `hold@N:PxMS` — at dispatch N, seize P free pages from the pools
 //!   for MS milliseconds (the serving loop sees genuine `PagePressure`);
 //! - `corrupt@N:truncate|garble` — the Nth artifact read through the
-//!   engine's fault hook comes back truncated / byte-garbled.
+//!   engine's fault hook comes back truncated / byte-garbled;
+//! - `drop@N` — the connection about to write the Nth stream event
+//!   (0-based, counted across all connections) is severed — the client
+//!   sees a dead socket, the server the disconnect/cancel path;
+//! - `stall@N:MS` — the write of the Nth stream event stalls MS
+//!   milliseconds first (a congested/black-holed client socket).
 //!
 //! The [`FaultInjector`] executes a plan against the server's clock and
 //! counts what it did, so the chaos harness can assert "every scheduled
@@ -66,6 +71,10 @@ pub struct FaultPlan {
     pub slow_dispatches: Vec<(u64, u64)>,
     pub pool_holds: Vec<PoolHold>,
     pub artifact_faults: Vec<ArtifactFault>,
+    /// stream-event sequence numbers whose connection is severed
+    pub drop_events: Vec<u64>,
+    /// (stream-event sequence number, stall milliseconds)
+    pub stall_events: Vec<(u64, u64)>,
 }
 
 impl FaultPlan {
@@ -78,6 +87,8 @@ impl FaultPlan {
             && self.slow_dispatches.is_empty()
             && self.pool_holds.is_empty()
             && self.artifact_faults.is_empty()
+            && self.drop_events.is_empty()
+            && self.stall_events.is_empty()
     }
 
     /// A seeded random schedule over a `horizon` of dispatches with
@@ -114,7 +125,29 @@ impl FaultPlan {
                 .map(|s| PoolHold { at_dispatch: s, pages: hold_pages, hold_ms })
                 .collect(),
             artifact_faults: Vec::new(),
+            drop_events: Vec::new(),
+            stall_events: Vec::new(),
         }
+    }
+
+    /// A seeded transport-fault schedule over a `horizon` of stream
+    /// events: `n_drop` severed connections and `n_stall` socket stalls
+    /// of `stall_ms` — the chaos transport storm's schedule generator.
+    pub fn seeded_transport(seed: u64, horizon: u64, n_drop: usize, n_stall: usize, stall_ms: u64) -> FaultPlan {
+        let mut rng = Pcg::new(seed ^ 0x7a45_90c7, 0x5eed);
+        let h = horizon.max(1) as u32;
+        let mut pick = |n: usize| -> Vec<u64> {
+            let mut v: Vec<u64> = (0..n).map(|_| rng.below(h) as u64).collect();
+            v.sort_unstable();
+            v.dedup();
+            v
+        };
+        let drop_events = pick(n_drop);
+        // a stall on an event that is also dropped would never be
+        // observed; keep the schedules disjoint
+        let stall_events: Vec<(u64, u64)> =
+            pick(n_stall).into_iter().filter(|s| !drop_events.contains(s)).map(|s| (s, stall_ms)).collect();
+        FaultPlan { drop_events, stall_events, ..FaultPlan::default() }
     }
 
     /// Default chaos intensity: a handful of each dispatch-level fault
@@ -161,11 +194,20 @@ impl FaultPlan {
                     };
                     plan.artifact_faults.push(ArtifactFault { nth_read: n.parse()?, mode });
                 }
+                "drop" => plan.drop_events.push(rest.parse()?),
+                "stall" => {
+                    let (n, ms) = rest
+                        .split_once(':')
+                        .ok_or_else(|| anyhow::anyhow!("stall '{part}': expected stall@N:MS"))?;
+                    plan.stall_events.push((n.parse()?, ms.parse()?));
+                }
                 v => bail!("unknown fault verb '{v}' in '{part}'"),
             }
         }
         plan.fail_dispatches.sort_unstable();
         plan.slow_dispatches.sort_unstable();
+        plan.drop_events.sort_unstable();
+        plan.stall_events.sort_unstable();
         Ok(plan)
     }
 }
@@ -179,6 +221,10 @@ pub struct FaultCounters {
     pub pages_held: usize,
     pub pages_released: usize,
     pub artifacts_corrupted: usize,
+    /// transport: connections severed by `drop@N`
+    pub connections_dropped: usize,
+    /// transport: stream-event writes stalled by `stall@N:MS`
+    pub stream_stalls: usize,
 }
 
 /// Executes a [`FaultPlan`] against the serving loop.
@@ -241,6 +287,70 @@ impl FaultInjector {
     pub fn release_all_holds(&mut self, table: &SharedPageTable) {
         self.active_holds.clear();
         self.counters.pages_released += table.release_held();
+    }
+}
+
+/// What the transport injector does to one stream-event write.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransportFault {
+    /// sever the connection instead of writing the event
+    Drop,
+    /// stall this many milliseconds, then write the event
+    Stall(u64),
+}
+
+/// Executes the transport half of a [`FaultPlan`] against the HTTP
+/// front-end. Unlike [`FaultInjector`] (owned by the single engine
+/// thread), this one is shared by every connection thread, so the event
+/// counter and counters are atomics: the global event ordering is
+/// whatever `fetch_add` serialises, which is exactly the determinism a
+/// single-connection smoke has and the storm harness needs (counts, not
+/// positions, are asserted under concurrency).
+#[derive(Debug, Default)]
+pub struct TransportInjector {
+    drop_events: Vec<u64>,
+    stall_events: Vec<(u64, u64)>,
+    seq: std::sync::atomic::AtomicU64,
+    connections_dropped: std::sync::atomic::AtomicUsize,
+    stream_stalls: std::sync::atomic::AtomicUsize,
+}
+
+impl TransportInjector {
+    pub fn new(plan: &FaultPlan) -> TransportInjector {
+        TransportInjector {
+            drop_events: plan.drop_events.clone(),
+            stall_events: plan.stall_events.clone(),
+            ..TransportInjector::default()
+        }
+    }
+
+    /// Claim the next global stream-event sequence number and return the
+    /// fault (if any) scheduled for it.
+    pub fn on_event(&self) -> Option<TransportFault> {
+        use std::sync::atomic::Ordering::Relaxed;
+        let n = self.seq.fetch_add(1, Relaxed);
+        if self.drop_events.contains(&n) {
+            self.connections_dropped.fetch_add(1, Relaxed);
+            return Some(TransportFault::Drop);
+        }
+        if let Some(&(_, ms)) = self.stall_events.iter().find(|&&(s, _)| s == n) {
+            self.stream_stalls.fetch_add(1, Relaxed);
+            return Some(TransportFault::Stall(ms));
+        }
+        None
+    }
+
+    /// Stream events claimed so far.
+    pub fn events_seen(&self) -> u64 {
+        self.seq.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Fold what fired into a [`FaultCounters`] (the `ServeReport.injected`
+    /// merge point).
+    pub fn merge_into(&self, c: &mut FaultCounters) {
+        use std::sync::atomic::Ordering::Relaxed;
+        c.connections_dropped += self.connections_dropped.load(Relaxed);
+        c.stream_stalls += self.stream_stalls.load(Relaxed);
     }
 }
 
@@ -382,6 +492,62 @@ mod tests {
         assert_eq!(g1, corrupt_text(&src, CorruptMode::Garble));
         assert_eq!(g1.len(), src.len());
         assert_ne!(g1, src);
+    }
+
+    #[test]
+    fn parse_accepts_transport_verbs() {
+        let plan = FaultPlan::parse("drop@4;stall@2:50;drop@1").unwrap();
+        assert_eq!(plan.drop_events, vec![1, 4]);
+        assert_eq!(plan.stall_events, vec![(2, 50)]);
+        assert!(!plan.is_empty());
+        assert!(FaultPlan::parse("stall@2").is_err()); // missing :MS
+        // transport-only plans leave the dispatch schedule empty
+        assert!(plan.fail_dispatches.is_empty() && plan.pool_holds.is_empty());
+    }
+
+    #[test]
+    fn transport_injector_fires_by_global_event_sequence() {
+        let plan = FaultPlan::parse("drop@1;stall@3:40").unwrap();
+        let inj = TransportInjector::new(&plan);
+        assert_eq!(inj.on_event(), None); // event 0
+        assert_eq!(inj.on_event(), Some(TransportFault::Drop)); // event 1
+        assert_eq!(inj.on_event(), None); // event 2
+        assert_eq!(inj.on_event(), Some(TransportFault::Stall(40))); // event 3
+        assert_eq!(inj.events_seen(), 4);
+        let mut c = FaultCounters::default();
+        inj.merge_into(&mut c);
+        assert_eq!(c.connections_dropped, 1);
+        assert_eq!(c.stream_stalls, 1);
+    }
+
+    #[test]
+    fn transport_injector_is_shareable_across_threads() {
+        let plan = FaultPlan::parse("drop@5;drop@25").unwrap();
+        let inj = std::sync::Arc::new(TransportInjector::new(&plan));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let inj = inj.clone();
+            handles.push(std::thread::spawn(move || {
+                (0..10).filter(|_| inj.on_event() == Some(TransportFault::Drop)).count()
+            }));
+        }
+        let fired: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(inj.events_seen(), 40);
+        assert_eq!(fired, 2); // both scheduled drops fired exactly once
+        let mut c = FaultCounters::default();
+        inj.merge_into(&mut c);
+        assert_eq!(c.connections_dropped, 2);
+    }
+
+    #[test]
+    fn seeded_transport_plans_are_reproducible_and_disjoint() {
+        let a = FaultPlan::seeded_transport(3, 100, 4, 4, 25);
+        assert_eq!(a, FaultPlan::seeded_transport(3, 100, 4, 4, 25));
+        assert!(!a.drop_events.is_empty() && !a.stall_events.is_empty());
+        for (s, _) in &a.stall_events {
+            assert!(!a.drop_events.contains(s));
+        }
+        assert!(a.drop_events.iter().all(|&s| s < 100));
     }
 
     #[test]

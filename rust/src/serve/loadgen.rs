@@ -1,0 +1,405 @@
+//! Open-loop Poisson load generator for the HTTP front-end.
+//!
+//! *Open-loop* is the load-testing property that matters: arrival times
+//! are drawn up front from a Poisson process (exponential inter-arrival
+//! gaps at `rate_rps`) and each request fires at its scheduled time on
+//! its own thread **regardless of whether earlier requests finished** —
+//! a slow server faces a growing backlog exactly as it would in
+//! production, instead of the closed-loop lockstep that hides overload
+//! (coordinated omission). Latency is measured from the client side of
+//! a real loopback socket: ttft (request sent → first token event) and
+//! itl (gaps between consecutive token events), reported as
+//! p50/p99/mean/max.
+//!
+//! The generator drives the [`MockDispatcher`] (deterministic tokens,
+//! no engine artifacts needed), paced by `HttpConfig::tick_pace_us` so
+//! the mock generates at a finite rate and the percentiles measure the
+//! transport, not a free-running spin loop. With `drain_after_frac < 1`
+//! it begins the graceful drain while arrivals are still scheduled:
+//! in-flight requests must complete in-deadline, late arrivals must be
+//! refused — the shutdown story under load, measured.
+//!
+//! `mosa loadgen` runs this from the CLI; `verify.sh` publishes the
+//! summary as the `transport` arm of `BENCH_decode.json`.
+
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::http::{Client, HttpConfig, HttpFrontend};
+use super::{Dispatcher, FaultPlan, MockDispatcher, ServeConfig};
+use crate::util::json::Json;
+use crate::util::rng::Pcg;
+
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    pub seed: u64,
+    /// total requests to fire
+    pub requests: usize,
+    /// Poisson arrival rate, requests/second
+    pub rate_rps: f64,
+    /// longest prompt drawn per request (tokens)
+    pub max_prompt: usize,
+    /// tokens generated per request
+    pub max_new: usize,
+    pub batch: usize,
+    pub capacity: usize,
+    pub page_size: usize,
+    pub pool_pages: usize,
+    pub vocab: i32,
+    /// admission-queue bound (small = the 429 path gets exercised)
+    pub queue_cap: usize,
+    pub max_conns: usize,
+    /// engine pacing, µs per working tick (0 = free-running)
+    pub tick_pace_us: u64,
+    /// begin the graceful drain after this fraction of arrivals
+    /// (>= 1.0 = only after every arrival has fired)
+    pub drain_after_frac: f64,
+    pub drain_deadline_ms: u64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            seed: 0,
+            requests: 48,
+            rate_rps: 300.0,
+            max_prompt: 6,
+            max_new: 8,
+            batch: 4,
+            capacity: 32,
+            page_size: 4,
+            pool_pages: 32,
+            vocab: 251,
+            queue_cap: 16,
+            max_conns: 64,
+            tick_pace_us: 300,
+            drain_after_frac: 1.0,
+            drain_deadline_ms: 10_000,
+        }
+    }
+}
+
+/// Percentile summary over one latency population (ms).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LatencySummary {
+    pub n: usize,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+    pub max_ms: f64,
+}
+
+impl LatencySummary {
+    pub fn from_samples(mut ms: Vec<f64>) -> LatencySummary {
+        if ms.is_empty() {
+            return LatencySummary::default();
+        }
+        ms.sort_by(|a, b| a.total_cmp(b));
+        let n = ms.len();
+        let at = |q: f64| ms[((n as f64 * q).ceil() as usize).clamp(1, n) - 1];
+        LatencySummary {
+            n,
+            p50_ms: at(0.50),
+            p99_ms: at(0.99),
+            mean_ms: ms.iter().sum::<f64>() / n as f64,
+            max_ms: ms[n - 1],
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n", Json::num(self.n as f64)),
+            ("p50_ms", Json::num(self.p50_ms)),
+            ("p99_ms", Json::num(self.p99_ms)),
+            ("mean_ms", Json::num(self.mean_ms)),
+            ("max_ms", Json::num(self.max_ms)),
+        ])
+    }
+}
+
+#[derive(Debug)]
+pub struct LoadgenReport {
+    pub requests: usize,
+    /// streams that ended with `outcome: completed`
+    pub completed: usize,
+    /// refused with 429/503 or at the closed listener (post-drain)
+    pub rejected: usize,
+    /// streams cut short by the drain deadline (done event with a
+    /// non-completed outcome, or no done event at all)
+    pub unfinished: usize,
+    /// transport-level errors that are neither refusals nor drain cuts
+    pub errored: usize,
+    pub tokens_streamed: usize,
+    pub ttft: LatencySummary,
+    pub itl: LatencySummary,
+    /// wall-clock ms from the shutdown signal to engine exit
+    pub drain_wall_ms: u64,
+    /// the drain emptied the server (no stragglers aborted)
+    pub drain_clean: bool,
+    pub drain_aborted: usize,
+    /// pool pages not back on the free list after shutdown (must be 0)
+    pub leaked_pages: usize,
+    pub conserved: bool,
+    pub wall_ms: u64,
+}
+
+impl LoadgenReport {
+    /// The loadgen gate: every request accounted for, something actually
+    /// completed, zero transport errors, zero leaked pages.
+    pub fn ok(&self) -> bool {
+        self.completed > 0
+            && self.errored == 0
+            && self.leaked_pages == 0
+            && self.conserved
+            && self.completed + self.rejected + self.unfinished + self.errored == self.requests
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("ok", Json::Bool(self.ok())),
+            ("requests", Json::num(self.requests as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("rejected", Json::num(self.rejected as f64)),
+            ("unfinished", Json::num(self.unfinished as f64)),
+            ("errored", Json::num(self.errored as f64)),
+            ("tokens_streamed", Json::num(self.tokens_streamed as f64)),
+            ("ttft", self.ttft.to_json()),
+            ("itl", self.itl.to_json()),
+            ("drain_wall_ms", Json::num(self.drain_wall_ms as f64)),
+            ("drain_clean", Json::Bool(self.drain_clean)),
+            ("drain_aborted", Json::num(self.drain_aborted as f64)),
+            ("leaked_pages", Json::num(self.leaked_pages as f64)),
+            ("conserved", Json::Bool(self.conserved)),
+            ("wall_ms", Json::num(self.wall_ms as f64)),
+        ])
+    }
+}
+
+/// What one fired request came back as.
+enum ReqOutcome {
+    Completed { ttft: Duration, itls: Vec<Duration>, tokens: usize },
+    Rejected,
+    Unfinished { tokens: usize },
+    Errored,
+}
+
+fn one_request(client: &Client, body: &str) -> ReqOutcome {
+    let resp = match client.post("/v1/generate", body) {
+        Ok(r) => r,
+        // connection refused = the drained listener; anything else on a
+        // loopback socket is also a refusal of service, not data loss
+        Err(_) => return ReqOutcome::Rejected,
+    };
+    match resp.status {
+        200 => {}
+        429 | 503 => return ReqOutcome::Rejected,
+        _ => return ReqOutcome::Errored,
+    }
+    // split the event stream into token events and the terminal event
+    let mut token_times: Vec<Duration> = Vec::new();
+    let mut outcome: Option<String> = None;
+    for (i, ev) in resp.events.iter().enumerate() {
+        let Ok(j) = Json::parse(ev) else { return ReqOutcome::Errored };
+        if j.get("done").and_then(|d| d.as_bool()) == Some(true) {
+            outcome = j.get("outcome").and_then(|o| o.as_str()).map(|s| s.to_string());
+        } else {
+            token_times.push(resp.event_times[i]);
+        }
+    }
+    match outcome.as_deref() {
+        Some("completed") => {
+            let ttft = token_times.first().copied().unwrap_or_default();
+            let itls = token_times.windows(2).map(|w| w[1] - w[0]).collect();
+            ReqOutcome::Completed { ttft, itls, tokens: token_times.len() }
+        }
+        // drain-deadline cut or cancellation: tokens arrived, then the
+        // stream closed early — valid shutdown behaviour, not an error
+        Some(_) | None => ReqOutcome::Unfinished { tokens: token_times.len() },
+    }
+}
+
+/// Run the load scenario against a fresh front-end on an ephemeral
+/// loopback port; returns the client-side latency report after a full
+/// graceful shutdown (leak-checked).
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
+    let dispatcher =
+        MockDispatcher::paged(cfg.batch, cfg.capacity, cfg.vocab, cfg.page_size, cfg.pool_pages);
+    let table = dispatcher.shared_pages().context("loadgen mock is paged")?;
+    let serve_cfg = ServeConfig { queue_cap: cfg.queue_cap, ..ServeConfig::default() };
+    let http = HttpConfig {
+        max_conns: cfg.max_conns,
+        tick_pace_us: cfg.tick_pace_us,
+        drain_deadline_ms: cfg.drain_deadline_ms,
+        ..HttpConfig::default()
+    };
+    let fe = HttpFrontend::start(dispatcher, serve_cfg, http, FaultPlan::none())
+        .context("starting the loadgen front-end")?;
+    let addr = fe.addr();
+
+    // draw the whole arrival schedule up front (open loop)
+    let mut rng = Pcg::seeded(cfg.seed ^ 0x10ad_9e4);
+    let rate = cfg.rate_rps.max(1e-6);
+    let mut at = 0.0f64;
+    let mut schedule: Vec<(Duration, String)> = Vec::with_capacity(cfg.requests);
+    for _ in 0..cfg.requests {
+        at += -(1.0 - rng.f64()).ln() / rate; // Exp(rate) inter-arrival
+        let plen = 1 + rng.usize_below(cfg.max_prompt.max(1));
+        let prompt: Vec<Json> =
+            (0..plen).map(|_| Json::num(rng.below(cfg.vocab as u32) as f64)).collect();
+        let body = Json::obj(vec![
+            ("prompt", Json::Arr(prompt)),
+            ("max_new", Json::num(cfg.max_new as f64)),
+        ])
+        .to_string_compact();
+        schedule.push((Duration::from_secs_f64(at), body));
+    }
+    let drain_at = if cfg.drain_after_frac >= 1.0 {
+        usize::MAX
+    } else {
+        ((cfg.requests as f64) * cfg.drain_after_frac.max(0.0)) as usize
+    };
+
+    let t0 = Instant::now();
+    let mut workers = Vec::with_capacity(schedule.len());
+    for (i, (fire_at, body)) in schedule.into_iter().enumerate() {
+        if i == drain_at {
+            fe.begin_shutdown(); // drain begins while arrivals continue
+        }
+        let elapsed = t0.elapsed();
+        if fire_at > elapsed {
+            thread::sleep(fire_at - elapsed);
+        }
+        workers.push(
+            thread::Builder::new()
+                .name("mosa-loadgen".into())
+                .spawn(move || one_request(&Client::new(addr), &body))
+                .context("spawning a loadgen worker")?,
+        );
+    }
+    let outcomes: Vec<ReqOutcome> = workers
+        .into_iter()
+        .map(|w| w.join().unwrap_or(ReqOutcome::Errored))
+        .collect();
+    let report = fe.shutdown()?;
+    let wall_ms = t0.elapsed().as_millis() as u64;
+
+    let mut completed = 0;
+    let mut rejected = 0;
+    let mut unfinished = 0;
+    let mut errored = 0;
+    let mut tokens_streamed = 0;
+    let mut ttfts: Vec<f64> = Vec::new();
+    let mut itls: Vec<f64> = Vec::new();
+    for o in outcomes {
+        match o {
+            ReqOutcome::Completed { ttft, itls: gaps, tokens } => {
+                completed += 1;
+                tokens_streamed += tokens;
+                ttfts.push(ttft.as_secs_f64() * 1e3);
+                itls.extend(gaps.iter().map(|g| g.as_secs_f64() * 1e3));
+            }
+            ReqOutcome::Rejected => rejected += 1,
+            ReqOutcome::Unfinished { tokens } => {
+                unfinished += 1;
+                tokens_streamed += tokens;
+            }
+            ReqOutcome::Errored => errored += 1,
+        }
+    }
+    let drain = report.serve.drain.as_ref();
+    Ok(LoadgenReport {
+        requests: cfg.requests,
+        completed,
+        rejected,
+        unfinished,
+        errored,
+        tokens_streamed,
+        ttft: LatencySummary::from_samples(ttfts),
+        itl: LatencySummary::from_samples(itls),
+        drain_wall_ms: report.drain_wall_ms,
+        drain_clean: drain.map_or(false, |d| d.completed_ms.is_some() && d.aborted == 0),
+        drain_aborted: drain.map_or(0, |d| d.aborted),
+        leaked_pages: table.pool_pages_total().saturating_sub(table.pages_free()),
+        conserved: table.check_conservation(),
+        wall_ms,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_summary_percentiles() {
+        let s = LatencySummary::from_samples((1..=100).map(|v| v as f64).collect());
+        assert_eq!(s.n, 100);
+        assert_eq!(s.p50_ms, 50.0);
+        assert_eq!(s.p99_ms, 99.0);
+        assert_eq!(s.max_ms, 100.0);
+        assert!((s.mean_ms - 50.5).abs() < 1e-9);
+        assert_eq!(LatencySummary::from_samples(vec![]), LatencySummary::default());
+        // singleton: every percentile is the one sample
+        let one = LatencySummary::from_samples(vec![7.5]);
+        assert_eq!((one.p50_ms, one.p99_ms, one.max_ms), (7.5, 7.5, 7.5));
+    }
+
+    #[test]
+    fn steady_load_completes_everything_without_leaks() {
+        let cfg = LoadgenConfig {
+            requests: 16,
+            rate_rps: 500.0,
+            tick_pace_us: 100,
+            ..LoadgenConfig::default()
+        };
+        let r = run(&cfg).expect("loadgen runs");
+        assert!(r.ok(), "report not ok: {:?}", r);
+        assert_eq!(r.completed, 16, "steady load under capacity completes all: {r:?}");
+        assert!(r.tokens_streamed >= 16, "every request streams tokens");
+        assert!(r.ttft.p50_ms <= r.ttft.p99_ms);
+        assert!(r.itl.n > 0, "multi-token streams produce itl samples");
+        assert!(r.drain_clean, "post-load drain must be clean: {r:?}");
+    }
+
+    #[test]
+    fn drain_under_load_refuses_late_arrivals_and_stays_leak_free() {
+        let cfg = LoadgenConfig {
+            requests: 24,
+            rate_rps: 400.0,
+            tick_pace_us: 500,
+            drain_after_frac: 0.5,
+            ..LoadgenConfig::default()
+        };
+        let r = run(&cfg).expect("loadgen runs");
+        assert!(r.ok(), "report not ok: {:?}", r);
+        assert!(r.rejected > 0, "arrivals after the drain must be refused: {r:?}");
+        assert!(r.completed > 0, "in-flight work still completes: {r:?}");
+        assert_eq!(r.leaked_pages, 0);
+        assert!(
+            r.drain_wall_ms <= cfg.drain_deadline_ms + 2_000,
+            "drain {}ms blew far past the {}ms deadline",
+            r.drain_wall_ms,
+            cfg.drain_deadline_ms
+        );
+    }
+
+    #[test]
+    fn report_json_shape_is_stable() {
+        let r = run(&LoadgenConfig {
+            requests: 6,
+            rate_rps: 800.0,
+            tick_pace_us: 50,
+            ..LoadgenConfig::default()
+        })
+        .expect("loadgen runs");
+        let j = r.to_json();
+        for key in
+            ["ok", "completed", "rejected", "ttft", "itl", "drain_wall_ms", "leaked_pages"]
+        {
+            assert!(j.get(key).is_some(), "missing key {key}");
+        }
+        assert!(j.at(&["ttft", "p99_ms"]).is_some());
+        assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(true));
+    }
+}

@@ -47,12 +47,15 @@
 pub mod chaos;
 pub mod error;
 pub mod fault;
+pub mod http;
+pub mod loadgen;
 pub mod retry;
+pub mod transport;
 
 pub use error::ServeError;
 pub use fault::{
     artifact_hook, corrupt_text, ArtifactFault, CorruptMode, DispatchFault, FaultCounters,
-    FaultInjector, FaultPlan, PoolHold,
+    FaultInjector, FaultPlan, PoolHold, TransportFault, TransportInjector,
 };
 pub use retry::{Backoff, RetryPolicy};
 
@@ -141,6 +144,24 @@ pub struct RequestResult {
     /// server-clock time the request left the system
     pub finished_ms: u64,
 }
+
+/// One event on a streaming request's per-token channel.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StreamEvent {
+    /// `index`-th generated token (0-based), in order, exactly once
+    Token { index: usize, token: i32 },
+    /// terminal event: how the request left the system and how many
+    /// tokens its stream carried in total
+    Done { outcome: Outcome, error: Option<String>, generated: usize },
+}
+
+/// Per-token delivery callback for a streaming request. Returning
+/// `false` means the consumer is gone (e.g. the HTTP connection saw a
+/// client disconnect): the server cancels the request, which unwinds
+/// through the normal reap path — `SlotGuard`s release the slot's pool
+/// pages, nothing leaks. Called from inside `tick`, so it must not
+/// block (the HTTP layer hands over an `mpsc` send).
+pub type StreamSink = Box<dyn FnMut(StreamEvent) -> bool + Send>;
 
 // ---------------------------------------------------------------------------
 // bounded deadline-aware admission queue
@@ -837,6 +858,20 @@ struct ReqMeta {
     cancel: CancelToken,
 }
 
+/// Graceful-drain bookkeeping, reported in [`ServeReport`].
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct DrainInfo {
+    /// server-clock time `begin_drain` was called
+    pub started_ms: u64,
+    /// time the last in-flight request left the system (None = the
+    /// caller finished the server before the drain emptied it)
+    pub completed_ms: Option<u64>,
+    /// in-flight requests aborted because the drain deadline cut them
+    pub aborted: usize,
+    /// submissions refused with [`ServeError::Draining`]
+    pub rejected: usize,
+}
+
 /// Terminal report of one serving run.
 #[derive(Debug)]
 pub struct ServeReport {
@@ -845,6 +880,8 @@ pub struct ServeReport {
     /// fault-injection counters, if a plan was armed (snapshotted after
     /// the final hold release, so `pages_released` is settled)
     pub injected: Option<FaultCounters>,
+    /// graceful-drain accounting, if `begin_drain` was called
+    pub drain: Option<DrainInfo>,
     pub fatal: Option<String>,
 }
 
@@ -865,6 +902,12 @@ pub struct Server<D: Dispatcher> {
     queue: AdmissionQueue,
     injector: Option<FaultInjector>,
     meta: HashMap<u64, ReqMeta>,
+    /// per-request streaming sinks (only streaming submissions)
+    sinks: HashMap<u64, StreamSink>,
+    /// per-request count of tokens already emitted to the sink
+    emitted: HashMap<u64, usize>,
+    draining: bool,
+    drain: Option<DrainInfo>,
     guards: Vec<Option<SlotGuard>>,
     results: Vec<RequestResult>,
     stats: ServeStats,
@@ -898,6 +941,10 @@ impl<D: Dispatcher> Server<D> {
             queue: AdmissionQueue::new(cfg.queue_cap),
             injector: None,
             meta: HashMap::new(),
+            sinks: HashMap::new(),
+            emitted: HashMap::new(),
+            draining: false,
+            drain: None,
             guards: (0..batch).map(|_| None).collect(),
             results: Vec::new(),
             stats: ServeStats::default(),
@@ -940,9 +987,52 @@ impl<D: Dispatcher> Server<D> {
         self.done
     }
 
+    /// Requests waiting in the admission queue (the HTTP layer's
+    /// backpressure signal).
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn queue_cap(&self) -> usize {
+        self.cfg.queue_cap
+    }
+
+    /// In-flight work: occupied slots plus batcher-pending replays.
+    pub fn in_flight(&self) -> usize {
+        self.batcher.active() + self.batcher.pending_ids().len()
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.draining
+    }
+
+    pub fn drain_info(&self) -> Option<&DrainInfo> {
+        self.drain.as_ref()
+    }
+
+    /// Stop accepting: every later `submit` refuses with
+    /// [`ServeError::Draining`]; in-flight and queued work keeps
+    /// running. Idempotent.
+    pub fn begin_drain(&mut self) {
+        if !self.draining {
+            self.draining = true;
+            self.drain = Some(DrainInfo { started_ms: self.now_ms, ..DrainInfo::default() });
+        }
+    }
+
     /// Submit one request (clamped to capacity like `generate`). A full
-    /// queue refuses with the typed transient error.
+    /// queue refuses with the typed transient error; a draining server
+    /// refuses everything. A successful submission un-latches an idle
+    /// (`Done`) server — the long-running front-end keeps one `Server`
+    /// across idle gaps.
     pub fn submit(&mut self, mut req: ServeRequest) -> Result<(), ServeError> {
+        if self.draining {
+            self.stats.rejected += 1;
+            if let Some(d) = &mut self.drain {
+                d.rejected += 1;
+            }
+            return Err(ServeError::Draining);
+        }
         let cap = self.dispatcher.capacity();
         if req.prompt.len() > cap {
             log::warn!("serve: request {} prompt truncated to capacity {cap}", req.id);
@@ -958,7 +1048,27 @@ impl<D: Dispatcher> Server<D> {
         self.queue.push(req, self.now_ms).map_err(|e| {
             self.stats.rejected += 1;
             e
-        })
+        })?;
+        if self.fatal.is_none() {
+            self.done = false; // reopen an idle server
+        }
+        Ok(())
+    }
+
+    /// Submit with a per-token [`StreamSink`]: every generated token is
+    /// delivered through `sink` from inside `tick`, followed by one
+    /// terminal [`StreamEvent::Done`]. A sink that returns `false`
+    /// cancels the request (client gone).
+    pub fn submit_streaming(
+        &mut self,
+        req: ServeRequest,
+        sink: StreamSink,
+    ) -> Result<(), ServeError> {
+        let id = req.id;
+        self.submit(req)?;
+        self.sinks.insert(id, sink);
+        self.emitted.insert(id, 0);
+        Ok(())
     }
 
     /// One serving step: reap cancellations/deadlines, admit, back
@@ -972,6 +1082,9 @@ impl<D: Dispatcher> Server<D> {
         self.pump_admissions();
         if self.batcher.is_done() && self.queue.is_empty() {
             self.done = true;
+            if let Some(d) = &mut self.drain {
+                d.completed_ms.get_or_insert(self.now_ms);
+            }
             return Tick::Done;
         }
         if self.batcher.active() == 0 {
@@ -1037,6 +1150,7 @@ impl<D: Dispatcher> Server<D> {
                 self.outage_rung = 0;
                 self.restarts_this_outage = 0;
                 let done = self.batcher.advance(&ids);
+                self.emit_fresh();
                 let retired = done.len();
                 for f in done {
                     self.finish_req(f.id, Outcome::Completed, f.generated, None);
@@ -1092,15 +1206,7 @@ impl<D: Dispatcher> Server<D> {
                 Popped::Empty => break,
                 Popped::Dropped(r) => self.push_result(r),
                 Popped::Ready(q) => {
-                    self.meta.remove(&q.req.id);
-                    self.results.push(RequestResult {
-                        id: q.req.id,
-                        outcome: Outcome::Failed,
-                        generated: Vec::new(),
-                        error: Some(why.to_string()),
-                        finished_ms: self.now_ms,
-                    });
-                    self.stats.failed += 1;
+                    self.finish_req(q.req.id, Outcome::Failed, Vec::new(), Some(why.to_string()));
                 }
             }
         }
@@ -1117,25 +1223,33 @@ impl<D: Dispatcher> Server<D> {
             }
         }
         if !self.done {
+            let mut aborted = 0usize;
             for i in 0..self.dispatcher.batch() {
                 if let Some(rec) = self.batcher.cancel_slot(i) {
                     self.guards[i] = None;
                     self.finish_req(rec.id, Outcome::Cancelled, rec.generated, None);
+                    aborted += 1;
                 }
             }
             for id in self.batcher.pending_ids() {
                 if let Some(rec) = self.batcher.cancel_pending(id) {
                     self.finish_req(rec.id, Outcome::Cancelled, rec.generated, None);
+                    aborted += 1;
                 }
             }
             for r in self.queue.reap(u64::MAX) {
                 self.push_result(r);
+                aborted += 1;
+            }
+            if let Some(d) = &mut self.drain {
+                d.aborted += aborted;
             }
         }
         ServeReport {
             results: std::mem::take(&mut self.results),
             stats: std::mem::replace(&mut self.stats, ServeStats::default()),
             injected: self.injector.as_ref().map(|i| i.counters),
+            drain: self.drain.take(),
             fatal: self.fatal.take(),
         }
     }
@@ -1148,6 +1262,24 @@ impl<D: Dispatcher> Server<D> {
     }
 
     fn push_result(&mut self, r: RequestResult) {
+        // streaming: flush tokens the per-dispatch tap has not emitted
+        // yet (the terminal record carries the full stream), then close
+        // the channel with one Done event
+        if let Some(mut sink) = self.sinks.remove(&r.id) {
+            let mut idx = self.emitted.remove(&r.id).unwrap_or(0);
+            let mut alive = true;
+            while alive && idx < r.generated.len() {
+                alive = sink(StreamEvent::Token { index: idx, token: r.generated[idx] });
+                idx += 1;
+            }
+            if alive {
+                let _ = sink(StreamEvent::Done {
+                    outcome: r.outcome,
+                    error: r.error.clone(),
+                    generated: r.generated.len(),
+                });
+            }
+        }
         match r.outcome {
             Outcome::Completed => self.stats.completed += 1,
             Outcome::Cancelled => self.stats.cancelled += 1,
@@ -1155,6 +1287,35 @@ impl<D: Dispatcher> Server<D> {
             Outcome::Failed => self.stats.failed += 1,
         }
         self.results.push(r);
+    }
+
+    /// The per-dispatch streaming tap: emit every not-yet-emitted token
+    /// of each occupied slot's `generated` history to its sink. The
+    /// history only grows while a request lives (replay samples are
+    /// ignored by `advance`), so the emitted-count cursor yields each
+    /// token exactly once. A sink returning `false` cancels its request
+    /// — the disconnect path.
+    fn emit_fresh(&mut self) {
+        if self.sinks.is_empty() {
+            return;
+        }
+        for i in 0..self.guards.len() {
+            let Some((id, gen)) = self.batcher.generated(i) else { continue };
+            let Some(sink) = self.sinks.get_mut(&id) else { continue };
+            let cur = self.emitted.entry(id).or_insert(0);
+            let mut alive = true;
+            while alive && *cur < gen.len() {
+                alive = sink(StreamEvent::Token { index: *cur, token: gen[*cur] });
+                *cur += 1;
+            }
+            if !alive {
+                if let Some(m) = self.meta.get(&id) {
+                    m.cancel.cancel();
+                }
+                self.sinks.remove(&id);
+                self.emitted.remove(&id);
+            }
+        }
     }
 
     /// Reap cancellations and deadline expiries everywhere a request
@@ -1836,5 +1997,192 @@ mod tests {
             assert_eq!(table.pages_free(), table.pool_pages_total(), "trial {trial} leaked");
             assert!(table.check_conservation());
         }
+    }
+
+    fn run_to_done<D: Dispatcher>(server: &mut Server<D>) {
+        let mut ticks = 0;
+        while !matches!(server.tick(), Tick::Done) {
+            ticks += 1;
+            assert!(ticks < 10_000, "run did not converge");
+        }
+    }
+
+    #[test]
+    fn streaming_sinks_see_each_token_once_then_done() {
+        use std::sync::Mutex;
+        let events: Arc<Mutex<HashMap<u64, Vec<StreamEvent>>>> = Arc::default();
+        let requests = reqs(6, 11, 16);
+        let baseline =
+            generated_by_id(&serve(mock(), ServeConfig::default(), FaultPlan::none(), reqs(6, 11, 16)));
+        let mut server = Server::new(mock(), ServeConfig::default());
+        for r in requests {
+            let id = r.id;
+            let ev = events.clone();
+            server
+                .submit_streaming(
+                    r,
+                    Box::new(move |e| {
+                        ev.lock().unwrap().entry(id).or_default().push(e);
+                        true
+                    }),
+                )
+                .unwrap();
+        }
+        run_to_done(&mut server);
+        let report = server.finish();
+        assert_eq!(report.count(Outcome::Completed), 6);
+        let events = events.lock().unwrap();
+        for r in &report.results {
+            let evs = &events[&r.id];
+            // tokens in order, exactly once, then exactly one Done
+            let toks: Vec<i32> = evs
+                .iter()
+                .filter_map(|e| match e {
+                    StreamEvent::Token { token, .. } => Some(*token),
+                    _ => None,
+                })
+                .collect();
+            assert_eq!(toks, r.generated, "request {} stream != terminal record", r.id);
+            assert_eq!(toks, baseline[&r.id], "request {} stream != non-streaming run", r.id);
+            let indices: Vec<usize> = evs
+                .iter()
+                .filter_map(|e| match e {
+                    StreamEvent::Token { index, .. } => Some(*index),
+                    _ => None,
+                })
+                .collect();
+            assert_eq!(indices, (0..toks.len()).collect::<Vec<_>>());
+            match evs.last() {
+                Some(StreamEvent::Done { outcome, generated, .. }) => {
+                    assert_eq!(*outcome, Outcome::Completed);
+                    assert_eq!(*generated, toks.len());
+                }
+                other => panic!("request {}: last event {other:?}, want Done", r.id),
+            }
+            assert_eq!(
+                evs.iter().filter(|e| matches!(e, StreamEvent::Done { .. })).count(),
+                1
+            );
+        }
+    }
+
+    #[test]
+    fn dead_sink_cancels_request_and_frees_pages() {
+        // the disconnect path end-to-end minus sockets: request 0's sink
+        // goes dead after 2 tokens, the server must cancel it, release
+        // its pages, and still complete everyone else with untouched
+        // streams
+        let workload = || {
+            let mut v = reqs(5, 12, 16);
+            // request 0 must outlive the sink's death: many tokens
+            v[0].prompt = vec![1, 2, 3];
+            v[0].max_new = 8;
+            v
+        };
+        let baseline =
+            generated_by_id(&serve(mock(), ServeConfig::default(), FaultPlan::none(), workload()));
+        let d = mock();
+        let table = d.shared_pages().unwrap();
+        let mut server = Server::new(d, ServeConfig::default());
+        let delivered = Arc::new(std::sync::Mutex::new(Vec::new()));
+        for r in workload() {
+            if r.id == 0 {
+                let mut seen = 0usize;
+                let dv = delivered.clone();
+                server
+                    .submit_streaming(
+                        r,
+                        Box::new(move |e| {
+                            if let StreamEvent::Token { token, .. } = e {
+                                dv.lock().unwrap().push(token);
+                            }
+                            seen += 1;
+                            seen < 2 // dead after the second event
+                        }),
+                    )
+                    .unwrap();
+            } else {
+                server.submit(r).unwrap();
+            }
+        }
+        run_to_done(&mut server);
+        assert!(server.check_invariants().is_empty());
+        let report = server.finish();
+        let r0 = report.result_for(0).unwrap();
+        assert_eq!(r0.outcome, Outcome::Cancelled, "dead sink must cancel");
+        // the delivered prefix matches the unfaulted stream
+        let delivered = delivered.lock().unwrap();
+        assert_eq!(&delivered[..], &baseline[&0][..delivered.len()]);
+        for r in &report.results {
+            if r.id != 0 {
+                assert_eq!(r.outcome, Outcome::Completed);
+                assert_eq!(r.generated, baseline[&r.id], "request {} disturbed", r.id);
+            }
+        }
+        // zero leaks: every page back on the free list
+        assert_eq!(table.pages_free(), table.pool_pages_total());
+        assert!(table.check_conservation());
+    }
+
+    #[test]
+    fn drain_refuses_new_work_and_completes_in_flight() {
+        let mut server = Server::new(mock(), ServeConfig::default());
+        for r in reqs(4, 13, 16) {
+            server.submit(r).unwrap();
+        }
+        // let some work start
+        for _ in 0..3 {
+            server.tick();
+        }
+        server.begin_drain();
+        assert!(server.is_draining());
+        let err = server.submit(ServeRequest::new(99, vec![1, 2], 4)).unwrap_err();
+        assert_eq!(err, ServeError::Draining);
+        assert!(err.transient());
+        run_to_done(&mut server);
+        let report = server.finish();
+        assert_eq!(report.count(Outcome::Completed), 4, "in-flight work must finish");
+        assert!(report.result_for(99).is_none());
+        let drain = report.drain.expect("drain info reported");
+        assert!(drain.completed_ms.is_some(), "drain ran to empty");
+        assert_eq!(drain.rejected, 1);
+        assert_eq!(drain.aborted, 0);
+        assert_eq!(report.stats.rejected, 1);
+    }
+
+    #[test]
+    fn drain_deadline_aborts_stragglers_counted() {
+        let mut server = Server::new(mock(), ServeConfig::default());
+        for r in reqs(4, 14, 16) {
+            server.submit(r).unwrap();
+        }
+        server.tick();
+        server.begin_drain();
+        // caller's drain deadline fires immediately: finish() aborts
+        let report = server.finish();
+        let drain = report.drain.expect("drain info reported");
+        assert!(drain.aborted > 0, "stragglers counted as aborted");
+        assert_eq!(drain.completed_ms, None, "drain never emptied");
+        assert_eq!(
+            report.count(Outcome::Cancelled) + report.count(Outcome::Completed),
+            4
+        );
+    }
+
+    #[test]
+    fn idle_server_reopens_on_new_submissions() {
+        let mut server = Server::new(mock(), ServeConfig::default());
+        for r in reqs(2, 15, 16) {
+            server.submit(r).unwrap();
+        }
+        run_to_done(&mut server);
+        assert!(server.is_done());
+        // second wave after going idle — the long-running front-end case
+        server.submit(ServeRequest::new(50, vec![3, 1], 4)).unwrap();
+        assert!(!server.is_done());
+        run_to_done(&mut server);
+        let report = server.finish();
+        assert_eq!(report.count(Outcome::Completed), 3);
+        assert!(report.result_for(50).is_some());
     }
 }

@@ -1,0 +1,533 @@
+//! HTTP/1.1 wire layer for the serving front-end: a bounded,
+//! std-only request parser, response/SSE writers, and the RAII
+//! connection gate. No tokio/hyper — the front-end is thread-per-
+//! connection over `std::net` (see `serve::http`), so everything here
+//! is plain blocking `Read`/`Write` code whose robustness properties
+//! are enforced *structurally*:
+//!
+//! - every read loop is bounded by [`TransportLimits`] (header bytes,
+//!   header count, body bytes, chunk-size line length), so no request
+//!   — however malformed — can make the parser allocate or loop
+//!   unboundedly; socket read *timeouts* (slowloris) are the
+//!   accept-loop's job and layer underneath via `set_read_timeout`;
+//! - every malformation maps to a typed
+//!   [`ServeError::InvalidRequest`] the caller turns into a 4xx —
+//!   never a panic (fuzz-tested below over arbitrary byte soup);
+//! - connection concurrency is an RAII [`ConnGate`] permit, so a
+//!   panicking or early-returning handler can never leak a slot.
+
+use std::io::{BufRead, Read, Write};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use super::error::ServeError;
+
+/// Hard bounds the parser enforces per request.
+#[derive(Debug, Clone)]
+pub struct TransportLimits {
+    /// request line + headers, total bytes
+    pub max_header_bytes: usize,
+    /// number of header fields
+    pub max_headers: usize,
+    /// decoded body bytes (Content-Length or summed chunks)
+    pub max_body_bytes: usize,
+}
+
+impl Default for TransportLimits {
+    fn default() -> Self {
+        TransportLimits { max_header_bytes: 8 * 1024, max_headers: 64, max_body_bytes: 256 * 1024 }
+    }
+}
+
+/// A parsed request. Header names are lowercased at parse time (HTTP
+/// field names are case-insensitive); values keep their bytes minus
+/// surrounding whitespace.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(n, _)| n == name).map(|(_, v)| v.as_str())
+    }
+}
+
+fn invalid(why: impl Into<String>) -> ServeError {
+    ServeError::InvalidRequest { why: why.into() }
+}
+
+/// Read one `\n`-terminated line, bounded: consuming more than `max`
+/// bytes without a terminator is a typed error, not an unbounded
+/// buffer. The trailing `\r\n` / `\n` is stripped.
+fn read_line_bounded<R: BufRead>(r: &mut R, max: usize, what: &str) -> Result<Vec<u8>, ServeError> {
+    let mut line = Vec::new();
+    let mut limited = r.take(max as u64 + 1);
+    limited
+        .read_until(b'\n', &mut line)
+        .map_err(|e| invalid(format!("reading {what}: {e}")))?;
+    if line.last() != Some(&b'\n') {
+        if line.len() > max {
+            return Err(invalid(format!("{what} exceeds {max} bytes")));
+        }
+        return Err(invalid(format!("{what} truncated (connection closed mid-line)")));
+    }
+    line.pop();
+    if line.last() == Some(&b'\r') {
+        line.pop();
+    }
+    Ok(line)
+}
+
+/// Parse one HTTP/1.1 request head + body off `r`. `Ok(None)` means the
+/// peer closed the connection cleanly before sending anything (a normal
+/// keep-alive-less hang-up, not an error). Every malformation is a
+/// typed [`ServeError::InvalidRequest`].
+pub fn read_request<R: BufRead>(
+    r: &mut R,
+    limits: &TransportLimits,
+) -> Result<Option<Request>, ServeError> {
+    // -- request line ------------------------------------------------------
+    let mut first = Vec::new();
+    {
+        let mut limited = r.take(limits.max_header_bytes as u64 + 1);
+        limited
+            .read_until(b'\n', &mut first)
+            .map_err(|e| invalid(format!("reading request line: {e}")))?;
+    }
+    if first.is_empty() {
+        return Ok(None); // clean EOF before any byte
+    }
+    if first.last() != Some(&b'\n') {
+        if first.len() > limits.max_header_bytes {
+            return Err(invalid(format!(
+                "request line exceeds {} bytes",
+                limits.max_header_bytes
+            )));
+        }
+        return Err(invalid("request line truncated (connection closed mid-line)"));
+    }
+    first.pop();
+    if first.last() == Some(&b'\r') {
+        first.pop();
+    }
+    let mut head_bytes = first.len() + 2;
+    let line = std::str::from_utf8(&first).map_err(|_| invalid("request line is not UTF-8"))?;
+    let mut parts = line.split(' ').filter(|p| !p.is_empty());
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v), None) => (m, p, v),
+        _ => return Err(invalid(format!("malformed request line: '{line}'"))),
+    };
+    if method.is_empty() || !method.bytes().all(|b| b.is_ascii_uppercase()) {
+        return Err(invalid(format!("malformed method: '{method}'")));
+    }
+    if !path.starts_with('/') {
+        return Err(invalid(format!("request path must start with '/': '{path}'")));
+    }
+    if version != "HTTP/1.1" && version != "HTTP/1.0" {
+        return Err(invalid(format!("unsupported HTTP version: '{version}'")));
+    }
+
+    // -- header fields -----------------------------------------------------
+    let mut headers: Vec<(String, String)> = Vec::new();
+    loop {
+        let remaining = limits
+            .max_header_bytes
+            .checked_sub(head_bytes)
+            .ok_or_else(|| invalid(format!("headers exceed {} bytes", limits.max_header_bytes)))?;
+        let line = read_line_bounded(r, remaining, "header field")?;
+        head_bytes += line.len() + 2;
+        if line.is_empty() {
+            break; // end of head
+        }
+        if headers.len() >= limits.max_headers {
+            return Err(invalid(format!("more than {} header fields", limits.max_headers)));
+        }
+        let line =
+            std::str::from_utf8(&line).map_err(|_| invalid("header field is not UTF-8"))?;
+        let (name, value) = line
+            .split_once(':')
+            .ok_or_else(|| invalid(format!("header field without ':': '{line}'")))?;
+        let name = name.trim();
+        if name.is_empty()
+            || !name.bytes().all(|b| b.is_ascii_alphanumeric() || b == b'-' || b == b'_')
+        {
+            return Err(invalid(format!("malformed header name: '{name}'")));
+        }
+        headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
+    }
+
+    // -- body --------------------------------------------------------------
+    let req = Request { method: method.to_string(), path: path.to_string(), headers, body: Vec::new() };
+    let body = if req
+        .header("transfer-encoding")
+        .map_or(false, |v| v.to_ascii_lowercase().contains("chunked"))
+    {
+        read_chunked_body(r, limits)?
+    } else if let Some(cl) = req.header("content-length") {
+        let n: usize = cl
+            .parse()
+            .map_err(|_| invalid(format!("malformed content-length: '{cl}'")))?;
+        if n > limits.max_body_bytes {
+            return Err(invalid(format!(
+                "content-length {n} exceeds the {} byte body bound",
+                limits.max_body_bytes
+            )));
+        }
+        let mut body = vec![0u8; n];
+        r.read_exact(&mut body)
+            .map_err(|e| invalid(format!("body truncated at <{n} bytes: {e}")))?;
+        body
+    } else {
+        Vec::new()
+    };
+    Ok(Some(Request { body, ..req }))
+}
+
+/// Decode a chunked body, bounded by `limits.max_body_bytes` total.
+fn read_chunked_body<R: BufRead>(
+    r: &mut R,
+    limits: &TransportLimits,
+) -> Result<Vec<u8>, ServeError> {
+    let mut body = Vec::new();
+    loop {
+        let line = read_line_bounded(r, 32, "chunk size line")?;
+        let line = std::str::from_utf8(&line).map_err(|_| invalid("chunk size is not UTF-8"))?;
+        // chunk extensions (";ext=val") are legal; ignore them
+        let size_str = line.split(';').next().unwrap_or("").trim();
+        let size = usize::from_str_radix(size_str, 16)
+            .map_err(|_| invalid(format!("malformed chunk size: '{line}'")))?;
+        if size == 0 {
+            // trailers (rare) or the final empty line
+            loop {
+                let t = read_line_bounded(r, 256, "chunk trailer")?;
+                if t.is_empty() {
+                    return Ok(body);
+                }
+            }
+        }
+        if body.len() + size > limits.max_body_bytes {
+            return Err(invalid(format!(
+                "chunked body exceeds the {} byte bound",
+                limits.max_body_bytes
+            )));
+        }
+        let at = body.len();
+        body.resize(at + size, 0);
+        r.read_exact(&mut body[at..])
+            .map_err(|e| invalid(format!("chunk truncated at <{size} bytes: {e}")))?;
+        let sep = read_line_bounded(r, 8, "chunk separator")?;
+        if !sep.is_empty() {
+            return Err(invalid("chunk data not followed by CRLF"));
+        }
+    }
+}
+
+/// Canonical reason phrases for the statuses the front-end emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        499 => "Client Closed Request",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "",
+    }
+}
+
+/// Write a complete non-streaming response (Content-Length framing,
+/// `connection: close` — the front-end is deliberately one-request-per-
+/// connection; keep-alive buys little for token streaming and costs a
+/// slot).
+pub fn write_response(
+    w: &mut impl Write,
+    status: u16,
+    extra_headers: &[(&str, &str)],
+    body: &[u8],
+) -> std::io::Result<()> {
+    write!(w, "HTTP/1.1 {} {}\r\n", status, reason(status))?;
+    write!(w, "content-length: {}\r\n", body.len())?;
+    write!(w, "content-type: application/json\r\n")?;
+    write!(w, "connection: close\r\n")?;
+    for (n, v) in extra_headers {
+        write!(w, "{n}: {v}\r\n")?;
+    }
+    w.write_all(b"\r\n")?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Write the head of an SSE-style stream; events follow via
+/// [`write_event`]. No Content-Length — the stream ends when the
+/// connection closes (`connection: close` framing).
+pub fn write_stream_head(w: &mut impl Write) -> std::io::Result<()> {
+    w.write_all(
+        b"HTTP/1.1 200 OK\r\ncontent-type: text/event-stream\r\ncache-control: no-store\r\nconnection: close\r\n\r\n",
+    )?;
+    w.flush()
+}
+
+/// One `data: <json>\n\n` server-sent event, flushed immediately (the
+/// whole point is per-token latency).
+pub fn write_event(w: &mut impl Write, json: &str) -> std::io::Result<()> {
+    w.write_all(b"data: ")?;
+    w.write_all(json.as_bytes())?;
+    w.write_all(b"\n\n")?;
+    w.flush()
+}
+
+// ---------------------------------------------------------------------------
+// connection gate
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+struct GateInner {
+    max: usize,
+    active: AtomicUsize,
+}
+
+/// Bounds concurrent connections. `try_acquire` hands out an RAII
+/// [`ConnPermit`]; dropping the permit (normal return, error path, or
+/// handler panic unwinding) frees the slot — the transport twin of the
+/// serving loop's `SlotGuard`.
+#[derive(Debug, Clone)]
+pub struct ConnGate {
+    inner: Arc<GateInner>,
+}
+
+impl ConnGate {
+    pub fn new(max: usize) -> ConnGate {
+        ConnGate { inner: Arc::new(GateInner { max: max.max(1), active: AtomicUsize::new(0) }) }
+    }
+
+    pub fn try_acquire(&self) -> Option<ConnPermit> {
+        let r = self.inner.active.fetch_update(Ordering::AcqRel, Ordering::Acquire, |n| {
+            if n < self.inner.max {
+                Some(n + 1)
+            } else {
+                None
+            }
+        });
+        r.ok().map(|_| ConnPermit { inner: self.inner.clone() })
+    }
+
+    pub fn active(&self) -> usize {
+        self.inner.active.load(Ordering::Acquire)
+    }
+
+    pub fn max(&self) -> usize {
+        self.inner.max
+    }
+}
+
+#[derive(Debug)]
+pub struct ConnPermit {
+    inner: Arc<GateInner>,
+}
+
+impl Drop for ConnPermit {
+    fn drop(&mut self) {
+        self.inner.active.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+    use std::io::BufReader;
+
+    fn parse(bytes: &[u8]) -> Result<Option<Request>, ServeError> {
+        read_request(&mut BufReader::new(bytes), &TransportLimits::default())
+    }
+
+    fn parse_limits(bytes: &[u8], limits: &TransportLimits) -> Result<Option<Request>, ServeError> {
+        read_request(&mut BufReader::new(bytes), limits)
+    }
+
+    #[test]
+    fn parses_a_wellformed_post() {
+        let req = parse(
+            b"POST /v1/generate HTTP/1.1\r\nHost: x\r\nContent-Length: 13\r\nX-Deadline-Ms: 250\r\n\r\n{\"max_new\":4}",
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/generate");
+        assert_eq!(req.header("host"), Some("x"));
+        assert_eq!(req.header("x-deadline-ms"), Some("250"));
+        assert_eq!(req.body, b"{\"max_new\":4}");
+    }
+
+    #[test]
+    fn parses_a_chunked_body() {
+        let req = parse(
+            b"POST /v1/generate HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n5\r\n{\"a\":\r\n3\r\n1}\n\r\n0\r\n\r\n",
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(req.body, b"{\"a\":1}\n");
+    }
+
+    #[test]
+    fn clean_eof_is_none_not_an_error() {
+        assert!(parse(b"").unwrap().is_none());
+    }
+
+    fn assert_invalid(bytes: &[u8]) -> String {
+        match parse(bytes) {
+            Err(ServeError::InvalidRequest { why }) => why,
+            other => panic!("expected InvalidRequest for {:?}, got {other:?}", String::from_utf8_lossy(bytes)),
+        }
+    }
+
+    #[test]
+    fn malformed_request_lines_are_typed_errors() {
+        assert_invalid(b"GET\r\n\r\n");
+        assert_invalid(b"GET /x\r\n\r\n");
+        assert_invalid(b"GET /x HTTP/1.1 extra\r\n\r\n");
+        assert_invalid(b"get /x HTTP/1.1\r\n\r\n"); // lowercase method
+        assert_invalid(b"GET x HTTP/1.1\r\n\r\n"); // path without '/'
+        assert_invalid(b"GET /x HTTP/2\r\n\r\n");
+        assert_invalid(b"\xff\xfe GET /x HTTP/1.1\r\n\r\n"); // not UTF-8
+        assert_invalid(b"GET /x HTTP/1.1"); // truncated, no terminator
+    }
+
+    #[test]
+    fn malformed_headers_are_typed_errors() {
+        assert_invalid(b"GET /x HTTP/1.1\r\nno-colon-here\r\n\r\n");
+        assert_invalid(b"GET /x HTTP/1.1\r\n: empty-name\r\n\r\n");
+        assert_invalid(b"GET /x HTTP/1.1\r\nbad name: v\r\n\r\n");
+        assert_invalid(b"GET /x HTTP/1.1\r\nHost: x\r\n"); // truncated head
+    }
+
+    #[test]
+    fn oversized_heads_and_bodies_are_refused() {
+        let limits =
+            TransportLimits { max_header_bytes: 128, max_headers: 4, max_body_bytes: 32 };
+        // header bytes
+        let mut big = b"GET /x HTTP/1.1\r\n".to_vec();
+        big.extend(std::iter::repeat(b'a').take(500));
+        assert!(matches!(
+            parse_limits(&big, &limits),
+            Err(ServeError::InvalidRequest { .. })
+        ));
+        // header count
+        let many = b"GET /x HTTP/1.1\r\na: 1\r\nb: 2\r\nc: 3\r\nd: 4\r\ne: 5\r\n\r\n";
+        assert!(matches!(
+            parse_limits(many, &limits),
+            Err(ServeError::InvalidRequest { .. })
+        ));
+        // declared body too large
+        let fat = b"POST /x HTTP/1.1\r\nContent-Length: 999\r\n\r\n";
+        assert!(matches!(
+            parse_limits(fat, &limits),
+            Err(ServeError::InvalidRequest { .. })
+        ));
+        // chunked body too large in aggregate
+        let chunks = b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n20\r\naaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaa\r\n20\r\naaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaa\r\n0\r\n\r\n";
+        assert!(matches!(
+            parse_limits(chunks, &limits),
+            Err(ServeError::InvalidRequest { .. })
+        ));
+    }
+
+    #[test]
+    fn bad_chunked_bodies_are_typed_errors() {
+        assert_invalid(b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\nzz\r\n\r\n");
+        assert_invalid(b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n5\r\nab"); // truncated chunk
+        assert_invalid(b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n2\r\nabXX\r\n0\r\n\r\n");
+        assert_invalid(b"POST /x HTTP/1.1\r\nContent-Length: ten\r\n\r\n");
+        assert_invalid(b"POST /x HTTP/1.1\r\nContent-Length: 5\r\n\r\nab");
+    }
+
+    /// The fuzz property the satellite asks for: arbitrary byte soup
+    /// (including prefixes of valid requests, binary garbage, and
+    /// pathological header shapes) must parse to Ok or a typed
+    /// InvalidRequest — never a panic, never an unbounded loop or
+    /// allocation (the limits cap both).
+    #[test]
+    fn prop_arbitrary_bytes_never_panic_the_parser() {
+        let limits = TransportLimits { max_header_bytes: 256, max_headers: 8, max_body_bytes: 64 };
+        let mut rng = Pcg::seeded(0x7a9_5e);
+        let seeds: &[&[u8]] = &[
+            b"POST /v1/generate HTTP/1.1\r\nContent-Length: 10\r\n\r\n0123456789",
+            b"GET /healthz HTTP/1.1\r\n\r\n",
+            b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n4\r\nabcd\r\n0\r\n\r\n",
+        ];
+        for trial in 0..500 {
+            let mut bytes: Vec<u8> = match rng.below(3) {
+                // pure garbage
+                0 => (0..rng.usize_below(300)).map(|_| rng.below(256) as u8).collect(),
+                // truncated prefix of a valid request
+                1 => {
+                    let s = seeds[rng.usize_below(seeds.len())];
+                    s[..rng.usize_below(s.len() + 1)].to_vec()
+                }
+                // valid request with random byte flips
+                _ => {
+                    let mut v = seeds[rng.usize_below(seeds.len())].to_vec();
+                    for _ in 0..rng.usize_below(6) {
+                        let at = rng.usize_below(v.len());
+                        v[at] = rng.below(256) as u8;
+                    }
+                    v
+                }
+            };
+            // occasionally append garbage after a valid head
+            if rng.below(4) == 0 {
+                bytes.extend((0..rng.usize_below(64)).map(|_| rng.below(256) as u8));
+            }
+            // must return, not panic (and any error is the typed kind)
+            match parse_limits(&bytes, &limits) {
+                Ok(_) => {}
+                Err(ServeError::InvalidRequest { .. }) => {}
+                Err(other) => panic!("trial {trial}: non-typed error {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn responses_and_events_have_http_framing() {
+        let mut out = Vec::new();
+        write_response(&mut out, 429, &[("retry-after", "1")], b"{\"error\":\"full\"}").unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
+        assert!(s.contains("retry-after: 1\r\n"));
+        assert!(s.contains("content-length: 16\r\n"));
+        assert!(s.ends_with("\r\n\r\n{\"error\":\"full\"}"));
+
+        let mut out = Vec::new();
+        write_stream_head(&mut out).unwrap();
+        write_event(&mut out, "{\"token\":5}").unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.contains("content-type: text/event-stream"));
+        assert!(s.ends_with("data: {\"token\":5}\n\n"));
+    }
+
+    #[test]
+    fn conn_gate_is_raii_and_bounded() {
+        let gate = ConnGate::new(2);
+        let a = gate.try_acquire().unwrap();
+        let b = gate.try_acquire().unwrap();
+        assert!(gate.try_acquire().is_none(), "gate must cap at 2");
+        assert_eq!(gate.active(), 2);
+        drop(a);
+        assert_eq!(gate.active(), 1);
+        let c = gate.try_acquire().unwrap();
+        assert!(gate.try_acquire().is_none());
+        drop(b);
+        drop(c);
+        assert_eq!(gate.active(), 0, "permits must return on every path");
+    }
+}

@@ -9,6 +9,12 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
+/// Recursion bound for nested containers. The parser recurses per
+/// nesting level, so untrusted input (the HTTP front-end parses request
+/// bodies with this module) must hit a typed error well before the
+/// thread stack does: `[[[[...` is a parse error, not a stack overflow.
+const MAX_DEPTH: usize = 128;
+
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
     Null,
@@ -35,7 +41,7 @@ impl std::error::Error for JsonError {}
 
 impl Json {
     pub fn parse(s: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { b: s.as_bytes(), i: 0 };
+        let mut p = Parser { b: s.as_bytes(), i: 0, depth: 0 };
         p.ws();
         let v = p.value()?;
         p.ws();
@@ -135,6 +141,14 @@ impl Json {
         out
     }
 
+    /// Single-line serialisation — required wherever a newline would
+    /// break framing (SSE `data:` lines, JSONL records).
+    pub fn to_string_compact(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, 0, false);
+        out
+    }
+
     fn write(&self, out: &mut String, indent: usize, pretty: bool) {
         match self {
             Json::Null => out.push_str("null"),
@@ -208,6 +222,7 @@ fn write_escaped(out: &mut String, s: &str) {
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -258,10 +273,12 @@ impl<'a> Parser<'a> {
 
     fn object(&mut self) -> Result<Json, JsonError> {
         self.eat(b'{')?;
+        self.enter()?;
         let mut m = BTreeMap::new();
         self.ws();
         if self.peek() == Some(b'}') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(m));
         }
         loop {
@@ -277,6 +294,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.i += 1,
                 Some(b'}') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(m));
                 }
                 _ => return Err(self.err("expected ',' or '}'")),
@@ -286,10 +304,12 @@ impl<'a> Parser<'a> {
 
     fn array(&mut self) -> Result<Json, JsonError> {
         self.eat(b'[')?;
+        self.enter()?;
         let mut v = Vec::new();
         self.ws();
         if self.peek() == Some(b']') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(v));
         }
         loop {
@@ -300,11 +320,22 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.i += 1,
                 Some(b']') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(v));
                 }
                 _ => return Err(self.err("expected ',' or ']'")),
             }
         }
+    }
+
+    /// Bump the container-nesting depth; errors abandon the parse, so
+    /// the unwound depth on error paths is never observed.
+    fn enter(&mut self) -> Result<(), JsonError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err("nesting deeper than 128 levels"));
+        }
+        Ok(())
     }
 
     fn string(&mut self) -> Result<String, JsonError> {
@@ -345,12 +376,21 @@ impl<'a> Parser<'a> {
                                 {
                                     return Err(self.err("missing low surrogate"));
                                 }
-                                let hex2 = std::str::from_utf8(
-                                    &self.b[self.i + 2..self.i + 6],
-                                )
-                                .map_err(|_| self.err("bad \\u escape"))?;
+                                // bounds-checked: `"\ud83d\ud8` (input
+                                // truncated inside the low half) must be
+                                // a parse error, not a slice panic
+                                let hex2 = self
+                                    .b
+                                    .get(self.i + 2..self.i + 6)
+                                    .and_then(|h| std::str::from_utf8(h).ok())
+                                    .ok_or_else(|| self.err("bad \\u escape"))?;
                                 let lo = u32::from_str_radix(hex2, 16)
                                     .map_err(|_| self.err("bad \\u escape"))?;
+                                if !(0xDC00..0xE000).contains(&lo) {
+                                    // out-of-range low half would underflow
+                                    // the pair arithmetic below
+                                    return Err(self.err("bad low surrogate"));
+                                }
                                 self.i += 1; // compensate the +5 below
                                 char::from_u32(
                                     0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00),
@@ -470,5 +510,102 @@ mod tests {
         let j = Json::parse("54760833024").unwrap();
         assert_eq!(j.as_i64(), Some(54760833024));
         assert_eq!(j.to_string_pretty(), "54760833024");
+    }
+
+    #[test]
+    fn compact_is_single_line_and_roundtrips() {
+        let j = Json::parse(r#"{"a":[1,2],"s":"x\ny"}"#).unwrap();
+        let c = j.to_string_compact();
+        assert!(!c.contains('\n'), "compact output must be newline-free: {c:?}");
+        assert_eq!(Json::parse(&c).unwrap(), j);
+    }
+
+    #[test]
+    fn deep_nesting_is_an_error_not_a_stack_overflow() {
+        // far past MAX_DEPTH; without the limit this recursion depth
+        // would overflow a default test-thread stack
+        let deep = "[".repeat(60_000);
+        let err = Json::parse(&deep).unwrap_err();
+        assert!(err.msg.contains("nesting"), "got: {err}");
+        // mixed containers hit it too
+        let mixed = "{\"k\":".repeat(300) + "1" + &"}".repeat(300);
+        assert!(Json::parse(&mixed).is_err());
+        // ...while MAX_DEPTH-deep input still parses
+        let ok = "[".repeat(100) + &"]".repeat(100);
+        assert!(Json::parse(&ok).is_ok());
+    }
+
+    #[test]
+    fn truncated_surrogates_are_errors_not_panics() {
+        // regression: the low-half hex slice used to be unchecked and
+        // panicked on input truncated mid-escape
+        for src in [
+            r#""\ud83d\ud8"#,  // truncated inside the low half
+            r#""\ud83d"#,      // high half then EOF
+            r#""\ud83d""#,     // high half then string end
+            r#""\ud83d\n""#,   // high half then non-\u escape
+            r#""\ud83dA""#,       // high half then plain char
+            r#""\ud83d\u0041""#, // low half out of range (would underflow)
+            r#""\udc00""#,     // lone low surrogate
+            r#""\ud8"#,        // truncated high half
+        ] {
+            assert!(Json::parse(src).is_err(), "must reject {src:?}");
+        }
+        // and the well-formed pair still decodes
+        assert_eq!(Json::parse(r#""😀""#).unwrap(), Json::Str("😀".into()));
+    }
+
+    /// Property test: any tree this module can serialise, it can parse
+    /// back identically (both pretty and compact framing).
+    #[test]
+    fn prop_random_trees_roundtrip() {
+        use crate::util::rng::Pcg;
+
+        fn gen(rng: &mut Pcg, depth: usize) -> Json {
+            let pick = if depth >= 5 { rng.below(4) } else { rng.below(6) };
+            match pick {
+                0 => Json::Null,
+                1 => Json::Bool(rng.below(2) == 0),
+                2 => match rng.below(3) {
+                    0 => Json::Num(rng.below(1 << 20) as f64 - (1 << 19) as f64),
+                    1 => Json::Num((rng.f64() - 0.5) * 1e6),
+                    _ => Json::Num(rng.below(1 << 30) as f64),
+                },
+                3 => {
+                    let n = rng.usize_below(8);
+                    Json::Str(
+                        (0..n)
+                            .map(|_| {
+                                // printable ASCII, escapes, and astral chars
+                                match rng.below(8) {
+                                    0 => '"',
+                                    1 => '\\',
+                                    2 => '\n',
+                                    3 => '\u{1}',
+                                    4 => '😀',
+                                    5 => 'é',
+                                    _ => (b'a' + rng.below(26) as u8) as char,
+                                }
+                            })
+                            .collect(),
+                    )
+                }
+                4 => Json::Arr((0..rng.usize_below(4)).map(|_| gen(rng, depth + 1)).collect()),
+                _ => Json::Obj(
+                    (0..rng.usize_below(4))
+                        .map(|k| (format!("k{k}"), gen(rng, depth + 1)))
+                        .collect(),
+                ),
+            }
+        }
+
+        let mut rng = Pcg::seeded(0x150_9);
+        for trial in 0..200 {
+            let j = gen(&mut rng, 0);
+            let pretty = j.to_string_pretty();
+            let compact = j.to_string_compact();
+            assert_eq!(Json::parse(&pretty).unwrap(), j, "trial {trial} pretty: {pretty}");
+            assert_eq!(Json::parse(&compact).unwrap(), j, "trial {trial} compact: {compact}");
+        }
     }
 }

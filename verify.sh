@@ -41,9 +41,9 @@ if ! command -v cargo >/dev/null 2>&1; then
     publish_fallback "cargo not on PATH in this container"
 fi
 
-# The repo ships no Cargo.toml: the manifest (and the baked xla crate)
-# live in the external build harness. With a toolchain but no manifest,
-# cargo can only fail on mechanics — fall back honestly instead.
+# rust/Cargo.toml exists (PR 8) with a vendored `xla` stub pinning
+# resolution; a build harness that supplies the real xla crate may
+# override it via a [patch] or its own manifest at the repo root.
 dir=.
 if [ -f rust/Cargo.toml ]; then
     dir=rust
@@ -78,6 +78,18 @@ run cargo run --release --bin mosa -- perf --smoke \
 run cargo run --release --bin mosa -- chaos --seed 17 \
     --plan 'fail@2;fail@5;slow@7:900;hold@3:4x120' \
     --out /tmp/chaos.smoke.json
+# transport smokes (mock-backed, ephemeral loopback ports): the storm
+# drives concurrent SSE streams under injected connection drops/stalls
+# + deliberate mid-stream hangups and exits nonzero on any leaked page
+# (a leaked connection IS a leaked page), non-prefix severed stream, or
+# stuck drain; the loadgen exercises the overload + drain-under-load
+# path and exits nonzero unless every request is accounted for leak-free.
+run cargo run --release --bin mosa -- chaos --transport --seed 17 \
+    --plan 'drop@5;drop@19;stall@9:25' \
+    --out /tmp/chaos_transport.smoke.json
+run cargo run --release --bin mosa -- loadgen --seed 17 --requests 24 \
+    --rate-rps 400 --drain-after-frac 0.75 \
+    --out /tmp/loadgen.smoke.json
 
 # ---------------------------------------------------------------------------
 # publication: keep the smoke reports in-repo so the perf trajectory
@@ -136,6 +148,37 @@ elif faults:
     print(f"faults gate: skipped (stub: {faults.get('reason', 'rust bench did not run')})")
 else:
     print("faults gate: no faults key in the report (pre-serve bench?)")
+# transport gate: loadgen latency arm over real loopback sockets —
+# mock-backed like faults, so it too is real whenever the rust bench
+# ran. Wall-clock percentiles are informational; the behavioural keys
+# are the gate.
+tr = r.get("transport")
+if tr and tr.get("available") is not False:
+    tbad = []
+    if tr.get("leaked_pages", 1) != 0:
+        tbad.append(f"leaked_pages={tr.get('leaked_pages')}")
+    if tr.get("conserved") is not True:
+        tbad.append(f"conserved={tr.get('conserved')}")
+    if tr.get("errored", 1) != 0:
+        tbad.append(f"errored={tr.get('errored')}")
+    if not tr.get("completed", 0) > 0:
+        tbad.append(f"completed={tr.get('completed')} (nothing streamed end-to-end)")
+    if tr.get("ok") is not True:
+        tbad.append("ok=false (unaccounted requests or dirty drain)")
+    if tbad:
+        print(f"transport gate: FAILED {tbad}")
+        sys.exit(1)
+    ttft = tr.get("ttft", {})
+    itl = tr.get("itl", {})
+    print(
+        f"transport gate: OK ({tr.get('completed'):.0f} completed over loopback, "
+        f"ttft p99 {ttft.get('p99_ms', 0):.1f}ms, itl p99 {itl.get('p99_ms', 0):.1f}ms, "
+        f"drain {tr.get('drain_wall_ms', 0):.0f}ms, 0 pages leaked)"
+    )
+elif tr:
+    print(f"transport gate: skipped (stub: {tr.get('reason', 'rust bench did not run')})")
+else:
+    print("transport gate: no transport key in the report (pre-transport bench?)")
 if not r.get("available"):
     print(f"decode gates: skipped (decode bench unavailable: {r.get('reason', 'no artifacts')})")
     sys.exit(0)
