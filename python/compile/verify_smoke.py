@@ -135,8 +135,9 @@ def main() -> int:
         "lowering_smoke": {"ok": ok, **({"error": err} if err else {}), **(smoke or {})},
     }
     publish(args.pipeline_out, {"schema": "mosa-bench-pipeline-v1", **base})
-    # the faults arm (serve::chaos counters) and the transport arm
-    # (serve::loadgen latency percentiles) are rust-only: stub them with
+    # the faults arm (serve::chaos counters), the transport arm
+    # (serve::loadgen latency percentiles), and the overload arm
+    # (saturation goodput/shed counters) are rust-only: stub them with
     # the same reason so the keys' trajectories are never silently empty
     publish(
         args.decode_out,
@@ -145,6 +146,7 @@ def main() -> int:
             **base,
             "faults": {"available": False, "reason": args.reason},
             "transport": {"available": False, "reason": args.reason},
+            "overload": {"available": False, "reason": args.reason},
         },
     )
     return 0 if ok else 1

@@ -300,6 +300,41 @@ impl PageTable {
         }
     }
 
+    /// Pages a fresh admission teacher-forcing `len` tokens needs from
+    /// the *overcommitted* (lazy) pools — the scalar demand signal the
+    /// overload controller compares against [`PageTable::lazy_free`].
+    /// Bounded kinds are excluded: their pools are sized for the batch,
+    /// so their availability is equivalent to slot availability, which
+    /// the admission queue already models.
+    pub fn lazy_demand(&self, len: usize) -> usize {
+        self.layout
+            .kinds
+            .iter()
+            .filter(|k| k.lazy)
+            .map(|k| {
+                let last = len.clamp(1, k.slots) - 1;
+                (last / self.layout.page_size + 1).min(k.pages_per_slot)
+            })
+            .sum()
+    }
+
+    /// Free pages across the overcommitted (lazy) pools — live headroom
+    /// for the overload controller's admission gate.
+    pub fn lazy_free(&self) -> usize {
+        self.layout
+            .kinds
+            .iter()
+            .zip(&self.allocs)
+            .filter(|(k, _)| k.lazy)
+            .map(|(_, a)| a.free_pages())
+            .sum()
+    }
+
+    /// Total pages across the overcommitted (lazy) pools.
+    pub fn lazy_total(&self) -> usize {
+        self.layout.kinds.iter().filter(|k| k.lazy).map(|k| k.pool_pages).sum()
+    }
+
     /// Back `slot` for a dispatch at position `pos`: bounded kinds map
     /// fully, lazy kinds up to the page covering `pos`. Pages already
     /// mapped are kept (idempotent; the lazy set only grows). On
@@ -506,6 +541,18 @@ impl SharedPageTable {
 
     pub fn admission_budget(&self) -> AdmissionBudget {
         self.lock().admission_budget()
+    }
+
+    pub fn lazy_demand(&self, len: usize) -> usize {
+        self.lock().lazy_demand(len)
+    }
+
+    pub fn lazy_free(&self) -> usize {
+        self.lock().lazy_free()
+    }
+
+    pub fn lazy_total(&self) -> usize {
+        self.lock().lazy_total()
     }
 
     pub fn hold_free_pages(&self, n: usize) -> usize {

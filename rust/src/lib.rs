@@ -113,6 +113,21 @@
 //!   Poisson arrivals over loopback, ttft/itl p50/p99 — and
 //!   `mosa chaos --transport` storms it with injected connection
 //!   drops/stalls and deliberate hangups (see PERF.md §Transport).
+//! - **Overload control** (`serve::overload`): a token-bucket admission
+//!   controller refilled from measured pool-page headroom and queue
+//!   drain rate (the flat connection cap survives only as a hard
+//!   backstop), drain-derived Retry-After on every 429/503 (published
+//!   lock-free to every conn thread), HTTP/1.1 keep-alive with bounded
+//!   per-connection pipelining, a three-rung brownout ladder for
+//!   sustained pressure (clamp `max_new` → force the quantized cache →
+//!   widen tick pacing), and a circuit breaker around the dispatcher
+//!   (open after K consecutive transient failures, deterministic
+//!   half-open probes on the logical clock). The saturation harness
+//!   (`mosa loadgen --saturate`, `mosa chaos --saturate`) offers 2–4×
+//!   capacity and gates the overload contract: zero leaks, well-formed
+//!   measured Retry-After on every rejection, goodput above a floor,
+//!   accepted streams bit-identical prefixes of the unloaded baseline
+//!   (see PERF.md §Overload control).
 //! - **Decode harness** (`perf::decode`, part of `mosa perf`): emits
 //!   `BENCH_decode.json` — prefill ms, per-token ms vs context capacity,
 //!   tokens/sec at batch 1/8/32, measured cache bytes dense-vs-MoSA

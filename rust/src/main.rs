@@ -87,10 +87,13 @@ fn print_help() {
          \x20            [--tick-pace-us U] [--drain-deadline-ms D] [--plan 'drop@4;stall@9:50']\n\
          \x20 loadgen    [--seed S] [--requests N] [--rate-rps R] [--max-new N] [--queue-cap Q]\n\
          \x20            [--tick-pace-us U] [--drain-after-frac F] [--out path]\n\
+         \x20            [--saturate [--rate-multiple M] [--goodput-floor-tps T]]\n\
          \x20 chaos      [--seed S] [--requests N] [--pool-pages P] [--cancel-frac F]\n\
          \x20            [--deadline-frac F] [--plan 'fail@2;slow@5:900;hold@1:4x120'] [--out path]\n\
          \x20            [--transport [--n-drop N] [--n-stall N] [--stall-ms MS]\n\
          \x20            [--disconnect-frac F] [--tick-pace-us U]]\n\
+         \x20            [--saturate [--rate-multiple M] [--n-drop N] [--n-stall N]\n\
+         \x20            [--goodput-floor-tps T]]\n\
          \x20 downstream --variant <name> --ckpt <path> [--n 50]\n\
          \x20 list       [--artifacts dir]\n"
     );
@@ -332,6 +335,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
 fn cmd_loadgen(args: &Args) -> Result<()> {
     use mosa::serve::loadgen::{run, LoadgenConfig};
 
+    if args.has("saturate") {
+        return cmd_loadgen_saturate(args);
+    }
+
     let mut cfg = LoadgenConfig::default();
     cfg.seed = args.get_u64("seed", cfg.seed);
     cfg.requests = args.get_usize("requests", cfg.requests);
@@ -365,13 +372,70 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `mosa loadgen --saturate`: deliberate overload — open-loop Poisson
+/// arrivals at `--rate-multiple` × the base rate with overload control
+/// (token-bucket admission, brownout, breaker) enabled, gated on the
+/// overload contract: zero leaks, well-formed Retry-After on every
+/// rejection, goodput above `--goodput-floor-tps`, accepted streams
+/// bit-identical prefixes of the unloaded baseline.
+fn cmd_loadgen_saturate(args: &Args) -> Result<()> {
+    use mosa::serve::loadgen::{run_saturation, SaturationConfig};
+
+    let mut cfg = SaturationConfig::default();
+    let base = &mut cfg.base;
+    base.seed = args.get_u64("seed", base.seed);
+    base.requests = args.get_usize("requests", base.requests);
+    base.rate_rps = args.get_f64("rate-rps", base.rate_rps);
+    base.max_new = args.get_usize("max-new", base.max_new);
+    base.queue_cap = args.get_usize("queue-cap", base.queue_cap);
+    base.pool_pages = args.get_usize("pool-pages", base.pool_pages);
+    base.tick_pace_us = args.get_u64("tick-pace-us", base.tick_pace_us);
+    base.drain_deadline_ms = args.get_u64("drain-deadline-ms", base.drain_deadline_ms);
+    cfg.rate_multiple = args.get_f64("rate-multiple", cfg.rate_multiple);
+    cfg.goodput_floor_tps = args.get_f64("goodput-floor-tps", cfg.goodput_floor_tps);
+    let report = run_saturation(&cfg)?;
+    let json = report.to_json().to_string_pretty();
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, &json)?;
+        println!("saturation report -> {out}");
+    }
+    println!("{json}");
+    if !report.ok() {
+        bail!(
+            "saturation failed: rejected={} malformed={} mismatched={} leaked={} \
+             goodput={:.1}tps (floor {:.1}) fatal={:?}",
+            report.rejected,
+            report.malformed_rejections,
+            report.mismatched_streams,
+            report.leaked_pages,
+            report.goodput_tps,
+            report.goodput_floor_tps,
+            report.fatal
+        );
+    }
+    println!(
+        "saturation ok at {:.1}x: {} completed, {} shed (Retry-After mean {:.1}s), \
+         goodput {:.1}tps >= {:.1}tps floor, 0 pages leaked",
+        report.rate_multiple,
+        report.completed,
+        report.rejected,
+        report.retry_after_mean_s,
+        report.goodput_tps,
+        report.goodput_floor_tps
+    );
+    Ok(())
+}
+
 /// Chaos harness over the serving loop (mock dispatcher — no artifacts
 /// needed): seeded faults + cancellations + deadlines, page-conservation
 /// invariants checked every tick, survivor streams diffed against an
 /// unfaulted baseline. `--transport` runs the storm at the HTTP layer
 /// instead: concurrent loopback streams under injected connection
-/// drops/stalls and deliberate client hangups. Exits nonzero if any
-/// invariant broke (leaked pages = leaked connections).
+/// drops/stalls and deliberate client hangups. `--saturate` runs the
+/// overload storm: Poisson arrivals at a multiple of capacity with
+/// admission control, brownout, and the breaker engaged while wire
+/// faults ride along. Exits nonzero if any invariant broke (leaked
+/// pages = leaked connections).
 fn cmd_chaos(args: &Args) -> Result<()> {
     use anyhow::Context;
     use mosa::serve::chaos::{run_mock, ChaosConfig};
@@ -379,6 +443,9 @@ fn cmd_chaos(args: &Args) -> Result<()> {
 
     if args.has("transport") {
         return cmd_chaos_transport(args);
+    }
+    if args.has("saturate") {
+        return cmd_chaos_saturate(args);
     }
 
     let mut cfg = ChaosConfig::default();
@@ -463,6 +530,54 @@ fn cmd_chaos_transport(args: &Args) -> Result<()> {
         "transport storm ok: {} completed bit-identical, {} severed (all baseline prefixes), \
          {} dropped by injection, 0 pages leaked, drain {}ms",
         report.completed, report.severed, report.injected.connections_dropped, report.drain_wall_ms
+    );
+    Ok(())
+}
+
+/// `mosa chaos --saturate`: the saturation storm — overload shedding
+/// (admission + brownout + breaker) and seeded wire faults in one run.
+fn cmd_chaos_saturate(args: &Args) -> Result<()> {
+    use mosa::serve::chaos::{run_saturation_storm, SaturationChaosConfig};
+
+    let mut cfg = SaturationChaosConfig::default();
+    cfg.seed = args.get_u64("seed", cfg.seed);
+    cfg.requests = args.get_usize("requests", cfg.requests);
+    cfg.rate_multiple = args.get_f64("rate-multiple", cfg.rate_multiple);
+    cfg.n_drop = args.get_usize("n-drop", cfg.n_drop);
+    cfg.n_stall = args.get_usize("n-stall", cfg.n_stall);
+    cfg.stall_ms = args.get_u64("stall-ms", cfg.stall_ms);
+    cfg.tick_pace_us = args.get_u64("tick-pace-us", cfg.tick_pace_us);
+    cfg.queue_cap = args.get_usize("queue-cap", cfg.queue_cap);
+    cfg.goodput_floor_tps = args.get_f64("goodput-floor-tps", cfg.goodput_floor_tps);
+    let report = run_saturation_storm(&cfg)?;
+    let json = report.to_json().to_string_pretty();
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, &json)?;
+        println!("saturation storm report -> {out}");
+    }
+    println!("{json}");
+    if !report.ok() {
+        bail!(
+            "saturation storm failed: rejected={} malformed={} mismatched={} leaked={} \
+             goodput={:.1}tps (floor {:.1}) fatal={:?}",
+            report.rejected,
+            report.malformed_rejections,
+            report.mismatched_streams,
+            report.leaked_pages,
+            report.goodput_tps,
+            report.goodput_floor_tps,
+            report.fatal
+        );
+    }
+    println!(
+        "saturation storm ok at {:.1}x: {} completed, {} shed, {} dropped / {} stalled by wire \
+         faults, goodput {:.1}tps, 0 pages leaked",
+        report.rate_multiple,
+        report.completed,
+        report.rejected,
+        report.connections_dropped,
+        report.stream_stalls,
+        report.goodput_tps
     );
     Ok(())
 }

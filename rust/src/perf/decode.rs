@@ -46,11 +46,19 @@
 //!   ttft and inter-token latency p50/p99 (wall-clock), overload
 //!   rejects, drain-under-load timing, and the leaked-page counter
 //!   `verify.sh` gates at zero. Also mock-backed.
+//! - **overload** (`overload`): the saturation scenario
+//!   (`serve::loadgen::run_saturation`) at 1×/2×/4× the base arrival
+//!   rate with admission control, brownout, and the breaker engaged —
+//!   goodput (tokens/sec) per multiple, shed rate, brownout rung
+//!   counters, Retry-After statistics, and the overload-contract gates
+//!   `verify.sh` asserts: zero leaks, zero malformed rejections, zero
+//!   stream mismatches, goodput above the floor at 4×. Also
+//!   mock-backed.
 //!
 //! Artifact-gated like the train probe: without `make artifacts` (or with
-//! pre-decode artifacts) every probe except `faults` and `transport`
-//! reports `available: false` and the harness still succeeds, so CI
-//! diffs stay meaningful.
+//! pre-decode artifacts) every probe except `faults`, `transport`, and
+//! `overload` reports `available: false` and the harness still
+//! succeeds, so CI diffs stay meaningful.
 
 use std::time::Instant;
 
@@ -100,6 +108,7 @@ fn unavailable(cfg: &PerfConfig, reason: &str) -> Json {
         // mock-backed: measurable even without artifacts
         ("faults", bench_faults(cfg)),
         ("transport", bench_transport(cfg)),
+        ("overload", bench_overload(cfg)),
     ])
 }
 
@@ -193,6 +202,79 @@ fn bench_transport(cfg: &PerfConfig) -> Json {
     }
 }
 
+/// The overload arm: the saturation scenario at increasing arrival-rate
+/// multiples on the mock dispatcher. At 1× (the control condition) the
+/// server is expected to carry nearly everything; at 2× and 4× the
+/// admission controller must shed with measured Retry-After hints while
+/// goodput holds above the floor and every accepted stream stays a
+/// bit-identical prefix of its unloaded baseline. `verify.sh` gates the
+/// 4× point: `ok`, zero leaks, zero malformed rejections, zero stream
+/// mismatches, goodput at or above `goodput_floor_tps`.
+fn bench_overload(cfg: &PerfConfig) -> Json {
+    use crate::serve::loadgen::{run_saturation, LoadgenConfig, SaturationConfig};
+    let mut points = Vec::new();
+    let mut gate: Option<Json> = None; // the 4× point, hoisted for verify.sh
+    let mut ok_all = true;
+    for mult in [1.0f64, 2.0, 4.0] {
+        let sat = SaturationConfig {
+            base: LoadgenConfig {
+                seed: 17,
+                requests: if cfg.smoke { 24 } else { 48 },
+                queue_cap: 6,
+                tick_pace_us: 1_000,
+                ..LoadgenConfig::default()
+            },
+            rate_multiple: mult,
+            // the contract floor only binds while genuinely overloaded
+            goodput_floor_tps: if mult >= 4.0 { 10.0 } else { 0.0 },
+            ..SaturationConfig::default()
+        };
+        match run_saturation(&sat) {
+            Ok(report) => {
+                println!(
+                    "decode[overload] {mult:.0}x: {} completed, {} shed \
+                     (Retry-After mean {:.1}s), goodput {:.1}tps, brownout rungs \
+                     {}/{}/{}, {} leaked pages",
+                    report.completed,
+                    report.rejected,
+                    report.retry_after_mean_s,
+                    report.goodput_tps,
+                    report.brownout_rungs[0],
+                    report.brownout_rungs[1],
+                    report.brownout_rungs[2],
+                    report.leaked_pages
+                );
+                // the 1×/2× points are informational (a fast host may not
+                // shed at all there, which `ok()` would read as failure);
+                // only the 4× point carries the gate
+                if mult >= 4.0 {
+                    ok_all = ok_all && report.ok();
+                    gate = Some(report.to_json());
+                }
+                points.push(report.to_json());
+            }
+            Err(e) => {
+                println!("decode[overload] {mult:.0}x: skipped ({e:#})");
+                ok_all = false;
+                points.push(Json::obj(vec![
+                    ("rate_multiple", Json::num(mult)),
+                    ("available", Json::Bool(false)),
+                    ("reason", Json::str(format!("{e:#}"))),
+                ]));
+            }
+        }
+    }
+    let mut pairs = vec![
+        ("available", Json::Bool(true)),
+        ("ok", Json::Bool(ok_all)),
+        ("points", Json::Arr(points)),
+    ];
+    if let Some(g) = gate {
+        pairs.push(("saturated", g));
+    }
+    Json::obj(pairs)
+}
+
 fn bench_with(manifest: &Manifest, cfg: &PerfConfig) -> Result<Json> {
     let mut engine = Engine::cpu()?;
     let mut rows = Vec::new();
@@ -221,6 +303,7 @@ fn bench_with(manifest: &Manifest, cfg: &PerfConfig) -> Result<Json> {
         ("variants", Json::Arr(rows)),
         ("faults", bench_faults(cfg)),
         ("transport", bench_transport(cfg)),
+        ("overload", bench_overload(cfg)),
     ];
     // the Table 2 headline: MoSA cache bytes as a fraction of dense
     let dense = bytes_by_name.iter().find(|(n, _)| n == "micro_dense").map(|x| x.1);

@@ -612,6 +612,84 @@ pub fn run_transport_storm(cfg: &TransportChaosConfig) -> TransportChaosReport {
     }
 }
 
+// ---------------------------------------------------------------------------
+// saturation storm: overload + wire faults at once
+// ---------------------------------------------------------------------------
+
+/// Configuration for the saturation storm (`mosa chaos --saturate`):
+/// the [`loadgen`](super::loadgen) saturation scenario — open-loop
+/// Poisson arrivals at a multiple of capacity with overload control
+/// enabled — with a seeded transport fault schedule riding along, so
+/// admission shedding, brownout, and wire-level severs/stalls are
+/// exercised in the same run.
+#[derive(Debug, Clone)]
+pub struct SaturationChaosConfig {
+    pub seed: u64,
+    pub requests: usize,
+    /// arrival-rate multiple over the base loadgen rate
+    pub rate_multiple: f64,
+    /// connections severed server-side by the injector
+    pub n_drop: usize,
+    /// event emissions stalled server-side by the injector
+    pub n_stall: usize,
+    pub stall_ms: u64,
+    /// engine pacing, µs per working tick — slows service so the
+    /// offered rate genuinely exceeds capacity
+    pub tick_pace_us: u64,
+    /// small queue = the shed path is exercised, not just the bucket
+    pub queue_cap: usize,
+    pub goodput_floor_tps: f64,
+}
+
+impl Default for SaturationChaosConfig {
+    fn default() -> Self {
+        SaturationChaosConfig {
+            seed: 0,
+            requests: 48,
+            rate_multiple: 4.0,
+            n_drop: 3,
+            n_stall: 2,
+            stall_ms: 20,
+            tick_pace_us: 1_000,
+            queue_cap: 6,
+            goodput_floor_tps: 10.0,
+        }
+    }
+}
+
+/// Run the saturation storm: build the seeded wire-fault schedule over
+/// the expected event horizon and delegate to
+/// [`loadgen::run_saturation`](super::loadgen::run_saturation), whose
+/// report carries the full overload contract (`ok()`): zero leaks,
+/// well-formed Retry-After on every rejection, goodput above the
+/// floor, accepted streams bit-identical prefixes of the unloaded
+/// baseline.
+pub fn run_saturation_storm(
+    cfg: &SaturationChaosConfig,
+) -> anyhow::Result<super::loadgen::SaturationReport> {
+    let base = super::loadgen::LoadgenConfig {
+        seed: cfg.seed,
+        requests: cfg.requests,
+        queue_cap: cfg.queue_cap,
+        tick_pace_us: cfg.tick_pace_us,
+        ..super::loadgen::LoadgenConfig::default()
+    };
+    // a fully-served request emits max_new token events plus the done
+    // event, but under deliberate overload most arrivals are shed before
+    // they stream anything — seed the drop/stall positions inside the
+    // events the ACCEPTED fraction plausibly emits (≈ a quarter at 4×),
+    // or the faults would land past the end of the run and never fire
+    let horizon = ((cfg.requests / 4).max(2) * (base.max_new + 1)) as u64;
+    let sat = super::loadgen::SaturationConfig {
+        plan: FaultPlan::seeded_transport(cfg.seed, horizon, cfg.n_drop, cfg.n_stall, cfg.stall_ms),
+        rate_multiple: cfg.rate_multiple,
+        goodput_floor_tps: cfg.goodput_floor_tps,
+        overload: super::OverloadConfig::default(),
+        base,
+    };
+    super::loadgen::run_saturation(&sat)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -755,5 +833,23 @@ mod tests {
             assert!(j.get(key).is_some(), "missing key {key}");
         }
         assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(true));
+    }
+
+    #[test]
+    fn saturation_storm_sheds_and_severs_without_leaking() {
+        // overload AND wire faults in one run: admission shedding must
+        // produce well-formed rejections, the injector must actually
+        // sever connections, and the page pool must end the run whole.
+        let cfg = SaturationChaosConfig::default();
+        let r = run_saturation_storm(&cfg).expect("saturation storm runs");
+        assert!(r.ok(), "saturation contract violated: {r:?}");
+        assert!(r.rejected > 0, "4x overload must shed: {r:?}");
+        assert!(
+            r.connections_dropped > 0,
+            "the seeded plan must sever at least one connection: {r:?}"
+        );
+        assert_eq!(r.malformed_rejections, 0, "{r:?}");
+        assert_eq!(r.mismatched_streams, 0, "{r:?}");
+        assert_eq!(r.leaked_pages, 0, "{r:?}");
     }
 }

@@ -27,6 +27,10 @@ pub enum ServeError {
     CacheConsumed,
     /// The bounded admission queue refused a request.
     QueueFull { cap: usize },
+    /// The token-bucket admission controller refused a request (bucket
+    /// empty, or its page demand exceeds live pool headroom). Carries
+    /// the drain-derived Retry-After the transport should advertise.
+    Overloaded { retry_after_s: u64 },
     /// The server is draining for shutdown and accepts no new work.
     /// Transient from the client's point of view: another replica (or
     /// this one after restart) can serve the request.
@@ -55,6 +59,7 @@ impl ServeError {
                 | ServeError::PoolExhausted { .. }
                 | ServeError::CacheConsumed
                 | ServeError::QueueFull { .. }
+                | ServeError::Overloaded { .. }
                 | ServeError::Draining
         )
     }
@@ -65,6 +70,7 @@ impl ServeError {
     pub fn http_status(&self) -> u16 {
         match self {
             ServeError::QueueFull { .. } => 429,
+            ServeError::Overloaded { .. } => 429,
             ServeError::Draining => 503,
             ServeError::InvalidRequest { .. } => 400,
             ServeError::DeadlineExceeded { .. } => 504,
@@ -117,6 +123,9 @@ impl std::fmt::Display for ServeError {
             ServeError::QueueFull { cap } => {
                 write!(f, "admission queue full ({cap} requests)")
             }
+            ServeError::Overloaded { retry_after_s } => {
+                write!(f, "admission refused under load; retry after {retry_after_s}s")
+            }
             ServeError::Draining => write!(f, "server is draining; not accepting new requests"),
             ServeError::DeadlineExceeded { id } => {
                 write!(f, "request {id} missed its deadline")
@@ -145,6 +154,7 @@ mod tests {
             ServeError::PoolExhausted { slot: 3, kind: "dense".into() },
             ServeError::CacheConsumed,
             ServeError::QueueFull { cap: 8 },
+            ServeError::Overloaded { retry_after_s: 2 },
             ServeError::Draining,
         ];
         let fatal = [
@@ -186,6 +196,7 @@ mod tests {
     #[test]
     fn http_status_maps_overload_and_client_errors() {
         assert_eq!(ServeError::QueueFull { cap: 8 }.http_status(), 429);
+        assert_eq!(ServeError::Overloaded { retry_after_s: 3 }.http_status(), 429);
         assert_eq!(ServeError::Draining.http_status(), 503);
         assert_eq!(ServeError::InvalidRequest { why: "bad json".into() }.http_status(), 400);
         assert_eq!(ServeError::DeadlineExceeded { id: 1 }.http_status(), 504);

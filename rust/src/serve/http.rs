@@ -11,11 +11,25 @@
 //!   can observe the stop flag; each accepted connection takes an RAII
 //!   [`ConnGate`] permit (over-cap connections get an immediate
 //!   `503 + Retry-After` — overload is answered, not queued);
-//! - one **connection thread** per accepted socket parses the request
-//!   under read/write timeouts (slowloris defense: a peer that trickles
-//!   header bytes is cut off by `set_read_timeout`, not waited on
-//!   forever) and, for `POST /v1/generate`, relays [`StreamEvent`]s
-//!   from its `mpsc` receiver to the socket as SSE `data:` lines.
+//! - one **connection thread** per accepted socket serves a bounded
+//!   HTTP/1.1 keep-alive loop under read/write timeouts (slowloris
+//!   defense: a peer that trickles header bytes is cut off by
+//!   `set_read_timeout`, not waited on forever); for
+//!   `POST /v1/generate` it relays [`StreamEvent`]s from its `mpsc`
+//!   receiver to the socket as SSE `data:` lines — chunked-framed on
+//!   keep-alive connections so the stream has an in-band terminator.
+//!   Generate requests the client already pipelined (bounded by
+//!   `max_inflight_per_conn`) are submitted before the first response
+//!   streams, so they decode concurrently; responses return in order.
+//!
+//! Overload control: when [`ServeConfig::overload`] is set, the engine
+//! runs the token-bucket admission controller + brownout ladder +
+//! circuit breaker from [`super::overload`]. Refusals surface here as
+//! `429 Overloaded` with a **measured** Retry-After (expected queue
+//! drain time, not a constant); the engine publishes the same hint to
+//! the accept loop (gate refusals) and `/readyz`. Brownout rung 3
+//! widens `tick_pace_us` by the server's `pace_mult()`. The
+//! `max_conns` gate remains as the hard backstop.
 //!
 //! Disconnect safety is structural: the engine-side [`StreamSink`] is
 //! `move |ev| tx.send(ev).is_ok()`, so a connection thread that exits
@@ -53,6 +67,7 @@ use super::{
     Dispatcher, Outcome, ServeConfig, ServeReport, ServeRequest, StreamEvent, StreamSink, Server,
     Tick,
 };
+use crate::decode::SamplePolicy;
 use crate::util::json::Json;
 
 // ---------------------------------------------------------------------------
@@ -63,7 +78,8 @@ use crate::util::json::Json;
 pub struct HttpConfig {
     /// bind address; port 0 picks an ephemeral port (tests, loadgen)
     pub addr: String,
-    /// concurrent-connection cap (the `ConnGate` bound)
+    /// concurrent-connection cap — the hard backstop behind the
+    /// token-bucket admission controller (`ServeConfig::overload`)
     pub max_conns: usize,
     pub limits: TransportLimits,
     /// socket read/write timeout, ms — bounds how long a slow or
@@ -72,15 +88,27 @@ pub struct HttpConfig {
     /// wall-clock budget for the graceful drain; stragglers past it are
     /// aborted (and counted in `DrainInfo.aborted`)
     pub drain_deadline_ms: u64,
-    /// `Retry-After` seconds on 429/503 overload responses
+    /// fallback `Retry-After` seconds before the engine publishes a
+    /// measured hint (and whenever overload control is off)
     pub retry_after_s: u64,
     /// accept-loop and engine idle poll, ms
     pub poll_ms: u64,
     /// wall-clock microseconds the engine sleeps per working tick.
     /// 0 = free-running (unit tests); loadgen sets it so the mock
     /// generates at a finite rate and latency percentiles mean
-    /// something.
+    /// something. Brownout rung 3 widens this by the server's
+    /// `pace_mult()`.
     pub tick_pace_us: u64,
+    /// serve several requests per connection (HTTP/1.1 keep-alive);
+    /// a client's `connection: close` always wins
+    pub keep_alive: bool,
+    /// keep-alive reuse bound: requests served before the connection is
+    /// closed anyway (resource turnover under long-lived peers)
+    pub max_requests_per_conn: usize,
+    /// parse-ahead pipelining bound: generate requests the connection
+    /// thread will read ahead and submit concurrently before streaming
+    /// responses back in order
+    pub max_inflight_per_conn: usize,
 }
 
 impl Default for HttpConfig {
@@ -94,6 +122,9 @@ impl Default for HttpConfig {
             retry_after_s: 1,
             poll_ms: 5,
             tick_pace_us: 0,
+            keep_alive: true,
+            max_requests_per_conn: 64,
+            max_inflight_per_conn: 4,
         }
     }
 }
@@ -145,18 +176,26 @@ struct EngineStatus {
     queue_cap: usize,
     in_flight: usize,
     draining: bool,
+    /// the engine's drain-derived Retry-After suggestion, seconds
+    retry_after_s: u64,
 }
 
 /// The engine loop: ingest every pending control message, then run one
 /// tick; park on the channel when idle. Exits when a drain completes
 /// (or its deadline passes), or when the front hangs up on an idle
 /// server.
+///
+/// Each pass publishes the server's measured `retry_after_s()` into the
+/// shared `retry_hint`, so connection threads advertise a drain-derived
+/// Retry-After instead of a constant. Brownout rung 3 widens the tick
+/// pace by the server's `pace_mult()`.
 fn run_engine<D: Dispatcher>(
     dispatcher: D,
     cfg: ServeConfig,
     plan: FaultPlan,
     rx: mpsc::Receiver<EngineMsg>,
     http: &HttpConfig,
+    retry_hint: Arc<AtomicU64>,
 ) -> ServeReport {
     let mut server = Server::new(dispatcher, cfg);
     if !plan.is_empty() {
@@ -179,6 +218,7 @@ fn run_engine<D: Dispatcher>(
                 }
             }
         }
+        retry_hint.store(server.retry_after_s(), Ordering::Relaxed);
         if let Some(t0) = drain_t0 {
             if server.is_done() || t0.elapsed() >= drain_deadline {
                 break; // drained, or deadline cuts the stragglers in finish()
@@ -200,7 +240,7 @@ fn run_engine<D: Dispatcher>(
             Tick::Fatal | Tick::Done => {}
             _ => {
                 if !pace.is_zero() {
-                    thread::sleep(pace);
+                    thread::sleep(pace * server.pace_mult());
                 }
             }
         }
@@ -223,6 +263,7 @@ fn handle_msg<D: Dispatcher>(
                 queue_cap: server.queue_cap(),
                 in_flight: server.in_flight(),
                 draining: server.is_draining(),
+                retry_after_s: server.retry_after_s(),
             });
         }
         EngineMsg::Drain => {
@@ -298,8 +339,19 @@ struct ConnCtx {
     limits: TransportLimits,
     io_timeout: Duration,
     poll: Duration,
-    retry_after_s: u64,
+    /// live drain-derived Retry-After (seconds), published by the
+    /// engine loop; seeded from `HttpConfig::retry_after_s`
+    retry_hint: Arc<AtomicU64>,
     stop: Arc<AtomicBool>,
+    keep_alive: bool,
+    max_requests_per_conn: usize,
+    max_inflight_per_conn: usize,
+}
+
+impl ConnCtx {
+    fn retry_after(&self) -> u64 {
+        self.retry_hint.load(Ordering::Relaxed).max(1)
+    }
 }
 
 fn run_front<D: Dispatcher + Send + 'static>(
@@ -314,6 +366,7 @@ fn run_front<D: Dispatcher + Send + 'static>(
     let injector = Arc::new(TransportInjector::new(&plan));
     let counters = Arc::new(HttpCounters::default());
     let gate = ConnGate::new(http.max_conns);
+    let retry_hint = Arc::new(AtomicU64::new(http.retry_after_s.max(1)));
     let ctx = Arc::new(ConnCtx {
         engine: engine_tx.clone(),
         injector: injector.clone(),
@@ -322,13 +375,17 @@ fn run_front<D: Dispatcher + Send + 'static>(
         limits: http.limits.clone(),
         io_timeout: Duration::from_millis(http.io_timeout_ms.max(1)),
         poll: Duration::from_millis(http.poll_ms.max(1)),
-        retry_after_s: http.retry_after_s,
+        retry_hint: retry_hint.clone(),
         stop: stop.clone(),
+        keep_alive: http.keep_alive,
+        max_requests_per_conn: http.max_requests_per_conn.max(1),
+        max_inflight_per_conn: http.max_inflight_per_conn.max(1),
     });
     let http2 = http.clone();
+    let hint2 = retry_hint.clone();
     let engine = thread::Builder::new()
         .name("mosa-http-engine".into())
-        .spawn(move || run_engine(dispatcher, cfg, plan, engine_rx, &http2))
+        .spawn(move || run_engine(dispatcher, cfg, plan, engine_rx, &http2, hint2))
         .context("spawning the engine thread")?;
 
     listener.set_nonblocking(true).context("nonblocking accept")?;
@@ -352,7 +409,8 @@ fn run_front<D: Dispatcher + Send + 'static>(
                     None => {
                         // over the connection cap: answer, don't queue
                         counters.refused_conns.fetch_add(1, Ordering::Relaxed);
-                        refuse_conn(stream, http.retry_after_s, http.io_timeout_ms);
+                        let retry = retry_hint.load(Ordering::Relaxed).max(1);
+                        refuse_conn(stream, retry, http.io_timeout_ms);
                     }
                 }
                 conns.retain(|h| !h.is_finished());
@@ -417,6 +475,31 @@ fn error_body(msg: &str) -> String {
 // connection handling
 // ---------------------------------------------------------------------------
 
+/// Whether this request asks the connection to close after its
+/// response (HTTP/1.1 defaults to keep-alive; the client's `close`
+/// always wins).
+fn wants_close(req: &Request) -> bool {
+    req.header("connection").map(|v| v.to_ascii_lowercase().contains("close")).unwrap_or(false)
+}
+
+/// Whether a request-read error is I/O-shaped — the peer idled past the
+/// socket timeout or died mid-line — rather than a malformed request.
+/// On a keep-alive continuation read that is a normal hang-up, not a
+/// client mistake to answer with a 400.
+fn read_error_is_hangup(e: &ServeError) -> bool {
+    matches!(e, ServeError::InvalidRequest { why }
+        if why.starts_with("reading request line") || why.contains("truncated"))
+}
+
+/// One pipelined response waiting its turn on the wire. Dropping a
+/// `Stream`'s receiver cancels its request through the engine-side
+/// sink, exactly like a disconnect.
+enum PendingResp {
+    Stream { id: u64, rx: mpsc::Receiver<StreamEvent> },
+    Reject(ServeError),
+    Plain(Request),
+}
+
 fn handle_conn(stream: TcpStream, ctx: &ConnCtx) {
     // slowloris defense: every read and write on this socket is bounded
     let _ = stream.set_read_timeout(Some(ctx.io_timeout));
@@ -425,20 +508,113 @@ fn handle_conn(stream: TcpStream, ctx: &ConnCtx) {
     let Ok(read_half) = stream.try_clone() else { return };
     let mut reader = BufReader::new(read_half);
     let mut stream = stream;
-    let req = match transport::read_request(&mut reader, &ctx.limits) {
-        Ok(Some(r)) => r,
-        Ok(None) => return, // peer connected and said nothing
-        Err(e) => {
-            ctx.counters.bad_requests.fetch_add(1, Ordering::Relaxed);
-            respond_error(&mut stream, &e, ctx.retry_after_s);
-            return;
+    let mut served = 0usize;
+    'conn: loop {
+        let req = match transport::read_request(&mut reader, &ctx.limits) {
+            Ok(Some(r)) => r,
+            Ok(None) => break, // clean hang-up between requests
+            Err(e) => {
+                if served > 0 && read_error_is_hangup(&e) {
+                    break; // idle keep-alive peer went away
+                }
+                ctx.counters.bad_requests.fetch_add(1, Ordering::Relaxed);
+                respond_error(&mut stream, &e, ctx.retry_after(), false);
+                break;
+            }
+        };
+        served += 1;
+        ctx.counters.requests.fetch_add(1, Ordering::Relaxed);
+        let mut keep = ctx.keep_alive && served < ctx.max_requests_per_conn && !wants_close(&req);
+        if !(req.method == "POST" && req.path == "/v1/generate") {
+            if !handle_plain(&mut stream, &req, ctx, keep) || !keep {
+                break;
+            }
+            continue;
         }
-    };
-    ctx.counters.requests.fetch_add(1, Ordering::Relaxed);
+        // Parse-ahead pipelining: requests the client has already sent
+        // (sitting in the read buffer — never block waiting for more)
+        // are parsed and submitted before the first response streams,
+        // so they decode concurrently; responses go back in order.
+        let mut batch = vec![req];
+        let mut read_err: Option<ServeError> = None;
+        while keep && batch.len() < ctx.max_inflight_per_conn && !reader.buffer().is_empty() {
+            match transport::read_request(&mut reader, &ctx.limits) {
+                Ok(Some(r)) => {
+                    served += 1;
+                    ctx.counters.requests.fetch_add(1, Ordering::Relaxed);
+                    if wants_close(&r) || served >= ctx.max_requests_per_conn {
+                        keep = false;
+                    }
+                    let generate = r.method == "POST" && r.path == "/v1/generate";
+                    batch.push(r);
+                    if !generate || !keep {
+                        break; // non-generate ends the read-ahead
+                    }
+                }
+                Ok(None) => {
+                    keep = false;
+                    break;
+                }
+                Err(e) => {
+                    // answered after the in-order responses, then close
+                    ctx.counters.bad_requests.fetch_add(1, Ordering::Relaxed);
+                    read_err = Some(e);
+                    keep = false;
+                    break;
+                }
+            }
+        }
+        // phase 1: submit every generate request (they run concurrently
+        // in the engine while we stream responses back one at a time)
+        let pending: Vec<PendingResp> = batch
+            .into_iter()
+            .map(|r| {
+                if r.method == "POST" && r.path == "/v1/generate" {
+                    submit_generate(&r, ctx)
+                } else {
+                    PendingResp::Plain(r)
+                }
+            })
+            .collect();
+        // phase 2: write responses in request order; a dead socket
+        // drops every remaining receiver, cancelling those requests
+        let n = pending.len();
+        for (i, p) in pending.into_iter().enumerate() {
+            let last = i + 1 == n && read_err.is_none();
+            let ka = !last || keep; // non-final responses must keep the conn open
+            let alive = match p {
+                PendingResp::Reject(e) => {
+                    respond_error(&mut stream, &e, ctx.retry_after(), ka);
+                    true
+                }
+                PendingResp::Plain(r) => handle_plain(&mut stream, &r, ctx, ka),
+                PendingResp::Stream { id, rx } => stream_events(&mut stream, id, rx, ctx, ka),
+            };
+            if !alive {
+                break 'conn;
+            }
+        }
+        if let Some(e) = read_err {
+            respond_error(&mut stream, &e, ctx.retry_after(), false);
+            break;
+        }
+        if !keep {
+            break;
+        }
+    }
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+/// Route one non-generate request; returns `false` when the socket is
+/// unusable afterwards (a write failed).
+fn handle_plain(stream: &mut TcpStream, req: &Request, ctx: &ConnCtx, keep: bool) -> bool {
+    fn w(stream: &mut TcpStream, status: u16, extra: &[(&str, &str)], body: &str, keep: bool) -> bool {
+        transport::write_response_conn(stream, status, extra, body.as_bytes(), keep).is_ok()
+    }
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => {
             let body = Json::obj(vec![("ok", Json::Bool(true))]).to_string_compact();
-            let _ = transport::write_response(&mut stream, 200, &[], body.as_bytes());
+            w(stream, 200, &[], &body, keep)
         }
         ("GET", "/readyz") => match query_status(ctx) {
             Some(s) => {
@@ -452,44 +628,22 @@ fn handle_conn(stream: TcpStream, ctx: &ConnCtx) {
                 ])
                 .to_string_compact();
                 let status = if ready { 200 } else { 503 };
-                let retry = ctx.retry_after_s.to_string();
-                let extra: &[(&str, &str)] =
-                    if ready { &[] } else { &[("retry-after", &retry)] };
-                let _ = transport::write_response(&mut stream, status, extra, body.as_bytes());
+                let retry = s.retry_after_s.max(1).to_string();
+                let extra: &[(&str, &str)] = if ready { &[] } else { &[("retry-after", &retry)] };
+                w(stream, status, extra, &body, keep)
             }
-            None => {
-                let _ = transport::write_response(
-                    &mut stream,
-                    503,
-                    &[],
-                    error_body("engine unavailable").as_bytes(),
-                );
-            }
+            None => w(stream, 503, &[], &error_body("engine unavailable"), keep),
         },
         ("POST", "/admin/drain") => {
             ctx.stop.store(true, Ordering::Release); // accept loop begins the drain
             let body = Json::obj(vec![("draining", Json::Bool(true))]).to_string_compact();
-            let _ = transport::write_response(&mut stream, 202, &[], body.as_bytes());
+            w(stream, 202, &[], &body, keep)
         }
-        ("POST", "/v1/generate") => handle_generate(&mut stream, &req, ctx),
         (_, "/healthz") | (_, "/readyz") | (_, "/admin/drain") | (_, "/v1/generate") => {
-            let _ = transport::write_response(
-                &mut stream,
-                405,
-                &[],
-                error_body("method not allowed").as_bytes(),
-            );
+            w(stream, 405, &[], &error_body("method not allowed"), keep)
         }
-        _ => {
-            let _ = transport::write_response(
-                &mut stream,
-                404,
-                &[],
-                error_body("no such endpoint").as_bytes(),
-            );
-        }
+        _ => w(stream, 404, &[], &error_body("no such endpoint"), keep),
     }
-    let _ = stream.shutdown(Shutdown::Both);
 }
 
 fn query_status(ctx: &ConnCtx) -> Option<EngineStatus> {
@@ -498,21 +652,37 @@ fn query_status(ctx: &ConnCtx) -> Option<EngineStatus> {
     rx.recv_timeout(ctx.io_timeout).ok()
 }
 
-fn respond_error(stream: &mut TcpStream, e: &ServeError, retry_after_s: u64) {
+/// Answer an error. `Overloaded` carries its own drain-derived
+/// Retry-After (computed at refusal time by the admission controller);
+/// other overload-shaped statuses use the engine's live hint.
+fn respond_error(stream: &mut TcpStream, e: &ServeError, retry_after_s: u64, keep: bool) {
     let status = e.http_status();
-    let retry = retry_after_s.to_string();
+    let retry = match e {
+        ServeError::Overloaded { retry_after_s } => *retry_after_s,
+        _ => retry_after_s,
+    }
+    .max(1)
+    .to_string();
     let extra: &[(&str, &str)] = if status == 429 || status == 503 {
         &[("retry-after", &retry)]
     } else {
         &[]
     };
-    let _ = transport::write_response(stream, status, extra, error_body(&e.to_string()).as_bytes());
+    let _ = transport::write_response_conn(
+        stream,
+        status,
+        extra,
+        error_body(&e.to_string()).as_bytes(),
+        keep,
+    );
 }
 
 /// Parse the generate body: `prompt` (array of token ints) or `text`
-/// (string, bytes become tokens), `max_new`, and an optional
-/// `deadline_ms` (logical server-clock ms; the `x-deadline-ms` header
-/// wins when smaller — a proxy can only tighten a deadline).
+/// (string, bytes become tokens), `max_new`, optional per-request
+/// sampling (`top_k` 1..=100000 with optional `temperature` in
+/// (0, 100]), and an optional `deadline_ms` (logical server-clock ms;
+/// the `x-deadline-ms` header wins when smaller — a proxy can only
+/// tighten a deadline).
 fn parse_generate(req: &Request, id: u64) -> Result<ServeRequest, ServeError> {
     let invalid = |why: String| ServeError::InvalidRequest { why };
     let text = std::str::from_utf8(&req.body)
@@ -561,8 +731,34 @@ fn parse_generate(req: &Request, id: u64) -> Result<ServeRequest, ServeError> {
         (Some(a), Some(b)) => Some(a.min(b)),
         (a, b) => a.or(b),
     };
+    let top_k = match j.get("top_k") {
+        None => None,
+        Some(v) => Some(
+            v.as_f64()
+                .filter(|n| n.fract() == 0.0 && (1.0..=100_000.0).contains(n))
+                .ok_or_else(|| invalid("'top_k' must be an integer in 1..=100000".into()))?
+                as usize,
+        ),
+    };
+    let temperature = match j.get("temperature") {
+        None => None,
+        Some(v) => Some(
+            v.as_f64()
+                .filter(|n| n.is_finite() && *n > 0.0 && *n <= 100.0)
+                .ok_or_else(|| invalid("'temperature' must be a finite number in (0, 100]".into()))?
+                as f32,
+        ),
+    };
+    let policy = match (top_k, temperature) {
+        (Some(k), t) => Some(SamplePolicy::TopK { k, temperature: t.unwrap_or(1.0) }),
+        (None, Some(_)) => {
+            return Err(invalid("'temperature' requires 'top_k' (greedy ignores it)".into()))
+        }
+        (None, None) => None,
+    };
     let mut sr = ServeRequest::new(id, prompt, max_new);
     sr.deadline_ms = deadline;
+    sr.policy = policy;
     Ok(sr)
 }
 
@@ -613,42 +809,56 @@ fn client_gone(stream: &TcpStream) -> bool {
     }
 }
 
-fn handle_generate(stream: &mut TcpStream, req: &Request, ctx: &ConnCtx) {
+/// Parse + submit one generate request to the engine; the returned
+/// `PendingResp` carries either the live event receiver or the refusal
+/// to answer with. Submitting before streaming is what lets pipelined
+/// requests decode concurrently.
+fn submit_generate(req: &Request, ctx: &ConnCtx) -> PendingResp {
     let id = ctx.next_id.fetch_add(1, Ordering::Relaxed);
     let sr = match parse_generate(req, id) {
         Ok(sr) => sr,
         Err(e) => {
             ctx.counters.bad_requests.fetch_add(1, Ordering::Relaxed);
-            respond_error(stream, &e, ctx.retry_after_s);
-            return;
+            return PendingResp::Reject(e);
         }
     };
     let (ev_tx, ev_rx) = mpsc::channel::<StreamEvent>();
     let sink: StreamSink = Box::new(move |ev| ev_tx.send(ev).is_ok());
     let (ack_tx, ack_rx) = mpsc::channel();
     if ctx.engine.send(EngineMsg::Submit { req: sr, sink, ack: ack_tx }).is_err() {
-        respond_error(stream, &ServeError::Draining, ctx.retry_after_s);
-        return;
+        return PendingResp::Reject(ServeError::Draining);
     }
     match ack_rx.recv_timeout(ctx.io_timeout) {
-        Ok(Ok(())) => {}
+        Ok(Ok(())) => PendingResp::Stream { id, rx: ev_rx },
         Ok(Err(e)) => {
             ctx.counters.rejected_busy.fetch_add(1, Ordering::Relaxed);
-            respond_error(stream, &e, ctx.retry_after_s);
-            return;
+            PendingResp::Reject(e)
         }
-        Err(_) => {
-            respond_error(
-                stream,
-                &ServeError::Dispatch { program: "engine ack".into() },
-                ctx.retry_after_s,
-            );
-            return;
-        }
+        Err(_) => PendingResp::Reject(ServeError::Dispatch { program: "engine ack".into() }),
     }
-    if transport::write_stream_head(stream).is_err() {
+}
+
+/// Relay one request's events to the socket. `keep` selects chunked
+/// SSE framing — the stream needs an in-band terminator (`0\r\n\r\n`)
+/// so the connection can carry another request — vs. the bare
+/// close-delimited framing. Returns `false` when the connection is
+/// unusable afterwards; the caller drops any remaining pipelined
+/// receivers, cancelling those requests.
+fn stream_events(
+    stream: &mut TcpStream,
+    id: u64,
+    ev_rx: mpsc::Receiver<StreamEvent>,
+    ctx: &ConnCtx,
+    keep: bool,
+) -> bool {
+    let head = if keep {
+        transport::write_stream_head_chunked(stream)
+    } else {
+        transport::write_stream_head(stream)
+    };
+    if head.is_err() {
         ctx.counters.disconnects.fetch_add(1, Ordering::Relaxed);
-        return; // dropping ev_rx cancels the request
+        return false; // dropping ev_rx cancels the request
     }
     loop {
         match ev_rx.recv_timeout(ctx.poll) {
@@ -660,7 +870,7 @@ fn handle_generate(stream: &mut TcpStream, req: &Request, ctx: &ConnCtx) {
                         // emit fail → cancel → pages freed
                         let _ = stream.shutdown(Shutdown::Both);
                         ctx.counters.disconnects.fetch_add(1, Ordering::Relaxed);
-                        return;
+                        return false;
                     }
                     Some(TransportFault::Stall(ms)) => {
                         thread::sleep(Duration::from_millis(ms));
@@ -668,24 +878,37 @@ fn handle_generate(stream: &mut TcpStream, req: &Request, ctx: &ConnCtx) {
                     None => {}
                 }
                 let done = matches!(ev, StreamEvent::Done { .. });
-                if transport::write_event(stream, &event_json(id, &ev)).is_err() {
+                let json = event_json(id, &ev);
+                let wrote = if keep {
+                    transport::write_event_chunked(stream, &json)
+                } else {
+                    transport::write_event(stream, &json)
+                };
+                if wrote.is_err() {
                     ctx.counters.disconnects.fetch_add(1, Ordering::Relaxed);
-                    return;
+                    return false;
                 }
                 if done {
-                    return;
+                    if keep && transport::write_stream_end_chunked(stream).is_err() {
+                        ctx.counters.disconnects.fetch_add(1, Ordering::Relaxed);
+                        return false;
+                    }
+                    return true;
                 }
             }
             Err(mpsc::RecvTimeoutError::Timeout) => {
-                if client_gone(stream) {
+                // the hang-up probe reads from the socket, which would
+                // eat pipelined request bytes — so close-mode only;
+                // keep-alive streams detect disconnects on write
+                if !keep && client_gone(stream) {
                     ctx.counters.disconnects.fetch_add(1, Ordering::Relaxed);
-                    return;
+                    return false;
                 }
             }
             // engine gone (hard shutdown after drain deadline): the
             // request's terminal record is in the report; the client
             // sees the stream close without a done event
-            Err(mpsc::RecvTimeoutError::Disconnected) => return,
+            Err(mpsc::RecvTimeoutError::Disconnected) => return false,
         }
     }
 }
@@ -770,8 +993,44 @@ impl Client {
         self.read_response(s, max_events, t0)
     }
 
+    /// Write `bodies.len()` generate POSTs back-to-back on ONE
+    /// connection (keep-alive; the last request says `close`), then
+    /// read the pipelined responses in order. Exercises the server's
+    /// parse-ahead path: all requests are on the wire before the first
+    /// response streams.
+    pub fn post_pipelined(&self, path: &str, bodies: &[&str]) -> Result<Vec<ClientResponse>> {
+        let t0 = Instant::now();
+        let mut s = self.connect()?;
+        for (i, body) in bodies.iter().enumerate() {
+            let conn = if i + 1 == bodies.len() { "close" } else { "keep-alive" };
+            write!(
+                s,
+                "POST {path} HTTP/1.1\r\nhost: l\r\ncontent-length: {}\r\nconnection: {conn}\r\n\r\n{body}",
+                body.len()
+            )?;
+        }
+        s.flush()?;
+        let mut r = BufReader::new(s);
+        let mut out = Vec::with_capacity(bodies.len());
+        for _ in 0..bodies.len() {
+            out.push(self.read_response_buf(&mut r, usize::MAX, t0)?);
+        }
+        Ok(out)
+    }
+
     fn read_response(&self, s: TcpStream, max_events: usize, t0: Instant) -> Result<ClientResponse> {
         let mut r = BufReader::new(s);
+        self.read_response_buf(&mut r, max_events, t0)
+        // dropping `r` here closes the socket — the deliberate
+        // mid-stream disconnect when max_events cut the loop
+    }
+
+    fn read_response_buf(
+        &self,
+        r: &mut BufReader<TcpStream>,
+        max_events: usize,
+        t0: Instant,
+    ) -> Result<ClientResponse> {
         let mut line = String::new();
         r.read_line(&mut line)?;
         let status: u16 = line
@@ -810,8 +1069,44 @@ impl Client {
                 event_times: Vec::new(),
             });
         }
+        let chunked = headers
+            .iter()
+            .any(|(n, v)| n == "transfer-encoding" && v.contains("chunked"));
         let mut events = Vec::new();
         let mut event_times = Vec::new();
+        if chunked {
+            // keep-alive stream: chunk-framed SSE, terminated in-band
+            // by the zero-size chunk (the socket stays open for the
+            // next pipelined response)
+            while events.len() < max_events {
+                let mut sz = String::new();
+                let n_read = match r.read_line(&mut sz) {
+                    Ok(n) => n,
+                    Err(_) => break, // server hung up mid-stream
+                };
+                if n_read == 0 {
+                    break;
+                }
+                let n = usize::from_str_radix(sz.trim(), 16)
+                    .map_err(|_| anyhow!("bad chunk-size line: {sz:?}"))?;
+                if n == 0 {
+                    let mut crlf = String::new();
+                    let _ = r.read_line(&mut crlf); // CRLF after the 0 chunk
+                    break;
+                }
+                let mut payload = vec![0u8; n + 2]; // chunk + trailing CRLF
+                if r.read_exact(&mut payload).is_err() {
+                    break; // severed mid-chunk
+                }
+                for l in String::from_utf8_lossy(&payload[..n]).lines() {
+                    if let Some(p) = l.strip_prefix("data: ") {
+                        events.push(p.to_string());
+                        event_times.push(t0.elapsed());
+                    }
+                }
+            }
+            return Ok(ClientResponse { status, headers, body: String::new(), events, event_times });
+        }
         while events.len() < max_events {
             let mut l = String::new();
             let n = match r.read_line(&mut l) {
@@ -834,8 +1129,6 @@ impl Client {
                 }
             }
         }
-        // dropping `r` here closes the socket — the deliberate
-        // mid-stream disconnect when max_events cut the loop
         Ok(ClientResponse { status, headers, body: String::new(), events, event_times })
     }
 }
@@ -1051,5 +1344,140 @@ mod tests {
         assert_eq!(drain.aborted, 0, "nothing in flight at drain time");
         assert!(report.serve.stats.completed >= 1);
         assert!(report.drain_wall_ms <= 5_000, "drain stayed inside its deadline");
+    }
+
+    #[test]
+    fn keepalive_pipelining_streams_in_order_on_one_connection() {
+        let fe = start(ServeConfig::default(), HttpConfig::default(), FaultPlan::default());
+        let c = Client::new(fe.addr());
+        let bodies = [
+            "{\"prompt\":[5,6,7],\"max_new\":6}",
+            "{\"prompt\":[8,9],\"max_new\":5}",
+            "{\"prompt\":[1,2,3,4],\"max_new\":4}",
+        ];
+        let rs = c.post_pipelined("/v1/generate", &bodies).unwrap();
+        assert_eq!(rs.len(), 3);
+        let want =
+            [baseline(vec![5, 6, 7], 6), baseline(vec![8, 9], 5), baseline(vec![1, 2, 3, 4], 4)];
+        for (i, r) in rs.iter().enumerate() {
+            assert_eq!(r.status, 200, "pipelined response {i}");
+            let toks: Vec<i32> = token_events(&r.events).iter().map(|&t| t as i32).collect();
+            assert_eq!(toks, want[i], "pipelined stream {i} must bit-match its direct serve");
+            let done = done_event(&r.events).expect("terminal event");
+            assert_eq!(done.get("outcome").unwrap().as_str(), Some("completed"));
+        }
+        let report = fe.shutdown().unwrap();
+        assert_eq!(report.accepted, 1, "one connection carried all three requests");
+        assert_eq!(report.requests, 3);
+        assert_eq!(report.serve.stats.completed, 3);
+        assert_eq!(report.disconnects, 0);
+    }
+
+    #[test]
+    fn keepalive_disconnect_cancels_all_pipelined_requests() {
+        let d = mock();
+        let table = d.shared_pages().expect("paged mock");
+        let mut http = HttpConfig::default();
+        http.tick_pace_us = 2_000; // slow the engine so the hang-up lands mid-generation
+        let fe = HttpFrontend::start(d, ServeConfig::default(), http, FaultPlan::default())
+            .expect("front-end starts");
+        {
+            let mut s = TcpStream::connect(fe.addr()).unwrap();
+            s.set_nodelay(true).unwrap();
+            for b in ["{\"prompt\":[1,2,3],\"max_new\":12}", "{\"prompt\":[4,5],\"max_new\":12}"] {
+                write!(
+                    s,
+                    "POST /v1/generate HTTP/1.1\r\nhost: l\r\ncontent-length: {}\r\nconnection: keep-alive\r\n\r\n{b}",
+                    b.len()
+                )
+                .unwrap();
+            }
+            s.flush().unwrap();
+            // read a little of the first response, then vanish with
+            // both requests in flight
+            let mut buf = [0u8; 256];
+            let _ = s.read(&mut buf);
+        }
+        let report = fe.shutdown().unwrap();
+        drop(report);
+        assert_eq!(
+            table.pages_free(),
+            table.pool_pages_total(),
+            "disconnect must free every page of every pipelined request"
+        );
+        assert_eq!(table.pages_in_use(), 0);
+    }
+
+    #[test]
+    fn per_request_sampling_params_validate_and_perturb() {
+        let fe = start(ServeConfig::default(), HttpConfig::default(), FaultPlan::default());
+        let c = Client::new(fe.addr());
+        // nonsense sampling params are 400s, not silent defaults
+        for bad in [
+            "{\"prompt\":[1],\"top_k\":0}",
+            "{\"prompt\":[1],\"top_k\":2.5}",
+            "{\"prompt\":[1],\"top_k\":5,\"temperature\":0}",
+            "{\"prompt\":[1],\"temperature\":0.7}",
+        ] {
+            assert_eq!(c.post("/v1/generate", bad).unwrap().status, 400, "body: {bad}");
+        }
+        // valid params flow through to the dispatcher: the mock folds
+        // (k, temperature) into its stream hash, so sampled output is
+        // deterministic for equal params and differs from greedy
+        let greedy = c.post("/v1/generate", "{\"prompt\":[5,6,7],\"max_new\":6}").unwrap();
+        let sampled = "{\"prompt\":[5,6,7],\"max_new\":6,\"top_k\":5,\"temperature\":0.8}";
+        let a = c.post("/v1/generate", sampled).unwrap();
+        let b = c.post("/v1/generate", sampled).unwrap();
+        assert_eq!(a.status, 200);
+        assert_eq!(token_events(&a.events), token_events(&b.events), "same params, same stream");
+        assert_ne!(
+            token_events(&a.events),
+            token_events(&greedy.events),
+            "top_k sampling must perturb the mock stream"
+        );
+        let report = fe.shutdown().unwrap();
+        assert!(report.bad_requests >= 4, "bad_requests={}", report.bad_requests);
+        assert_eq!(report.serve.stats.completed, 3);
+    }
+
+    #[test]
+    fn overload_429s_carry_measured_retry_after() {
+        use crate::serve::OverloadConfig;
+        let mut cfg = ServeConfig::default();
+        // one burst token and an (effectively) frozen refill: exactly
+        // one of the concurrent submits is admitted, the rest refuse
+        // with a drain-derived Retry-After
+        cfg.overload = Some(OverloadConfig {
+            burst: 1.0,
+            min_refill_rps: 0.001,
+            max_refill_rps: 0.001,
+            ..OverloadConfig::default()
+        });
+        let fe = start(cfg, HttpConfig::default(), FaultPlan::default());
+        let addr = fe.addr();
+        let mut joins = Vec::new();
+        for _ in 0..8 {
+            joins.push(thread::spawn(move || {
+                Client::new(addr)
+                    .post("/v1/generate", "{\"prompt\":[1],\"max_new\":4}")
+                    .map(|r| (r.status, r.header("retry-after").map(|s| s.to_string())))
+            }));
+        }
+        let results: Vec<_> = joins.into_iter().map(|j| j.join().unwrap().unwrap()).collect();
+        let report = fe.shutdown().unwrap();
+        let rejected: Vec<_> = results.iter().filter(|(s, _)| *s == 429).collect();
+        let ok = results.iter().filter(|(s, _)| *s == 200).count();
+        assert_eq!(ok, 1, "burst 1.0 admits exactly one: {results:?}");
+        assert_eq!(rejected.len(), 7, "everyone else refuses: {results:?}");
+        for (_, retry) in &rejected {
+            let secs: u64 = retry
+                .as_deref()
+                .expect("admission 429 must carry retry-after")
+                .parse()
+                .expect("retry-after must be integral seconds");
+            assert!((1..=60).contains(&secs), "retry-after {secs} out of range");
+        }
+        assert_eq!(report.serve.stats.admission_rejects, 7);
+        assert_eq!(report.serve.stats.completed, 1);
     }
 }

@@ -21,6 +21,18 @@
 //!
 //! `mosa loadgen` runs this from the CLI; `verify.sh` publishes the
 //! summary as the `transport` arm of `BENCH_decode.json`.
+//!
+//! **Saturation mode** ([`run_saturation`], `mosa loadgen --saturate`)
+//! turns the overload machinery on (`ServeConfig::overload`) and offers
+//! a Poisson arrival stream at a 2–4× multiple of the base rate,
+//! optionally with seeded wire faults riding along
+//! (`mosa chaos --saturate`). Its gate is the overload contract: zero
+//! leaked pages, every 429/503 carries a well-formed drain-derived
+//! Retry-After, goodput stays above a floor while shedding, and every
+//! accepted stream is a bit-identical prefix of its unloaded baseline
+//! (a prefix rather than the whole stream because brownout rung 1
+//! clamps `max_new` and wire faults sever streams mid-flight — the
+//! tokens that DID arrive must still be exact).
 
 use std::thread;
 use std::time::{Duration, Instant};
@@ -28,7 +40,9 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use super::http::{Client, HttpConfig, HttpFrontend};
-use super::{Dispatcher, FaultPlan, MockDispatcher, ServeConfig};
+use super::{
+    serve, Dispatcher, FaultPlan, MockDispatcher, OverloadConfig, ServeConfig, ServeRequest,
+};
 use crate::util::json::Json;
 use crate::util::rng::Pcg;
 
@@ -327,6 +341,368 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     })
 }
 
+// ---------------------------------------------------------------------------
+// saturation mode
+// ---------------------------------------------------------------------------
+
+/// Deliberate-overload scenario: the base load shape offered at a
+/// `rate_multiple` of its rate, with overload control enabled and an
+/// optional wire-fault plan riding along.
+#[derive(Debug, Clone)]
+pub struct SaturationConfig {
+    pub base: LoadgenConfig,
+    /// arrival-rate multiple over `base.rate_rps` (2–4× = sustained
+    /// overload; 1× = the control condition for the bench arm)
+    pub rate_multiple: f64,
+    /// seeded wire faults (drops/stalls) riding along; `none()` = pure load
+    pub plan: FaultPlan,
+    /// overload-control knobs for the engine under test
+    pub overload: OverloadConfig,
+    /// goodput floor while overloaded, tokens/second
+    pub goodput_floor_tps: f64,
+}
+
+impl Default for SaturationConfig {
+    fn default() -> Self {
+        SaturationConfig {
+            base: LoadgenConfig {
+                requests: 48,
+                queue_cap: 6,
+                tick_pace_us: 1_000,
+                ..LoadgenConfig::default()
+            },
+            rate_multiple: 4.0,
+            plan: FaultPlan::none(),
+            overload: OverloadConfig::default(),
+            goodput_floor_tps: 10.0,
+        }
+    }
+}
+
+/// Terminal report of one saturation run. `ok()` is the overload
+/// contract the chaos gate and `verify.sh` assert.
+#[derive(Debug)]
+pub struct SaturationReport {
+    pub requests: usize,
+    pub rate_multiple: f64,
+    /// the offered arrival rate, requests/second
+    pub offered_rps: f64,
+    pub completed: usize,
+    /// accepted streams cut short (wire fault, brownout-shortened drain)
+    pub severed: usize,
+    /// refused with a 429/503 response
+    pub rejected: usize,
+    /// TCP-level refusals (connect failed before any HTTP response)
+    pub refused_tcp: usize,
+    pub errored: usize,
+    /// 429/503 responses whose Retry-After was missing, unparseable, or
+    /// outside 1..=60s — the well-formedness gate (must be 0)
+    pub malformed_rejections: usize,
+    pub retry_after_mean_s: f64,
+    /// accepted streams that were NOT a bit-identical prefix of the
+    /// unloaded baseline (must be 0)
+    pub mismatched_streams: usize,
+    /// accepted streams compared against the baseline
+    pub compared: usize,
+    pub tokens_streamed: usize,
+    /// tokens delivered per wall second across the loaded phase
+    pub goodput_tps: f64,
+    pub goodput_floor_tps: f64,
+    // engine-side overload counters (from ServeStats)
+    pub admission_rejects: usize,
+    pub breaker_opens: usize,
+    pub load_sheds: usize,
+    pub brownout_rungs: [usize; 3],
+    pub brownout_clamps: usize,
+    // wire-fault counters (when a plan rode along)
+    pub connections_dropped: usize,
+    pub stream_stalls: usize,
+    pub leaked_pages: usize,
+    pub conserved: bool,
+    pub drain_clean: bool,
+    pub wall_ms: u64,
+    pub fatal: Option<String>,
+}
+
+impl SaturationReport {
+    /// The saturation gate: no leaks, every rejection well-formed,
+    /// goodput above the floor, accepted streams exact, and the run
+    /// actually overloaded the server (something completed AND
+    /// something was refused).
+    pub fn ok(&self) -> bool {
+        self.leaked_pages == 0
+            && self.conserved
+            && self.malformed_rejections == 0
+            && self.mismatched_streams == 0
+            && self.errored == 0
+            && self.completed > 0
+            && self.rejected > 0
+            && self.goodput_tps >= self.goodput_floor_tps
+            && self.fatal.is_none()
+            && self.completed + self.severed + self.rejected + self.refused_tcp + self.errored
+                == self.requests
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("ok", Json::Bool(self.ok())),
+            ("requests", Json::num(self.requests as f64)),
+            ("rate_multiple", Json::num(self.rate_multiple)),
+            ("offered_rps", Json::num(self.offered_rps)),
+            ("completed", Json::num(self.completed as f64)),
+            ("severed", Json::num(self.severed as f64)),
+            ("rejected", Json::num(self.rejected as f64)),
+            ("refused_tcp", Json::num(self.refused_tcp as f64)),
+            ("errored", Json::num(self.errored as f64)),
+            ("malformed_rejections", Json::num(self.malformed_rejections as f64)),
+            ("retry_after_mean_s", Json::num(self.retry_after_mean_s)),
+            ("mismatched_streams", Json::num(self.mismatched_streams as f64)),
+            ("compared", Json::num(self.compared as f64)),
+            ("tokens_streamed", Json::num(self.tokens_streamed as f64)),
+            ("goodput_tps", Json::num(self.goodput_tps)),
+            ("goodput_floor_tps", Json::num(self.goodput_floor_tps)),
+            ("admission_rejects", Json::num(self.admission_rejects as f64)),
+            ("breaker_opens", Json::num(self.breaker_opens as f64)),
+            ("load_sheds", Json::num(self.load_sheds as f64)),
+            ("brownout_rung1", Json::num(self.brownout_rungs[0] as f64)),
+            ("brownout_rung2", Json::num(self.brownout_rungs[1] as f64)),
+            ("brownout_rung3", Json::num(self.brownout_rungs[2] as f64)),
+            ("brownout_clamps", Json::num(self.brownout_clamps as f64)),
+            ("connections_dropped", Json::num(self.connections_dropped as f64)),
+            ("stream_stalls", Json::num(self.stream_stalls as f64)),
+            ("leaked_pages", Json::num(self.leaked_pages as f64)),
+            ("conserved", Json::Bool(self.conserved)),
+            ("drain_clean", Json::Bool(self.drain_clean)),
+            ("wall_ms", Json::num(self.wall_ms as f64)),
+            (
+                "fatal",
+                self.fatal.as_ref().map(|f| Json::str(f.as_str())).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+}
+
+/// What one saturation client observed on the wire.
+enum SatSeen {
+    /// done event arrived; tokens are the values streamed before it
+    Finished { outcome: String, tokens: Vec<i32> },
+    /// accepted stream ended with no done event (wire fault)
+    Severed { tokens: Vec<i32> },
+    Rejected { retry_after: Option<u64> },
+    /// connect/IO failed before any HTTP status (conn backstop under
+    /// extreme concurrency) — not an HTTP rejection
+    RefusedTcp,
+    Errored,
+}
+
+fn sat_request(client: &Client, body: &str) -> SatSeen {
+    let resp = match client.post("/v1/generate", body) {
+        Ok(r) => r,
+        Err(_) => return SatSeen::RefusedTcp,
+    };
+    match resp.status {
+        200 => {}
+        429 | 503 => {
+            return SatSeen::Rejected {
+                retry_after: resp.header("retry-after").and_then(|v| v.parse::<u64>().ok()),
+            }
+        }
+        _ => return SatSeen::Errored,
+    }
+    let mut tokens = Vec::new();
+    let mut outcome = None;
+    for ev in &resp.events {
+        let Ok(j) = Json::parse(ev) else { return SatSeen::Errored };
+        if j.get("done").and_then(|d| d.as_bool()) == Some(true) {
+            outcome = j.get("outcome").and_then(|o| o.as_str()).map(|s| s.to_string());
+        } else if let Some(t) = j.get("token").and_then(|t| t.as_f64()) {
+            tokens.push(t as i32);
+        }
+    }
+    match outcome {
+        Some(o) => SatSeen::Finished { outcome: o, tokens },
+        None => SatSeen::Severed { tokens },
+    }
+}
+
+/// Run the saturation scenario: bit-exact unloaded baseline first, then
+/// the same prompts offered open-loop at `rate_multiple × base rate`
+/// against a front-end with overload control enabled (and any wire
+/// faults from the plan), then the overload-contract tally.
+pub fn run_saturation(cfg: &SaturationConfig) -> Result<SaturationReport> {
+    let base = &cfg.base;
+    let offered_rps = (base.rate_rps * cfg.rate_multiple.max(0.1)).max(1e-6);
+
+    // draw the whole arrival schedule up front (open loop)
+    let mut rng = Pcg::seeded(base.seed ^ 0x5a7_10ad);
+    let mut at = 0.0f64;
+    let mut schedule: Vec<(Duration, Vec<i32>)> = Vec::with_capacity(base.requests);
+    for _ in 0..base.requests {
+        at += -(1.0 - rng.f64()).ln() / offered_rps;
+        let plen = 1 + rng.usize_below(base.max_prompt.max(1));
+        let prompt: Vec<i32> =
+            (0..plen).map(|_| rng.below(base.vocab as u32) as i32).collect();
+        schedule.push((Duration::from_secs_f64(at), prompt));
+    }
+
+    // unloaded baseline: every distinct prompt through the in-process
+    // loop, no faults, no load — the mock's tokens are a pure function
+    // of the history, so the prompt is the join key
+    let mut distinct: Vec<Vec<i32>> = Vec::new();
+    let mut seen_prompts = std::collections::HashSet::new();
+    for (_, p) in &schedule {
+        if seen_prompts.insert(p.clone()) {
+            distinct.push(p.clone());
+        }
+    }
+    let baseline_reqs: Vec<ServeRequest> = distinct
+        .iter()
+        .enumerate()
+        .map(|(i, p)| ServeRequest::new(i as u64, p.clone(), base.max_new))
+        .collect();
+    let baseline = serve(
+        MockDispatcher::paged(base.batch, base.capacity, base.vocab, base.page_size, base.pool_pages),
+        ServeConfig::default(),
+        FaultPlan::none(),
+        baseline_reqs,
+    );
+    let baseline_streams: std::collections::HashMap<Vec<i32>, Vec<i32>> = baseline
+        .results
+        .iter()
+        .map(|r| (distinct[r.id as usize].clone(), r.generated.clone()))
+        .collect();
+
+    // the saturated run: overload control ON
+    let dispatcher =
+        MockDispatcher::paged(base.batch, base.capacity, base.vocab, base.page_size, base.pool_pages);
+    let table = dispatcher.shared_pages().context("saturation mock is paged")?;
+    let serve_cfg = ServeConfig {
+        queue_cap: base.queue_cap,
+        overload: Some(cfg.overload.clone()),
+        ..ServeConfig::default()
+    };
+    let http = HttpConfig {
+        max_conns: base.max_conns,
+        tick_pace_us: base.tick_pace_us,
+        drain_deadline_ms: base.drain_deadline_ms,
+        ..HttpConfig::default()
+    };
+    let fe = HttpFrontend::start(dispatcher, serve_cfg, http, cfg.plan.clone())
+        .context("starting the saturation front-end")?;
+    let addr = fe.addr();
+
+    let t0 = Instant::now();
+    let mut workers = Vec::with_capacity(schedule.len());
+    for (fire_at, prompt) in schedule {
+        let elapsed = t0.elapsed();
+        if fire_at > elapsed {
+            thread::sleep(fire_at - elapsed);
+        }
+        let body = Json::obj(vec![
+            ("prompt", Json::Arr(prompt.iter().map(|t| Json::num(*t as f64)).collect())),
+            ("max_new", Json::num(base.max_new as f64)),
+        ])
+        .to_string_compact();
+        workers.push(
+            thread::Builder::new()
+                .name("mosa-saturate".into())
+                .spawn(move || (prompt, sat_request(&Client::new(addr), &body)))
+                .context("spawning a saturation worker")?,
+        );
+    }
+    let seen: Vec<(Vec<i32>, SatSeen)> = workers
+        .into_iter()
+        .map(|w| w.join().unwrap_or_else(|_| (Vec::new(), SatSeen::Errored)))
+        .collect();
+    // goodput is measured over the loaded phase only (before the drain)
+    let loaded_secs = t0.elapsed().as_secs_f64().max(1e-9);
+    let report = fe.shutdown()?;
+    let wall_ms = t0.elapsed().as_millis() as u64;
+
+    let mut completed = 0;
+    let mut severed = 0;
+    let mut rejected = 0;
+    let mut refused_tcp = 0;
+    let mut errored = 0;
+    let mut malformed_rejections = 0;
+    let mut retry_secs: Vec<u64> = Vec::new();
+    let mut compared = 0;
+    let mut mismatched_streams = 0;
+    let mut tokens_streamed = 0;
+    for (prompt, s) in &seen {
+        match s {
+            SatSeen::Finished { outcome, tokens } => {
+                if outcome == "completed" {
+                    completed += 1;
+                } else {
+                    severed += 1; // cancelled/expired terminal under load
+                }
+                compared += 1;
+                tokens_streamed += tokens.len();
+                match baseline_streams.get(prompt) {
+                    Some(b) if b.len() >= tokens.len() && b[..tokens.len()] == tokens[..] => {}
+                    _ => mismatched_streams += 1,
+                }
+            }
+            SatSeen::Severed { tokens } => {
+                severed += 1;
+                compared += 1;
+                tokens_streamed += tokens.len();
+                match baseline_streams.get(prompt) {
+                    Some(b) if b.len() >= tokens.len() && b[..tokens.len()] == tokens[..] => {}
+                    _ => mismatched_streams += 1,
+                }
+            }
+            SatSeen::Rejected { retry_after } => {
+                rejected += 1;
+                match retry_after {
+                    Some(s) if (1..=60).contains(s) => retry_secs.push(*s),
+                    _ => malformed_rejections += 1,
+                }
+            }
+            SatSeen::RefusedTcp => refused_tcp += 1,
+            SatSeen::Errored => errored += 1,
+        }
+    }
+    let retry_after_mean_s = if retry_secs.is_empty() {
+        0.0
+    } else {
+        retry_secs.iter().sum::<u64>() as f64 / retry_secs.len() as f64
+    };
+    let stats = &report.serve.stats;
+    let injected = report.serve.injected.clone().unwrap_or_default();
+    let drain = report.serve.drain.as_ref();
+    Ok(SaturationReport {
+        requests: base.requests,
+        rate_multiple: cfg.rate_multiple,
+        offered_rps,
+        completed,
+        severed,
+        rejected,
+        refused_tcp,
+        errored,
+        malformed_rejections,
+        retry_after_mean_s,
+        mismatched_streams,
+        compared,
+        tokens_streamed,
+        goodput_tps: tokens_streamed as f64 / loaded_secs,
+        goodput_floor_tps: cfg.goodput_floor_tps,
+        admission_rejects: stats.admission_rejects,
+        breaker_opens: stats.breaker_opens,
+        load_sheds: stats.load_sheds,
+        brownout_rungs: [stats.brownout_rung1, stats.brownout_rung2, stats.brownout_rung3],
+        brownout_clamps: stats.brownout_clamps,
+        connections_dropped: injected.connections_dropped,
+        stream_stalls: injected.stream_stalls,
+        leaked_pages: table.pool_pages_total().saturating_sub(table.pages_free()),
+        conserved: table.check_conservation(),
+        drain_clean: drain.map_or(false, |d| d.completed_ms.is_some() && d.aborted == 0),
+        wall_ms,
+        fatal: report.serve.fatal.clone(),
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -401,5 +777,66 @@ mod tests {
         }
         assert!(j.at(&["ttft", "p99_ms"]).is_some());
         assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(true));
+    }
+
+    #[test]
+    fn saturation_sheds_cleanly_and_keeps_goodput() {
+        // 4× the base rate against a deliberately small queue and slowed
+        // engine: the server MUST shed (rejected > 0), every rejection
+        // must carry a well-formed Retry-After, and every token that did
+        // reach a client must match the unloaded baseline exactly.
+        let cfg = SaturationConfig {
+            base: LoadgenConfig {
+                requests: 48,
+                queue_cap: 6,
+                tick_pace_us: 1_000,
+                ..LoadgenConfig::default()
+            },
+            rate_multiple: 4.0,
+            goodput_floor_tps: 10.0,
+            ..SaturationConfig::default()
+        };
+        let r = run_saturation(&cfg).expect("saturation runs");
+        assert!(r.ok(), "saturation contract violated: {r:?}");
+        assert!(r.rejected > 0, "4x overload must shed load: {r:?}");
+        assert_eq!(r.malformed_rejections, 0, "{r:?}");
+        assert_eq!(r.mismatched_streams, 0, "{r:?}");
+        assert_eq!(r.leaked_pages, 0, "{r:?}");
+        assert!(r.compared > 0, "accepted streams were compared: {r:?}");
+        assert!(r.retry_after_mean_s >= 1.0, "hints derive from drain: {r:?}");
+    }
+
+    #[test]
+    fn saturation_report_json_shape_is_stable() {
+        let r = run_saturation(&SaturationConfig {
+            base: LoadgenConfig {
+                requests: 24,
+                queue_cap: 4,
+                tick_pace_us: 800,
+                ..LoadgenConfig::default()
+            },
+            rate_multiple: 3.0,
+            goodput_floor_tps: 1.0,
+            ..SaturationConfig::default()
+        })
+        .expect("saturation runs");
+        let j = r.to_json();
+        for key in [
+            "ok",
+            "rate_multiple",
+            "completed",
+            "rejected",
+            "malformed_rejections",
+            "retry_after_mean_s",
+            "mismatched_streams",
+            "goodput_tps",
+            "goodput_floor_tps",
+            "admission_rejects",
+            "brownout_rung1",
+            "leaked_pages",
+        ] {
+            assert!(j.get(key).is_some(), "missing key {key}");
+        }
+        assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(true), "{r:?}");
     }
 }

@@ -30,9 +30,17 @@
 //! - the ladder, on a failed dispatch: bounded seeded-jitter retries
 //!   ([`RetryPolicy`]) → restart after a consumed donated cache (reset
 //!   + park-all + deterministic replay) → demote donated→copied →
-//!   demote paged→contiguous → shed one victim → fail the run. Every
-//!   error travels as `anyhow` with a typed [`ServeError`] attached at
-//!   the site; `ServeError::of` classifies it from anywhere up-stack.
+//!   demote paged→contiguous → brownout escalation → shed one victim →
+//!   fail the run. Every error travels as `anyhow` with a typed
+//!   [`ServeError`] attached at the site; `ServeError::of` classifies
+//!   it from anywhere up-stack;
+//! - [`overload`] — adaptive overload control, opt-in through
+//!   `ServeConfig::overload`: a token-bucket admission controller keyed
+//!   on live lazy-pool headroom and measured drain rate (refusals carry
+//!   a drain-derived Retry-After in [`ServeError::Overloaded`]), a
+//!   circuit breaker around the dispatcher, and a brownout ladder
+//!   (clamp `max_new` → force quantized cache → widen front-end pacing)
+//!   that degrades service before anything is shed.
 //!
 //! Time is a logical clock: every dispatch attempt costs
 //! `ServeConfig::dispatch_ms` (plus injected slowdowns and backoff
@@ -49,6 +57,7 @@ pub mod error;
 pub mod fault;
 pub mod http;
 pub mod loadgen;
+pub mod overload;
 pub mod retry;
 pub mod transport;
 
@@ -56,6 +65,10 @@ pub use error::ServeError;
 pub use fault::{
     artifact_hook, corrupt_text, ArtifactFault, CorruptMode, DispatchFault, FaultCounters,
     FaultInjector, FaultPlan, PoolHold, TransportFault, TransportInjector,
+};
+pub use overload::{
+    AdmissionController, BreakerState, Brownout, CircuitBreaker, DrainEstimator, OverloadConfig,
+    OverloadControl,
 };
 pub use retry::{Backoff, RetryPolicy};
 
@@ -107,15 +120,29 @@ pub struct ServeRequest {
     /// deadline relative to submission, in server-clock ms
     pub deadline_ms: Option<u64>,
     pub cancel: CancelToken,
+    /// per-request sampling policy (None = the dispatcher's default)
+    pub policy: Option<SamplePolicy>,
 }
 
 impl ServeRequest {
     pub fn new(id: u64, prompt: Vec<i32>, max_new: usize) -> ServeRequest {
-        ServeRequest { id, prompt, max_new, deadline_ms: None, cancel: CancelToken::new() }
+        ServeRequest {
+            id,
+            prompt,
+            max_new,
+            deadline_ms: None,
+            cancel: CancelToken::new(),
+            policy: None,
+        }
     }
 
     pub fn with_deadline(mut self, ms: u64) -> ServeRequest {
         self.deadline_ms = Some(ms);
+        self
+    }
+
+    pub fn with_policy(mut self, policy: SamplePolicy) -> ServeRequest {
+        self.policy = Some(policy);
         self
     }
 
@@ -218,6 +245,13 @@ impl AdmissionQueue {
 
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
+    }
+
+    /// Prompt lengths of every queued request — the overload
+    /// controller's ground truth for pages already promised to accepted
+    /// work (`AdmissionController::observe`'s `committed` input).
+    pub fn prompt_lens(&self) -> impl Iterator<Item = usize> + '_ {
+        self.entries.iter().map(|q| q.req.prompt.len())
     }
 
     /// Pop the next admissible request; cancelled/expired entries come
@@ -351,6 +385,12 @@ pub trait Dispatcher {
         reset: &[i32],
         uniforms: &[f32],
     ) -> Result<Vec<i32>>;
+    /// Per-slot sampling policies for the next dispatch (index = slot;
+    /// `None` = the dispatcher's own default). The server rebuilds this
+    /// from the live slot→request mapping before every dispatch, so
+    /// park/replay slot moves are safe. Default: ignore (policy-blind
+    /// dispatchers).
+    fn set_policies(&mut self, _policies: &[Option<SamplePolicy>]) {}
     /// Rebuild an empty cache (every slot's pages released) — the
     /// restart rung. The server replays evicted sequences afterwards.
     fn reset(&mut self) -> Result<()>;
@@ -373,6 +413,12 @@ pub trait Dispatcher {
     /// or already applied.
     fn demote_contiguous(&mut self) -> Result<bool> {
         Ok(false)
+    }
+    /// Brownout rung 2: force the cheaper quantized (i8) cache if the
+    /// dispatcher supports it and is not already on it. `false` =
+    /// unsupported or already quantized.
+    fn promote_quantized(&mut self) -> bool {
+        false
     }
     /// Real elapsed ms of the last dispatch (0 for logical-time mocks);
     /// added to the logical cost for the watchdog.
@@ -400,6 +446,7 @@ pub struct MockDispatcher {
     donated: bool,
     consumed: bool,
     quantized: bool,
+    policies: Vec<SamplePolicy>,
 }
 
 impl MockDispatcher {
@@ -415,6 +462,7 @@ impl MockDispatcher {
             donated: false,
             consumed: false,
             quantized: false,
+            policies: vec![SamplePolicy::Greedy; batch],
         }
     }
 
@@ -463,13 +511,23 @@ impl MockDispatcher {
         self
     }
 
-    fn token_for(hist: &[i32], vocab: i32) -> i32 {
+    fn token_for(hist: &[i32], vocab: i32, policy: SamplePolicy) -> i32 {
         let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-        for &t in hist {
-            for b in t.to_le_bytes() {
+        let mut mix = |bytes: &[u8]| {
+            for &b in bytes {
                 h ^= b as u64;
                 h = h.wrapping_mul(0x0000_0100_0000_01b3);
             }
+        };
+        for &t in hist {
+            mix(&t.to_le_bytes());
+        }
+        // Greedy adds no bytes, so policy-less streams are unchanged;
+        // a TopK policy deterministically perturbs the stream (a stand-in
+        // for "different sampling params change the tokens").
+        if let SamplePolicy::TopK { k, temperature } = policy {
+            mix(&(k as u64).to_le_bytes());
+            mix(&temperature.to_bits().to_le_bytes());
         }
         (h % vocab as u64) as i32
     }
@@ -548,9 +606,16 @@ impl Dispatcher for MockDispatcher {
                 }
             }
             h.push(tokens[i]);
-            out.push(Self::token_for(h, self.vocab));
+            let pol = self.policies.get(i).copied().unwrap_or(SamplePolicy::Greedy);
+            out.push(Self::token_for(h, self.vocab, pol));
         }
         Ok(out)
+    }
+
+    fn set_policies(&mut self, policies: &[Option<SamplePolicy>]) {
+        self.policies.clear();
+        self.policies.extend(policies.iter().map(|p| p.unwrap_or(SamplePolicy::Greedy)));
+        self.policies.resize(self.batch, SamplePolicy::Greedy);
     }
 
     fn reset(&mut self) -> Result<()> {
@@ -590,6 +655,14 @@ impl Dispatcher for MockDispatcher {
         self.page_size = 0;
         Ok(true)
     }
+
+    fn promote_quantized(&mut self) -> bool {
+        if self.table.is_some() && !self.quantized {
+            self.quantized = true;
+            return true;
+        }
+        false
+    }
 }
 
 /// The real device boundary: a `DecodeSession` stepped through an
@@ -606,6 +679,7 @@ pub struct SessionDispatcher<'m, 'e> {
     device_sample: bool,
     scratch: SampleScratch,
     logits_buf: Vec<f32>,
+    slot_policies: Vec<Option<SamplePolicy>>,
     last_ms: u64,
 }
 
@@ -627,6 +701,7 @@ impl<'m, 'e> SessionDispatcher<'m, 'e> {
             device_sample: false,
             scratch: SampleScratch::default(),
             logits_buf: Vec::new(),
+            slot_policies: Vec::new(),
             last_ms: 0,
         };
         d.resolve_sampler();
@@ -678,9 +753,25 @@ impl<'m, 'e> Dispatcher for SessionDispatcher<'m, 'e> {
     ) -> Result<Vec<i32>> {
         let t0 = std::time::Instant::now();
         let s = self.session.as_mut().expect("session present");
-        let ids = if self.device_sample {
-            s.step_sample(self.engine, tokens, pos, reset, uniforms, self.temp, self.k, false)?
-                .ids
+        // Effective per-slot policies: a per-request override falls back
+        // to the session-wide policy. A uniform batch keeps the in-graph
+        // sampler (one temp/k per dispatch); a mixed batch samples on the
+        // host per row with the same uniforms.
+        let slot_policies = &self.slot_policies;
+        let base = self.policy;
+        let eff = |i: usize| slot_policies.get(i).copied().flatten().unwrap_or(base);
+        let eff0 = eff(0);
+        let uniform = (0..s.batch).all(|i| eff(i) == eff0);
+        let (temp, k) = eff0.temp_k();
+        let device = if slot_policies.is_empty() {
+            self.device_sample
+        } else {
+            uniform
+                && self.device_sample_pref
+                && matches!((&s.sample_name, s.sample_k), (Some(_), Some(km)) if k <= *km)
+        };
+        let ids = if device {
+            s.step_sample(self.engine, tokens, pos, reset, uniforms, temp, k, false)?.ids
         } else {
             let vocab = s.variant.config.vocab;
             let logits = s.step(self.engine, tokens, pos, reset)?;
@@ -689,7 +780,7 @@ impl<'m, 'e> Dispatcher for SessionDispatcher<'m, 'e> {
                 .map(|i| {
                     sample_row_u(
                         &self.logits_buf[i * vocab..(i + 1) * vocab],
-                        &self.policy,
+                        &eff(i),
                         uniforms[i],
                         &mut self.scratch,
                     )
@@ -698,6 +789,11 @@ impl<'m, 'e> Dispatcher for SessionDispatcher<'m, 'e> {
         };
         self.last_ms = t0.elapsed().as_millis() as u64;
         Ok(ids)
+    }
+
+    fn set_policies(&mut self, policies: &[Option<SamplePolicy>]) {
+        self.slot_policies.clear();
+        self.slot_policies.extend_from_slice(policies);
     }
 
     fn reset(&mut self) -> Result<()> {
@@ -787,6 +883,11 @@ pub struct ServeConfig {
     /// sampling-uniform seed (greedy ignores it)
     pub seed: u64,
     pub eos: Option<i32>,
+    /// adaptive overload control (token-bucket admission, circuit
+    /// breaker, brownout ladder, drain-derived Retry-After). `None`
+    /// (the default) keeps the pre-overload behavior byte-identical:
+    /// every submit reaches the queue-cap backstop directly.
+    pub overload: Option<OverloadConfig>,
 }
 
 impl Default for ServeConfig {
@@ -801,6 +902,7 @@ impl Default for ServeConfig {
             max_ticks: 200_000,
             seed: 0,
             eos: None,
+            overload: None,
         }
     }
 }
@@ -836,6 +938,21 @@ pub struct ServeStats {
     pub cancelled: usize,
     pub expired: usize,
     pub failed: usize,
+    /// token-bucket refusals (a subset of `rejected`), each carrying a
+    /// drain-derived Retry-After
+    pub admission_rejects: usize,
+    /// circuit-breaker transitions into `Open`
+    pub breaker_opens: usize,
+    /// ticks skipped because the breaker was open
+    pub breaker_skips: usize,
+    /// brownout ladder: times each rung was entered
+    pub brownout_rung1: usize,
+    pub brownout_rung2: usize,
+    pub brownout_rung3: usize,
+    /// submissions whose `max_new` was clamped by brownout rung 1
+    pub brownout_clamps: usize,
+    /// brownout rung 2 promotions to the quantized cache that took
+    pub brownout_quantized: usize,
 }
 
 /// What one `tick` did.
@@ -856,6 +973,8 @@ pub enum Tick {
 struct ReqMeta {
     deadline_abs: Option<u64>,
     cancel: CancelToken,
+    /// per-request sampling override (None = dispatcher default)
+    policy: Option<SamplePolicy>,
 }
 
 /// Graceful-drain bookkeeping, reported in [`ServeReport`].
@@ -926,6 +1045,10 @@ pub struct Server<D: Dispatcher> {
     restarts_this_outage: u32,
     fatal: Option<String>,
     done: bool,
+    /// adaptive overload control (None = disabled, pre-PR-9 behavior)
+    overload: Option<OverloadControl>,
+    /// per-slot policy scratch rebuilt before every dispatch
+    pol_buf: Vec<Option<SamplePolicy>>,
 }
 
 impl<D: Dispatcher> Server<D> {
@@ -961,6 +1084,8 @@ impl<D: Dispatcher> Server<D> {
             restarts_this_outage: 0,
             fatal: None,
             done: false,
+            overload: cfg.overload.clone().map(OverloadControl::new),
+            pol_buf: Vec::with_capacity(batch),
             dispatcher,
             cfg,
         }
@@ -1006,6 +1131,32 @@ impl<D: Dispatcher> Server<D> {
         self.draining
     }
 
+    /// The Retry-After (seconds) the transport should advertise on any
+    /// refusal right now: expected queue-drain time from the measured
+    /// completion rate. Falls back to 1s with overload control off.
+    pub fn retry_after_s(&self) -> u64 {
+        self.overload
+            .as_ref()
+            .map(|ol| ol.drain.retry_after_s(self.now_ms, self.queue.len().max(1)))
+            .unwrap_or(1)
+    }
+
+    /// Brownout rung 3's wall-clock pacing multiplier for the front-end
+    /// engine loop (1 = no widening). Logical time is never scaled —
+    /// deadlines keep their meaning.
+    pub fn pace_mult(&self) -> u32 {
+        self.overload.as_ref().map(|ol| ol.brownout.pace_mult()).unwrap_or(1)
+    }
+
+    /// Current brownout rung (0 = full service).
+    pub fn brownout_rung(&self) -> u8 {
+        self.overload.as_ref().map(|ol| ol.brownout.rung()).unwrap_or(0)
+    }
+
+    pub fn breaker_state(&self) -> Option<BreakerState> {
+        self.overload.as_ref().map(|ol| ol.breaker.state())
+    }
+
     pub fn drain_info(&self) -> Option<&DrainInfo> {
         self.drain.as_ref()
     }
@@ -1045,8 +1196,39 @@ impl<D: Dispatcher> Server<D> {
         if req.max_new > budget {
             req.max_new = budget;
         }
+        // brownout rung 1: clamp the decode budget before admission so
+        // the request's page demand (and the work it buys) shrinks
+        if let Some(ol) = &self.overload {
+            let clamped = ol.brownout.clamp(req.max_new);
+            if clamped < req.max_new {
+                req.max_new = clamped;
+                self.stats.brownout_clamps += 1;
+            }
+        }
+        // token-bucket admission: demand-aware, headroom-keyed; the
+        // queue cap below stays as the hard backstop
+        let demand = match (&self.overload, self.dispatcher.shared_pages()) {
+            (Some(_), Some(t)) => t.lazy_demand(req.prompt.len()),
+            _ => 0,
+        };
+        if let Some(ol) = &mut self.overload {
+            let headroom = self
+                .dispatcher
+                .shared_pages()
+                .map(|t| t.lazy_free())
+                .unwrap_or(usize::MAX);
+            if !ol.admission.try_admit(self.now_ms, demand, headroom) {
+                let retry_after_s = ol.drain.retry_after_s(self.now_ms, self.queue.len() + 1);
+                self.stats.rejected += 1;
+                self.stats.admission_rejects += 1;
+                return Err(ServeError::Overloaded { retry_after_s });
+            }
+        }
         self.queue.push(req, self.now_ms).map_err(|e| {
             self.stats.rejected += 1;
+            if let Some(ol) = &mut self.overload {
+                ol.admission.refund(demand);
+            }
             e
         })?;
         if self.fatal.is_none() {
@@ -1078,6 +1260,7 @@ impl<D: Dispatcher> Server<D> {
         if self.done {
             return Tick::Done;
         }
+        self.observe_overload();
         self.reap();
         self.pump_admissions();
         if self.batcher.is_done() && self.queue.is_empty() {
@@ -1086,6 +1269,16 @@ impl<D: Dispatcher> Server<D> {
                 d.completed_ms.get_or_insert(self.now_ms);
             }
             return Tick::Done;
+        }
+        // circuit breaker: while open, burn logical time instead of
+        // dispatching (and do not park victims in the prepare loop) —
+        // the cooldown expires on the same clock
+        if let Some(ol) = &mut self.overload {
+            if !ol.breaker.allow(self.now_ms) {
+                self.stats.breaker_skips += 1;
+                self.now_ms += self.cfg.dispatch_ms.max(1);
+                return Tick::Recovering;
+            }
         }
         if self.batcher.active() == 0 {
             // everything runnable is gated or mid-replay; force progress
@@ -1109,6 +1302,18 @@ impl<D: Dispatcher> Server<D> {
         for u in self.uniforms.iter_mut() {
             *u = self.rng.f32();
         }
+        // per-slot sampling policies, rebuilt from the live slot→request
+        // mapping so park/replay slot moves are safe
+        self.pol_buf.clear();
+        for i in 0..self.dispatcher.batch() {
+            let p = self
+                .batcher
+                .slot_id(i)
+                .and_then(|id| self.meta.get(&id))
+                .and_then(|m| m.policy);
+            self.pol_buf.push(p);
+        }
+        self.dispatcher.set_policies(&self.pol_buf);
         let seq = self.dispatch_seq;
         self.dispatch_seq += 1;
         let fault = self.injector.as_mut().and_then(|inj| inj.on_dispatch(seq));
@@ -1149,10 +1354,16 @@ impl<D: Dispatcher> Server<D> {
                 self.backoff = None;
                 self.outage_rung = 0;
                 self.restarts_this_outage = 0;
+                if let Some(ol) = &mut self.overload {
+                    ol.breaker.on_success();
+                }
                 let done = self.batcher.advance(&ids);
                 self.emit_fresh();
                 let retired = done.len();
                 for f in done {
+                    if let Some(ol) = &mut self.overload {
+                        ol.drain.record(self.now_ms, f.generated.len());
+                    }
                     self.finish_req(f.id, Outcome::Completed, f.generated, None);
                 }
                 self.sync_guards();
@@ -1376,7 +1587,11 @@ impl<D: Dispatcher> Server<D> {
                 Popped::Ready(q) => {
                     self.meta.insert(
                         q.req.id,
-                        ReqMeta { deadline_abs: q.deadline_abs, cancel: q.req.cancel.clone() },
+                        ReqMeta {
+                            deadline_abs: q.deadline_abs,
+                            cancel: q.req.cancel.clone(),
+                            policy: q.req.policy,
+                        },
                     );
                     self.batcher.submit(SeqRequest {
                         id: q.req.id,
@@ -1408,6 +1623,54 @@ impl<D: Dispatcher> Server<D> {
                 (Some(_), false) => self.guards[i] = None,
                 _ => {}
             }
+        }
+    }
+
+    /// Feed the overload controllers their measured signals: lazy-pool
+    /// headroom, the queue's committed page demand and fill, and the
+    /// sliding-window drain rate. Also steps the brownout ladder on
+    /// sustained pressure (dwell-hysteresis inside `Brownout`).
+    fn observe_overload(&mut self) {
+        if self.overload.is_none() {
+            return;
+        }
+        let now = self.now_ms;
+        let qlen = self.queue.len();
+        let qcap = self.cfg.queue_cap;
+        let (free, total, committed) = match self.dispatcher.shared_pages() {
+            Some(t) => {
+                let committed: usize = self.queue.prompt_lens().map(|l| t.lazy_demand(l)).sum();
+                (t.lazy_free(), t.lazy_total(), committed)
+            }
+            // contiguous dispatcher: no pool signal; queue slack drives
+            None => (1, 1, 0),
+        };
+        let ol = self.overload.as_mut().expect("checked above");
+        ol.admission.observe(now, free, total, committed, qlen, qcap);
+        let drain_rps = ol.drain.drain_rps(now);
+        ol.admission.observe_drain(drain_rps);
+        let headroom_frac = free as f64 / total.max(1) as f64;
+        let queue_frac = qlen as f64 / qcap.max(1) as f64;
+        let pressure = queue_frac.max(1.0 - headroom_frac);
+        if ol.brownout.observe(now, pressure) > 0 {
+            self.note_brownout_rung();
+        }
+    }
+
+    /// Account a brownout rung transition and apply its side effect
+    /// (rung 2 forces the quantized cache when the dispatcher has one).
+    fn note_brownout_rung(&mut self) {
+        let rung = self.overload.as_ref().map(|ol| ol.brownout.rung()).unwrap_or(0);
+        match rung {
+            1 => self.stats.brownout_rung1 += 1,
+            2 => self.stats.brownout_rung2 += 1,
+            3 => self.stats.brownout_rung3 += 1,
+            _ => {}
+        }
+        let force_q =
+            self.overload.as_ref().map(|ol| ol.brownout.force_quantized()).unwrap_or(false);
+        if force_q && self.dispatcher.promote_quantized() {
+            self.stats.brownout_quantized += 1;
         }
     }
 
@@ -1480,6 +1743,11 @@ impl<D: Dispatcher> Server<D> {
         if !transient {
             self.abort(&format!("fatal dispatch error: {err:#}"));
             return Tick::Fatal;
+        }
+        if let Some(ol) = &mut self.overload {
+            if ol.breaker.on_transient(self.now_ms) {
+                self.stats.breaker_opens += 1;
+            }
         }
         if matches!(typed, Some(ServeError::CacheConsumed))
             && self.restarts_this_outage < self.cfg.max_restarts
@@ -1566,9 +1834,25 @@ impl<D: Dispatcher> Server<D> {
                 }
             }
         }
-        // rung 5: shed one victim (smaller active set, replay later)
+        // rung 5: brownout escalation — degrade (clamp budgets, force
+        // quantized, widen pacing) before shedding anyone. Each pass
+        // climbs one rung; only once the ladder tops out does the
+        // outage proceed to the shed rung.
         if self.outage_rung < 4 {
+            let escalated = self
+                .overload
+                .as_mut()
+                .map(|ol| ol.brownout.escalate(self.now_ms))
+                .unwrap_or(false);
+            if escalated {
+                self.note_brownout_rung();
+                return Tick::Recovering;
+            }
             self.outage_rung = 4;
+        }
+        // rung 6: shed one victim (smaller active set, replay later)
+        if self.outage_rung < 5 {
+            self.outage_rung = 5;
             let victim = (0..self.dispatcher.batch()).find(|&i| self.batcher.slot_id(i).is_some());
             if let Some(v) = victim {
                 self.batcher.park(v);
@@ -2184,5 +2468,127 @@ mod tests {
         let report = server.finish();
         assert_eq!(report.count(Outcome::Completed), 3);
         assert!(report.result_for(50).is_some());
+    }
+
+    #[test]
+    fn overload_bucket_refuses_burst_and_recovers_on_the_clock() {
+        let cfg = ServeConfig {
+            overload: Some(OverloadConfig { burst: 2.0, ..OverloadConfig::default() }),
+            ..ServeConfig::default()
+        };
+        let mut server = Server::new(mock(), cfg);
+        let mut admitted = 0usize;
+        let mut refused = 0usize;
+        for id in 0..6u64 {
+            match server.submit(ServeRequest::new(id, vec![5], 4)) {
+                Ok(()) => admitted += 1,
+                Err(ServeError::Overloaded { retry_after_s }) => {
+                    assert!((1..=60).contains(&retry_after_s), "Retry-After {retry_after_s}");
+                    refused += 1;
+                }
+                Err(e) => panic!("unexpected refusal: {e}"),
+            }
+        }
+        assert_eq!(admitted, 2, "burst-of-2 bucket admits exactly two at t=0");
+        assert_eq!(refused, 4);
+        run_to_done(&mut server);
+        // the logical clock advanced through the run: the bucket refilled
+        server.submit(ServeRequest::new(50, vec![6], 4)).unwrap();
+        run_to_done(&mut server);
+        let report = server.finish();
+        assert_eq!(report.count(Outcome::Completed), 3);
+        assert_eq!(report.stats.admission_rejects, 4);
+        assert_eq!(report.stats.rejected, 4);
+    }
+
+    #[test]
+    fn breaker_opens_after_consecutive_failures_then_probes_closed() {
+        let baseline =
+            generated_by_id(&serve(mock(), ServeConfig::default(), FaultPlan::none(), reqs(4, 21, 16)));
+        let cfg = ServeConfig {
+            overload: Some(OverloadConfig {
+                breaker_threshold: 2,
+                breaker_cooldown_ms: 50,
+                ..OverloadConfig::default()
+            }),
+            ..ServeConfig::default()
+        };
+        let plan = FaultPlan::parse("fail@0;fail@1;fail@2").unwrap();
+        let report = serve(mock(), cfg, plan, reqs(4, 21, 16));
+        assert!(report.fatal.is_none(), "fatal: {:?}", report.fatal);
+        assert!(report.stats.breaker_opens >= 1, "stats: {:?}", report.stats);
+        assert!(report.stats.breaker_skips >= 1, "open breaker burns ticks, not dispatches");
+        assert_eq!(report.count(Outcome::Completed), 4);
+        for r in &report.results {
+            assert_eq!(r.generated, baseline[&r.id], "request {} stream shifted", r.id);
+        }
+    }
+
+    #[test]
+    fn brownout_ladder_degrades_under_sustained_queue_pressure() {
+        let cfg = ServeConfig {
+            queue_cap: 4,
+            // a huge burst so the queue top-up is never bucket-refused:
+            // this test drives pressure purely through queue fill
+            overload: Some(OverloadConfig { burst: 1000.0, ..OverloadConfig::default() }),
+            ..ServeConfig::default()
+        };
+        // roomy pool: headroom stays high, the queue is the signal
+        let mut server = Server::new(MockDispatcher::paged(2, 16, 97, 4, 32), cfg);
+        // keep the queue pinned full: top it up every tick
+        let mut next_id = 0u64;
+        for _ in 0..60 {
+            while server.queue_len() < 4 {
+                server.submit(ServeRequest::new(next_id, vec![3], 12)).unwrap();
+                next_id += 1;
+            }
+            server.tick();
+            assert!(server.check_invariants().is_empty());
+        }
+        assert_eq!(server.brownout_rung(), 3, "sustained pressure tops the ladder");
+        assert_eq!(server.pace_mult(), 4, "rung 3 widens front-end pacing");
+        let stats = server.stats().clone();
+        assert!(stats.brownout_rung1 >= 1, "stats: {stats:?}");
+        assert!(stats.brownout_rung2 >= 1);
+        assert!(stats.brownout_rung3 >= 1);
+        assert!(stats.brownout_clamps >= 1, "rung 1 clamped max_new on fresh admissions");
+        assert_eq!(stats.brownout_quantized, 1, "rung 2 promoted the mock to quantized");
+        run_to_done(&mut server);
+        let report = server.finish();
+        assert!(report.fatal.is_none());
+        assert!(report.count(Outcome::Completed) >= 1);
+    }
+
+    #[test]
+    fn per_request_policy_perturbs_only_its_own_stream() {
+        let mk = |with_policy: bool| {
+            let mut v = vec![
+                ServeRequest::new(1, vec![3, 4], 6),
+                ServeRequest::new(2, vec![3, 4], 6),
+            ];
+            if with_policy {
+                v[1].policy = Some(SamplePolicy::TopK { k: 5, temperature: 0.8 });
+            }
+            v
+        };
+        let base = serve(mock(), ServeConfig::default(), FaultPlan::none(), mk(false));
+        let run = serve(mock(), ServeConfig::default(), FaultPlan::none(), mk(true));
+        assert_eq!(base.count(Outcome::Completed), 2);
+        assert_eq!(run.count(Outcome::Completed), 2);
+        // same prompt: the policy-less twin matches the baseline exactly
+        assert_eq!(
+            run.result_for(1).unwrap().generated,
+            base.result_for(1).unwrap().generated
+        );
+        // the TopK request's stream deterministically diverges
+        assert_ne!(
+            run.result_for(2).unwrap().generated,
+            base.result_for(2).unwrap().generated
+        );
+        // and both baseline requests (identical prompts) matched each other
+        assert_eq!(
+            base.result_for(1).unwrap().generated,
+            base.result_for(2).unwrap().generated
+        );
     }
 }

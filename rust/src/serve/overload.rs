@@ -1,0 +1,719 @@
+//! Adaptive overload control for the serving path.
+//!
+//! Three cooperating mechanisms, all deterministic on the server's
+//! logical clock (wall time never feeds a decision, so chaos runs and
+//! differential tests replay bit-identically):
+//!
+//! - **Token-bucket admission** ([`AdmissionController`]): the primary
+//!   front-door gate, replacing the flat connection cap (which survives
+//!   as a hard backstop in the HTTP layer). The refill rate is re-derived
+//!   every tick from *measured* signals — pool-page headroom (the true
+//!   capacity signal for a paged KV-cache) and the queue drain rate the
+//!   [`DrainEstimator`] observes — so admission slows exactly as the pool
+//!   fills or completions stall. A request whose own page demand exceeds
+//!   the live lazy-pool headroom (net of pages already promised to
+//!   queued requests) is refused outright: admitting it could only
+//!   park-thrash established sequences.
+//! - **Brownout ladder** ([`Brownout`]): under *sustained* pressure the
+//!   server degrades before it sheds — rung 1 clamps `max_new` on fresh
+//!   admissions, rung 2 forces the quantized (i8) cache, rung 3 widens
+//!   tick pacing. Escalation is driven both by the pressure signal
+//!   (dwell-time hysteresis) and by the failure ladder in
+//!   `Server::on_failure` (degrade-before-shed rungs).
+//! - **Circuit breaker** ([`CircuitBreaker`]): opens after K consecutive
+//!   transient dispatch failures so a sick dispatcher is not hammered;
+//!   after a cooldown on the logical clock a half-open probe decides
+//!   between closing and re-opening.
+//!
+//! The [`DrainEstimator`] doubles as the shared Retry-After source: the
+//! advertised `Retry-After` on every 429/503 is the expected time for
+//! the current queue to drain at the measured rate, not a constant.
+
+use std::collections::VecDeque;
+
+// ---------------------------------------------------------------------------
+// config
+// ---------------------------------------------------------------------------
+
+/// Tuning for the overload-control stack. `None` in
+/// `ServeConfig::overload` disables all of it (pure-logic serving runs
+/// and the existing chaos differentials stay byte-identical).
+#[derive(Debug, Clone)]
+pub struct OverloadConfig {
+    /// token-bucket capacity, in requests (burst tolerance)
+    pub burst: f64,
+    /// refill-rate floor, requests/s — keeps a trickle of admissions
+    /// alive so the estimator can observe drain resuming
+    pub min_refill_rps: f64,
+    /// refill-rate ceiling, requests/s
+    pub max_refill_rps: f64,
+    /// drain-rate measurement window on the logical clock, ms
+    pub drain_window_ms: u64,
+    /// consecutive transient dispatch failures before the breaker opens
+    pub breaker_threshold: u32,
+    /// how long an open breaker blocks dispatches, ms (logical)
+    pub breaker_cooldown_ms: u64,
+    /// pressure (0..1) at or above which brownout escalates
+    pub brownout_high: f64,
+    /// pressure at or below which brownout de-escalates
+    pub brownout_low: f64,
+    /// how long pressure must dwell past a threshold before the rung
+    /// moves, ms (hysteresis)
+    pub brownout_dwell_ms: u64,
+    /// rung-1 clamp on `max_new` for freshly admitted requests
+    pub brownout_max_new: usize,
+    /// rung-3 multiplier on the front-end's tick pacing
+    pub brownout_pace_mult: u32,
+}
+
+impl Default for OverloadConfig {
+    fn default() -> Self {
+        OverloadConfig {
+            burst: 8.0,
+            min_refill_rps: 2.0,
+            max_refill_rps: 2_000.0,
+            drain_window_ms: 2_000,
+            breaker_threshold: 4,
+            breaker_cooldown_ms: 200,
+            brownout_high: 0.85,
+            brownout_low: 0.50,
+            brownout_dwell_ms: 40,
+            brownout_max_new: 4,
+            brownout_pace_mult: 4,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// drain estimator (shared Retry-After source)
+// ---------------------------------------------------------------------------
+
+/// Sliding-window rate of request completions on the logical clock.
+/// Feeds the token bucket's refill rate and derives Retry-After from
+/// expected drain time instead of a constant.
+#[derive(Debug, Default)]
+pub struct DrainEstimator {
+    window_ms: u64,
+    /// (completion time, tokens the request generated)
+    samples: VecDeque<(u64, usize)>,
+}
+
+impl DrainEstimator {
+    pub fn new(window_ms: u64) -> DrainEstimator {
+        DrainEstimator { window_ms: window_ms.max(1), samples: VecDeque::new() }
+    }
+
+    /// Record one completed request at `now_ms`.
+    pub fn record(&mut self, now_ms: u64, tokens: usize) {
+        self.samples.push_back((now_ms, tokens));
+        let cutoff = now_ms.saturating_sub(self.window_ms);
+        while self.samples.front().map_or(false, |&(t, _)| t < cutoff) {
+            self.samples.pop_front();
+        }
+    }
+
+    fn in_window(&self, now_ms: u64) -> impl Iterator<Item = &(u64, usize)> {
+        let cutoff = now_ms.saturating_sub(self.window_ms);
+        self.samples.iter().filter(move |&&(t, _)| t >= cutoff)
+    }
+
+    /// Measured completions/s over the window (0.0 before any completion).
+    pub fn drain_rps(&self, now_ms: u64) -> f64 {
+        let n = self.in_window(now_ms).count();
+        n as f64 * 1000.0 / self.window_ms as f64
+    }
+
+    /// Measured generated tokens/s over the window.
+    pub fn drain_tps(&self, now_ms: u64) -> f64 {
+        let toks: usize = self.in_window(now_ms).map(|&(_, k)| k).sum();
+        toks as f64 * 1000.0 / self.window_ms as f64
+    }
+
+    /// Expected time for `waiting` queued requests (plus the one being
+    /// refused) to drain at the measured rate. With no completions
+    /// observed yet, assume one request per second — conservative but
+    /// bounded.
+    pub fn expected_drain_ms(&self, now_ms: u64, waiting: usize) -> u64 {
+        let r = self.drain_rps(now_ms);
+        let pending = waiting as f64 + 1.0;
+        if r <= f64::EPSILON {
+            return (pending * 1000.0) as u64;
+        }
+        (pending / r * 1000.0).ceil() as u64
+    }
+
+    /// The Retry-After header value (whole seconds, clamped to [1, 60])
+    /// a refusal should advertise right now.
+    pub fn retry_after_s(&self, now_ms: u64, waiting: usize) -> u64 {
+        self.expected_drain_ms(now_ms, waiting).div_ceil(1000).clamp(1, 60)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// token-bucket admission controller
+// ---------------------------------------------------------------------------
+
+/// Headroom-keyed token bucket. `observe` re-derives the refill rate
+/// from the live pool/queue signals; `try_admit` charges one token per
+/// accepted request and enforces the page-demand-vs-headroom invariant.
+#[derive(Debug)]
+pub struct AdmissionController {
+    burst: f64,
+    min_rps: f64,
+    max_rps: f64,
+    tokens: f64,
+    rate_rps: f64,
+    last_ms: u64,
+    /// lazy pages promised to accepted-but-not-yet-admitted requests;
+    /// re-grounded from the queue every `observe`, debited per accept
+    /// between observations
+    committed_pages: usize,
+}
+
+impl AdmissionController {
+    pub fn new(cfg: &OverloadConfig) -> AdmissionController {
+        AdmissionController {
+            burst: cfg.burst.max(1.0),
+            min_rps: cfg.min_refill_rps.max(0.0),
+            max_rps: cfg.max_refill_rps.max(cfg.min_refill_rps),
+            tokens: cfg.burst.max(1.0), // start full: cold-start burst is fine
+            rate_rps: cfg.max_refill_rps,
+            last_ms: 0,
+            committed_pages: 0,
+        }
+    }
+
+    fn refill(&mut self, now_ms: u64) {
+        let dt_s = now_ms.saturating_sub(self.last_ms) as f64 / 1000.0;
+        self.last_ms = self.last_ms.max(now_ms);
+        self.tokens = (self.tokens + dt_s * self.rate_rps).min(self.burst);
+    }
+
+    /// Re-derive the refill rate from measured signals: the drain rate
+    /// scaled by pool headroom and queue slack. With no drain measured
+    /// yet (cold start) the ceiling applies, scaled by the same factors,
+    /// so an idle server admits freely and a saturated one does not.
+    /// `committed` re-grounds the promised-pages ledger from the actual
+    /// queue contents (requests leave the queue through several paths;
+    /// recomputing beats credit bookkeeping at every exit).
+    pub fn observe(
+        &mut self,
+        now_ms: u64,
+        lazy_free: usize,
+        lazy_total: usize,
+        committed: usize,
+        queue_len: usize,
+        queue_cap: usize,
+    ) {
+        self.refill(now_ms);
+        self.committed_pages = committed;
+        let headroom = lazy_free as f64 / lazy_total.max(1) as f64;
+        let slack = 1.0 - queue_len as f64 / queue_cap.max(1) as f64;
+        let base = self.max_rps;
+        self.rate_rps = (base * headroom * slack.max(0.0)).clamp(self.min_rps, self.max_rps);
+    }
+
+    /// Blend the measured drain rate into the refill ceiling: once
+    /// completions are observed, admission tracks them (2× drain keeps
+    /// the pipe full without unbounded backlog) instead of the static
+    /// ceiling.
+    pub fn observe_drain(&mut self, drain_rps: f64) {
+        if drain_rps > f64::EPSILON {
+            let tracked = (drain_rps * 2.0).clamp(self.min_rps, self.max_rps);
+            self.rate_rps = self.rate_rps.min(tracked);
+        }
+    }
+
+    pub fn rate_rps(&self) -> f64 {
+        self.rate_rps
+    }
+
+    pub fn tokens(&self) -> f64 {
+        self.tokens
+    }
+
+    /// Gate one request whose lazy-pool page demand is `demand_pages`
+    /// against `live_headroom` free lazy pages. Accepting charges a
+    /// token and commits the demand; refusing charges nothing. The
+    /// invariant (property-tested): an accept NEVER happens when
+    /// `demand_pages > live_headroom - committed`.
+    pub fn try_admit(&mut self, now_ms: u64, demand_pages: usize, live_headroom: usize) -> bool {
+        self.refill(now_ms);
+        let available = live_headroom.saturating_sub(self.committed_pages);
+        if demand_pages > available {
+            return false;
+        }
+        if self.tokens < 1.0 {
+            return false;
+        }
+        self.tokens -= 1.0;
+        self.committed_pages += demand_pages;
+        true
+    }
+
+    /// Credit a token back (a request accepted by the bucket was then
+    /// refused downstream, e.g. by the queue-cap backstop).
+    pub fn refund(&mut self, demand_pages: usize) {
+        self.tokens = (self.tokens + 1.0).min(self.burst);
+        self.committed_pages = self.committed_pages.saturating_sub(demand_pages);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// circuit breaker
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    Closed,
+    Open,
+    HalfOpen,
+}
+
+/// Breaker around the dispatcher: `allow` gates each dispatch attempt,
+/// `on_success`/`on_transient` feed the outcomes back. Deterministic on
+/// the logical clock.
+#[derive(Debug)]
+pub struct CircuitBreaker {
+    threshold: u32,
+    cooldown_ms: u64,
+    consecutive: u32,
+    state: BreakerState,
+    open_until_ms: u64,
+}
+
+impl CircuitBreaker {
+    pub fn new(cfg: &OverloadConfig) -> CircuitBreaker {
+        CircuitBreaker {
+            threshold: cfg.breaker_threshold.max(1),
+            cooldown_ms: cfg.breaker_cooldown_ms.max(1),
+            consecutive: 0,
+            state: BreakerState::Closed,
+            open_until_ms: 0,
+        }
+    }
+
+    pub fn state(&self) -> BreakerState {
+        self.state
+    }
+
+    /// May a dispatch attempt run at `now_ms`? An expired open breaker
+    /// transitions to half-open and admits exactly the probe.
+    pub fn allow(&mut self, now_ms: u64) -> bool {
+        match self.state {
+            BreakerState::Closed | BreakerState::HalfOpen => true,
+            BreakerState::Open => {
+                if now_ms >= self.open_until_ms {
+                    self.state = BreakerState::HalfOpen;
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    pub fn on_success(&mut self) {
+        self.consecutive = 0;
+        self.state = BreakerState::Closed;
+    }
+
+    /// One transient dispatch failure. Returns `true` when this failure
+    /// opened (or re-opened) the breaker.
+    pub fn on_transient(&mut self, now_ms: u64) -> bool {
+        match self.state {
+            BreakerState::HalfOpen => {
+                // the probe failed: straight back to open
+                self.state = BreakerState::Open;
+                self.open_until_ms = now_ms + self.cooldown_ms;
+                self.consecutive = 0;
+                true
+            }
+            BreakerState::Closed => {
+                self.consecutive += 1;
+                if self.consecutive >= self.threshold {
+                    self.state = BreakerState::Open;
+                    self.open_until_ms = now_ms + self.cooldown_ms;
+                    self.consecutive = 0;
+                    true
+                } else {
+                    false
+                }
+            }
+            BreakerState::Open => false,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// brownout ladder
+// ---------------------------------------------------------------------------
+
+/// Graceful degradation under sustained pressure: rung 1 clamps
+/// `max_new` on fresh admissions, rung 2 forces the quantized cache,
+/// rung 3 widens tick pacing. Pressure must dwell past the high
+/// threshold before escalating and below the low threshold before
+/// de-escalating (hysteresis), so a single hot tick never flaps the
+/// service level.
+#[derive(Debug)]
+pub struct Brownout {
+    high: f64,
+    low: f64,
+    dwell_ms: u64,
+    clamp_max_new: usize,
+    pace_mult: u32,
+    rung: u8,
+    over_since: Option<u64>,
+    calm_since: Option<u64>,
+}
+
+impl Brownout {
+    pub const MAX_RUNG: u8 = 3;
+
+    pub fn new(cfg: &OverloadConfig) -> Brownout {
+        Brownout {
+            high: cfg.brownout_high,
+            low: cfg.brownout_low,
+            dwell_ms: cfg.brownout_dwell_ms,
+            clamp_max_new: cfg.brownout_max_new.max(1),
+            pace_mult: cfg.brownout_pace_mult.max(1),
+            rung: 0,
+            over_since: None,
+            calm_since: None,
+        }
+    }
+
+    pub fn rung(&self) -> u8 {
+        self.rung
+    }
+
+    /// Feed one pressure sample (0..1). Returns the rungs moved this
+    /// call: positive = escalated, negative = de-escalated, 0 = held.
+    pub fn observe(&mut self, now_ms: u64, pressure: f64) -> i8 {
+        if pressure >= self.high {
+            self.calm_since = None;
+            let since = *self.over_since.get_or_insert(now_ms);
+            if now_ms.saturating_sub(since) >= self.dwell_ms && self.rung < Self::MAX_RUNG {
+                self.rung += 1;
+                self.over_since = Some(now_ms); // dwell again before the next rung
+                return 1;
+            }
+        } else if pressure <= self.low {
+            self.over_since = None;
+            let since = *self.calm_since.get_or_insert(now_ms);
+            if now_ms.saturating_sub(since) >= self.dwell_ms && self.rung > 0 {
+                self.rung -= 1;
+                self.calm_since = Some(now_ms);
+                return -1;
+            }
+        } else {
+            // hysteresis band: hold the rung, reset both dwell timers
+            self.over_since = None;
+            self.calm_since = None;
+        }
+        0
+    }
+
+    /// Failure-ladder escalation (degrade before shedding). Returns
+    /// `true` if a rung was climbed.
+    pub fn escalate(&mut self, now_ms: u64) -> bool {
+        if self.rung < Self::MAX_RUNG {
+            self.rung += 1;
+            self.over_since = Some(now_ms);
+            self.calm_since = None;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Rung ≥ 1: clamp a fresh request's `max_new`.
+    pub fn clamp(&self, max_new: usize) -> usize {
+        if self.rung >= 1 {
+            max_new.min(self.clamp_max_new)
+        } else {
+            max_new
+        }
+    }
+
+    /// Rung ≥ 2: the server should force the quantized (i8) cache.
+    pub fn force_quantized(&self) -> bool {
+        self.rung >= 2
+    }
+
+    /// Rung ≥ 3: multiplier the front-end applies to its tick pacing.
+    pub fn pace_mult(&self) -> u32 {
+        if self.rung >= 3 {
+            self.pace_mult
+        } else {
+            1
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the bundle the server holds
+// ---------------------------------------------------------------------------
+
+/// The overload-control stack `serve::Server` owns when
+/// `ServeConfig::overload` is set.
+#[derive(Debug)]
+pub struct OverloadControl {
+    pub cfg: OverloadConfig,
+    pub admission: AdmissionController,
+    pub breaker: CircuitBreaker,
+    pub brownout: Brownout,
+    pub drain: DrainEstimator,
+}
+
+impl OverloadControl {
+    pub fn new(cfg: OverloadConfig) -> OverloadControl {
+        OverloadControl {
+            admission: AdmissionController::new(&cfg),
+            breaker: CircuitBreaker::new(&cfg),
+            brownout: Brownout::new(&cfg),
+            drain: DrainEstimator::new(cfg.drain_window_ms),
+            cfg,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::{PageKind, PageLayout, PageTable};
+    use crate::util::rng::Pcg;
+
+    fn cfg() -> OverloadConfig {
+        OverloadConfig::default()
+    }
+
+    fn table(pool_pages: usize, batch: usize, capacity: usize, page_size: usize) -> PageTable {
+        let pps = capacity.div_ceil(page_size);
+        PageTable::new(
+            PageLayout {
+                page_size,
+                pages_per_slot: pps,
+                kinds: vec![PageKind {
+                    kind: "dense".into(),
+                    slots: capacity,
+                    pages_per_slot: pps,
+                    row_offset: 0,
+                    pool_pages,
+                    lazy: true,
+                }],
+                payload_dtype_bytes: 4,
+            },
+            batch,
+        )
+    }
+
+    #[test]
+    fn drain_estimator_rates_and_retry_after() {
+        let mut d = DrainEstimator::new(1000);
+        assert_eq!(d.drain_rps(0), 0.0);
+        // no data: conservative 1 req/s ⇒ 3 waiting ≈ 4s
+        assert_eq!(d.retry_after_s(0, 3), 4);
+        for t in 0..10 {
+            d.record(t * 100, 8);
+        }
+        // 10 completions over the 1s window
+        assert!((d.drain_rps(1000) - 10.0).abs() < 1e-9);
+        assert!((d.drain_tps(1000) - 80.0).abs() < 1e-9);
+        // 19 waiting + 1 at 10 rps ⇒ 2s
+        assert_eq!(d.retry_after_s(1000, 19), 2);
+        // samples age out of the window
+        assert_eq!(d.drain_rps(10_000), 0.0);
+        // clamped to [1, 60]
+        assert_eq!(d.retry_after_s(1000, 0), 1);
+        assert_eq!(d.retry_after_s(10_000, 1_000_000), 60);
+    }
+
+    #[test]
+    fn bucket_burst_then_refill() {
+        let mut c = cfg();
+        c.burst = 3.0;
+        c.min_refill_rps = 1.0;
+        c.max_refill_rps = 10.0;
+        let mut a = AdmissionController::new(&c);
+        a.observe(0, 100, 100, 0, 0, 100); // full headroom ⇒ max rate
+        for _ in 0..3 {
+            assert!(a.try_admit(0, 1, 100));
+        }
+        assert!(!a.try_admit(0, 1, 100), "burst exhausted");
+        // 10 rps ⇒ one token back after 100ms
+        assert!(a.try_admit(100, 1, 100));
+        assert!(!a.try_admit(100, 1, 100));
+    }
+
+    #[test]
+    fn refill_rate_tracks_headroom_and_queue() {
+        let mut a = AdmissionController::new(&cfg());
+        a.observe(0, 100, 100, 0, 0, 100);
+        let open = a.rate_rps();
+        a.observe(10, 10, 100, 0, 50, 100);
+        let tight = a.rate_rps();
+        assert!(tight < open / 5.0, "rate {tight} should collapse vs {open}");
+        a.observe(20, 0, 100, 0, 100, 100);
+        assert_eq!(a.rate_rps(), cfg().min_refill_rps, "floor holds at zero headroom");
+        // measured drain caps the rate at 2x completions
+        a.observe(30, 100, 100, 0, 0, 100);
+        a.observe_drain(3.0);
+        assert!((a.rate_rps() - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn demand_beyond_headroom_is_refused_even_with_tokens() {
+        let mut a = AdmissionController::new(&cfg());
+        a.observe(0, 4, 32, 0, 0, 100);
+        assert!(!a.try_admit(0, 5, 4), "demand 5 > headroom 4");
+        assert!(a.try_admit(0, 3, 4));
+        // 3 pages committed: only 1 of the 4 free remains promisable
+        assert!(!a.try_admit(0, 2, 4));
+        assert!(a.try_admit(0, 1, 4));
+    }
+
+    #[test]
+    fn refund_returns_token_and_commitment() {
+        let mut c = cfg();
+        c.burst = 1.0;
+        let mut a = AdmissionController::new(&c);
+        assert!(a.try_admit(0, 2, 10));
+        assert!(!a.try_admit(0, 1, 10), "bucket empty");
+        a.refund(2);
+        assert!(a.try_admit(0, 1, 10), "refund restored the token");
+    }
+
+    /// ISSUE 9 property: under random admit/step/park/cancel
+    /// interleavings against a live overcommitted table, the bucket
+    /// never admits a request whose page demand exceeds live headroom
+    /// (net of pages already promised to accepted requests).
+    #[test]
+    fn prop_bucket_never_admits_past_live_headroom() {
+        for trial in 0..40u64 {
+            let mut rng = Pcg::seeded(0xad31 + trial);
+            let (batch, capacity, page_size) = (4usize, 16usize, 4usize);
+            let pool = 6 + rng.usize_below(7); // overcommitted: 16 would be full
+            let mut t = table(pool, batch, capacity, page_size);
+            let mut c = cfg();
+            c.burst = 2.0 + rng.below(7) as f64;
+            let mut a = AdmissionController::new(&c);
+            let mut now = 0u64;
+            // accepted-but-unadmitted ledger the harness replays into
+            // observe(), mirroring Server::observe_overload's queue scan
+            let mut promised: Vec<usize> = Vec::new();
+            for _step in 0..120 {
+                now += 1 + rng.below(40) as u64;
+                let committed: usize = promised.iter().map(|&l| t.lazy_demand(l)).sum();
+                a.observe(now, t.lazy_free(), t.lazy_total(), committed, promised.len(), 64);
+                match rng.below(4) {
+                    0 => {
+                        // admit attempt with a random prompt length
+                        let len = 1 + rng.usize_below(capacity);
+                        let demand = t.lazy_demand(len);
+                        let headroom = t.lazy_free();
+                        let ok = a.try_admit(now, demand, headroom);
+                        if ok {
+                            assert!(
+                                demand + committed <= headroom,
+                                "trial {trial}: admitted demand {demand} + committed \
+                                 {committed} > headroom {headroom}"
+                            );
+                            promised.push(len);
+                        }
+                    }
+                    1 => {
+                        // a promised request reaches a slot: map its pages
+                        if let Some(len) = promised.pop() {
+                            let slot = rng.usize_below(batch);
+                            let _ = t.ensure(slot, (len - 1) as i32);
+                        }
+                    }
+                    2 => {
+                        // park/cancel: release a random slot's pages
+                        let slot = rng.usize_below(batch);
+                        t.release_slot(slot);
+                    }
+                    _ => {
+                        // an active slot grows a page (generation)
+                        let slot = rng.usize_below(batch);
+                        let pos = rng.usize_below(capacity) as i32;
+                        let _ = t.ensure(slot, pos);
+                    }
+                }
+                assert!(t.check_conservation(), "trial {trial}: conservation broke");
+            }
+        }
+    }
+
+    #[test]
+    fn breaker_opens_after_k_failures_and_probes_half_open() {
+        let mut c = cfg();
+        c.breaker_threshold = 3;
+        c.breaker_cooldown_ms = 100;
+        let mut b = CircuitBreaker::new(&c);
+        assert!(b.allow(0));
+        assert!(!b.on_transient(10));
+        assert!(!b.on_transient(20));
+        assert!(b.on_transient(30), "third consecutive failure opens");
+        assert_eq!(b.state(), BreakerState::Open);
+        assert!(!b.allow(50), "cooldown holds");
+        assert!(b.allow(130), "expired cooldown admits the half-open probe");
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        // probe fails: straight back to open for another cooldown
+        assert!(b.on_transient(140));
+        assert!(!b.allow(200));
+        assert!(b.allow(240));
+        b.on_success();
+        assert_eq!(b.state(), BreakerState::Closed);
+        // a success resets the consecutive count
+        assert!(!b.on_transient(250));
+        b.on_success();
+        assert!(!b.on_transient(260));
+        assert!(!b.on_transient(270));
+        assert_eq!(b.state(), BreakerState::Closed);
+    }
+
+    #[test]
+    fn brownout_escalates_with_dwell_and_deescalates_when_calm() {
+        let mut c = cfg();
+        c.brownout_dwell_ms = 50;
+        let mut b = Brownout::new(&c);
+        assert_eq!(b.observe(0, 0.9), 0, "dwell not yet served");
+        assert_eq!(b.observe(49, 0.9), 0);
+        assert_eq!(b.observe(50, 0.9), 1, "rung 1 after dwell");
+        assert_eq!(b.rung(), 1);
+        assert_eq!(b.clamp(64), c.brownout_max_new);
+        assert!(!b.force_quantized());
+        // dwell restarts per rung
+        assert_eq!(b.observe(60, 0.9), 0);
+        assert_eq!(b.observe(100, 0.9), 1);
+        assert!(b.force_quantized());
+        assert_eq!(b.observe(150, 0.9), 1);
+        assert_eq!(b.rung(), 3);
+        assert_eq!(b.pace_mult(), c.brownout_pace_mult);
+        assert_eq!(b.observe(200, 0.9), 0, "rung 3 is the ceiling");
+        // mid-band pressure holds the rung
+        assert_eq!(b.observe(250, 0.7), 0);
+        assert_eq!(b.rung(), 3);
+        // calm de-escalates one rung per dwell
+        assert_eq!(b.observe(300, 0.1), 0);
+        assert_eq!(b.observe(350, 0.1), -1);
+        assert_eq!(b.rung(), 2);
+        assert_eq!(b.observe(400, 0.1), -1);
+        assert_eq!(b.observe(450, 0.1), -1);
+        assert_eq!(b.rung(), 0);
+        assert_eq!(b.clamp(64), 64);
+        assert_eq!(b.pace_mult(), 1);
+    }
+
+    #[test]
+    fn brownout_failure_ladder_escalation_is_direct() {
+        let mut b = Brownout::new(&cfg());
+        assert!(b.escalate(10));
+        assert!(b.escalate(10));
+        assert!(b.escalate(10));
+        assert!(!b.escalate(10), "ceiling");
+        assert_eq!(b.rung(), 3);
+    }
+}

@@ -245,26 +245,38 @@ pub fn reason(status: u16) -> &'static str {
     }
 }
 
-/// Write a complete non-streaming response (Content-Length framing,
-/// `connection: close` — the front-end is deliberately one-request-per-
-/// connection; keep-alive buys little for token streaming and costs a
-/// slot).
-pub fn write_response(
+/// Write a complete non-streaming response with Content-Length framing.
+/// `keep_alive` selects the connection token: `keep-alive` lets the
+/// peer pipeline the next request on the same socket, `close` is the
+/// one-request-per-connection mode.
+pub fn write_response_conn(
     w: &mut impl Write,
     status: u16,
     extra_headers: &[(&str, &str)],
     body: &[u8],
+    keep_alive: bool,
 ) -> std::io::Result<()> {
     write!(w, "HTTP/1.1 {} {}\r\n", status, reason(status))?;
     write!(w, "content-length: {}\r\n", body.len())?;
     write!(w, "content-type: application/json\r\n")?;
-    write!(w, "connection: close\r\n")?;
+    write!(w, "connection: {}\r\n", if keep_alive { "keep-alive" } else { "close" })?;
     for (n, v) in extra_headers {
         write!(w, "{n}: {v}\r\n")?;
     }
     w.write_all(b"\r\n")?;
     w.write_all(body)?;
     w.flush()
+}
+
+/// [`write_response_conn`] in `connection: close` mode (the PR 8 shape;
+/// existing call sites keep it).
+pub fn write_response(
+    w: &mut impl Write,
+    status: u16,
+    extra_headers: &[(&str, &str)],
+    body: &[u8],
+) -> std::io::Result<()> {
+    write_response_conn(w, status, extra_headers, body, false)
 }
 
 /// Write the head of an SSE-style stream; events follow via
@@ -283,6 +295,33 @@ pub fn write_event(w: &mut impl Write, json: &str) -> std::io::Result<()> {
     w.write_all(b"data: ")?;
     w.write_all(json.as_bytes())?;
     w.write_all(b"\n\n")?;
+    w.flush()
+}
+
+/// Keep-alive stream head: chunked transfer-encoding gives the stream
+/// an in-band terminator ([`write_stream_end_chunked`]'s `0\r\n\r\n`),
+/// so the connection survives for the next pipelined request.
+pub fn write_stream_head_chunked(w: &mut impl Write) -> std::io::Result<()> {
+    w.write_all(
+        b"HTTP/1.1 200 OK\r\ncontent-type: text/event-stream\r\ncache-control: no-store\r\ntransfer-encoding: chunked\r\nconnection: keep-alive\r\n\r\n",
+    )?;
+    w.flush()
+}
+
+/// One SSE event framed as one HTTP chunk (`<hex-size>\r\ndata: <json>\n\n\r\n`).
+pub fn write_event_chunked(w: &mut impl Write, json: &str) -> std::io::Result<()> {
+    let payload_len = "data: ".len() + json.len() + 2;
+    write!(w, "{payload_len:x}\r\n")?;
+    w.write_all(b"data: ")?;
+    w.write_all(json.as_bytes())?;
+    w.write_all(b"\n\n\r\n")?;
+    w.flush()
+}
+
+/// The chunked stream terminator: after this the connection is back in
+/// line for the next request.
+pub fn write_stream_end_chunked(w: &mut impl Write) -> std::io::Result<()> {
+    w.write_all(b"0\r\n\r\n")?;
     w.flush()
 }
 
@@ -495,6 +534,82 @@ mod tests {
                 Err(other) => panic!("trial {trial}: non-typed error {other:?}"),
             }
         }
+    }
+
+    /// Keep-alive extension of the fuzz property: several requests
+    /// back-to-back on one connection — intact, truncated between
+    /// requests, truncated mid-request, or byte-flipped — must yield a
+    /// bounded sequence of Ok(Some)/Ok(None)/typed-error outcomes.
+    /// Never a panic, and never a hang: every iteration either consumes
+    /// bytes or terminates the loop.
+    #[test]
+    fn prop_keepalive_request_sequences_never_panic_or_hang() {
+        let limits = TransportLimits { max_header_bytes: 256, max_headers: 8, max_body_bytes: 64 };
+        let seeds: &[&[u8]] = &[
+            b"POST /v1/generate HTTP/1.1\r\nContent-Length: 10\r\n\r\n0123456789",
+            b"GET /healthz HTTP/1.1\r\n\r\n",
+            b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n4\r\nabcd\r\n0\r\n\r\n",
+            b"GET /v1/stats HTTP/1.1\r\nConnection: keep-alive\r\n\r\n",
+        ];
+        let mut rng = Pcg::seeded(0x6ee9_a11e);
+        for trial in 0..300 {
+            let n_reqs = 2 + rng.usize_below(3);
+            let mut bytes = Vec::new();
+            for _ in 0..n_reqs {
+                bytes.extend_from_slice(seeds[rng.usize_below(seeds.len())]);
+            }
+            match rng.below(3) {
+                // truncate anywhere (between requests or mid-request)
+                0 => bytes.truncate(rng.usize_below(bytes.len() + 1)),
+                // flip a few bytes
+                1 => {
+                    for _ in 0..rng.usize_below(5) {
+                        let at = rng.usize_below(bytes.len());
+                        bytes[at] = rng.below(256) as u8;
+                    }
+                }
+                // leave the pipeline intact
+                _ => {}
+            }
+            let mut r = BufReader::new(&bytes[..]);
+            let mut parsed = 0usize;
+            // bound: each Ok(Some) consumes >= one request line, so the
+            // count can never exceed the number of seeds concatenated
+            for step in 0..(n_reqs + 2) {
+                match read_request(&mut r, &limits) {
+                    Ok(Some(_)) => parsed += 1,
+                    Ok(None) => break, // clean EOF between requests
+                    Err(ServeError::InvalidRequest { .. }) => break,
+                    Err(other) => panic!("trial {trial} step {step}: non-typed error {other:?}"),
+                }
+                assert!(parsed <= n_reqs, "trial {trial}: parsed more requests than were sent");
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_stream_roundtrips_through_the_chunked_body_parser() {
+        let mut out = Vec::new();
+        write_stream_head_chunked(&mut out).unwrap();
+        let head_end = out.windows(4).position(|w| w == b"\r\n\r\n").unwrap() + 4;
+        let head = String::from_utf8_lossy(&out[..head_end]).to_string();
+        assert!(head.contains("transfer-encoding: chunked"));
+        assert!(head.contains("connection: keep-alive"));
+        write_event_chunked(&mut out, "{\"token\":5}").unwrap();
+        write_event_chunked(&mut out, "{\"done\":true}").unwrap();
+        write_stream_end_chunked(&mut out).unwrap();
+        // the chunk section must de-chunk to the exact SSE event bytes
+        let mut r = BufReader::new(&out[head_end..]);
+        let body = read_chunked_body(&mut r, &TransportLimits::default()).unwrap();
+        assert_eq!(
+            String::from_utf8(body).unwrap(),
+            "data: {\"token\":5}\n\ndata: {\"done\":true}\n\n"
+        );
+        // and the terminator leaves the reader at EOF: the next request
+        // read on this connection sees a clean boundary
+        let mut rest = Vec::new();
+        r.read_to_end(&mut rest).unwrap();
+        assert!(rest.is_empty());
     }
 
     #[test]

@@ -90,6 +90,16 @@ run cargo run --release --bin mosa -- chaos --transport --seed 17 \
 run cargo run --release --bin mosa -- loadgen --seed 17 --requests 24 \
     --rate-rps 400 --drain-after-frac 0.75 \
     --out /tmp/loadgen.smoke.json
+# saturation smoke: open-loop arrivals at 4x capacity with overload
+# control (token-bucket admission, brownout ladder, breaker) engaged and
+# seeded wire faults riding along. Exits nonzero unless the overload
+# contract holds: zero leaked pages, a well-formed drain-derived
+# Retry-After on every 429/503, goodput above the floor while shedding,
+# and every accepted stream a bit-identical prefix of its unloaded
+# baseline.
+run cargo run --release --bin mosa -- chaos --saturate --seed 17 \
+    --rate-multiple 4 \
+    --out /tmp/chaos_saturate.smoke.json
 
 # ---------------------------------------------------------------------------
 # publication: keep the smoke reports in-repo so the perf trajectory
@@ -179,6 +189,46 @@ elif tr:
     print(f"transport gate: skipped (stub: {tr.get('reason', 'rust bench did not run')})")
 else:
     print("transport gate: no transport key in the report (pre-transport bench?)")
+# overload gate: the saturation arm at 1x/2x/4x. The 4x ("saturated")
+# point carries the contract: zero leaks, every rejection a well-formed
+# 429/503 with a measured Retry-After, accepted streams bit-identical
+# prefixes of the unloaded baseline, goodput above the floor while
+# shedding. Mock-backed like faults/transport.
+ov = r.get("overload")
+if ov and ov.get("available") is not False:
+    obad = []
+    sat = ov.get("saturated")
+    if not isinstance(sat, dict):
+        obad.append("no saturated (4x) point in the overload arm")
+        sat = {}
+    if sat.get("leaked_pages", 1) != 0:
+        obad.append(f"leaked_pages={sat.get('leaked_pages')}")
+    if sat.get("malformed_rejections", 1) != 0:
+        obad.append(f"malformed_rejections={sat.get('malformed_rejections')}")
+    if sat.get("mismatched_streams", 1) != 0:
+        obad.append(f"mismatched_streams={sat.get('mismatched_streams')}")
+    if not sat.get("rejected", 0) > 0:
+        obad.append(f"rejected={sat.get('rejected')} (4x overload never shed)")
+    if sat.get("goodput_tps", -1) < sat.get("goodput_floor_tps", 0):
+        obad.append(
+            f"goodput={sat.get('goodput_tps')}tps below floor {sat.get('goodput_floor_tps')}tps"
+        )
+    if ov.get("ok") is not True:
+        obad.append("ok=false (overload contract violated)")
+    if obad:
+        print(f"overload gate: FAILED {obad}")
+        sys.exit(1)
+    print(
+        f"overload gate: OK at 4x ({sat.get('completed'):.0f} completed, "
+        f"{sat.get('rejected'):.0f} shed with Retry-After mean "
+        f"{sat.get('retry_after_mean_s', 0):.1f}s, goodput "
+        f"{sat.get('goodput_tps', 0):.1f}tps >= {sat.get('goodput_floor_tps', 0):.1f}tps floor, "
+        f"0 pages leaked)"
+    )
+elif ov:
+    print(f"overload gate: skipped (stub: {ov.get('reason', 'rust bench did not run')})")
+else:
+    print("overload gate: no overload key in the report (pre-overload bench?)")
 if not r.get("available"):
     print(f"decode gates: skipped (decode bench unavailable: {r.get('reason', 'no artifacts')})")
     sys.exit(0)
