@@ -136,9 +136,10 @@ def main() -> int:
     }
     publish(args.pipeline_out, {"schema": "mosa-bench-pipeline-v1", **base})
     # the faults arm (serve::chaos counters), the transport arm
-    # (serve::loadgen latency percentiles), and the overload arm
-    # (saturation goodput/shed counters) are rust-only: stub them with
-    # the same reason so the keys' trajectories are never silently empty
+    # (serve::loadgen latency percentiles), the overload arm (saturation
+    # goodput/shed counters), and the prefix-sharing arm (shared-prompt
+    # fan-out alloc ratios) are rust-only: stub them with the same
+    # reason so the keys' trajectories are never silently empty
     publish(
         args.decode_out,
         {
@@ -147,6 +148,7 @@ def main() -> int:
             "faults": {"available": False, "reason": args.reason},
             "transport": {"available": False, "reason": args.reason},
             "overload": {"available": False, "reason": args.reason},
+            "prefix_sharing": {"available": False, "reason": args.reason},
         },
     )
     return 0 if ok else 1

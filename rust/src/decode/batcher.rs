@@ -29,9 +29,26 @@
 //! on a demand-debiting page budget (`kvcache::AdmissionBudget`), and
 //! `prefill_plan` previews the prefill wave's page demand so the pool
 //! is backed (parking victims if needed) before prompts are consumed.
+//!
+//! With `enable_prefix_share` the batcher additionally keeps a radix
+//! prefix index (`decode::prefix`) over completed prompts: a slot whose
+//! prompt finishes prefilling registers its lazy-kind pages (pinned so
+//! they outlive the slot), and admission maps the longest indexed prefix
+//! of a new request into its row by `retain` instead of `alloc` — the
+//! shared-system-prompt traffic shape costs the pool one copy of the
+//! prefix instead of one per request. Prefill still teacher-forces every
+//! token (MoSA's bounded per-head caches carry whole-history selection
+//! state only a full replay rebuilds), so streams stay bit-identical to
+//! the unshared twin by construction; rewrites of token-identical
+//! positions into shared pages are byte-identical and need no
+//! copy-on-write (the slot's `shared_until` watermark records this),
+//! while the first divergent write splits the page via
+//! `PageTable::prepare_write`. Parking drops only the slot's own refs —
+//! resume re-enters through the index and re-retains.
 
 use std::collections::VecDeque;
 
+use super::prefix::PrefixIndex;
 use crate::kvcache::SharedPageTable;
 
 #[derive(Debug, Clone)]
@@ -67,6 +84,9 @@ struct Slot {
     needs_reset: bool,
     /// last sampled token, awaiting dispatch
     last: Option<i32>,
+    /// prompt registered in the prefix index (reset by park so a replay
+    /// can re-register if the index evicted it meanwhile)
+    registered: bool,
 }
 
 impl Slot {
@@ -130,6 +150,8 @@ pub struct ContinuousBatcher {
     /// to the pools itself whenever the slot empties (park, retirement,
     /// cancellation, Drop) — the page-leak backstop for aborted loops
     pages: Option<SharedPageTable>,
+    /// prefix-sharing index over registered prompts (requires `pages`)
+    prefix: Option<PrefixIndex>,
 }
 
 impl ContinuousBatcher {
@@ -141,6 +163,7 @@ impl ContinuousBatcher {
             eos,
             parked: 0,
             pages: None,
+            prefix: None,
         }
     }
 
@@ -161,8 +184,14 @@ impl ContinuousBatcher {
         self.pending.push_back(Pending::Fresh(req));
     }
 
-    fn admit_into(slot: &mut Option<Slot>, entry: Pending) {
-        *slot = Some(match entry {
+    /// Materialise `entry` into (empty) slot `i`. With prefix sharing
+    /// enabled, the longest indexed prefix of the entry's history maps
+    /// into the freshly admitted row by `retain` before any page is
+    /// allocated — for both fresh requests and parked resumes (a replay
+    /// must re-enter through the index, never re-allocate what it still
+    /// shares).
+    fn place(&mut self, i: usize, entry: Pending) {
+        let s = match entry {
             Pending::Fresh(req) => Slot {
                 id: req.id,
                 prompt: req.prompt,
@@ -173,11 +202,16 @@ impl ContinuousBatcher {
                 max_new: req.max_new,
                 needs_reset: true,
                 last: None,
+                registered: false,
             },
             // a parked sequence resumes from scratch: reset cache, replay
             // its history, keep generating where it left off
             Pending::Resume(s) => s,
-        });
+        };
+        if let (Some(idx), Some(t)) = (self.prefix.as_mut(), self.pages.as_ref()) {
+            share_admitted(idx, t, i, &s);
+        }
+        self.slots[i] = Some(s);
     }
 
     /// Move pending requests into free slots; returns how many admitted.
@@ -190,16 +224,29 @@ impl ContinuousBatcher {
     /// serving gates on pool headroom). The head of the queue blocks the
     /// tail: FIFO order is preserved, no starvation by smaller requests.
     pub fn admit_if(&mut self, mut gate: impl FnMut(usize) -> bool) -> usize {
+        self.admit_if_shared(|h, _| gate(h))
+    }
+
+    /// `admit_if` with the sharing-aware gate signature: each admission
+    /// is offered `(history_len, shared_prefix_tokens)` — the tokens it
+    /// will teacher-force and how many of them the prefix index already
+    /// holds pages for — so a page-demand budget can debit only the
+    /// *unshared* remainder (`AdmissionBudget::admit_shared`).
+    pub fn admit_if_shared(&mut self, mut gate: impl FnMut(usize, usize) -> bool) -> usize {
         let mut n = 0;
-        for slot in self.slots.iter_mut() {
-            if slot.is_some() {
+        for i in 0..self.slots.len() {
+            if self.slots[i].is_some() {
                 continue;
             }
-            let head_ok = self.pending.front().map(|e| gate(e.history_len())).unwrap_or(false);
+            let head_ok = match self.pending.front() {
+                Some(e) => gate(e.history_len(), self.entry_shared_tokens(e)),
+                None => false,
+            };
             if !head_ok {
                 break;
             }
-            Self::admit_into(slot, self.pending.pop_front().unwrap());
+            let entry = self.pending.pop_front().unwrap();
+            self.place(i, entry);
             n += 1;
         }
         n
@@ -209,16 +256,88 @@ impl ContinuousBatcher {
     /// sequence can always be served). Returns 0 if nothing is pending
     /// or no slot is free.
     pub fn admit_one(&mut self) -> usize {
-        for slot in self.slots.iter_mut() {
-            if slot.is_none() {
+        for i in 0..self.slots.len() {
+            if self.slots[i].is_none() {
                 if let Some(entry) = self.pending.pop_front() {
-                    Self::admit_into(slot, entry);
+                    self.place(i, entry);
                     return 1;
                 }
                 return 0;
             }
         }
         0
+    }
+
+    /// Build (or drop) the prefix-sharing index. Requires an attached
+    /// page table; sized from its layout (page granularity, lazy kinds).
+    /// Turning sharing off unpins every indexed page. Idempotent.
+    pub fn enable_prefix_share(&mut self, on: bool) {
+        if !on {
+            if let (Some(mut idx), Some(t)) = (self.prefix.take(), self.pages.as_ref()) {
+                t.with(|pt| {
+                    idx.clear(|ki, p| {
+                        pt.unpin_page(ki, p);
+                    })
+                });
+            }
+            self.prefix = None;
+            return;
+        }
+        if self.prefix.is_some() {
+            return; // already on; rebuilding would strand the old pins
+        }
+        let t = self.pages.as_ref().expect("prefix sharing requires attach_pages first");
+        let (ps, kinds) = t.with(|pt| {
+            let kinds = pt
+                .lazy_kind_indices()
+                .into_iter()
+                .map(|ki| (ki, pt.layout().kinds[ki].pages_per_slot))
+                .collect();
+            (pt.layout().page_size, kinds)
+        });
+        self.prefix = Some(PrefixIndex::new(ps, kinds));
+    }
+
+    /// Tokens of `prompt` the prefix index can back with already-resident
+    /// pages if admitted now (0 when sharing is off or the match is
+    /// shorter than one page). The admission-control peek: `Server` sizes
+    /// a request's *unshared* page demand with this before debiting the
+    /// token bucket.
+    pub fn shared_prefix_tokens(&self, prompt: &[i32]) -> usize {
+        match &self.prefix {
+            Some(idx) => effective_shared(idx.peek(prompt), prompt.len(), idx.page_size()),
+            None => 0,
+        }
+    }
+
+    /// `shared_prefix_tokens` for a queue entry (a resumed entry matches
+    /// through its prompt; its replayed generation is never indexed).
+    fn entry_shared_tokens(&self, e: &Pending) -> usize {
+        let Some(idx) = &self.prefix else { return 0 };
+        let (m, hlen) = match e {
+            Pending::Fresh(r) => (idx.peek(&r.prompt), r.prompt.len()),
+            Pending::Resume(s) => (idx.peek(&s.prompt), s.history_len()),
+        };
+        effective_shared(m, hlen, idx.page_size())
+    }
+
+    /// Evict least-recently-used prefixes until at least `min_pages`
+    /// index pins are dropped; returns how many were. The pool-pressure
+    /// relief valve: the serving loop tries this before parking a live
+    /// sequence, since an unpinned cold prefix frees pages no one is
+    /// computing against.
+    pub fn evict_prefixes(&mut self, min_pages: usize) -> usize {
+        let (Some(idx), Some(t)) = (self.prefix.as_mut(), self.pages.as_ref()) else { return 0 };
+        t.with(|pt| {
+            idx.evict_lru(min_pages, |ki, p| {
+                pt.unpin_page(ki, p);
+            })
+        })
+    }
+
+    /// Whether prefix sharing is enabled.
+    pub fn prefix_share_enabled(&self) -> bool {
+        self.prefix.is_some()
     }
 
     /// Preview the next dispatch per slot without consuming anything:
@@ -268,7 +387,11 @@ impl ContinuousBatcher {
             matches!(self.inflight[i], Inflight::Idle),
             "park of slot {i} with a dispatch in flight"
         );
-        // idempotent: parking an already-empty slot is a no-op
+        // idempotent: parking an already-empty slot is a no-op.
+        // release_slot only decrements refcounts: pages the prefix index
+        // pins (or other slots share) stay resident — a park can never
+        // free a page someone else still holds, and the resume
+        // re-admission re-retains them through the index.
         let mut s = self.slots[i].take()?;
         if let Some(t) = &self.pages {
             t.release_slot(i);
@@ -278,6 +401,7 @@ impl ContinuousBatcher {
         s.replay = s.generated.len();
         s.needs_reset = true;
         s.last = None;
+        s.registered = false;
         self.parked += 1;
         let id = s.id;
         self.pending.push_back(Pending::Resume(s));
@@ -448,11 +572,28 @@ impl ContinuousBatcher {
 
     /// Apply one dispatch's sampled tokens; returns retired sequences.
     /// With a page table attached, a retiring slot's pages go straight
-    /// back to the pool.
+    /// back to the pool. With prefix sharing on, a slot whose prompt
+    /// just finished writing registers it in the index — before any
+    /// retirement, so the pins land while the pages are still mapped.
     pub fn advance(&mut self, sampled: &[i32]) -> Vec<FinishedSeq> {
         assert_eq!(sampled.len(), self.slots.len());
         let mut done = Vec::new();
         let pages = self.pages.as_ref();
+        let prefix = self.prefix.as_mut();
+        if let (Some(idx), Some(t)) = (prefix, pages) {
+            for (i, slot) in self.slots.iter_mut().enumerate() {
+                if matches!(self.inflight[i], Inflight::Idle) {
+                    continue;
+                }
+                let Some(s) = slot.as_mut() else { continue };
+                // the dispatch that carried the last prompt token has
+                // completed: the prompt's pages now hold its content
+                if !s.registered && s.fed >= s.prompt.len() {
+                    s.registered = true;
+                    register_prefix(idx, t, i, s);
+                }
+            }
+        }
         for (i, slot) in self.slots.iter_mut().enumerate() {
             let kind = self.inflight[i];
             self.inflight[i] = Inflight::Idle;
@@ -476,12 +617,87 @@ impl ContinuousBatcher {
     }
 }
 
+/// Sharing worth acting on: the match capped one token short of the
+/// history (the `LastPrompt` flow always feeds at least one token) and
+/// zeroed when it does not cover a full page (sharing a lone partial
+/// page saves nothing — its first write copy-on-writes it anyway).
+fn effective_shared(matched: usize, history_len: usize, page_size: usize) -> usize {
+    let m = matched.min(history_len.saturating_sub(1));
+    if m < page_size {
+        0
+    } else {
+        m
+    }
+}
+
+/// Map the longest indexed prefix of a freshly admitted slot's history
+/// into row `i` by `retain`, and record the watermark below which the
+/// admission's teacher-forced rewrites into those shared pages are
+/// byte-identical (token-identical prefix ⇒ identical KV ⇒ no
+/// copy-on-write needed; the first write at/past the watermark into a
+/// still-shared page splits it via `prepare_write`).
+fn share_admitted(idx: &mut PrefixIndex, table: &SharedPageTable, i: usize, s: &Slot) {
+    let ps = idx.page_size();
+    let hist: Vec<i32> = (0..s.history_len()).map(|j| s.history_token(j)).collect();
+    let m = idx.lookup(&hist);
+    let tokens = effective_shared(m.tokens, hist.len(), ps);
+    if tokens == 0 {
+        return;
+    }
+    let n_pages = tokens.div_ceil(ps);
+    table.with(|t| {
+        for (ki, pages) in &m.pages {
+            let take = n_pages.min(pages.len());
+            t.share_into(i, *ki, &pages[..take]);
+        }
+        t.set_shared_watermark(i, tokens);
+    });
+}
+
+/// Register slot `i`'s freshly written prompt in the prefix index,
+/// pinning the lazy-kind pages of any newly created tree depths so the
+/// prefix outlives the slot. Also raises the slot's own watermark to its
+/// prompt length: the pin makes its pages refcount > 1, and without the
+/// watermark the slot's next generation write would spuriously
+/// copy-on-write every full prompt page instead of only the partial tail
+/// it actually diverges into.
+fn register_prefix(idx: &mut PrefixIndex, table: &SharedPageTable, i: usize, s: &Slot) {
+    let ps = idx.page_size();
+    if s.prompt.len() < ps {
+        return;
+    }
+    let n_pages = s.prompt.len().div_ceil(ps);
+    let kinds: Vec<(usize, usize)> = idx.kinds().to_vec();
+    table.with(|t| {
+        let rows: Vec<Vec<u32>> =
+            kinds.iter().map(|&(ki, _)| t.row_pages(i, ki, n_pages)).collect();
+        idx.register(
+            &s.prompt,
+            |depth, ki| {
+                let at = kinds.iter().position(|&(k, _)| k == ki)?;
+                rows[at].get(depth).copied()
+            },
+            |_depth, ki, p| t.pin_page(ki, p),
+        );
+        t.set_shared_watermark(i, s.prompt.len().max(t.shared_watermark(i)));
+    });
+}
+
 impl Drop for ContinuousBatcher {
     /// Page-leak backstop: whatever path abandoned this batcher (panic
     /// unwinding through `generate`, an early `?` return, a cancelled
-    /// serve loop), every occupied slot's pages go back to the pools.
+    /// serve loop), every occupied slot's pages go back to the pools —
+    /// and the prefix index's pins come off first, so teardown provably
+    /// returns the pool to fully free with a zero shared-page count.
     fn drop(&mut self) {
         if let Some(t) = &self.pages {
+            if let Some(idx) = self.prefix.as_mut() {
+                t.with(|pt| {
+                    idx.clear(|ki, p| {
+                        pt.unpin_page(ki, p);
+                    })
+                });
+            }
             for i in 0..self.slots.len() {
                 if self.slots[i].is_some() {
                     t.release_slot(i);
@@ -792,8 +1008,149 @@ mod tests {
         assert!(table.check_conservation());
     }
 
+    /// Drive slot 0 of `b` through its whole prompt so `advance`
+    /// registers it in the prefix index (pages must be ensured first).
+    fn prefill_owner(b: &mut ContinuousBatcher, table: &SharedPageTable, prompt_len: usize) {
+        table.ensure(0, prompt_len as i32 - 1).unwrap();
+        let (_tokens, plen) = b.prefill_wave(prompt_len);
+        assert_eq!(plen[0] as usize, prompt_len);
+        let sampled = vec![90i32; table.slots()];
+        assert!(b.advance(&sampled).is_empty());
+    }
+
     #[test]
-    fn prefill_wave_consumes_prompts_and_overflow_streams() {
+    fn admission_maps_shared_prefix_by_retain_and_cow_splits_on_divergence() {
+        let table = small_table(2); // ps 4, pool 8
+        {
+            let mut b = ContinuousBatcher::new(2, None);
+            b.attach_pages(table.clone());
+            b.enable_prefix_share(true);
+            b.submit(req(1, &[1, 2, 3, 4, 5, 6, 7, 8], 4));
+            b.admit();
+            prefill_owner(&mut b, &table, 8);
+            // the completed prompt registered: 2 pages pinned, and the
+            // owner's own watermark covers its prompt so generation does
+            // not copy-on-write the now-pinned full pages
+            assert_eq!(table.pinned_pages(), 2);
+            assert_eq!(table.with(|t| t.shared_watermark(0)), 8);
+            // an identical prompt is admission-visible as shared (capped
+            // one short of the history: the last token always feeds)
+            assert_eq!(b.shared_prefix_tokens(&[1, 2, 3, 4, 5, 6, 7, 8]), 7);
+            assert_eq!(b.shared_prefix_tokens(&[9, 9, 9, 9]), 0);
+
+            let allocs = table.allocs_total();
+            b.submit(req(2, &[1, 2, 3, 4, 5, 6, 7, 8], 4));
+            assert_eq!(b.admit(), 1);
+            // both pages mapped by retain — zero fresh allocations
+            assert_eq!(table.allocs_total(), allocs);
+            assert_eq!(table.mapped_pages(1), 2);
+            assert_eq!(table.with(|t| t.shared_watermark(1)), 7);
+            assert_eq!(table.shared_pages(), 2);
+            assert!(table.check_conservation());
+
+            // the write at the watermark splits only the partial page:
+            // one fresh allocation, one copy, row entry swapped
+            let copies = table.prepare_write(1, 7).unwrap();
+            assert_eq!(copies.len(), 1);
+            assert_eq!(copies[0].kind, "dense");
+            assert_eq!(table.allocs_total(), allocs + 1);
+            assert_eq!(table.cow_copies(), 1);
+            assert_eq!(table.shared_pages(), 1); // page 0 still shared
+            assert!(table.check_conservation());
+        }
+        // teardown: pins and rows all released, nothing shared, no leaks
+        assert_eq!(table.shared_pages(), 0);
+        assert_eq!(table.pinned_pages(), 0);
+        assert_eq!(table.pages_free(), table.pool_pages_total());
+        assert!(table.check_conservation());
+    }
+
+    #[test]
+    fn park_resume_re_retains_through_the_index() {
+        let table = small_table(1);
+        let mut b = ContinuousBatcher::new(1, None);
+        b.attach_pages(table.clone());
+        b.enable_prefix_share(true);
+        b.submit(req(1, &[1, 2, 3, 4, 5, 6, 7, 8], 4));
+        b.admit();
+        prefill_owner(&mut b, &table, 8);
+        // park: the slot's own refs drop, but the index pins keep the
+        // prefix resident — pages stay in use with no slot mapping them
+        assert_eq!(b.park(0), Some(1));
+        assert_eq!(table.mapped_pages(0), 0);
+        assert_eq!(table.pages_in_use(), 2);
+        // the replayed admission re-enters through the index: pages come
+        // back by retain, not by a second allocation
+        let allocs = table.allocs_total();
+        assert_eq!(b.admit(), 1);
+        assert_eq!(table.allocs_total(), allocs);
+        assert_eq!(table.mapped_pages(0), 2);
+        assert_eq!(table.shared_pages(), 2);
+        assert!(table.check_conservation());
+    }
+
+    #[test]
+    fn evict_and_disable_unpin_prefixes() {
+        let table = small_table(1);
+        let mut b = ContinuousBatcher::new(1, None);
+        b.attach_pages(table.clone());
+        b.enable_prefix_share(true);
+        b.submit(req(1, &[1, 2, 3, 4, 5, 6, 7, 8], 2));
+        b.admit();
+        prefill_owner(&mut b, &table, 8);
+        assert_eq!(table.pinned_pages(), 2);
+        // pressure relief: evicting drops pins (pages stay resident for
+        // the slot that still maps them); the chain unwinds deepest leaf
+        // first, and once both depths are gone the prefix stops matching
+        assert_eq!(b.evict_prefixes(2), 2);
+        assert_eq!(table.pinned_pages(), 0);
+        assert_eq!(b.shared_prefix_tokens(&[1, 2, 3, 4, 5, 6, 7, 8]), 0);
+        // disabling after a re-registration also unpins everything
+        assert_eq!(b.park(0), Some(1));
+        assert_eq!(b.admit(), 1);
+        prefill_owner(&mut b, &table, 8);
+        assert!(table.pinned_pages() > 0);
+        b.enable_prefix_share(false);
+        assert!(!b.prefix_share_enabled());
+        assert_eq!(table.pinned_pages(), 0);
+        assert!(table.check_conservation());
+    }
+
+    #[test]
+    fn short_prompts_never_register_or_share() {
+        let table = small_table(2);
+        let mut b = ContinuousBatcher::new(2, None);
+        b.attach_pages(table.clone());
+        b.enable_prefix_share(true);
+        b.submit(req(1, &[1, 2, 3], 2)); // < page_size
+        b.admit();
+        prefill_owner(&mut b, &table, 3);
+        assert_eq!(table.pinned_pages(), 0);
+        assert_eq!(b.shared_prefix_tokens(&[1, 2, 3]), 0);
+        assert!(table.check_conservation());
+    }
+
+    #[test]
+    fn admit_if_shared_offers_the_gate_the_shared_token_count() {
+        let table = small_table(2);
+        let mut b = ContinuousBatcher::new(2, None);
+        b.attach_pages(table.clone());
+        b.enable_prefix_share(true);
+        let mut seen = Vec::new();
+        b.submit(req(1, &[1, 2, 3, 4, 5, 6, 7, 8], 4));
+        b.admit_if_shared(|h, m| {
+            seen.push((h, m));
+            true
+        });
+        prefill_owner(&mut b, &table, 8);
+        b.submit(req(2, &[1, 2, 3, 4, 5, 6, 7, 8], 4));
+        b.admit_if_shared(|h, m| {
+            seen.push((h, m));
+            true
+        });
+        // first admission saw an empty index; the second got the credit
+        assert_eq!(seen, vec![(8, 0), (8, 7)]);
+    }
         let mut b = ContinuousBatcher::new(2, None);
         b.submit(req(1, &[1, 2], 1)); // fits the window
         b.submit(req(2, &[1, 2, 3, 4, 5], 1)); // overflows a 4-wide window

@@ -59,11 +59,12 @@
 //! verify.sh gate greedy streams against.
 
 pub mod batcher;
+pub mod prefix;
 pub mod sample;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::kvcache::{PageLayout, PagePressure, PageTable, SharedPageTable};
+use crate::kvcache::{CowCopy, PageLayout, PagePressure, PageTable, SharedPageTable};
 use crate::runtime::engine::{
     fill_vec_f32, lit_f32, lit_i32, lit_scalar_f32, lit_scalar_i32, to_vec_f32, to_vec_i32, Engine,
 };
@@ -265,6 +266,19 @@ pub trait KvCacheStore {
     fn shared_table(&self) -> Option<SharedPageTable> {
         None
     }
+
+    /// Copy-on-write hook, called by `prepare_pages` *before* the
+    /// dispatch whose scatter would write a shared page: for each
+    /// [`CowCopy`] the engine must copy page `src` → `dst` in every pool
+    /// leaf of the named kind — K, V, position metadata, and (quantized
+    /// pools) the `_scale` sibling — so the freshly split private page
+    /// starts byte-identical to the shared original. The page-table row
+    /// swap already happened host-side; skipping the device copy is
+    /// sound only for positions the admission re-feeds anyway (the
+    /// current mock-backed engines rely on exactly that — every fed
+    /// position is rewritten before any step can attend it — so the
+    /// default is a no-op; a real device family must implement it).
+    fn copy_pages(&self, _copies: &[CowCopy]) {}
 }
 
 /// The fixed per-slot contiguous layout (the `--no-paged` A/B twin).
@@ -350,6 +364,15 @@ impl KvCacheStore for PagedKvCache {
 
     fn shared_table(&self) -> Option<SharedPageTable> {
         Some(self.table.clone())
+    }
+
+    fn copy_pages(&self, copies: &[CowCopy]) {
+        // page-pool leaves live in the session's CacheState, not here;
+        // the split is recorded host-side (row swapped, refs moved) and
+        // the write-before-attend invariant keeps the mock-backed
+        // families sound without moving bytes. A device family hooks its
+        // page-copy kernel in at this point.
+        log::debug!("copy-on-write split of {} page(s) (payload + scale siblings)", copies.len());
     }
 }
 
@@ -540,24 +563,37 @@ impl<'m> DecodeSession<'m> {
     /// then skips its own all-lanes-active fallback.
     pub fn prepare_pages(&mut self, plan: &[SlotPlan]) -> std::result::Result<(), PagePressure> {
         let table = self.pages.as_ref().expect("prepare_pages on a contiguous session");
-        let res = table.with(|t| {
+        let copies = table.with(|t| {
             assert_eq!(plan.len(), t.slots(), "plan arity != slots");
             for (i, sp) in plan.iter().enumerate() {
-                if !sp.active || sp.reset {
+                // a resetting slot remaps from scratch — unless its row
+                // was just seeded by a prefix-sharing admission (nonzero
+                // shared watermark): those retained mappings must survive
+                // the admission reset or sharing would undo itself before
+                // the first dispatch. Skipping the wipe is sound because
+                // every fed position is rewritten before any step can
+                // attend it (stale lanes always claim positions at or
+                // beyond the write frontier, which causality masks).
+                if !sp.active || (sp.reset && t.shared_watermark(i) == 0) {
                     t.release_slot(i);
                 }
             }
+            let mut copies = Vec::new();
             for (i, sp) in plan.iter().enumerate() {
                 if sp.active {
                     t.ensure(i, sp.pos)?;
+                    // copy-on-write: any still-shared page this dispatch
+                    // writes at/past the slot's watermark goes private
+                    copies.extend(t.prepare_write(i, sp.pos)?);
                 }
             }
-            Ok(())
-        });
-        if res.is_ok() {
-            self.pages_prepared = true;
+            Ok(copies)
+        })?;
+        if !copies.is_empty() {
+            self.store.copy_pages(&copies);
         }
-        res
+        self.pages_prepared = true;
+        Ok(())
     }
 
     /// Pages currently mapped for one slot (paged sessions; 0 otherwise).
@@ -993,6 +1029,12 @@ pub struct GenerateOptions {
     /// paged twin — the differential reference for the dequant math;
     /// greedy streams are identical at micro scale (gated in verify.sh).
     pub use_quantized: bool,
+    /// share already-resident KV pages across requests with a common
+    /// token prefix (radix index + copy-on-write; paged sessions only).
+    /// Prefill still feeds every token, so streams are bit-identical to
+    /// the `--no-prefix-share` twin by construction — sharing changes
+    /// page *allocations*, never content (gated in verify.sh).
+    pub use_prefix_share: bool,
 }
 
 impl Default for GenerateOptions {
@@ -1007,6 +1049,7 @@ impl Default for GenerateOptions {
             device_sample: true,
             use_paged: true,
             use_quantized: true,
+            use_prefix_share: true,
         }
     }
 }
@@ -1024,6 +1067,13 @@ pub struct GenStats {
     pub paged: bool,
     /// whether the quantized (i8 + scales) paged family served the run
     pub quantized: bool,
+    /// whether prefix sharing (radix index + copy-on-write) was enabled
+    pub prefix_share: bool,
+    /// cumulative pool page allocations (prefix-shared mappings retain
+    /// instead, so sharing shows up as this number shrinking)
+    pub page_allocs: u64,
+    /// copy-on-write page splits performed before dispatches
+    pub cow_copies: u64,
 }
 
 /// Serve `requests` to completion through a continuous batcher; returns
@@ -1088,6 +1138,8 @@ pub fn generate_with_stats(
     // strand pool pages
     if let Some(table) = session.shared_pages() {
         batcher.attach_pages(table);
+        batcher.enable_prefix_share(opts.use_prefix_share);
+        stats.prefix_share = batcher.prefix_share_enabled();
     }
     for mut r in requests {
         // the cache holds `cap` positions; writes beyond it are dropped by
@@ -1135,7 +1187,11 @@ pub fn generate_with_stats(
     // slot can always reach capacity (pool_pages >= pages_per_slot).
     let admit = |batcher: &mut ContinuousBatcher, session: &DecodeSession| -> usize {
         let n = match session.admission_budget() {
-            Some(mut budget) => batcher.admit_if(|history| budget.admit(history)),
+            // the budget debits only the *unshared* remainder of each
+            // history: pages the prefix index already holds cost nothing
+            Some(mut budget) => {
+                batcher.admit_if_shared(|history, shared| budget.admit_shared(history, shared))
+            }
             None => batcher.admit(),
         };
         if n == 0 && batcher.active() == 0 {
@@ -1156,6 +1212,12 @@ pub fn generate_with_stats(
                     pressure: &PagePressure,
                     parked: &mut usize|
      -> Result<()> {
+        // first relief valve: a cold indexed prefix holds pages nobody
+        // is computing against — unpin one of those before parking live
+        // work (the caller's retry loop re-runs prepare either way)
+        if batcher.evict_prefixes(1) > 0 {
+            return Ok(());
+        }
         let victim = plan
             .iter()
             .enumerate()
@@ -1269,6 +1331,10 @@ pub fn generate_with_stats(
         };
         stats.dispatches += 1;
         finished.extend(batcher.advance(&sampled));
+    }
+    if let Some(table) = session.shared_pages() {
+        stats.page_allocs = table.allocs_total();
+        stats.cow_copies = table.cow_copies();
     }
     Ok((finished, stats))
 }

@@ -1,0 +1,427 @@
+//! Radix prefix index: the host-side directory of resident shared
+//! prefixes for the paged KV-cache.
+//!
+//! The dominant production traffic shape — one system prompt fanned out
+//! across many requests — re-prefills token-identical prefixes whose KV
+//! pages are already resident under another slot. This index maps token
+//! sequences to the physical pages holding their KV content, at page
+//! granularity: a radix tree whose nodes each cover one page worth of
+//! tokens (`page_size` ids), carrying the pinned physical page per lazy
+//! pool kind for that depth. Admission walks the tree with the new
+//! prompt, and every matched depth is mapped into the new slot's
+//! page-table row by `PageAllocator::retain` instead of `alloc` — the
+//! prefix costs the pool nothing. A *partially* matched page (the match
+//! ends mid-page) is still mapped: the first divergent write triggers
+//! the copy-on-write split in `PageTable::prepare_write`, so the sharer
+//! pays one page copy instead of re-allocating the whole prefix.
+//!
+//! Only lazy (position-addressed) kinds participate. Bounded kinds —
+//! MoSA k-slot caches, local rings — hold *selection state over the
+//! whole history*, which is only equal between two requests at exactly
+//! equal histories; the admission's teacher-forced prefill rebuilds them
+//! instead (and that is also why prefill compute is not yet skipped for
+//! matched tokens: a suffix-offset prefill program plus a bounded-state
+//! snapshot would be needed — see PERF.md §12).
+//!
+//! The index owns one reference per pinned page (recorded in
+//! `PageTable::pin_page`, so conservation stays airtight), which keeps a
+//! registered prefix resident across parks and retirements of every
+//! slot that ever mapped it. Under pool pressure the serving loop evicts
+//! least-recently-used leaves (`evict_lru`) before parking a victim —
+//! pins are a cache, never a leak: teardown unpins everything and the
+//! shared-page count provably returns to zero.
+
+/// One page-depth of a registered prefix: `tokens` are the ids this
+/// node covers (exactly `page_size` for an interior node, fewer for the
+/// tail of a prompt that ends mid-page), `pages` the pinned physical
+/// page per participating kind.
+#[derive(Debug)]
+struct Node {
+    tokens: Vec<i32>,
+    /// (kind index, physical page) — omits kinds whose `pages_per_slot`
+    /// is shallower than this depth or whose pin saturated
+    pages: Vec<(usize, u32)>,
+    children: Vec<Node>,
+    last_used: u64,
+}
+
+impl Node {
+    fn is_leaf(&self) -> bool {
+        self.children.is_empty()
+    }
+}
+
+/// What a lookup matched: the token count and, per kind, the contiguous
+/// physical pages (depth 0 upward) the new slot can map by retain. The
+/// last page of a kind's list is partially matched iff
+/// `tokens % page_size != 0` — it shares until the first divergent
+/// write copy-on-writes it.
+#[derive(Debug, Default, Clone)]
+pub struct PrefixMatch {
+    pub tokens: usize,
+    /// (kind index, pages from depth 0, gap-free)
+    pub pages: Vec<(usize, Vec<u32>)>,
+}
+
+/// Page ids to register or unpin, per kind, for one prefix operation.
+pub type KindPages = Vec<(usize, u32)>;
+
+#[derive(Debug)]
+pub struct PrefixIndex {
+    page_size: usize,
+    /// participating (kind index, pages_per_slot) — the lazy kinds
+    kinds: Vec<(usize, usize)>,
+    roots: Vec<Node>,
+    clock: u64,
+    nodes: usize,
+}
+
+impl PrefixIndex {
+    pub fn new(page_size: usize, kinds: Vec<(usize, usize)>) -> PrefixIndex {
+        assert!(page_size > 0);
+        PrefixIndex { page_size, kinds, roots: Vec::new(), clock: 0, nodes: 0 }
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    /// Participating (kind index, pages_per_slot) pairs.
+    pub fn kinds(&self) -> &[(usize, usize)] {
+        &self.kinds
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.nodes
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    /// Longest common prefix of two token runs.
+    fn lcp(a: &[i32], b: &[i32]) -> usize {
+        a.iter().zip(b).take_while(|(x, y)| x == y).count()
+    }
+
+    /// Register `prompt` (its KV fully written under some slot), pinning
+    /// pages through `pin`: `pin(depth, kind, page)` must retain the page
+    /// on the index's behalf and return false on saturation (the depth is
+    /// then simply not indexed for that kind). `page_at(depth, kind)`
+    /// supplies the owning slot's physical page for that depth, `None`
+    /// when the kind's row is shallower. Depths already in the tree are
+    /// left as-is — their pages were pinned by an earlier registration
+    /// and may legitimately differ from this owner's (token-identical
+    /// content either way).
+    pub fn register(
+        &mut self,
+        prompt: &[i32],
+        mut page_at: impl FnMut(usize, usize) -> Option<u32>,
+        mut pin: impl FnMut(usize, usize, u32) -> bool,
+    ) {
+        if prompt.len() < self.page_size {
+            return; // nothing fully paged to share
+        }
+        let now = self.tick();
+        let ps = self.page_size;
+        let kinds = self.kinds.clone();
+        let mut children = &mut self.roots;
+        let mut depth = 0usize;
+        for block in prompt.chunks(ps) {
+            // a partial tail only registers if no existing child already
+            // covers it as a prefix (the full child's page serves lookups)
+            if block.len() < ps
+                && children.iter().any(|c| Self::lcp(&c.tokens, block) == block.len())
+            {
+                break;
+            }
+            let at = children.iter().position(|c| c.tokens == block);
+            let at = match at {
+                Some(i) => i,
+                None => {
+                    let mut pages = Vec::new();
+                    for &(ki, ppk) in &kinds {
+                        if depth >= ppk {
+                            continue;
+                        }
+                        if let Some(p) = page_at(depth, ki) {
+                            if pin(depth, ki, p) {
+                                pages.push((ki, p));
+                            }
+                        }
+                    }
+                    children.push(Node {
+                        tokens: block.to_vec(),
+                        pages,
+                        children: Vec::new(),
+                        last_used: now,
+                    });
+                    self.nodes += 1;
+                    children.len() - 1
+                }
+            };
+            children[at].last_used = now;
+            if block.len() < ps {
+                break; // a tail node ends the path
+            }
+            depth += 1;
+            children = &mut children[at].children;
+        }
+    }
+
+    /// Walk `prompt` down the tree, collecting the longest token match
+    /// and the contiguous per-kind pages covering it. Touches the path
+    /// for LRU. A kind's list stops at its first unindexed depth so the
+    /// mapping into a row segment is always gap-free.
+    pub fn lookup(&mut self, prompt: &[i32]) -> PrefixMatch {
+        let now = self.tick();
+        self.walk(prompt, Some(now))
+    }
+
+    /// `lookup` without the LRU touch — for demand estimation on the
+    /// admission path, where no pages are mapped yet.
+    pub fn peek(&self, prompt: &[i32]) -> usize {
+        self.walk_ref(prompt).tokens
+    }
+
+    fn walk(&mut self, prompt: &[i32], touch: Option<u64>) -> PrefixMatch {
+        let ps = self.page_size;
+        let mut m = PrefixMatch { tokens: 0, pages: self.kinds.iter().map(|&(ki, _)| (ki, Vec::new())).collect() };
+        let mut alive: Vec<bool> = vec![true; self.kinds.len()];
+        let mut children = &mut self.roots;
+        let mut rest = prompt;
+        loop {
+            let block = &rest[..rest.len().min(ps)];
+            if block.is_empty() {
+                break;
+            }
+            // best child: longest common prefix with the query block
+            let best = children
+                .iter()
+                .enumerate()
+                .map(|(i, c)| (Self::lcp(&c.tokens, block), i))
+                .max()
+                .filter(|&(l, _)| l > 0);
+            let Some((matched, at)) = best else { break };
+            if let Some(now) = touch {
+                children[at].last_used = now;
+            }
+            let node = &children[at];
+            for (slot, &(ki, _)) in self.kinds.iter().enumerate() {
+                if !alive[slot] {
+                    continue;
+                }
+                match node.pages.iter().find(|&&(k, _)| k == ki) {
+                    Some(&(_, p)) => m.pages[slot].1.push(p),
+                    None => alive[slot] = false,
+                }
+            }
+            m.tokens += matched;
+            // descend only through a fully matched full-page node
+            if matched < ps || matched < node.tokens.len() || matched == rest.len() {
+                break;
+            }
+            rest = &rest[ps..];
+            children = &mut children[at].children;
+        }
+        m
+    }
+
+    /// Read-only traversal for `peek` (token count only).
+    fn walk_ref(&self, prompt: &[i32]) -> PrefixMatch {
+        let ps = self.page_size;
+        let mut tokens = 0usize;
+        let mut children = &self.roots;
+        let mut rest = prompt;
+        loop {
+            let block = &rest[..rest.len().min(ps)];
+            if block.is_empty() {
+                break;
+            }
+            let best = children
+                .iter()
+                .enumerate()
+                .map(|(i, c)| (Self::lcp(&c.tokens, block), i))
+                .max()
+                .filter(|&(l, _)| l > 0);
+            let Some((matched, at)) = best else { break };
+            tokens += matched;
+            let node = &children[at];
+            if matched < ps || matched < node.tokens.len() || matched == rest.len() {
+                break;
+            }
+            rest = &rest[ps..];
+            children = &children[at].children;
+        }
+        PrefixMatch { tokens, pages: Vec::new() }
+    }
+
+    /// Evict least-recently-used leaves until at least `min_pages` pins
+    /// were dropped (or the tree is empty), reporting each dropped page
+    /// through `unpin`. Returns how many pins were dropped. Leaves only:
+    /// an interior node's pages are still on some lookup path.
+    pub fn evict_lru(&mut self, min_pages: usize, mut unpin: impl FnMut(usize, u32)) -> usize {
+        let mut dropped = 0;
+        while dropped < min_pages {
+            let Some(pages) = Self::remove_lru_leaf(&mut self.roots) else { break };
+            self.nodes -= 1;
+            for (ki, p) in pages {
+                unpin(ki, p);
+                dropped += 1;
+            }
+        }
+        dropped
+    }
+
+    /// Remove the least-recently-used leaf anywhere under `children`,
+    /// returning its pinned pages. `None` if the forest is empty.
+    fn remove_lru_leaf(children: &mut Vec<Node>) -> Option<KindPages> {
+        // find the oldest leaf's top-level subtree, then recurse into it
+        let mut best: Option<(u64, usize)> = None;
+        for (i, c) in children.iter().enumerate() {
+            let age = Self::oldest_leaf(c);
+            if best.map_or(true, |(b, _)| age < b) {
+                best = Some((age, i));
+            }
+        }
+        let (_, i) = best?;
+        if children[i].is_leaf() {
+            let node = children.swap_remove(i);
+            return Some(node.pages);
+        }
+        Self::remove_lru_leaf(&mut children[i].children)
+    }
+
+    fn oldest_leaf(node: &Node) -> u64 {
+        if node.is_leaf() {
+            node.last_used
+        } else {
+            node.children.iter().map(Self::oldest_leaf).min().unwrap()
+        }
+    }
+
+    /// Unpin every page and drop the whole tree (teardown / disable).
+    pub fn clear(&mut self, mut unpin: impl FnMut(usize, u32)) -> usize {
+        let mut dropped = 0;
+        let mut stack = std::mem::take(&mut self.roots);
+        while let Some(node) = stack.pop() {
+            for (ki, p) in node.pages {
+                unpin(ki, p);
+                dropped += 1;
+            }
+            stack.extend(node.children);
+        }
+        self.nodes = 0;
+        dropped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// register with identity pages: depth d of kind 0 gets page d+base
+    fn reg(idx: &mut PrefixIndex, prompt: &[i32], base: u32) -> Vec<(usize, u32)> {
+        let mut pinned = Vec::new();
+        idx.register(
+            prompt,
+            |d, _ki| Some(base + d as u32),
+            |_d, ki, p| {
+                pinned.push((ki, p));
+                true
+            },
+        );
+        pinned
+    }
+
+    #[test]
+    fn register_and_lookup_full_and_partial_pages() {
+        let mut idx = PrefixIndex::new(4, vec![(0, 8)]);
+        // 10-token prompt: two full pages + a 2-token tail
+        let prompt = [1, 2, 3, 4, 5, 6, 7, 8, 9, 10];
+        let pinned = reg(&mut idx, &prompt, 100);
+        assert_eq!(pinned, vec![(0, 100), (0, 101), (0, 102)]);
+        assert_eq!(idx.nodes(), 3);
+        // identical prompt matches all 10 tokens, three pages
+        let m = idx.lookup(&prompt);
+        assert_eq!(m.tokens, 10);
+        assert_eq!(m.pages, vec![(0, vec![100, 101, 102])]);
+        // a prompt diverging mid-page matches into the shared page: the
+        // consumer maps it and copy-on-writes at the divergent position
+        let m = idx.lookup(&[1, 2, 3, 4, 5, 6, 99, 99]);
+        assert_eq!(m.tokens, 6);
+        assert_eq!(m.pages, vec![(0, vec![100, 101])]);
+        // longer prompt matches the registered 10 and stops
+        let m = idx.lookup(&[1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12]);
+        assert_eq!(m.tokens, 10);
+        // no match at the first token
+        assert_eq!(idx.lookup(&[42]).tokens, 0);
+        assert_eq!(idx.peek(&prompt), 10);
+    }
+
+    #[test]
+    fn nested_registration_pins_only_new_depths() {
+        let mut idx = PrefixIndex::new(4, vec![(0, 8)]);
+        reg(&mut idx, &[1, 2, 3, 4, 5, 6, 7, 8], 100);
+        // a 12-token extension re-uses depths 0-1, pins only depth 2
+        let pinned = reg(&mut idx, &[1, 2, 3, 4, 5, 6, 7, 8, 9, 9, 9, 9], 200);
+        assert_eq!(pinned, vec![(0, 202)]);
+        let m = idx.lookup(&[1, 2, 3, 4, 5, 6, 7, 8, 9, 9, 9, 9]);
+        assert_eq!(m.pages, vec![(0, vec![100, 101, 202])]);
+        // divergence at depth 1 creates a sibling branch
+        let pinned = reg(&mut idx, &[1, 2, 3, 4, 9, 9, 9, 9], 300);
+        assert_eq!(pinned, vec![(0, 301)]);
+        assert_eq!(idx.lookup(&[1, 2, 3, 4, 9, 9, 9, 9]).pages, vec![(0, vec![100, 301])]);
+    }
+
+    #[test]
+    fn kind_lists_stop_at_the_first_gap() {
+        let mut idx = PrefixIndex::new(2, vec![(0, 8), (1, 1)]);
+        // kind 1 has pages_per_slot 1: only depth 0 is ever indexed
+        idx.register(&[1, 2, 3, 4], |d, _ki| Some(10 + d as u32), |_, _, _| true);
+        let m = idx.lookup(&[1, 2, 3, 4]);
+        assert_eq!(m.tokens, 4);
+        assert_eq!(m.pages, vec![(0, vec![10, 11]), (1, vec![10])]);
+    }
+
+    #[test]
+    fn short_prompts_do_not_register() {
+        let mut idx = PrefixIndex::new(4, vec![(0, 8)]);
+        let pinned = reg(&mut idx, &[1, 2, 3], 100);
+        assert!(pinned.is_empty());
+        assert_eq!(idx.nodes(), 0);
+    }
+
+    #[test]
+    fn evict_lru_drops_cold_leaves_first() {
+        let mut idx = PrefixIndex::new(4, vec![(0, 8)]);
+        reg(&mut idx, &[1, 1, 1, 1], 10);
+        reg(&mut idx, &[2, 2, 2, 2], 20);
+        idx.lookup(&[1, 1, 1, 1]); // branch 1 is now hot
+        let mut unpinned = Vec::new();
+        let n = idx.evict_lru(1, |ki, p| unpinned.push((ki, p)));
+        assert_eq!(n, 1);
+        assert_eq!(unpinned, vec![(0, 20)], "the cold branch goes first");
+        assert_eq!(idx.lookup(&[1, 1, 1, 1]).tokens, 4, "hot branch survives");
+        assert_eq!(idx.lookup(&[2, 2, 2, 2]).tokens, 0);
+        // eviction removes leaves before parents: a chain unwinds deepest-first
+        reg(&mut idx, &[1, 1, 1, 1, 5, 5, 5, 5], 30);
+        let mut unpinned = Vec::new();
+        idx.evict_lru(1, |_ki, p| unpinned.push(p));
+        assert_eq!(unpinned, vec![31], "leaf depth 1 before its parent");
+        assert_eq!(idx.lookup(&[1, 1, 1, 1]).tokens, 4);
+    }
+
+    #[test]
+    fn clear_unpins_everything() {
+        let mut idx = PrefixIndex::new(4, vec![(0, 8)]);
+        reg(&mut idx, &[1, 1, 1, 1, 2, 2, 2, 2], 10);
+        reg(&mut idx, &[3, 3, 3, 3], 20);
+        let mut n = 0;
+        assert_eq!(idx.clear(|_, _| n += 1), 3);
+        assert_eq!(n, 3);
+        assert_eq!(idx.nodes(), 0);
+        assert_eq!(idx.lookup(&[1, 1, 1, 1]).tokens, 0);
+    }
+}

@@ -25,7 +25,7 @@
 pub mod paged;
 
 pub use paged::{
-    AdmissionBudget, PageAllocator, PageKind, PageLayout, PagePressure, PageTable,
+    AdmissionBudget, CowCopy, PageAllocator, PageKind, PageLayout, PagePressure, PageTable,
     SharedPageTable, PAGE_SENTINEL,
 };
 

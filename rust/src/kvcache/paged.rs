@@ -8,8 +8,10 @@
 //!
 //! - [`PageAllocator`]: one free list + refcounts per kind pool. Pages
 //!   are handed out on demand and returned when a slot retires or is
-//!   parked; refcounts exist so future sharing (prefix caching, beam
-//!   forks) can pin a page under several slots.
+//!   parked; refcounts let prefix sharing pin one physical page under
+//!   several slots (and under the batcher's radix prefix index), with
+//!   [`PageTable::prepare_write`] copy-on-writing the first divergent
+//!   write so no sharer can observe another's tokens.
 //! - [`PageLayout`] / [`PageKind`]: the geometry parsed from the
 //!   manifest's per-program `pages` section — page size, per-kind row
 //!   segments of the table, pool sizes, and whether the kind pages
@@ -48,10 +50,19 @@ pub const PAGE_SENTINEL: i32 = 1 << 30;
 /// refcount, returning the page to the free list when it reaches zero.
 /// The conservation invariant `in_use + free == n_pages` holds after
 /// every operation (property-tested below).
+///
+/// Refcounts are `u32`: with prefix sharing one system-prompt page can
+/// sit under every live slot *plus* the prefix index, and the original
+/// `u16` would silently wrap past 65 535 owners (the ISSUE 10 overflow
+/// bug). `retain` is additionally checked — at `u32::MAX` it refuses
+/// instead of wrapping, and the caller falls back to a private copy.
 #[derive(Debug, Clone)]
 pub struct PageAllocator {
     free: Vec<u32>,
-    refs: Vec<u16>,
+    refs: Vec<u32>,
+    /// cumulative `alloc` successes — the page-allocation meter the
+    /// `prefix_sharing` BENCH arm differences (retains are not allocs)
+    allocs_total: u64,
 }
 
 impl PageAllocator {
@@ -61,6 +72,7 @@ impl PageAllocator {
             // fresh single-slot tables equal the python identity table)
             free: (0..n_pages as u32).rev().collect(),
             refs: vec![0; n_pages],
+            allocs_total: 0,
         }
     }
 
@@ -76,19 +88,43 @@ impl PageAllocator {
         self.refs.iter().filter(|&&r| r > 0).count()
     }
 
+    /// Pages currently owned by more than one holder (prefix sharing).
+    pub fn shared_pages(&self) -> usize {
+        self.refs.iter().filter(|&&r| r > 1).count()
+    }
+
+    /// Cumulative successful `alloc` calls over this allocator's life.
+    pub fn allocs_total(&self) -> u64 {
+        self.allocs_total
+    }
+
+    /// Current owner count of `page` (0 = free).
+    pub fn ref_count(&self, page: u32) -> u32 {
+        self.refs[page as usize]
+    }
+
     /// Hand out a free page at refcount 1, or `None` under pressure.
     pub fn alloc(&mut self) -> Option<u32> {
         let p = self.free.pop()?;
         debug_assert_eq!(self.refs[p as usize], 0, "free list held a live page");
         self.refs[p as usize] = 1;
+        self.allocs_total += 1;
         Some(p)
     }
 
     /// Pin an already-live page under one more owner (prefix sharing).
-    pub fn retain(&mut self, page: u32) {
+    /// Checked: returns `false` — page NOT retained — if the refcount is
+    /// saturated, so a pathological owner count degrades to a private
+    /// allocation instead of silently wrapping to zero and double-freeing.
+    #[must_use]
+    pub fn retain(&mut self, page: u32) -> bool {
         let r = &mut self.refs[page as usize];
         assert!(*r > 0, "retain of a dead page {page}");
+        if *r == u32::MAX {
+            return false;
+        }
         *r += 1;
+        true
     }
 
     /// Drop one owner; returns true when the page went back to the pool.
@@ -186,12 +222,34 @@ impl PageLayout {
 pub struct PagePressure {
     pub slot: usize,
     pub kind: String,
+    /// Pages of this kind's pool with refcount > 1 at pressure time.
+    /// Shared pages do NOT return to the free list when one owner
+    /// releases, so the parker can see up front how much of a victim's
+    /// `mapped_pages` would actually be reclaimed (and prefer evicting
+    /// prefix-index pins instead when most of the pool is shared).
+    pub shared: usize,
 }
 
 impl std::fmt::Display for PagePressure {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "page pool of kind '{}' exhausted mapping slot {}", self.kind, self.slot)
+        write!(
+            f,
+            "page pool of kind '{}' exhausted mapping slot {} ({} shared pages)",
+            self.kind, self.slot, self.shared
+        )
     }
+}
+
+/// One copy-on-write instruction `prepare_write` emits: the engine must
+/// copy the pool payload of `src` into `dst` (and the `_scale` sibling
+/// row for quantized pools) before the next dispatch touches `dst`. The
+/// host bookkeeping (row swap, refcounts) is already done when this is
+/// returned — only the device bytes remain.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CowCopy {
+    pub kind: String,
+    pub src: u32,
+    pub dst: u32,
 }
 
 impl std::error::Error for PagePressure {}
@@ -210,6 +268,20 @@ pub struct PageTable {
     /// Pages seized out of the free lists by fault injection (never
     /// mapped into the table); one stash per kind pool.
     held: Vec<Vec<u32>>,
+    /// Pages pinned by the prefix index (one ref each, owned by the
+    /// index, never mapped on the index's behalf); one list per kind.
+    /// They keep a registered prefix's content resident even when every
+    /// slot that mapped it has parked or retired.
+    pinned: Vec<Vec<u32>>,
+    /// Per-slot shared watermark: positions below it were admitted
+    /// through the prefix index with token-identical content, so prefill
+    /// rewrites of those positions into still-shared pages are benign
+    /// (deterministic KV ⇒ bit-identical bytes) and must NOT trigger
+    /// copy-on-write. Writes at or past the watermark into a shared page
+    /// are divergent and do.
+    shared_until: Vec<usize>,
+    /// Cumulative copy-on-write page copies performed by `prepare_write`.
+    cow_copies: u64,
 }
 
 impl PageTable {
@@ -217,12 +289,16 @@ impl PageTable {
         let allocs: Vec<PageAllocator> =
             layout.kinds.iter().map(|k| PageAllocator::new(k.pool_pages)).collect();
         let held = vec![Vec::new(); allocs.len()];
+        let pinned = vec![Vec::new(); allocs.len()];
         PageTable {
             slots,
             table: vec![PAGE_SENTINEL; slots * layout.pages_per_slot],
             layout,
             allocs,
             held,
+            pinned,
+            shared_until: vec![0; slots],
+            cow_copies: 0,
         }
     }
 
@@ -318,6 +394,27 @@ impl PageTable {
             .sum()
     }
 
+    /// [`PageTable::lazy_demand`], net of the pages a prefix-index match
+    /// of `shared_tokens` would satisfy by `retain` instead of `alloc`:
+    /// only *fully* shared pages count as credit — the partially matched
+    /// last page is copy-on-written to a fresh allocation at the first
+    /// divergent position, so it still debits the pool. This is the
+    /// demand signal the overload controller charges under shared-prompt
+    /// load, so the token bucket admits more when admission is cheaper.
+    pub fn lazy_demand_shared(&self, len: usize, shared_tokens: usize) -> usize {
+        let full_shared = shared_tokens / self.layout.page_size;
+        self.layout
+            .kinds
+            .iter()
+            .filter(|k| k.lazy)
+            .map(|k| {
+                let last = len.clamp(1, k.slots) - 1;
+                let need = (last / self.layout.page_size + 1).min(k.pages_per_slot);
+                need - full_shared.min(need)
+            })
+            .sum()
+    }
+
     /// Free pages across the overcommitted (lazy) pools — live headroom
     /// for the overload controller's admission gate.
     pub fn lazy_free(&self) -> usize {
@@ -356,6 +453,7 @@ impl PageTable {
                         return Err(PagePressure {
                             slot,
                             kind: self.layout.kinds[ki].kind.clone(),
+                            shared: self.allocs[ki].shared_pages(),
                         })
                     }
                 }
@@ -365,7 +463,10 @@ impl PageTable {
     }
 
     /// Return every page `slot` holds to its pool (retirement or park);
-    /// the row goes back to all-sentinel. Returns how many pages freed.
+    /// the row goes back to all-sentinel. Returns how many pages freed —
+    /// a *shared* page only decrements its refcount here, so a park under
+    /// prefix sharing cannot free pages other slots (or the index) still
+    /// hold. The slot's shared watermark resets with the row.
     pub fn release_slot(&mut self, slot: usize) -> usize {
         let mut freed = 0;
         for ki in 0..self.layout.kinds.len() {
@@ -379,7 +480,154 @@ impl PageTable {
                 }
             }
         }
+        self.shared_until[slot] = 0;
         freed
+    }
+
+    // -- prefix sharing -----------------------------------------------------
+
+    /// Kind indices that page lazily with position — the only kinds whose
+    /// pages hold position-addressed content a token-identical prefix can
+    /// share. Bounded kinds (MoSA k-slots, local rings) hold selection
+    /// state over the *whole* history and are rebuilt by the admission's
+    /// teacher-forced prefill instead.
+    pub fn lazy_kind_indices(&self) -> Vec<usize> {
+        (0..self.layout.kinds.len()).filter(|&ki| self.layout.kinds[ki].lazy).collect()
+    }
+
+    /// The first `pages.len()` physical pages of `slot`'s `ki` segment,
+    /// for registering a freshly prefilled prompt into the prefix index.
+    pub fn row_pages(&self, slot: usize, ki: usize, n: usize) -> Vec<u32> {
+        let range = self.seg_range(slot, ki);
+        self.table[range]
+            .iter()
+            .take(n)
+            .filter(|&&p| p != PAGE_SENTINEL)
+            .map(|&p| p as u32)
+            .collect()
+    }
+
+    /// Pin `page` of kind `ki` on behalf of the prefix index (one extra
+    /// ref, recorded so conservation can account for it). Returns false —
+    /// nothing pinned — on refcount saturation.
+    pub fn pin_page(&mut self, ki: usize, page: u32) -> bool {
+        if !self.allocs[ki].retain(page) {
+            return false;
+        }
+        self.pinned[ki].push(page);
+        true
+    }
+
+    /// Drop the prefix index's pin on `page`; returns true when the page
+    /// went back to the free list (no slot held it either).
+    pub fn unpin_page(&mut self, ki: usize, page: u32) -> bool {
+        let at = self.pinned[ki]
+            .iter()
+            .position(|&p| p == page)
+            .expect("unpin of a page the index never pinned");
+        self.pinned[ki].swap_remove(at);
+        self.allocs[ki].release(page)
+    }
+
+    /// Total pages currently pinned by the prefix index.
+    pub fn pinned_pages(&self) -> usize {
+        self.pinned.iter().map(|p| p.len()).sum()
+    }
+
+    /// Map `pages` into the head of `slot`'s `ki` segment by retaining
+    /// each (prefix-sharing admission: `retain` instead of `alloc`).
+    /// Entries must currently be unbacked (call on a freshly admitted
+    /// row). Stops early — without unwinding what it already mapped — on
+    /// refcount saturation; returns how many pages were mapped.
+    pub fn share_into(&mut self, slot: usize, ki: usize, pages: &[u32]) -> usize {
+        let range = self.seg_range(slot, ki);
+        assert!(pages.len() <= range.len(), "shared prefix longer than the row segment");
+        let mut mapped = 0;
+        for (j, &p) in pages.iter().enumerate() {
+            let idx = range.start + j;
+            assert_eq!(
+                self.table[idx], PAGE_SENTINEL,
+                "share_into over an already-backed entry (slot {slot})"
+            );
+            if !self.allocs[ki].retain(p) {
+                break;
+            }
+            self.table[idx] = p as i32;
+            mapped += 1;
+        }
+        mapped
+    }
+
+    /// Record the token position below which `slot`'s content is known
+    /// identical to the shared pages it mapped (see `shared_until`).
+    pub fn set_shared_watermark(&mut self, slot: usize, tokens: usize) {
+        self.shared_until[slot] = tokens;
+    }
+
+    pub fn shared_watermark(&self, slot: usize) -> usize {
+        self.shared_until[slot]
+    }
+
+    /// Pages with more than one owner across every pool.
+    pub fn shared_pages(&self) -> usize {
+        self.allocs.iter().map(|a| a.shared_pages()).sum()
+    }
+
+    /// Cumulative page allocations across every pool (retains excluded).
+    pub fn allocs_total(&self) -> u64 {
+        self.allocs.iter().map(|a| a.allocs_total()).sum()
+    }
+
+    /// Cumulative copy-on-write copies `prepare_write` has performed.
+    pub fn cow_copies(&self) -> u64 {
+        self.cow_copies
+    }
+
+    /// Copy-on-write split before a dispatch writes `slot` up to position
+    /// `pos`: every page the write range can touch — from the page
+    /// containing the slot's shared watermark through the page covering
+    /// `pos` — must be privately owned. For each such page still shared
+    /// (refcount > 1), allocate a fresh page, swap the row entry, release
+    /// the shared ref, and emit a [`CowCopy`] so the engine copies the
+    /// payload (and `_scale` sibling) before the dispatch. Pages *below*
+    /// the watermark's page stay shared: prefill rewrites of
+    /// token-identical positions are byte-identical by construction.
+    /// On pool exhaustion mid-split the row is left consistent (already
+    /// split pages stay split) and the caller parks/evicts and retries.
+    pub fn prepare_write(&mut self, slot: usize, pos: i32) -> Result<Vec<CowCopy>, PagePressure> {
+        let mut copies = Vec::new();
+        let ps = self.layout.page_size;
+        let wm = self.shared_until[slot];
+        for ki in 0..self.layout.kinds.len() {
+            let k = &self.layout.kinds[ki];
+            let covered = self.layout.pages_needed(k, pos);
+            // lazy kinds: only pages from the watermark's page on are
+            // writable-divergent; bounded kinds are written every step
+            let first = if k.lazy { (wm / ps).min(covered) } else { 0 };
+            let range = self.seg_range(slot, ki);
+            for j in first..covered {
+                let idx = range.start + j;
+                let p = self.table[idx];
+                if p == PAGE_SENTINEL || self.allocs[ki].ref_count(p as u32) <= 1 {
+                    continue;
+                }
+                let fresh = match self.allocs[ki].alloc() {
+                    Some(f) => f,
+                    None => {
+                        return Err(PagePressure {
+                            slot,
+                            kind: k.kind.clone(),
+                            shared: self.allocs[ki].shared_pages(),
+                        })
+                    }
+                };
+                self.allocs[ki].release(p as u32);
+                self.table[idx] = fresh as i32;
+                self.cow_copies += 1;
+                copies.push(CowCopy { kind: k.kind.clone(), src: p as u32, dst: fresh });
+            }
+        }
+        Ok(copies)
     }
 
     /// Fault injection: seize up to `n` free pages out of the pools
@@ -425,39 +673,49 @@ impl PageTable {
     }
 
     /// Conservation check (debug/test): per kind, live + free == pool,
-    /// and the table maps no physical page twice. Fault-held pages count
-    /// as live-but-unmapped.
+    /// and every physical page's refcount equals its owner count — table
+    /// mappings (a shared page may legitimately appear in several rows),
+    /// fault-held stashes, and prefix-index pins, each counted once per
+    /// occurrence. A page owned by nobody must be free; a page with five
+    /// owners must carry refcount five. This is the refcount-weighted
+    /// generalisation of the pre-sharing "no page mapped twice" rule.
     pub fn check_conservation(&self) -> bool {
         for (ki, (k, a)) in self.layout.kinds.iter().zip(&self.allocs).enumerate() {
             if a.in_use() + a.free_pages() != a.n_pages() {
                 return false;
             }
-            let mut seen = vec![false; k.pool_pages];
-            let mut mapped = 0;
+            let mut owners = vec![0u64; k.pool_pages];
             for slot in 0..self.slots {
                 for &p in &self.table[self.seg_range(slot, ki)] {
                     if p == PAGE_SENTINEL {
                         continue;
                     }
                     let p = p as usize;
-                    if p >= k.pool_pages || seen[p] {
-                        return false; // out of range or double-mapped
+                    if p >= k.pool_pages {
+                        return false; // out of range
                     }
-                    seen[p] = true;
-                    mapped += 1;
+                    owners[p] += 1;
                 }
             }
-            // held pages must be live and must not also be mapped
             for &p in &self.held[ki] {
                 let p = p as usize;
-                if p >= k.pool_pages || seen[p] {
+                if p >= k.pool_pages || owners[p] != 0 {
+                    return false; // held pages are never table-mapped
+                }
+                owners[p] += 1;
+            }
+            for &p in &self.pinned[ki] {
+                let p = p as usize;
+                if p >= k.pool_pages {
                     return false;
                 }
-                seen[p] = true;
+                owners[p] += 1;
             }
-            // every live page is either table-mapped or fault-held
-            if mapped + self.held[ki].len() != a.in_use() {
-                return false;
+            // every page's refcount == its owner count, exactly
+            for p in 0..k.pool_pages {
+                if owners[p] != a.ref_count(p as u32) as u64 {
+                    return false;
+                }
             }
         }
         true
@@ -547,6 +805,30 @@ impl SharedPageTable {
         self.lock().lazy_demand(len)
     }
 
+    pub fn lazy_demand_shared(&self, len: usize, shared_tokens: usize) -> usize {
+        self.lock().lazy_demand_shared(len, shared_tokens)
+    }
+
+    pub fn prepare_write(&self, slot: usize, pos: i32) -> Result<Vec<CowCopy>, PagePressure> {
+        self.lock().prepare_write(slot, pos)
+    }
+
+    pub fn shared_pages(&self) -> usize {
+        self.lock().shared_pages()
+    }
+
+    pub fn pinned_pages(&self) -> usize {
+        self.lock().pinned_pages()
+    }
+
+    pub fn allocs_total(&self) -> u64 {
+        self.lock().allocs_total()
+    }
+
+    pub fn cow_copies(&self) -> u64 {
+        self.lock().cow_copies()
+    }
+
     pub fn lazy_free(&self) -> usize {
         self.lock().lazy_free()
     }
@@ -598,13 +880,26 @@ impl AdmissionBudget {
     /// Gate one admission that will teacher-force `history_len` tokens;
     /// debits the budget on acceptance, leaves it untouched on refusal.
     pub fn admit(&mut self, history_len: usize) -> bool {
+        self.admit_shared(history_len, 0)
+    }
+
+    /// `admit`, but crediting a prefix-index match of `shared_tokens`:
+    /// lazy-kind demand drops by the *fully* shared pages (they map by
+    /// `retain`, costing the pool nothing); the partial last page and
+    /// everything past the match still debit, as does every bounded
+    /// kind (bounded caches are rebuilt, never shared). Under a shared
+    /// system prompt this is what lets a wave admit far more sequences
+    /// than the raw free-page count suggests.
+    pub fn admit_shared(&mut self, history_len: usize, shared_tokens: usize) -> bool {
+        let full_shared = shared_tokens / self.page_size;
         let needs: Vec<usize> = self
             .kinds
             .iter()
             .map(|k| {
                 if k.lazy {
                     let last = history_len.clamp(1, k.slots) - 1;
-                    (last / self.page_size + 1).min(k.pages_per_slot)
+                    let need = (last / self.page_size + 1).min(k.pages_per_slot);
+                    need - full_shared.min(need)
                 } else {
                     k.pages_per_slot
                 }
@@ -662,7 +957,7 @@ mod tests {
         assert!(a.release(p0));
         assert_eq!(a.free_pages(), 3);
         // refcounts: retained pages survive one release
-        a.retain(p1);
+        assert!(a.retain(p1));
         assert!(!a.release(p1));
         assert!(a.release(p1));
         assert_eq!(a.free_pages(), 4);
@@ -706,7 +1001,7 @@ mod tests {
                     2 => {
                         if !live.is_empty() {
                             let p = live[rng.usize_below(live.len())];
-                            a.retain(p);
+                            assert!(a.retain(p));
                             live.push(p);
                         }
                     }
@@ -751,7 +1046,7 @@ mod tests {
         let mut t = PageTable::new(layout(8, 2), 2);
         t.ensure(0, 31).unwrap();
         let err = t.ensure(1, 31).unwrap_err();
-        assert_eq!(err, PagePressure { slot: 1, kind: "dense".into() });
+        assert_eq!(err, PagePressure { slot: 1, kind: "dense".into(), shared: 0 });
         // partial mapping survives (bounded kind + zero dense pages)
         assert_eq!(t.mapped_pages(1), 1);
         assert!(t.check_conservation());
@@ -908,5 +1203,170 @@ mod tests {
         assert_eq!(flat.len(), slots * width);
         assert!(flat.iter().all(|&p| p == PAGE_SENTINEL));
         assert!(shared.check_conservation());
+    }
+
+    /// ISSUE 10 regression: the refcount used to be `u16`, so the
+    /// 65 536th owner of a shared system-prompt page silently wrapped the
+    /// count to zero and the next release double-freed it. The widened
+    /// `u32` count must sail straight through the old boundary.
+    #[test]
+    fn retain_survives_the_u16_boundary() {
+        let mut a = PageAllocator::new(1);
+        let p = a.alloc().unwrap();
+        for _ in 0..(u16::MAX as usize + 10) {
+            assert!(a.retain(p));
+        }
+        assert_eq!(a.ref_count(p), u16::MAX as u32 + 11);
+        assert_eq!(a.in_use(), 1);
+        assert_eq!(a.shared_pages(), 1);
+        // every owner releases; the page frees exactly once, at the end
+        for _ in 0..(u16::MAX as usize + 10) {
+            assert!(!a.release(p));
+        }
+        assert!(a.release(p));
+        assert_eq!(a.free_pages(), 1);
+        assert_eq!(a.in_use() + a.free_pages(), 1);
+    }
+
+    #[test]
+    fn retain_refuses_at_saturation_instead_of_wrapping() {
+        let mut a = PageAllocator::new(1);
+        let p = a.alloc().unwrap();
+        a.refs[p as usize] = u32::MAX; // simulate a saturated count
+        assert!(!a.retain(p), "saturated retain must refuse");
+        assert_eq!(a.ref_count(p), u32::MAX, "no wrap, no increment");
+        assert_eq!(a.in_use() + a.free_pages(), 1);
+    }
+
+    #[test]
+    fn share_into_maps_by_retain_and_cow_splits_on_divergent_write() {
+        // two slots, dense pool 16: slot 0 prefills 12 tokens (3 pages),
+        // slot 1 admits sharing 2 full pages + the partial third
+        let mut t = PageTable::new(layout(16, 2), 2);
+        t.ensure(0, 11).unwrap();
+        let allocs_before = t.allocs_total();
+        let owner = t.row_pages(0, 0, 3);
+        assert_eq!(owner.len(), 3);
+        assert_eq!(t.share_into(1, 0, &owner), 3);
+        t.set_shared_watermark(1, 10); // slot 1 matched 10 of the 12 tokens
+        assert_eq!(t.shared_pages(), 3);
+        assert!(t.check_conservation(), "multi-mapped pages must conserve");
+        // sharing allocated nothing
+        assert_eq!(t.allocs_total(), allocs_before);
+        // prefill rewrites below the watermark leave the mapping shared
+        let copies = t.prepare_write(1, 9).unwrap();
+        assert!(copies.is_empty(), "identical rewrite must not COW");
+        assert_eq!(t.shared_pages(), 3);
+        // the first divergent write (pos 10, inside shared page 2) splits
+        // exactly that page: fresh alloc, row swap, shared ref released
+        let copies = t.prepare_write(1, 10).unwrap();
+        assert_eq!(copies.len(), 1);
+        assert_eq!(copies[0].kind, "dense");
+        assert_eq!(copies[0].src, owner[2]);
+        assert_ne!(copies[0].dst, owner[2]);
+        assert_eq!(t.row_pages(1, 0, 3)[2], copies[0].dst);
+        assert_eq!(t.shared_pages(), 2, "pages 0 and 1 stay shared");
+        assert!(t.check_conservation());
+        // COW is idempotent: the split page is private now
+        assert!(t.prepare_write(1, 10).unwrap().is_empty());
+        assert_eq!(t.cow_copies(), 1);
+        // the owner's writes never touch its own shared pages (watermark
+        // 0 but its next write position is past them) — releasing both
+        // slots frees everything
+        t.release_slot(0);
+        assert_eq!(t.shared_pages(), 0);
+        t.release_slot(1);
+        assert_eq!(t.pages_free(), t.pool_pages_total());
+        assert!(t.check_conservation());
+    }
+
+    #[test]
+    fn pins_keep_prefix_pages_resident_across_release() {
+        let mut t = PageTable::new(layout(16, 2), 2);
+        t.ensure(0, 7).unwrap(); // 2 dense pages + bounded
+        let pages = t.row_pages(0, 0, 2);
+        for &p in &pages {
+            assert!(t.pin_page(0, p));
+        }
+        assert_eq!(t.pinned_pages(), 2);
+        assert!(t.check_conservation());
+        // the owner parks: pinned pages stay live (content stays
+        // resident for future admissions), only unshared pages free
+        t.release_slot(0);
+        assert_eq!(t.pages_in_use(), 2);
+        assert!(t.check_conservation());
+        // a new slot maps them by retain — no allocation
+        let before = t.allocs_total();
+        assert_eq!(t.share_into(1, 0, &pages), 2);
+        assert_eq!(t.allocs_total(), before);
+        t.release_slot(1);
+        // unpinning returns them to the pool
+        assert!(t.unpin_page(0, pages[0]));
+        assert!(t.unpin_page(0, pages[1]));
+        assert_eq!(t.pages_free(), t.pool_pages_total());
+        assert_eq!(t.shared_pages(), 0);
+        assert!(t.check_conservation());
+    }
+
+    #[test]
+    fn cow_under_exhausted_pool_reports_pressure_with_shared_count() {
+        // dense pool of exactly 3: slot 0 maps all three, slot 1 shares
+        // them; the divergent write cannot allocate its private copy
+        let mut t = PageTable::new(layout(3, 2), 2);
+        t.ensure(0, 11).unwrap();
+        let owner = t.row_pages(0, 0, 3);
+        assert_eq!(t.share_into(1, 0, &owner), 3);
+        t.set_shared_watermark(1, 9);
+        let err = t.prepare_write(1, 9).unwrap_err();
+        assert_eq!(err.slot, 1);
+        assert_eq!(err.kind, "dense");
+        assert_eq!(err.shared, 3, "pressure reports how much of the pool is shared");
+        assert!(t.check_conservation(), "failed COW leaves the table consistent");
+        // parking the owner does NOT free the shared pages (slot 1 still
+        // maps them) — the park-under-sharing guarantee
+        t.release_slot(0);
+        assert_eq!(t.lazy_free(), 0);
+        assert!(t.check_conservation());
+        // the owner's release dropped the refs 2→1: slot 1 now owns its
+        // pages outright, so the same write needs no COW at all
+        assert!(t.prepare_write(1, 9).unwrap().is_empty());
+        t.release_slot(1);
+        assert_eq!(t.pages_free(), t.pool_pages_total());
+    }
+
+    #[test]
+    fn lazy_demand_shared_credits_only_full_pages() {
+        let t = PageTable::new(layout(16, 2), 2);
+        // 13 tokens: 4 dense pages unshared
+        assert_eq!(t.lazy_demand(13), 4);
+        // 10 shared tokens = 2 full pages of credit (the partial third
+        // page still debits: it will COW to a fresh allocation)
+        assert_eq!(t.lazy_demand_shared(13, 10), 2);
+        // full-page-aligned match of the whole prompt
+        assert_eq!(t.lazy_demand_shared(16, 16), 0);
+        // credit never goes negative
+        assert_eq!(t.lazy_demand_shared(2, 1000), 0);
+        assert_eq!(t.lazy_demand_shared(13, 0), 4);
+    }
+
+    #[test]
+    fn admission_budget_credits_shared_prefixes() {
+        // dense pool 8 (lazy, ppk 8, ps 4), bounded pool 4
+        let t = PageTable::new(layout(8, 4), 4);
+        let mut b = t.admission_budget();
+        // unshared, a 9-token history costs 3 dense pages and only 2 fit
+        // (admission_budget_debits_per_admission above) — with an
+        // 8-token shared prefix each costs 1 dense page, so four fit,
+        // capped by the bounded pool (1 per admission, never shared)
+        assert!(b.admit_shared(9, 8));
+        assert!(b.admit_shared(9, 8));
+        assert!(b.admit_shared(9, 8));
+        assert!(b.admit_shared(9, 8));
+        assert!(!b.admit_shared(9, 8), "bounded kinds never share");
+        // partial-page matches give no credit
+        let mut b2 = t.admission_budget();
+        assert!(b2.admit_shared(9, 3)); // 3 dense debited
+        assert!(b2.admit_shared(9, 3));
+        assert!(!b2.admit_shared(9, 3));
     }
 }

@@ -128,6 +128,18 @@
 //!   measured Retry-After on every rejection, goodput above a floor,
 //!   accepted streams bit-identical prefixes of the unloaded baseline
 //!   (see PERF.md §Overload control).
+//! - **Prefix sharing / copy-on-write** (`decode::prefix`): a radix
+//!   prefix index in the batcher pins completed prompts' pages; a new
+//!   admission whose prompt matches an indexed prefix maps the resident
+//!   physical pages by `retain` instead of allocating, with a per-slot
+//!   `shared_until` watermark and copy-on-write (`PageTable::
+//!   prepare_write` → `CowCopy` → `KvCacheStore::copy_pages`) at the
+//!   first divergent write. Prefill re-feeds all tokens, so sharing
+//!   changes allocation counts only — streams stay bit-identical to the
+//!   share-off twin (property-tested at the serve and HTTP layers). The
+//!   overload token bucket debits only *unshared* page demand, and
+//!   pool pressure evicts cold index leaves before parking live
+//!   requests (see PERF.md §Prefix sharing).
 //! - **Decode harness** (`perf::decode`, part of `mosa perf`): emits
 //!   `BENCH_decode.json` — prefill ms, per-token ms vs context capacity,
 //!   tokens/sec at batch 1/8/32, measured cache bytes dense-vs-MoSA
@@ -139,7 +151,9 @@
 //!   plus the quantized arm (i8 resident payload ≤ 0.30× contiguous f32
 //!   and a zero-greedy-mismatch teacher-forced differential vs the f32
 //!   paged twin, both gated in `verify.sh`; max-abs logit deviation
-//!   reported).
+//!   reported) and the prefix-sharing arm (1×/8×/32× shared-prompt
+//!   fan-outs vs a share-off twin: allocs/request at 32× gated ≤ 0.5×
+//!   unshared, streams bit-identical, zero leaks).
 
 pub mod util;
 pub mod config;

@@ -54,6 +54,14 @@
 //!   `verify.sh` asserts: zero leaks, zero malformed rejections, zero
 //!   stream mismatches, goodput above the floor at 4×. Also
 //!   mock-backed.
+//! - **prefix sharing** (`prefix_sharing`): the copy-on-write
+//!   prefix-sharing A/B — 1×/8×/32× requests forked off one prompt with
+//!   divergent continuations, served with sharing on vs the
+//!   `--no-prefix-share` twin. Reports page allocations per request,
+//!   peak resident pages, COW copies, and the twin bit-identity
+//!   mismatch count. `verify.sh` gates: zero leaks, zero mismatches,
+//!   and allocations/request at 32× fan-out ≤ 0.5× of the unshared
+//!   twin. Also mock-backed.
 //!
 //! Artifact-gated like the train probe: without `make artifacts` (or with
 //! pre-decode artifacts) every probe except `faults`, `transport`, and
@@ -109,6 +117,7 @@ fn unavailable(cfg: &PerfConfig, reason: &str) -> Json {
         ("faults", bench_faults(cfg)),
         ("transport", bench_transport(cfg)),
         ("overload", bench_overload(cfg)),
+        ("prefix_sharing", bench_prefix_sharing(cfg)),
     ])
 }
 
@@ -275,6 +284,108 @@ fn bench_overload(cfg: &PerfConfig) -> Json {
     Json::obj(pairs)
 }
 
+/// The prefix-sharing arm: 1×/8×/32× requests forked off one 13-token
+/// prompt with divergent one-token continuations, served with sharing
+/// on vs the share-off twin on the mock dispatcher (engine-free, so
+/// this arm reports without artifacts). Sharing is an *allocation*
+/// optimization — prefill re-feeds all tokens and the streams must stay
+/// bit-identical to the twin — so the arm reports page allocations per
+/// request, peak resident pages, COW copies, and the mismatch count.
+/// Deterministic: the serving loop runs on its logical clock with a
+/// greedy mock, so every number is stable run to run. `verify.sh` gates
+/// zero leaks, zero mismatches, and `alloc_ratio_32x <= 0.5`.
+fn bench_prefix_sharing(_cfg: &PerfConfig) -> Json {
+    use crate::serve::{Dispatcher, MockDispatcher, Outcome, ServeConfig, ServeRequest, Server, Tick};
+    // 3 full pages + 1 token into the fourth: forks match 13 tokens, map
+    // four pages by retain, and copy-on-write the fourth at position 13
+    let common: Vec<i32> = (0..13).map(|i| (i * 7 + 3) % 97).collect();
+    // (streams, allocs, cow, peak_pages, leaked)
+    let run = |fanout: usize, share: bool| {
+        let d = MockDispatcher::paged(2, 16, 97, 4, 8);
+        let table = d.shared_pages().expect("paged mock");
+        let mut server =
+            Server::new(d, ServeConfig { prefix_share: share, ..ServeConfig::default() });
+        for id in 0..fanout as u64 {
+            let mut p = common.clone();
+            p.push(70 + (id % 27) as i32);
+            server
+                .submit(ServeRequest::new(id, p, 2))
+                .expect("queue_cap 256 holds the whole fan-out");
+        }
+        let mut peak_pages = 0usize;
+        let mut ticks = 0usize;
+        let mut converged = true;
+        while !matches!(server.tick(), Tick::Done) {
+            peak_pages = peak_pages.max(table.pages_in_use());
+            ticks += 1;
+            if ticks > 1_000_000 {
+                converged = false;
+                break;
+            }
+        }
+        let report = server.finish();
+        let mut streams: Vec<(u64, Vec<i32>)> =
+            report.results.iter().map(|r| (r.id, r.generated.clone())).collect();
+        streams.sort_by_key(|(id, _)| *id);
+        let completed = report.count(Outcome::Completed);
+        let leaked = (table.pool_pages_total() - table.pages_free())
+            + table.shared_pages()
+            + table.pinned_pages()
+            + usize::from(!table.check_conservation())
+            + usize::from(!converged)
+            + (fanout - completed.min(fanout));
+        (streams, table.allocs_total(), table.cow_copies(), peak_pages, leaked)
+    };
+    let mut points = Vec::new();
+    let mut leaked_total = 0usize;
+    let mut mismatches_total = 0usize;
+    let mut ratio_32x = f64::NAN;
+    for fanout in [1usize, 8, 32] {
+        let (on, allocs_on, cow_on, peak_on, leak_on) = run(fanout, true);
+        let (off, allocs_off, cow_off, peak_off, leak_off) = run(fanout, false);
+        let mismatches = on
+            .iter()
+            .zip(&off)
+            .filter(|((ia, sa), (ib, sb))| ia != ib || sa != sb)
+            .count()
+            + on.len().abs_diff(off.len());
+        let per_req_on = allocs_on as f64 / fanout as f64;
+        let per_req_off = allocs_off as f64 / fanout as f64;
+        let ratio = per_req_on / per_req_off.max(1e-9);
+        if fanout == 32 {
+            ratio_32x = ratio;
+        }
+        leaked_total += leak_on + leak_off;
+        mismatches_total += mismatches;
+        println!(
+            "decode[prefix_sharing] {fanout:>2}x: {:.2} allocs/req shared vs {:.2} unshared \
+             (ratio {:.3}), peak {} vs {} pages, {} COW copies, {} mismatches, {} leaked",
+            per_req_on, per_req_off, ratio, peak_on, peak_off, cow_on, mismatches, leak_on + leak_off
+        );
+        points.push(Json::obj(vec![
+            ("fanout", Json::num(fanout as f64)),
+            ("allocs_per_request_shared", Json::num(per_req_on)),
+            ("allocs_per_request_unshared", Json::num(per_req_off)),
+            ("alloc_ratio", Json::num(ratio)),
+            ("resident_pages_peak_shared", Json::num(peak_on as f64)),
+            ("resident_pages_peak_unshared", Json::num(peak_off as f64)),
+            ("cow_copies", Json::num(cow_on as f64)),
+            ("cow_copies_unshared", Json::num(cow_off as f64)),
+            ("stream_mismatches", Json::num(mismatches as f64)),
+            ("leaked_pages", Json::num((leak_on + leak_off) as f64)),
+        ]));
+    }
+    let ok = leaked_total == 0 && mismatches_total == 0 && ratio_32x <= 0.5;
+    Json::obj(vec![
+        ("available", Json::Bool(true)),
+        ("ok", Json::Bool(ok)),
+        ("leaked_pages", Json::num(leaked_total as f64)),
+        ("stream_mismatches", Json::num(mismatches_total as f64)),
+        ("alloc_ratio_32x", Json::num(ratio_32x)),
+        ("points", Json::Arr(points)),
+    ])
+}
+
 fn bench_with(manifest: &Manifest, cfg: &PerfConfig) -> Result<Json> {
     let mut engine = Engine::cpu()?;
     let mut rows = Vec::new();
@@ -304,6 +415,7 @@ fn bench_with(manifest: &Manifest, cfg: &PerfConfig) -> Result<Json> {
         ("faults", bench_faults(cfg)),
         ("transport", bench_transport(cfg)),
         ("overload", bench_overload(cfg)),
+        ("prefix_sharing", bench_prefix_sharing(cfg)),
     ];
     // the Table 2 headline: MoSA cache bytes as a fraction of dense
     let dense = bytes_by_name.iter().find(|(n, _)| n == "micro_dense").map(|x| x.1);

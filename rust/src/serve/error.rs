@@ -206,7 +206,7 @@ mod tests {
 
     #[test]
     fn page_pressure_converts_to_pool_exhausted() {
-        let p = PagePressure { slot: 5, kind: "dense".into() };
+        let p = PagePressure { slot: 5, kind: "dense".into(), shared: 0 };
         let e: ServeError = p.into();
         assert_eq!(e, ServeError::PoolExhausted { slot: 5, kind: "dense".into() });
         assert!(e.transient());

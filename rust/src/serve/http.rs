@@ -29,7 +29,12 @@
 //! drain time, not a constant); the engine publishes the same hint to
 //! the accept loop (gate refusals) and `/readyz`. Brownout rung 3
 //! widens `tick_pace_us` by the server's `pace_mult()`. The
-//! `max_conns` gate remains as the hard backstop.
+//! `max_conns` gate remains as the hard backstop. With
+//! [`ServeConfig::prefix_share`] on (the default), the bucket debits
+//! only a request's *unshared* page demand — a wave of requests forked
+//! off one system prompt admits far past what raw free-page headroom
+//! would allow, because their prefix pages are mapped by `retain`, not
+//! allocated.
 //!
 //! Disconnect safety is structural: the engine-side [`StreamSink`] is
 //! `move |ev| tx.send(ev).is_ok()`, so a connection thread that exits
@@ -1171,6 +1176,46 @@ mod tests {
             vec![ServeRequest::new(1, prompt, max_new)],
         );
         report.results[0].generated.clone()
+    }
+
+    #[test]
+    fn shared_prompt_fanout_streams_match_the_share_off_twin() {
+        // one 10-token system prompt forked across 6 requests with
+        // divergent continuations, served over the wire: prefix sharing
+        // must change page-allocation counts only — every stream
+        // bit-matches the twin run with sharing disabled, and teardown
+        // returns the pool to fully free with no pins or shared refs.
+        let run = |share: bool| {
+            let d = MockDispatcher::paged(2, 16, 97, 4, 8);
+            let table = d.shared_pages().expect("paged mock");
+            let cfg = ServeConfig { prefix_share: share, ..ServeConfig::default() };
+            let fe = HttpFrontend::start(d, cfg, HttpConfig::default(), FaultPlan::default())
+                .expect("front-end starts");
+            let c = Client::new(fe.addr());
+            let mut streams = Vec::new();
+            for id in 0..6 {
+                let body = format!(
+                    "{{\"prompt\":[3,10,17,24,31,38,45,52,59,66,{}],\"max_new\":4}}",
+                    70 + id
+                );
+                let r = c.post("/v1/generate", &body).unwrap();
+                assert_eq!(r.status, 200, "share={share} request {id}");
+                streams.push(token_events(&r.events));
+            }
+            let report = fe.shutdown().unwrap();
+            assert_eq!(report.serve.stats.completed, 6);
+            assert_eq!(table.pages_free(), table.pool_pages_total(), "share={share} leaked");
+            assert_eq!(table.shared_pages(), 0, "share={share}: shared refs survive");
+            assert_eq!(table.pinned_pages(), 0, "share={share}: pins survive");
+            (streams, table.allocs_total())
+        };
+        let (on, allocs_on) = run(true);
+        let (off, allocs_off) = run(false);
+        assert_eq!(on, off, "prefix sharing changed a stream over the wire");
+        assert!(
+            allocs_on < allocs_off,
+            "sharing saved no allocations over the wire: {allocs_on} vs {allocs_off}"
+        );
     }
 
     #[test]

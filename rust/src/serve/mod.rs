@@ -254,6 +254,13 @@ impl AdmissionQueue {
         self.entries.iter().map(|q| q.req.prompt.len())
     }
 
+    /// Queued prompt contents — `prompt_lens` with the tokens attached,
+    /// so the overload controller can net prefix-shared pages out of
+    /// the committed demand it observes.
+    pub fn prompts(&self) -> impl Iterator<Item = &[i32]> + '_ {
+        self.entries.iter().map(|q| q.req.prompt.as_slice())
+    }
+
     /// Pop the next admissible request; cancelled/expired entries come
     /// back as `Dropped` terminal records instead.
     pub fn pop(&mut self, now_ms: u64) -> Popped {
@@ -555,13 +562,20 @@ impl Dispatcher for MockDispatcher {
         self.last_plan = plan.to_vec();
         t.with(|pt| {
             for (i, sp) in plan.iter().enumerate() {
-                if !sp.active || sp.reset {
+                // mirror DecodeSession::prepare_pages: a prefix-shared
+                // row (nonzero watermark) keeps its retained mappings
+                // across the admission reset — releasing here would undo
+                // the sharing before the first dispatch
+                if !sp.active || (sp.reset && pt.shared_watermark(i) == 0) {
                     pt.release_slot(i);
                 }
             }
             for (i, sp) in plan.iter().enumerate() {
                 if sp.active {
                     pt.ensure(i, sp.pos)?;
+                    // copy-on-write bookkeeping: still-shared pages the
+                    // dispatch writes at/past the watermark go private
+                    pt.prepare_write(i, sp.pos)?;
                 }
             }
             Ok(())
@@ -888,6 +902,12 @@ pub struct ServeConfig {
     /// (the default) keeps the pre-overload behavior byte-identical:
     /// every submit reaches the queue-cap backstop directly.
     pub overload: Option<OverloadConfig>,
+    /// prefix-sharing copy-on-write over the paged pools: admissions
+    /// whose prompt matches an indexed prefix map the already-resident
+    /// pages by `retain` instead of allocating. Changes allocation
+    /// counts only — streams stay bit-identical (gated in verify.sh by
+    /// the `prefix_sharing` A/B arm). No-op for contiguous dispatchers.
+    pub prefix_share: bool,
 }
 
 impl Default for ServeConfig {
@@ -903,6 +923,7 @@ impl Default for ServeConfig {
             seed: 0,
             eos: None,
             overload: None,
+            prefix_share: true,
         }
     }
 }
@@ -1057,6 +1078,7 @@ impl<D: Dispatcher> Server<D> {
         let mut batcher = ContinuousBatcher::new(batch, cfg.eos);
         if let Some(table) = dispatcher.shared_pages() {
             batcher.attach_pages(table);
+            batcher.enable_prefix_share(cfg.prefix_share);
         }
         let rng = Pcg::seeded(cfg.seed ^ 0x5e7e);
         Server {
@@ -1206,9 +1228,13 @@ impl<D: Dispatcher> Server<D> {
             }
         }
         // token-bucket admission: demand-aware, headroom-keyed; the
-        // queue cap below stays as the hard backstop
+        // queue cap below stays as the hard backstop. The bucket debits
+        // only the *unshared* page demand: pages a prefix-index match
+        // would map by `retain` cost the pool nothing, so shared-prompt
+        // waves admit far more than the raw free-page count suggests.
         let demand = match (&self.overload, self.dispatcher.shared_pages()) {
-            (Some(_), Some(t)) => t.lazy_demand(req.prompt.len()),
+            (Some(_), Some(t)) => t
+                .lazy_demand_shared(req.prompt.len(), self.batcher.shared_prefix_tokens(&req.prompt)),
             _ => 0,
         };
         if let Some(ol) = &mut self.overload {
@@ -1602,7 +1628,9 @@ impl<D: Dispatcher> Server<D> {
             }
         }
         let admitted = match self.dispatcher.shared_pages().map(|t| t.admission_budget()) {
-            Some(mut budget) => self.batcher.admit_if(|h| budget.admit(h)),
+            Some(mut budget) => {
+                self.batcher.admit_if_shared(|h, shared| budget.admit_shared(h, shared))
+            }
             None => self.batcher.admit(),
         };
         if admitted == 0 && self.batcher.active() == 0 {
@@ -1639,7 +1667,14 @@ impl<D: Dispatcher> Server<D> {
         let qcap = self.cfg.queue_cap;
         let (free, total, committed) = match self.dispatcher.shared_pages() {
             Some(t) => {
-                let committed: usize = self.queue.prompt_lens().map(|l| t.lazy_demand(l)).sum();
+                // committed demand is net of prefix-shared pages, matching
+                // what `submit` debited for the same requests
+                let batcher = &self.batcher;
+                let committed: usize = self
+                    .queue
+                    .prompts()
+                    .map(|p| t.lazy_demand_shared(p.len(), batcher.shared_prefix_tokens(p)))
+                    .sum();
                 (t.lazy_free(), t.lazy_total(), committed)
             }
             // contiguous dispatcher: no pool signal; queue slack drives
@@ -1690,6 +1725,13 @@ impl<D: Dispatcher> Server<D> {
             match self.dispatcher.prepare(&plan) {
                 Ok(()) => return Ok(()),
                 Err(pressure) => {
+                    // cheapest relief first: evict a cold indexed prefix
+                    // (unpinning pages no live sequence computes against)
+                    // before parking live work. Terminates: every call
+                    // drops at least one pin and pins are finite.
+                    if self.batcher.evict_prefixes(1) > 0 {
+                        continue;
+                    }
                     let victim = plan
                         .iter()
                         .enumerate()
@@ -2186,9 +2228,14 @@ mod tests {
     #[test]
     fn prop_random_interleavings_never_leak_pages() {
         // the page-leak invariant across random admit -> step -> park ->
-        // cancel -> readmit interleavings, against an overcommitted pool
+        // cancel -> readmit interleavings, against an overcommitted pool.
+        // Odd trials enable prefix sharing and draw prompts off a common
+        // per-trial prefix, so admissions retain indexed pages, replayed
+        // (parked) admissions re-enter through the index, and the
+        // teardown must unwind pins and shared refcounts to zero too.
         let mut rng = Pcg::seeded(0x1eaf);
         for trial in 0..40u64 {
+            let share = trial % 2 == 1;
             let slots = 1 + rng.usize_below(3);
             let pps = 4usize; // capacity 16 / page_size 4
             let pool = pps + rng.usize_below(pps * slots);
@@ -2196,19 +2243,34 @@ mod tests {
             let table = d.shared_pages().unwrap();
             let mut b = ContinuousBatcher::new(slots, None);
             b.attach_pages(table.clone());
+            b.enable_prefix_share(share);
+            let common: Vec<i32> = (0..6).map(|_| rng.below(97) as i32).collect();
             let mut next_id = 0u64;
             let (mut t, mut p, mut r) = (Vec::new(), Vec::new(), Vec::new());
             for op in 0..80 {
                 match rng.below(6) {
                     0 => {
-                        let plen = 1 + rng.usize_below(5);
-                        let prompt = (0..plen).map(|_| rng.below(97) as i32).collect();
+                        // shared trials fork most prompts off the common
+                        // prefix (page-aligned head + divergent tail)
+                        let prompt: Vec<i32> = if share && rng.below(4) > 0 {
+                            let tail = rng.usize_below(4);
+                            common
+                                .iter()
+                                .copied()
+                                .chain((0..tail).map(|_| rng.below(97) as i32))
+                                .collect()
+                        } else {
+                            let plen = 1 + rng.usize_below(5);
+                            (0..plen).map(|_| rng.below(97) as i32).collect()
+                        };
                         b.submit(SeqRequest { id: next_id, prompt, max_new: 1 + rng.usize_below(6) });
                         next_id += 1;
                     }
                     1 => {
                         let mut budget = table.admission_budget();
-                        if b.admit_if(|h| budget.admit(h)) == 0 && b.active() == 0 {
+                        if b.admit_if_shared(|h, s| budget.admit_shared(h, s)) == 0
+                            && b.active() == 0
+                        {
                             b.admit_one();
                         }
                     }
@@ -2225,19 +2287,25 @@ mod tests {
                     }
                     _ => {
                         if b.active() > 0 {
-                            // one full dispatch: back pages (parking the
-                            // fattest victim under pressure), step, advance
+                            // one full dispatch: back pages (evicting cold
+                            // prefixes, then parking the fattest victim
+                            // under pressure), step, advance
                             loop {
                                 let plan = b.plan();
                                 let res = table.with(|pt| {
                                     for (i, sp) in plan.iter().enumerate() {
-                                        if !sp.active || sp.reset {
+                                        // sharing-aware release: a freshly
+                                        // shared row keeps its mappings
+                                        if !sp.active
+                                            || (sp.reset && pt.shared_watermark(i) == 0)
+                                        {
                                             pt.release_slot(i);
                                         }
                                     }
                                     for (i, sp) in plan.iter().enumerate() {
                                         if sp.active {
                                             pt.ensure(i, sp.pos)?;
+                                            pt.prepare_write(i, sp.pos)?;
                                         }
                                     }
                                     Ok(())
@@ -2245,6 +2313,9 @@ mod tests {
                                 match res {
                                     Ok(()) => break,
                                     Err(_) => {
+                                        if b.evict_prefixes(1) > 0 {
+                                            continue;
+                                        }
                                         let v = plan
                                             .iter()
                                             .enumerate()
@@ -2277,9 +2348,69 @@ mod tests {
                     }
                 }
             }
-            drop(b); // Drop releases whatever was still occupied
+            drop(b); // Drop unpins the index, then releases occupied slots
             assert_eq!(table.pages_free(), table.pool_pages_total(), "trial {trial} leaked");
+            assert_eq!(table.shared_pages(), 0, "trial {trial}: shared refs survive teardown");
+            assert_eq!(table.pinned_pages(), 0, "trial {trial}: pins survive teardown");
             assert!(table.check_conservation());
+        }
+    }
+
+    #[test]
+    fn prop_forked_requests_match_the_unshared_twin_bit_for_bit() {
+        // N requests forked off one 10-token prompt (2.5 pages) with
+        // divergent one-token continuations. The share-on server must
+        // produce streams bit-identical to the share-off twin (sharing
+        // is an allocation optimization, never a content change),
+        // allocate strictly fewer pages, and copy-on-write the
+        // partially shared third page when a fork first writes past its
+        // watermark. Conservation holds after every tick; shared and
+        // pinned page counts reach zero at teardown.
+        let common: Vec<i32> = (0..10).map(|i| (i * 7 + 3) % 97).collect();
+        let forked = |n: u64| -> Vec<ServeRequest> {
+            (0..n)
+                .map(|id| {
+                    let mut p = common.clone();
+                    p.push(40 + id as i32); // divergent continuation
+                    ServeRequest::new(id, p, 4)
+                })
+                .collect()
+        };
+        let run = |share: bool| {
+            let d = MockDispatcher::paged(2, 16, 97, 4, 8);
+            let table = d.shared_pages().unwrap();
+            let mut server =
+                Server::new(d, ServeConfig { prefix_share: share, ..ServeConfig::default() });
+            for r in forked(6) {
+                server.submit(r).unwrap();
+            }
+            let mut ticks = 0;
+            while !matches!(server.tick(), Tick::Done) {
+                let inv = server.check_invariants();
+                assert!(inv.is_empty(), "share={share}: {inv:?}");
+                ticks += 1;
+                assert!(ticks < 10_000, "share={share}: run did not converge");
+            }
+            let report = server.finish();
+            assert_eq!(report.count(Outcome::Completed), 6, "share={share}");
+            (generated_by_id(&report), table)
+        };
+        let (on, t_on) = run(true);
+        let (off, t_off) = run(false);
+        assert_eq!(on, off, "prefix sharing changed a stream");
+        assert!(
+            t_on.allocs_total() < t_off.allocs_total(),
+            "sharing saved no allocations: {} vs {}",
+            t_on.allocs_total(),
+            t_off.allocs_total()
+        );
+        assert!(t_on.cow_copies() > 0, "no fork ever copy-on-wrote its divergence page");
+        assert_eq!(t_off.cow_copies(), 0, "twin must never see a shared page");
+        for (name, t) in [("on", &t_on), ("off", &t_off)] {
+            assert_eq!(t.pages_free(), t.pool_pages_total(), "share-{name} leaked pages");
+            assert_eq!(t.shared_pages(), 0, "share-{name}: shared refs survive teardown");
+            assert_eq!(t.pinned_pages(), 0, "share-{name}: pins survive teardown");
+            assert!(t.check_conservation(), "share-{name}: conservation violated");
         }
     }
 

@@ -229,6 +229,37 @@ elif ov:
     print(f"overload gate: skipped (stub: {ov.get('reason', 'rust bench did not run')})")
 else:
     print("overload gate: no overload key in the report (pre-overload bench?)")
+# prefix-sharing gate: the shared-prompt smoke. The arm fans 1x/8x/32x
+# requests off one common prompt with sharing on vs a --no-prefix-share
+# twin: streams must be bit-identical (sharing is an allocation
+# optimization, never a compute change), nothing may leak (pool fully
+# free, zero shared/pinned refs at teardown), and at 32x the shared run
+# must allocate <= 0.5x the pages per request of the unshared twin.
+# Mock-backed like faults/transport/overload; this doubles as the
+# shared-prompt serving smoke (the loadgen CLI draws random prompts).
+ps = r.get("prefix_sharing")
+if ps and ps.get("available") is not False:
+    pbad = []
+    if ps.get("leaked_pages", 1) != 0:
+        pbad.append(f"leaked_pages={ps.get('leaked_pages')}")
+    if ps.get("stream_mismatches", 1) != 0:
+        pbad.append(f"stream_mismatches={ps.get('stream_mismatches')} (shared != unshared twin)")
+    ratio = ps.get("alloc_ratio_32x")
+    if ratio is None or ratio > 0.5:
+        pbad.append(f"alloc_ratio_32x={ratio} (> 0.5x unshared)")
+    if ps.get("ok") is not True:
+        pbad.append("ok=false (prefix-sharing contract violated)")
+    if pbad:
+        print(f"prefix-sharing gate: FAILED {pbad}")
+        sys.exit(1)
+    print(
+        f"prefix-sharing gate: OK (32x fan-out allocs/request at {ratio:.2f}x unshared "
+        f"<= 0.5x, streams bit-identical, 0 pages leaked)"
+    )
+elif ps:
+    print(f"prefix-sharing gate: skipped (stub: {ps.get('reason', 'rust bench did not run')})")
+else:
+    print("prefix-sharing gate: no prefix_sharing key in the report (pre-sharing bench?)")
 if not r.get("available"):
     print(f"decode gates: skipped (decode bench unavailable: {r.get('reason', 'no artifacts')})")
     sys.exit(0)
